@@ -1,0 +1,134 @@
+//! End-to-end validation driver (EXPERIMENTS.md §End-to-end): the paper's
+//! headline workload, full pipeline, all layers composing.
+//!
+//! 1. generate the MIMIC-like EHR tensor (4352 patients x 320 dx x 320 med),
+//!    partition across 8 hospitals on a ring;
+//! 2. train CiderTF_m (Bernoulli-logit) through the PJRT artifacts
+//!    (Pallas-fused gradient), logging loss curve + uplink ledger;
+//! 3. case study (least squares, as the paper's BrasCPD-referenced study):
+//!    CiderTF vs centralized BrasCPD -> FMS, top-3 phenotypes, planted
+//!    support recovery, patient subgroups, tSNE + silhouette.
+//!
+//!     make artifacts && cargo run --release --example decentralized_phenotyping
+//!     (CIDERTF_EPOCHS=12 for a longer run)
+
+use cidertf::analysis::phenotype::{assign_subgroups, extract, support_recovery};
+use cidertf::analysis::silhouette;
+use cidertf::analysis::tsne::{tsne, TsneConfig};
+use cidertf::engine::{train, AlgoConfig, TrainConfig};
+use cidertf::factor::fms::fms;
+use cidertf::harness::Ctx;
+use cidertf::losses::Loss;
+use cidertf::runtime::{default_artifact_dir, PjrtBackend};
+use cidertf::tensor::synth::{SynthConfig, ValueKind};
+use cidertf::util::benchkit::fmt_bytes;
+use cidertf::util::csv::CsvWriter;
+use cidertf::util::mat::Mat;
+
+fn main() -> anyhow::Result<()> {
+    let epochs: usize =
+        std::env::var("CIDERTF_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let mut backend = PjrtBackend::new(&default_artifact_dir())?;
+
+    // ---------- part 1: decentralized logit training (headline) ----------
+    let data = SynthConfig::mimic_like().generate();
+    println!(
+        "MIMIC-like tensor {:?}: {} nnz, density {:.2e}, {} planted phenotypes",
+        data.tensor.dims,
+        data.tensor.nnz(),
+        data.tensor.density(),
+        data.config.rank
+    );
+    let mut cfg = TrainConfig::new("mimic_like", Loss::Logit, AlgoConfig::cidertf_m(8));
+    // Nesterov momentum amplifies the steady-state step by 1/(1-beta).
+    cfg.gamma = Ctx::gamma_for("mimic_like", Loss::Logit) * 0.1;
+    cfg.epochs = epochs;
+    println!("\n[1/3] CiderTF_m (tau=8), K=8 ring, Bernoulli-logit, gamma={} ...", cfg.gamma);
+    let cider_m = train(&cfg, &data, &mut backend, None)?;
+    for p in &cider_m.record.points {
+        println!(
+            "  epoch {:>2}  loss {:>12.4e}  uplink {:>10}  {:>6.1}s",
+            p.epoch,
+            p.loss,
+            fmt_bytes(p.bytes as f64),
+            p.time_s
+        );
+    }
+    cider_m.record.write_csv(std::path::Path::new("results/e2e/cidertf_m_curve.csv"))?;
+
+    // ---------- part 2: LS case study vs centralized BrasCPD ----------
+    println!("\n[2/3] case study (least squares): CiderTF tau=8 vs centralized BrasCPD");
+    let data_ls = SynthConfig::mimic_like().with_values(ValueKind::Gaussian).generate();
+    let mut run = |algo: AlgoConfig, k: usize, ep: usize, be: &mut PjrtBackend| {
+        let mut c = TrainConfig::new("mimic_like", Loss::Ls, algo);
+        c.gamma = Ctx::gamma_for("mimic_like", Loss::Ls);
+        c.k = k;
+        c.epochs = ep;
+        train(&c, &data_ls, be, None)
+    };
+    let cider = run(AlgoConfig::cidertf(8), 8, epochs, &mut backend)?;
+    let bras = run(AlgoConfig::bras_cpd(), 1, epochs * 2, &mut backend)?;
+    println!(
+        "  cidertf loss {:.4e} ({:.1}s, uplink {}) | brascpd loss {:.4e} ({:.1}s)",
+        cider.record.final_loss(),
+        cider.record.wall_s,
+        fmt_bytes(cider.record.total.bytes as f64),
+        bras.record.final_loss(),
+        bras.record.wall_s,
+    );
+    println!("  FMS(cidertf, brascpd) = {:.4}", fms(&cider.factors, &bras.factors));
+
+    // ---------- part 3: phenotypes + subgroups ----------
+    println!("\n[3/3] phenotype case study");
+    let phenos = extract(&cider.factors, 3, 20);
+    for (i, ph) in phenos.iter().enumerate() {
+        let f0: Vec<String> =
+            ph.top_features[0].iter().take(6).map(|&(id, w)| format!("dx{id}({w:.2})")).collect();
+        let f1: Vec<String> =
+            ph.top_features[1].iter().take(6).map(|&(id, w)| format!("med{id}({w:.2})")).collect();
+        println!("  P{} (lambda {:.1}): {} | {}", i + 1, ph.weight, f0.join(" "), f1.join(" "));
+    }
+    println!(
+        "  planted-support recovery (best-Jaccard avg over modes): {:.3}",
+        support_recovery(&phenos, &data_ls.truth)
+    );
+
+    let top = cider.factors.top_components(3);
+    let all: Vec<usize> = (0..cider.factors.rank()).collect();
+    let patients = subsample(&cider.factors.mats[0], 800);
+    let groups3 = assign_subgroups(&patients, &top);
+    let groups_all = assign_subgroups(&patients, &all);
+    let emb = tsne(&patients, &TsneConfig::default());
+    let mut w =
+        CsvWriter::create("results/e2e/tsne_mimic_like.csv", &["x", "y", "group_top3", "group_all"])?;
+    for i in 0..emb.rows {
+        w.row_f64(&[
+            emb.at(i, 0) as f64,
+            emb.at(i, 1) as f64,
+            groups3[i] as f64,
+            groups_all[i] as f64,
+        ])?;
+    }
+    w.flush()?;
+    println!("  tSNE embedding of {} patients -> results/e2e/tsne_mimic_like.csv", emb.rows);
+    println!(
+        "  subgroup silhouette: top-3 rule {:.3}, all-component argmax {:.3}",
+        silhouette(&emb, &groups3),
+        silhouette(&emb, &groups_all)
+    );
+    println!("\nloss curve -> results/e2e/cidertf_m_curve.csv");
+    Ok(())
+}
+
+fn subsample(m: &Mat, max_rows: usize) -> Mat {
+    if m.rows <= max_rows {
+        return m.clone();
+    }
+    let stride = m.rows.div_ceil(max_rows);
+    let rows: Vec<usize> = (0..m.rows).step_by(stride).collect();
+    let mut out = Mat::zeros(rows.len(), m.cols);
+    for (o, &i) in rows.iter().enumerate() {
+        out.row_mut(o).copy_from_slice(m.row(i));
+    }
+    out
+}

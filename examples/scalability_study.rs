@@ -1,0 +1,43 @@
+//! Scalability study (paper Fig. 5): CiderTF with K = 8, 16, 32 hospitals
+//! — computation speeds up with K (each client owns 1/K of the patients)
+//! while total uplink bytes grow: the computation-communication trade-off.
+//!
+//!     cargo run --release --example scalability_study
+
+use cidertf::engine::{train, AlgoConfig, TrainConfig};
+use cidertf::harness::Ctx;
+use cidertf::losses::Loss;
+use cidertf::runtime::{default_artifact_dir, PjrtBackend};
+use cidertf::tensor::synth::SynthConfig;
+use cidertf::util::benchkit::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let data = SynthConfig::mimic_like().generate();
+    let mut backend = PjrtBackend::new(&default_artifact_dir())?;
+    println!("CiderTF scalability on mimic_like {:?}\n", data.tensor.dims);
+    // "par_s" = wall/K: the simulated-parallel wall-clock (the in-process
+    // network executes clients sequentially; real deployments run them in
+    // parallel, which is what the paper's Fig. 5 time axis shows).
+    let table = Table::new(&["K", "tau", "final_loss", "wall_s", "par_s", "uplink", "bytes/K"]);
+    for tau in [4usize, 8] {
+        for k in [8usize, 16, 32] {
+            let mut cfg = TrainConfig::new("mimic_like", Loss::Logit, AlgoConfig::cidertf(tau));
+            cfg.gamma = Ctx::gamma_for("mimic_like", Loss::Logit);
+            cfg.k = k;
+            cfg.epochs = 3;
+            cfg.iters_per_epoch = 250;
+            let out = train(&cfg, &data, &mut backend, None)?;
+            table.row(&[
+                k.to_string(),
+                tau.to_string(),
+                format!("{:.3e}", out.record.final_loss()),
+                format!("{:.1}", out.record.wall_s),
+                format!("{:.2}", out.record.wall_s / k as f64),
+                fmt_bytes(out.record.total.bytes as f64),
+                fmt_bytes(out.record.total.bytes as f64 / k as f64),
+            ]);
+        }
+    }
+    println!("\n(paper: accuracy holds as K grows; total communication grows with K)");
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT compile path: lower the L2/L1 graphs to HLO text + manifest.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/.
+
+Usage (normally via ``make artifacts``):
+
+    python -m compile.aot --out-dir ../artifacts \
+        [--spec compile/artifact_specs.json] [--force]
+
+Artifacts are shape-specialized (XLA requires static shapes); the spec file
+enumerates the (op, loss, shape) matrix the Rust experiment configs need.
+Each artifact is skipped if its file already exists (names encode the full
+shape signature, so this is safe); ``--force`` regenerates.
+
+Outputs ``<out>/manifest.json`` describing every artifact (op, loss,
+shapes, input/output order) — the Rust runtime's source of truth.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def grad_name(loss, i, s, r, d):
+    return f"grad_{loss}_i{i}_s{s}_r{r}_d{d}"
+
+
+def eval_name(loss, b, r, d):
+    return f"eval_{loss}_b{b}_r{r}_d{d}"
+
+
+def lower_grad(loss, i, s, r, d, with_loss=True):
+    # CPU artifacts lower with a single I-tile (block_i=None): the
+    # interpret-mode grid serializes into an XLA while-loop, and one tile
+    # is ~2x faster (EXPERIMENTS.md §Perf). The multi-tile schedule is the
+    # real-TPU shape only.
+    fn = model.make_grad_fn(loss, d, block_i=None, with_loss=with_loss)
+    args = (
+        jax.ShapeDtypeStruct((i, s), F32),  # xs
+        jax.ShapeDtypeStruct((i, r), F32),  # a
+        *[jax.ShapeDtypeStruct((s, r), F32) for _ in range(d - 1)],  # u_k
+        jax.ShapeDtypeStruct((), F32),  # scale
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def lower_eval(loss, b, r, d):
+    fn = model.make_eval_fn(loss, d)
+    args = (
+        jax.ShapeDtypeStruct((b,), F32),  # x
+        *[jax.ShapeDtypeStruct((b, r), F32) for _ in range(d)],  # u_d
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def build(spec: dict, out_dir: str, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "artifacts": []}
+    n_built = n_skipped = 0
+
+    def emit(name, lowered_thunk, entry):
+        nonlocal n_built, n_skipped
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        entry = dict(entry, name=name, file=f"{name}.hlo.txt")
+        manifest["artifacts"].append(entry)
+        if os.path.exists(path) and not force:
+            n_skipped += 1
+            return
+        t0 = time.time()
+        text = to_hlo_text(lowered_thunk())
+        with open(path, "w") as f:
+            f.write(text)
+        n_built += 1
+        print(f"  {name}: {len(text) / 1e3:.0f} kB in {time.time() - t0:.1f}s")
+
+    # grad_* : inputs xs[I,S], a[I,R], u_1..u_{D-1}[S,R], scale[]
+    # "with_loss": true also emits the slice-loss sum (diagnostics /
+    # differential tests); production shapes omit it — the engine's
+    # training path only consumes G and the extra elementwise-f pass is
+    # measurable (§Perf).
+    for g in spec["grads"]:
+        loss, i, s, r, d = g["loss"], g["I"], g["S"], g["R"], g["D"]
+        with_loss = bool(g.get("with_loss", False))
+        emit(
+            grad_name(loss, i, s, r, d),
+            lambda loss=loss, i=i, s=s, r=r, d=d, wl=with_loss: lower_grad(
+                loss, i, s, r, d, with_loss=wl
+            ),
+            {
+                "op": "grad",
+                "loss": loss,
+                "I": i,
+                "S": s,
+                "R": r,
+                "D": d,
+                "with_loss": with_loss,
+                "inputs": [[i, s], [i, r]] + [[s, r]] * (d - 1) + [[]],
+                "outputs": [[i, r], []] if with_loss else [[i, r]],
+            },
+        )
+
+    # eval_* : inputs x[B], u_1..u_D[B,R]
+    for e in spec["evals"]:
+        loss, b, r, d = e["loss"], e["B"], e["R"], e["D"]
+        emit(
+            eval_name(loss, b, r, d),
+            lambda loss=loss, b=b, r=r, d=d: lower_eval(loss, b, r, d),
+            {
+                "op": "eval",
+                "loss": loss,
+                "B": b,
+                "R": r,
+                "D": d,
+                "inputs": [[b]] + [[b, r]] * d,
+                "outputs": [[]],
+            },
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"artifacts: {n_built} built, {n_skipped} up-to-date, "
+        f"{len(manifest['artifacts'])} in manifest -> {out_dir}"
+    )
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap.add_argument("--spec", default=os.path.join(here, "artifact_specs.json"))
+    ap.add_argument("--out-dir", default=None, help="artifact output dir")
+    ap.add_argument("--out", default=None, help="(compat) path inside out dir")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out_dir or (os.path.dirname(args.out) if args.out else "../artifacts")
+    with open(args.spec) as f:
+        spec = json.load(f)
+    build(spec, out_dir, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

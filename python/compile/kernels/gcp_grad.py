@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: fused fiber-sampled GCP gradient (the compute hot-spot).
+
+One CiderTF local step on mode ``d`` needs (paper eq. 7-10)
+
+    M  = A @ H^T          # model values on the sampled slice   [I, S]
+    Y  = df(M, Xs)        # elementwise loss derivative         [I, S]
+    G  = Y @ H            # partial (fiber-sampled) MTTKRP      [I, R]
+    L  = sum f(M, Xs)     # loss on the slice (monitoring)
+
+where ``A [I, R]`` is the mode-d factor, ``H [S, R]`` holds the Hadamard
+products of the sampled Khatri-Rao rows of the other modes' factors, and
+``Xs [I, S]`` is the dense gather of the sampled fibers.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): both GEMMs hit the MXU;
+the elementwise ``df`` fuses between them so ``M`` never round-trips to
+HBM. The grid tiles the I dimension; each step holds ``A_blk [bI, R]``,
+``Xs_blk [bI, S]`` and the shared ``H [S, R]`` in VMEM (~0.6 MB at the
+default shapes, far under budget, leaving headroom for double buffering).
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers the kernel to plain HLO that
+any backend (including the Rust-side PJRT CPU client) runs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import losses as L
+
+# Default I-tile. 128 rows keeps the VMEM working set small and matches the
+# MXU systolic dimension; swept in the perf pass (see EXPERIMENTS.md §Perf).
+DEFAULT_BLOCK_I = 128
+
+
+def _kernel(xs_ref, a_ref, h_ref, g_ref, *loss_ref, loss: str):
+    """One grid step: fused M -> df -> G over an I-tile.
+
+    ``loss_ref`` is empty when the caller skips the monitoring loss — the
+    elementwise ``f`` (a transcendental pass for logit) then never runs,
+    which matters on the training hot path where only ``G`` is consumed.
+    """
+    a = a_ref[...]  # [bI, R]
+    h = h_ref[...]  # [S, R]
+    xs = xs_ref[...]  # [bI, S]
+    # MXU GEMM 1: model values on the tile.
+    m = jnp.dot(a, h.T, preferred_element_type=jnp.float32)  # [bI, S]
+    # Fused elementwise loss derivative (VPU) — M never leaves VMEM.
+    y = L.loss_grad(loss, m, xs)  # [bI, S]
+    # MXU GEMM 2: partial MTTKRP.
+    g_ref[...] = jnp.dot(y, h, preferred_element_type=jnp.float32)  # [bI, R]
+    if loss_ref:
+        # Per-tile loss partial (summed across the grid by the caller).
+        loss_ref[0][...] = jnp.sum(L.loss_value(loss, m, xs)).reshape(1)
+
+
+def fused_gcp_grad(
+    xs, a, h, *, loss: str, block_i: int = DEFAULT_BLOCK_I, with_loss: bool = True
+):
+    """Fused fiber-sampled GCP gradient via Pallas.
+
+    Args:
+      xs: ``[I, S]`` dense slice of the local tensor at the sampled fibers.
+      a:  ``[I, R]`` mode-d factor matrix.
+      h:  ``[S, R]`` sampled Khatri-Rao rows (Hadamard product of the other
+          modes' factor rows).
+      loss: one of :data:`losses.LOSSES`.
+      block_i: I-tile size; ``I`` is padded up to a multiple internally.
+        Pass ``block_i >= I`` for a single tile — on the CPU interpret
+        path the grid serializes into an XLA while-loop, so single-tile
+        lowering is ~2x faster (see EXPERIMENTS.md §Perf); multi-tile is
+        the real-TPU shape where the grid pipelines HBM<->VMEM.
+      with_loss: also return the summed elementwise loss (costs an extra
+        transcendental pass for logit; the training hot path skips it).
+
+    Returns:
+      ``(g, loss_sum)`` with ``g [I, R]`` the stochastic partial gradient
+      (unscaled) and ``loss_sum`` the scalar sum of the elementwise loss
+      over the slice (``None`` when ``with_loss=False``).
+    """
+    i_dim, s_dim = xs.shape
+    r_dim = a.shape[1]
+    assert a.shape[0] == i_dim and h.shape == (s_dim, r_dim), (
+        xs.shape,
+        a.shape,
+        h.shape,
+    )
+
+    bi = min(block_i, i_dim)
+    pad = (-i_dim) % bi
+    if pad:
+        # Zero rows give m = 0; the loss-sum pollution f(0, 0) * pad is
+        # subtracted below and the gradient rows are sliced off.
+        xs = jnp.pad(xs, ((0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    n_tiles = (i_dim + pad) // bi
+
+    out_specs = [pl.BlockSpec((bi, r_dim), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((i_dim + pad, r_dim), jnp.float32)]
+    if with_loss:
+        out_specs.append(pl.BlockSpec((1,), lambda i: (i,)))
+        out_shape.append(jax.ShapeDtypeStruct((n_tiles,), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel, loss=loss),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((bi, s_dim), lambda i: (i, 0)),  # Xs tile
+            pl.BlockSpec((bi, r_dim), lambda i: (i, 0)),  # A tile
+            pl.BlockSpec((s_dim, r_dim), lambda i: (0, 0)),  # H (shared)
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xs, a, h)
+
+    if not with_loss:
+        return outs[0][:i_dim], None
+    g, loss_parts = outs
+    # Each of the `pad` zero rows contributed s_dim entries of f(0, 0).
+    loss_sum = jnp.sum(loss_parts) - L.loss_at_zero(loss) * pad * s_dim
+    return g[:i_dim], loss_sum

@@ -1,0 +1,56 @@
+"""Elementwise GCP losses f(m, x) and their derivatives df/dm.
+
+The generalized CP objective (paper eq. 2) is a sum of an elementwise loss
+over tensor entries, where ``m`` is the model value ``A(i)`` and ``x`` the
+data value ``X(i)``:
+
+* ``ls``      — least squares (eq. 3), Gaussian data:
+                ``f = (m - x)^2``, ``df = 2 (m - x)``.
+* ``logit``   — Bernoulli-logit for binary data. The paper's eq. (4) as
+                printed (``log(1 + m) - x m``) is not the Bernoulli-logit
+                loss (undefined for ``m <= -1``); we implement the loss of
+                the cited GCP papers (Hong-Kolda-Duersch; Kolda-Hong):
+                ``f = log(1 + exp(m)) - x m``, ``df = sigmoid(m) - x``.
+
+All functions are pure jnp so they can be used both inside the Pallas
+kernel body (interpret mode) and in the jnp reference oracle.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+LOSSES = ("ls", "logit")
+
+
+def loss_value(loss: str, m, x):
+    """Elementwise loss f(m, x)."""
+    if loss == "ls":
+        d = m - x
+        return d * d
+    if loss == "logit":
+        # log(1 + e^m) - x m, numerically stable via logaddexp.
+        return jnp.logaddexp(0.0, m) - x * m
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def loss_grad(loss: str, m, x):
+    """Elementwise derivative df/dm."""
+    if loss == "ls":
+        return 2.0 * (m - x)
+    if loss == "logit":
+        return jax.nn.sigmoid(m) - x
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def loss_at_zero(loss: str) -> float:
+    """f(0, 0) — used to correct the loss sum for zero-padded rows.
+
+    Must be a Python float (not jnp) so it stays a trace-time constant.
+    """
+    if loss == "ls":
+        return 0.0
+    if loss == "logit":
+        return math.log(2.0)
+    raise ValueError(f"unknown loss {loss!r}")

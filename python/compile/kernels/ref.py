@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracle for the Pallas kernel and the L2 graph.
+
+Everything here is the straightforward dense math with no tiling, padding,
+or fusion tricks — the ground truth pytest compares against.
+"""
+
+import jax.numpy as jnp
+
+from . import losses as L
+
+
+def ref_grad(xs, a, h, *, loss: str):
+    """Reference fiber-sampled GCP gradient.
+
+    Same contract as :func:`gcp_grad.fused_gcp_grad`:
+    returns ``(g [I, R], loss_sum)``.
+    """
+    m = a @ h.T  # [I, S]
+    g = L.loss_grad(loss, m, xs) @ h  # [I, R]
+    return g, jnp.sum(L.loss_value(loss, m, xs))
+
+
+def hadamard_rows(us):
+    """Hadamard product of a list of ``[N, R]`` row-gather matrices."""
+    out = us[0]
+    for u in us[1:]:
+        out = out * u
+    return out
+
+
+def ref_eval(us, x, *, loss: str):
+    """Reference stratified-loss-estimator batch.
+
+    ``us`` is a list of D ``[B, R]`` factor-row gathers (one per mode) for B
+    sampled tensor entries; ``x [B]`` the data values. Returns the scalar
+    sum of the elementwise loss over the batch.
+    """
+    m = jnp.sum(hadamard_rows(us), axis=1)  # [B]
+    return jnp.sum(L.loss_value(loss, m, x))

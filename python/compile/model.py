@@ -1,0 +1,65 @@
+"""L2: the generalized-CP compute graph around the L1 Pallas kernel.
+
+Two jit-able entry points, both lowered to HLO text by :mod:`aot`:
+
+* ``make_grad_fn(loss, d_order)`` — one CiderTF local gradient step on a
+  sampled mode (paper eq. 7-10). Takes the dense fiber slice, the mode's
+  factor, the D-1 row-gathered factor matrices of the other modes, and an
+  unbiasedness ``scale`` (the |fibers|/|S| importance weight; the Rust
+  coordinator controls it). The Khatri-Rao rows are combined by Hadamard
+  product *here* (cheap, VPU-bound) and the hot GEMM pipeline runs in the
+  Pallas kernel.
+
+* ``make_eval_fn(loss, d_order)`` — stratified loss-estimator batch: model
+  values of B sampled tensor entries from D row gathers, summed elementwise
+  loss against the data values.
+
+Python is build-time only: these functions exist to be lowered once; the
+Rust runtime executes the resulting HLO on the PJRT CPU client.
+"""
+
+from .kernels import gcp_grad, ref
+
+
+def make_grad_fn(
+    loss: str,
+    d_order: int,
+    block_i: int | None = gcp_grad.DEFAULT_BLOCK_I,
+    with_loss: bool = True,
+):
+    """Gradient-step graph for a D-order tensor.
+
+    Signature of the returned fn:
+      ``(xs [I,S], a [I,R], u_1 [S,R], ..., u_{D-1} [S,R], scale [])
+        -> (g [I,R], loss_sum [])``  (or just ``(g,)`` when
+        ``with_loss=False`` — the training hot path, which skips the
+        monitoring loss's extra transcendental pass).
+
+    ``block_i=None`` lowers with a single I-tile: on the CPU interpret
+    path the Pallas grid serializes into an XLA while-loop, so one tile is
+    ~2x faster (EXPERIMENTS.md §Perf); pass an explicit tile for the
+    TPU-shaped multi-tile schedule.
+    """
+    n_u = d_order - 1
+
+    def grad_fn(xs, a, *rest):
+        us, scale = rest[:n_u], rest[n_u]
+        h = ref.hadamard_rows(list(us))  # [S, R]
+        bi = block_i if block_i is not None else xs.shape[0]
+        g, loss_sum = gcp_grad.fused_gcp_grad(
+            xs, a, h, loss=loss, block_i=bi, with_loss=with_loss
+        )
+        if with_loss:
+            return scale * g, loss_sum
+        return (scale * g,)
+
+    return grad_fn
+
+
+def make_eval_fn(loss: str, d_order: int):
+    """Loss-estimator graph: ``(x [B], u_1 [B,R], ..., u_D [B,R]) -> loss_sum []``."""
+
+    def eval_fn(x, *us):
+        return (ref.ref_eval(list(us), x, loss=loss),)
+
+    return eval_fn

@@ -1,0 +1,7 @@
+"""Make `compile.*` importable whether pytest runs from python/ or the
+repository root (the canonical `pytest python/tests/ -q`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,124 @@
+"""Kernel-vs-oracle correctness: the CORE build-time signal.
+
+The Pallas fused GCP gradient (interpret mode) must agree with the pure-jnp
+reference on every loss, shape, padding configuration, and tensor order the
+artifacts can be built with. Hypothesis sweeps the shape space.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gcp_grad, losses, ref
+
+LOSSES = list(losses.LOSSES)
+
+
+def _rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+def _binary(rng, *shape):
+    return (rng.random(size=shape) < 0.05).astype(np.float32)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize(
+    "i_dim,s_dim,r_dim,block_i",
+    [
+        (32, 16, 4, 32),  # exact single tile
+        (64, 16, 4, 32),  # multiple exact tiles
+        (33, 16, 4, 32),  # padding, 1 extra row
+        (130, 16, 4, 32),  # padding, partial last tile
+        (7, 16, 4, 32),  # I < block -> single shrunken tile
+        (128, 256, 16, 128),  # production shape (scaled)
+        (1, 8, 2, 128),  # degenerate single row
+    ],
+)
+def test_fused_grad_matches_ref(loss, i_dim, s_dim, r_dim, block_i):
+    rng = np.random.default_rng(42)
+    xs = _binary(rng, i_dim, s_dim) if loss == "logit" else _rand(rng, i_dim, s_dim)
+    a = 0.3 * _rand(rng, i_dim, r_dim)
+    h = 0.3 * _rand(rng, s_dim, r_dim)
+    g1, l1 = gcp_grad.fused_gcp_grad(
+        jnp.array(xs), jnp.array(a), jnp.array(h), loss=loss, block_i=block_i
+    )
+    g2, l2 = ref.ref_grad(jnp.array(xs), jnp.array(a), jnp.array(h), loss=loss)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-5)
+    assert math.isclose(float(l1), float(l2), rel_tol=1e-4, abs_tol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    i_dim=st.integers(1, 96),
+    s_dim=st.integers(1, 48),
+    r_dim=st.integers(1, 24),
+    block_i=st.sampled_from([8, 32, 128]),
+    loss=st.sampled_from(LOSSES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_grad_hypothesis_sweep(i_dim, s_dim, r_dim, block_i, loss, seed):
+    rng = np.random.default_rng(seed)
+    xs = 0.5 * _rand(rng, i_dim, s_dim)
+    a = 0.5 * _rand(rng, i_dim, r_dim)
+    h = 0.5 * _rand(rng, s_dim, r_dim)
+    g1, l1 = gcp_grad.fused_gcp_grad(
+        jnp.array(xs), jnp.array(a), jnp.array(h), loss=loss, block_i=block_i
+    )
+    g2, l2 = ref.ref_grad(jnp.array(xs), jnp.array(a), jnp.array(h), loss=loss)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4, atol=2e-4)
+    denom = max(1.0, abs(float(l2)))
+    assert abs(float(l1) - float(l2)) / denom < 2e-4
+
+
+def test_grad_is_true_derivative_ls():
+    """Finite-difference check: G must be d/dA of the slice loss (ls)."""
+    rng = np.random.default_rng(7)
+    i_dim, s_dim, r_dim = 5, 6, 3
+    xs, a, h = _rand(rng, i_dim, s_dim), _rand(rng, i_dim, r_dim), _rand(rng, s_dim, r_dim)
+    g, _ = ref.ref_grad(jnp.array(xs), jnp.array(a), jnp.array(h), loss="ls")
+    eps = 1e-3
+    for (ii, rr) in [(0, 0), (2, 1), (4, 2)]:
+        ap, am = a.copy(), a.copy()
+        ap[ii, rr] += eps
+        am[ii, rr] -= eps
+        _, lp = ref.ref_grad(jnp.array(xs), jnp.array(ap), jnp.array(h), loss="ls")
+        _, lm = ref.ref_grad(jnp.array(xs), jnp.array(am), jnp.array(h), loss="ls")
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        assert math.isclose(fd, float(np.asarray(g)[ii, rr]), rel_tol=1e-2, abs_tol=1e-2)
+
+
+def test_grad_is_true_derivative_logit():
+    rng = np.random.default_rng(8)
+    i_dim, s_dim, r_dim = 4, 5, 2
+    xs = _binary(rng, i_dim, s_dim)
+    a, h = 0.4 * _rand(rng, i_dim, r_dim), 0.4 * _rand(rng, s_dim, r_dim)
+    g, _ = ref.ref_grad(jnp.array(xs), jnp.array(a), jnp.array(h), loss="logit")
+    eps = 1e-3
+    for (ii, rr) in [(0, 0), (3, 1)]:
+        ap, am = a.copy(), a.copy()
+        ap[ii, rr] += eps
+        am[ii, rr] -= eps
+        _, lp = ref.ref_grad(jnp.array(xs), jnp.array(ap), jnp.array(h), loss="logit")
+        _, lm = ref.ref_grad(jnp.array(xs), jnp.array(am), jnp.array(h), loss="logit")
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        assert math.isclose(fd, float(np.asarray(g)[ii, rr]), rel_tol=2e-2, abs_tol=2e-2)
+
+
+def test_logit_loss_is_bernoulli_nll():
+    """f(m, x) must equal the Bernoulli NLL with logit link (up to exact)."""
+    m = jnp.array([-3.0, -0.5, 0.0, 0.5, 3.0])
+    for x in (0.0, 1.0):
+        f = losses.loss_value("logit", m, x)
+        p = 1.0 / (1.0 + jnp.exp(-m))
+        nll = -(x * jnp.log(p) + (1 - x) * jnp.log(1 - p))
+        np.testing.assert_allclose(np.asarray(f), np.asarray(nll), rtol=1e-5, atol=1e-6)
+
+
+def test_loss_at_zero_consistency():
+    for loss in LOSSES:
+        expected = float(losses.loss_value(loss, jnp.zeros(()), jnp.zeros(())))
+        assert math.isclose(losses.loss_at_zero(loss), expected, rel_tol=1e-6, abs_tol=1e-9)

@@ -1,0 +1,82 @@
+"""L2 graph tests: grad_fn / eval_fn composition, scaling, tensor orders."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import losses, ref
+
+LOSSES = list(losses.LOSSES)
+
+
+def _mk(rng, *shape):
+    return jnp.array(0.4 * rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("d_order", [3, 4])
+def test_grad_fn_hadamard_composition(loss, d_order):
+    """grad_fn(xs, a, u_1.., scale) == scale * ref_grad with H = prod u_k."""
+    rng = np.random.default_rng(3)
+    i_dim, s_dim, r_dim, scale = 40, 12, 5, 2.5
+    xs, a = _mk(rng, i_dim, s_dim), _mk(rng, i_dim, r_dim)
+    us = [_mk(rng, s_dim, r_dim) for _ in range(d_order - 1)]
+    fn = model.make_grad_fn(loss, d_order, block_i=16)
+    g, lsum = fn(xs, a, *us, jnp.float32(scale))
+    h = ref.hadamard_rows(us)
+    g_ref, l_ref = ref.ref_grad(xs, a, h, loss=loss)
+    np.testing.assert_allclose(np.asarray(g), scale * np.asarray(g_ref), rtol=1e-4, atol=1e-4)
+    assert math.isclose(float(lsum), float(l_ref), rel_tol=1e-4, abs_tol=1e-4)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_grad_fn_jits(loss):
+    rng = np.random.default_rng(4)
+    fn = jax.jit(model.make_grad_fn(loss, 3, block_i=16))
+    g, lsum = fn(_mk(rng, 32, 16), _mk(rng, 32, 4), _mk(rng, 16, 4), _mk(rng, 16, 4), jnp.float32(1.0))
+    assert g.shape == (32, 4) and lsum.shape == ()
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("d_order", [3, 4])
+def test_eval_fn_matches_manual(loss, d_order):
+    rng = np.random.default_rng(5)
+    b, r = 50, 6
+    us = [_mk(rng, b, r) for _ in range(d_order)]
+    x = _mk(rng, b)
+    (got,) = model.make_eval_fn(loss, d_order)(x, *us)
+    m = np.prod([np.asarray(u) for u in us], axis=0).sum(axis=1)
+    want = float(jnp.sum(losses.loss_value(loss, jnp.array(m), x)))
+    assert math.isclose(float(got), want, rel_tol=1e-4, abs_tol=1e-4)
+
+
+def test_eval_fn_zero_factors_ls():
+    """All-zero factors: ls loss over batch must equal sum x^2."""
+    b, r, d = 17, 3, 3
+    x = jnp.arange(b, dtype=jnp.float32) / 7.0
+    us = [jnp.zeros((b, r), jnp.float32) for _ in range(d)]
+    (got,) = model.make_eval_fn("ls", d)(x, *us)
+    assert math.isclose(float(got), float(jnp.sum(x * x)), rel_tol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    r=st.integers(1, 12),
+    d_order=st.integers(3, 5),
+    loss=st.sampled_from(LOSSES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_eval_fn_hypothesis(b, r, d_order, loss, seed):
+    rng = np.random.default_rng(seed)
+    us = [_mk(rng, b, r) for _ in range(d_order)]
+    x = _mk(rng, b)
+    (got,) = model.make_eval_fn(loss, d_order)(x, *us)
+    want = float(ref.ref_eval(us, x, loss=loss))
+    denom = max(1.0, abs(want))
+    assert abs(float(got) - want) / denom < 1e-4

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 3 (convergence vs baselines).
+//! `cargo bench --bench fig3_convergence` runs the quick profile;
+//! CIDERTF_PROFILE=paper runs the paper settings.
+use cidertf::harness::{fig3, Ctx, Profile};
+
+fn main() {
+    let profile = Profile::from_name(
+        &std::env::var("CIDERTF_PROFILE").unwrap_or_else(|_| "quick".into()),
+    )
+    .unwrap();
+    let mut ctx = Ctx::new(profile).expect("artifacts missing — run `make artifacts`");
+    let taus = if profile == Profile::Paper { vec![2, 4, 6, 8] } else { vec![4, 8] };
+    fig3::run(&mut ctx, 8, &taus).unwrap();
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Fig. 5 (scalability K = 8, 16, 32).
+use cidertf::harness::{fig5, Ctx, Profile};
+
+fn main() {
+    let profile = Profile::from_name(
+        &std::env::var("CIDERTF_PROFILE").unwrap_or_else(|_| "quick".into()),
+    )
+    .unwrap();
+    let mut ctx = Ctx::new(profile).expect("artifacts missing — run `make artifacts`");
+    let (ks, taus): (Vec<usize>, Vec<usize>) =
+        if profile == Profile::Paper { (vec![8, 16, 32], vec![4, 8]) } else { (vec![8, 16, 32], vec![4]) };
+    fig5::run(&mut ctx, &ks, &taus).unwrap();
+}

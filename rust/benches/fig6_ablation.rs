@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Fig. 6 (communication-reduction ablation).
+use cidertf::harness::{fig6, Ctx, Profile};
+
+fn main() {
+    let profile = Profile::from_name(
+        &std::env::var("CIDERTF_PROFILE").unwrap_or_else(|_| "quick".into()),
+    )
+    .unwrap();
+    let mut ctx = Ctx::new(profile).expect("artifacts missing — run `make artifacts`");
+    fig6::run(&mut ctx, 8, 4).unwrap();
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Fig. 7 (FMS vs the centralized BrasCPD).
+use cidertf::harness::{fig7, Ctx, Profile};
+
+fn main() {
+    let profile = Profile::from_name(
+        &std::env::var("CIDERTF_PROFILE").unwrap_or_else(|_| "quick".into()),
+    )
+    .unwrap();
+    let mut ctx = Ctx::new(profile).expect("artifacts missing — run `make artifacts`");
+    fig7::run(&mut ctx, 8, 4).unwrap();
+}

@@ -1,0 +1,96 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf profiling harness):
+//! fiber-slice gather, Khatri-Rao row gather, sign encode/decode,
+//! consensus AXPY, and the full gradient step on both backends.
+
+use cidertf::compress::Compressor;
+use cidertf::engine::client::gather_rows;
+use cidertf::factor::FactorSet;
+use cidertf::losses::Loss;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::runtime::{default_artifact_dir, ComputeBackend, PjrtBackend};
+use cidertf::sched::FiberSampler;
+use cidertf::tensor::fiber::FiberIndex;
+use cidertf::tensor::partition::partition_mode0;
+use cidertf::tensor::synth::SynthConfig;
+use cidertf::util::benchkit::bench;
+use cidertf::util::mat::Mat;
+use cidertf::util::rng::Rng;
+
+fn main() {
+    // production-shaped client shard: mimic_like K=8 -> 544 x 320 x 320
+    let data = SynthConfig::mimic_like().generate();
+    let shard = partition_mode0(&data.tensor, 8).into_iter().next().unwrap();
+    let dims = shard.tensor.dims.clone();
+    let (s, r) = (256usize, 16usize);
+    println!("shard {:?}, {} nnz; |S|={s}, R={r}\n", dims, shard.tensor.nnz());
+
+    // --- hot path 1: sparse -> dense fiber slice gather ---
+    let fi0 = FiberIndex::build(&shard.tensor, 0);
+    let fi1 = FiberIndex::build(&shard.tensor, 1);
+    let mut sampler = FiberSampler::new(7, 0);
+    let n0 = shard.tensor.n_fibers(0);
+    let n1 = shard.tensor.n_fibers(1);
+    let mut xs0 = vec![0.0f32; dims[0] * s];
+    let mut xs1 = vec![0.0f32; dims[1] * s];
+    let fibers0 = sampler.sample(n0, s);
+    let fibers1 = sampler.sample(n1, s);
+    bench("gather_slice_patient_544xS", 400, || fi0.gather_slice(&fibers0, dims[0], &mut xs0));
+    bench("gather_slice_feature_320xS", 400, || fi1.gather_slice(&fibers1, dims[1], &mut xs1));
+
+    // --- hot path 2: Khatri-Rao row gather ---
+    let factors = FactorSet::init_uniform(&dims, r, 0.3, 3);
+    let mut u_bufs = vec![Mat::zeros(s, r), Mat::zeros(s, r)];
+    bench("gather_krp_rows_mode0", 400, || {
+        gather_rows(&factors, 0, &dims, &fibers0, &mut u_bufs)
+    });
+
+    // --- hot path 3: compression ---
+    let mut rng = Rng::new(9);
+    let delta = Mat::rand_normal(dims[1], r, 0.1, &mut rng);
+    bench("sign_compress_320x16", 300, || Compressor::Sign.compress(&delta));
+    let payload = Compressor::Sign.compress(&delta);
+    let mut hat = Mat::zeros(dims[1], r);
+    bench("sign_decode_add_320x16", 300, || payload.add_into(&mut hat));
+
+    // --- hot path 4: consensus AXPY ---
+    let a = Mat::rand_normal(dims[1], r, 0.1, &mut rng);
+    let mut target = Mat::zeros(dims[1], r);
+    bench("consensus_axpy_320x16", 300, || target.axpy(0.33, &a));
+
+    // --- hot path 5: full gradient step, native vs PJRT ---
+    let u_refs: Vec<&Mat> = u_bufs.iter().collect();
+    let mut native = NativeBackend::new();
+    bench("grad_native_patient_544xS", 2000, || {
+        native
+            .grad(Loss::Logit, &xs0, dims[0], s, &factors.mats[0], &u_refs, 1.0 / s as f32)
+            .unwrap()
+    });
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let mut pjrt = PjrtBackend::new(&dir).unwrap();
+        bench("grad_pjrt_patient_544xS", 2000, || {
+            pjrt.grad(Loss::Logit, &xs0, dims[0], s, &factors.mats[0], &u_refs, 1.0 / s as f32)
+                .unwrap()
+        });
+        bench("grad_pjrt_feature_320xS", 2000, || {
+            pjrt.grad(Loss::Logit, &xs1, dims[1], s, &factors.mats[1], &u_refs, 1.0 / s as f32)
+                .unwrap()
+        });
+        // eval path (loss-estimator batch)
+        let b = 8192;
+        let mut ubufs: Vec<Mat> = Vec::new();
+        for m in 0..3 {
+            let mut buf = Mat::zeros(b, r);
+            for row in 0..b {
+                let i = row % factors.mats[m].rows;
+                buf.row_mut(row).copy_from_slice(factors.mats[m].row(i));
+            }
+            ubufs.push(buf);
+        }
+        let urefs: Vec<&Mat> = ubufs.iter().collect();
+        let x = vec![0.0f32; b];
+        bench("eval_pjrt_8192x16", 2000, || pjrt.eval(Loss::Logit, &x, &urefs).unwrap());
+    } else {
+        println!("(PJRT benches skipped: run `make artifacts`)");
+    }
+}

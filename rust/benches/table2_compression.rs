@@ -1,0 +1,28 @@
+//! Bench: Table II compression ratios — analytical matrix plus measured
+//! per-payload wire sizes for every compressor.
+use cidertf::compress::Compressor;
+use cidertf::harness::tables;
+use cidertf::util::benchkit::{bench, Table};
+use cidertf::util::mat::Mat;
+use cidertf::util::rng::Rng;
+
+fn main() {
+    tables::table2(3, 4);
+    tables::table2(4, 8);
+
+    println!("\nmeasured payload sizes (320x16 factor delta):");
+    let mut rng = Rng::new(1);
+    let m = Mat::rand_normal(320, 16, 1.0, &mut rng);
+    let t = Table::new(&["compressor", "payload_bytes", "vs_dense"]);
+    let dense = Compressor::None.compress(&m).wire_bytes();
+    for c in [Compressor::None, Compressor::Sign, Compressor::TopK { ratio: 64 }] {
+        let b = c.compress(&m).wire_bytes();
+        t.row(&[c.name().to_string(), b.to_string(), format!("{:.4}", b as f64 / dense as f64)]);
+    }
+
+    println!("\ncompressor throughput:");
+    bench("sign_compress_320x16", 300, || Compressor::Sign.compress(&m));
+    let p = Compressor::Sign.compress(&m);
+    let mut target = Mat::zeros(320, 16);
+    bench("sign_decode_add_320x16", 300, || p.add_into(&mut target));
+}

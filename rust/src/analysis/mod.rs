@@ -1,0 +1,93 @@
+//! Post-hoc analysis: t-SNE embedding, silhouette scores, and phenotype
+//! extraction — the machinery behind the paper's case study (Fig. 7,
+//! Table III, Table IV).
+
+pub mod phenotype;
+pub mod tsne;
+
+use crate::util::mat::Mat;
+
+/// Mean silhouette coefficient of a labelled point set (O(N²)).
+///
+/// The numeric stand-in for Table III's visual "well-clustered subgroups":
+/// higher = tighter, better-separated clusters.
+pub fn silhouette(x: &Mat, labels: &[usize]) -> f64 {
+    let n = x.rows;
+    assert_eq!(labels.len(), n);
+    let k = labels.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    if k < 2 || n < 3 {
+        return 0.0;
+    }
+    let counts = {
+        let mut c = vec![0usize; k];
+        for &l in labels {
+            c[l] += 1;
+        }
+        c
+    };
+    let mut total = 0.0f64;
+    let mut scored = 0usize;
+    let mut mean_dist = vec![0.0f64; k];
+    for i in 0..n {
+        if counts[labels[i]] < 2 {
+            continue;
+        }
+        mean_dist.iter_mut().for_each(|d| *d = 0.0);
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let mut s = 0.0f64;
+            for (a, b) in x.row(i).iter().zip(x.row(j).iter()) {
+                let d = (a - b) as f64;
+                s += d * d;
+            }
+            mean_dist[labels[j]] += s.sqrt();
+        }
+        let own = labels[i];
+        let a = mean_dist[own] / (counts[own] - 1) as f64;
+        let b = (0..k)
+            .filter(|&c| c != own && counts[c] > 0)
+            .map(|c| mean_dist[c] / counts[c] as f64)
+            .fold(f64::INFINITY, f64::min);
+        if b.is_finite() {
+            total += (b - a) / a.max(b).max(1e-12);
+            scored += 1;
+        }
+    }
+    if scored == 0 {
+        0.0
+    } else {
+        total / scored as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silhouette_separated_vs_mixed() {
+        // two tight, distant clusters -> near 1
+        let mut x = Mat::zeros(8, 2);
+        let mut labels = Vec::new();
+        for i in 0..4 {
+            *x.at_mut(i, 0) = 0.0 + 0.01 * i as f32;
+            labels.push(0);
+        }
+        for i in 4..8 {
+            *x.at_mut(i, 0) = 10.0 + 0.01 * i as f32;
+            labels.push(1);
+        }
+        assert!(silhouette(&x, &labels) > 0.95);
+        // random labels on the same points -> poor
+        let bad = vec![0, 1, 0, 1, 0, 1, 0, 1];
+        assert!(silhouette(&x, &bad) < 0.1);
+    }
+
+    #[test]
+    fn silhouette_degenerate() {
+        assert_eq!(silhouette(&Mat::zeros(5, 2), &[0, 0, 0, 0, 0]), 0.0);
+        assert_eq!(silhouette(&Mat::zeros(2, 2), &[0, 1]), 0.0);
+    }
+}

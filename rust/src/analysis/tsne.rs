@@ -1,0 +1,237 @@
+//! Exact t-SNE (van der Maaten & Hinton 2008) — the substrate behind the
+//! paper's Table III patient-subgroup visualization.
+//!
+//! O(N²) exact implementation (no Barnes-Hut): the harness embeds a few
+//! thousand patient representation vectors, well within range. Gradient
+//! descent with momentum and early exaggeration, per the reference
+//! implementation's schedule.
+
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+/// t-SNE hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iters: usize,
+    pub learning_rate: f64,
+    pub early_exaggeration: f64,
+    pub exaggeration_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        // NOTE: with adaptive gains the classic lr=100/exaggeration=4
+        // combination diverges on small point sets; lr≈10-20 with mild (or
+        // no) exaggeration is stable and separates clusters cleanly.
+        TsneConfig {
+            perplexity: 30.0,
+            iters: 300,
+            learning_rate: 15.0,
+            early_exaggeration: 1.0,
+            exaggeration_iters: 50,
+            seed: 0x7515,
+        }
+    }
+}
+
+/// Embed `x` (`N x d`) into 2-D. Returns an `N x 2` matrix.
+pub fn tsne(x: &Mat, cfg: &TsneConfig) -> Mat {
+    let n = x.rows;
+    if n <= 2 {
+        let mut y = Mat::zeros(n, 2);
+        for i in 0..n {
+            *y.at_mut(i, 0) = i as f32;
+        }
+        return y;
+    }
+    let p = joint_probabilities(x, cfg.perplexity);
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut y = Mat::rand_normal(n, 2, 1e-2, &mut rng);
+    let mut vel = Mat::zeros(n, 2);
+    let mut gains = vec![1.0f64; n * 2];
+
+    let mut q = vec![0.0f64; n * n];
+    let mut num = vec![0.0f64; n * n];
+    for it in 0..cfg.iters {
+        let exaggeration = if it < cfg.exaggeration_iters { cfg.early_exaggeration } else { 1.0 };
+        // student-t affinities
+        let mut z = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dy0 = (y.at(i, 0) - y.at(j, 0)) as f64;
+                let dy1 = (y.at(i, 1) - y.at(j, 1)) as f64;
+                let t = 1.0 / (1.0 + dy0 * dy0 + dy1 * dy1);
+                num[i * n + j] = t;
+                num[j * n + i] = t;
+                z += 2.0 * t;
+            }
+        }
+        let z = z.max(1e-12);
+        for v in q.iter_mut().zip(num.iter()) {
+            *v.0 = (v.1 / z).max(1e-12);
+        }
+        // gradient: 4 Σ_j (p_ij·ex − q_ij) num_ij (y_i − y_j)
+        let momentum = if it < 20 { 0.5 } else { 0.8 };
+        for i in 0..n {
+            let mut g0 = 0.0f64;
+            let mut g1 = 0.0f64;
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let k = i * n + j;
+                let coeff = (exaggeration * p[k] - q[k]) * num[k];
+                g0 += coeff * (y.at(i, 0) - y.at(j, 0)) as f64;
+                g1 += coeff * (y.at(i, 1) - y.at(j, 1)) as f64;
+            }
+            for (dim, g) in [(0usize, 4.0 * g0), (1usize, 4.0 * g1)] {
+                let gi = i * 2 + dim;
+                // adaptive gains (reference implementation)
+                let same_sign = g.signum() == (vel.at(i, dim) as f64).signum();
+                gains[gi] = if same_sign { (gains[gi] * 0.8).max(0.01) } else { gains[gi] + 0.2 };
+                let v = momentum * vel.at(i, dim) as f64 - cfg.learning_rate * gains[gi] * g;
+                *vel.at_mut(i, dim) = v as f32;
+                *y.at_mut(i, dim) += v as f32;
+            }
+        }
+        // recentre
+        for dim in 0..2 {
+            let mean: f32 = (0..n).map(|i| y.at(i, dim)).sum::<f32>() / n as f32;
+            for i in 0..n {
+                *y.at_mut(i, dim) -= mean;
+            }
+        }
+    }
+    y
+}
+
+/// Symmetrized high-dimensional affinities with per-point perplexity
+/// calibration (binary search over Gaussian bandwidths).
+fn joint_probabilities(x: &Mat, perplexity: f64) -> Vec<f64> {
+    let n = x.rows;
+    // pairwise squared distances
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut s = 0.0f64;
+            for (a, b) in x.row(i).iter().zip(x.row(j).iter()) {
+                let d = (a - b) as f64;
+                s += d * d;
+            }
+            d2[i * n + j] = s;
+            d2[j * n + i] = s;
+        }
+    }
+    let target_entropy = perplexity.ln();
+    let mut p = vec![0.0f64; n * n];
+    let mut row = vec![0.0f64; n];
+    for i in 0..n {
+        // binary search beta = 1/(2σ²)
+        let (mut lo, mut hi, mut beta) = (0.0f64, f64::INFINITY, 1.0f64);
+        for _ in 0..50 {
+            let mut sum = 0.0f64;
+            let mut dot = 0.0f64;
+            for j in 0..n {
+                if j == i {
+                    row[j] = 0.0;
+                    continue;
+                }
+                let v = (-beta * d2[i * n + j]).exp();
+                row[j] = v;
+                sum += v;
+                dot += v * d2[i * n + j];
+            }
+            let sum = sum.max(1e-300);
+            let entropy = sum.ln() + beta * dot / sum;
+            let diff = entropy - target_entropy;
+            if diff.abs() < 1e-5 {
+                break;
+            }
+            if diff > 0.0 {
+                lo = beta;
+                beta = if hi.is_finite() { (beta + hi) / 2.0 } else { beta * 2.0 };
+            } else {
+                hi = beta;
+                beta = (beta + lo) / 2.0;
+            }
+        }
+        let sum: f64 = row.iter().sum::<f64>().max(1e-300);
+        for j in 0..n {
+            p[i * n + j] = row[j] / sum;
+        }
+    }
+    // symmetrize + normalize
+    let mut joint = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            joint[i * n + j] = ((p[i * n + j] + p[j * n + i]) / (2.0 * n as f64)).max(1e-12);
+        }
+    }
+    joint
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated Gaussian blobs in 5-D.
+    fn blobs(n_per: usize, seed: u64) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let centers = [[8.0, 0.0, 0.0, 0.0, 0.0], [0.0, 8.0, 0.0, 0.0, 0.0], [0.0, 0.0, 8.0, 0.0, 0.0]];
+        let mut x = Mat::zeros(3 * n_per, 5);
+        let mut labels = Vec::new();
+        for (c, center) in centers.iter().enumerate() {
+            for i in 0..n_per {
+                let row = x.row_mut(c * n_per + i);
+                for (d, v) in row.iter_mut().enumerate() {
+                    *v = center[d] as f32 + 0.5 * rng.normal_f32();
+                }
+                labels.push(c);
+            }
+        }
+        (x, labels)
+    }
+
+    #[test]
+    fn separates_blobs() {
+        let (x, labels) = blobs(30, 3);
+        let cfg = TsneConfig { perplexity: 10.0, iters: 250, ..Default::default() };
+        let y = tsne(&x, &cfg);
+        let sil = crate::analysis::silhouette(&y, &labels);
+        assert!(sil > 0.5, "silhouette {sil} too low — blobs not separated");
+    }
+
+    #[test]
+    fn embedding_is_finite_and_centred() {
+        let (x, _) = blobs(20, 4);
+        let y = tsne(&x, &TsneConfig { iters: 100, ..Default::default() });
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        for dim in 0..2 {
+            let mean: f32 = (0..y.rows).map(|i| y.at(i, dim)).sum::<f32>() / y.rows as f32;
+            assert!(mean.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let y = tsne(&Mat::zeros(1, 3), &TsneConfig::default());
+        assert_eq!(y.rows, 1);
+        let y = tsne(&Mat::zeros(2, 3), &TsneConfig::default());
+        assert_eq!(y.rows, 2);
+    }
+
+    #[test]
+    fn perplexity_calibration_rows_sum_to_one() {
+        let (x, _) = blobs(10, 5);
+        let p = joint_probabilities(&x, 5.0);
+        let n = x.rows;
+        let total: f64 = p.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "joint P sums to {total}");
+        for i in 0..n {
+            assert!(p[i * n + i] <= 1e-11);
+        }
+    }
+}

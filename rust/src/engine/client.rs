@@ -1,0 +1,423 @@
+//! Per-client (institution) state and the local update step — the inner
+//! loop of Alg. 1 as seen by one node.
+
+use crate::compress::ErrorFeedback;
+use crate::factor::FactorSet;
+use crate::gossip::{CommLedger, EstimateState};
+use crate::losses::Loss;
+use crate::runtime::ComputeBackend;
+use crate::sched::FiberSampler;
+use crate::tensor::fiber::ModeIndices;
+use crate::tensor::partition::Shard;
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+/// Fixed stratified loss-estimation sample for one client: `B` nonzero
+/// draws and `B` uniform zero cells, fixed at init so the loss curve is a
+/// consistent estimator across epochs and algorithms.
+#[derive(Debug, Clone)]
+pub struct EvalSample {
+    /// per-mode row indices of the nonzero batch, each `Vec<u32>` len B
+    pub nnz_rows: Vec<Vec<u32>>,
+    pub nnz_vals: Vec<f32>,
+    /// per-mode row indices of the zero batch
+    pub zero_rows: Vec<Vec<u32>>,
+    /// weights turning batch sums into an unbiased total-loss estimate
+    pub w_nnz: f64,
+    pub w_zero: f64,
+}
+
+impl EvalSample {
+    pub fn build(shard: &Shard, batch: usize, rng: &mut Rng) -> Self {
+        let t = &shard.tensor;
+        let d = t.order();
+        let nnz = t.nnz();
+        let cells = t.n_cells();
+        let cell_set = t.cell_set();
+
+        let mut nnz_rows = vec![Vec::with_capacity(batch); d];
+        let mut nnz_vals = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let e = rng.below(nnz.max(1));
+            if nnz == 0 {
+                for rows in nnz_rows.iter_mut() {
+                    rows.push(0);
+                }
+                nnz_vals.push(0.0);
+                continue;
+            }
+            let idx = t.entry(e);
+            for (m, rows) in nnz_rows.iter_mut().enumerate() {
+                rows.push(idx[m]);
+            }
+            nnz_vals.push(t.vals[e]);
+        }
+
+        let mut zero_rows = vec![Vec::with_capacity(batch); d];
+        let mut found = 0usize;
+        while found < batch {
+            let idx: Vec<u32> = t.dims.iter().map(|&dim| rng.below(dim) as u32).collect();
+            if cell_set.contains(&t.linearize(&idx)) {
+                continue; // rejection: must be a true zero cell
+            }
+            for (m, rows) in zero_rows.iter_mut().enumerate() {
+                rows.push(idx[m]);
+            }
+            found += 1;
+        }
+
+        EvalSample {
+            nnz_rows,
+            nnz_vals,
+            zero_rows,
+            w_nnz: nnz as f64 / batch as f64,
+            w_zero: (cells - nnz as f64) / batch as f64,
+        }
+    }
+}
+
+/// One decentralized client: local shard, factors, momentum, estimates.
+pub struct ClientState {
+    pub id: usize,
+    pub shard: Shard,
+    pub indices: ModeIndices,
+    /// local factors: `mats[0]` holds only this client's patient rows
+    pub factors: FactorSet,
+    /// Nesterov momentum velocity per mode (allocated when enabled)
+    momentum: Vec<Option<Mat>>,
+    /// peer estimates for feature modes (None until decentralized init)
+    pub estimates: Option<EstimateState>,
+    /// error feedback per mode (centralized CiderTF)
+    pub ef: Vec<Option<ErrorFeedback>>,
+    /// pre-step factor snapshot used by the error-feedback path
+    pub ef_shadow: Option<Vec<Mat>>,
+    pub fiber_sampler: FiberSampler,
+    pub ledger: CommLedger,
+    pub eval: EvalSample,
+    /// reused dense-slice gather buffer
+    xs_buf: Vec<f32>,
+    /// reused per-mode row-gather buffers for the gradient call
+    u_bufs: Vec<Mat>,
+    /// reused row-gather buffers for eval batches
+    eval_u_bufs: Vec<Mat>,
+}
+
+impl ClientState {
+    pub fn new(
+        id: usize,
+        shard: Shard,
+        rank: usize,
+        init_scale: f32,
+        seed: u64,
+        fiber_samples: usize,
+        eval_batch: usize,
+        momentum_enabled: bool,
+        error_feedback: bool,
+    ) -> Self {
+        let indices = ModeIndices::build(&shard.tensor);
+        let dims = shard.tensor.dims.clone();
+        // Feature-mode factors use the *shared* seed so all clients start
+        // identical (Alg. 1: A^k[0] = A[0]); the patient mode is seeded per
+        // client slice — we draw the full global matrix and take our rows
+        // so that K=1 and K=8 runs start from the same global init.
+        let factors = init_factors_for_shard(&shard, &dims, rank, init_scale, seed);
+        let d = dims.len();
+        let momentum = (0..d)
+            .map(|m| momentum_enabled.then(|| Mat::zeros(dims[m], rank)))
+            .collect();
+        let ef = (0..d)
+            .map(|m| error_feedback.then(|| ErrorFeedback::new(dims[m], rank)))
+            .collect();
+        let mut eval_rng = Rng::new(seed ^ 0xE7A1).split(id as u64);
+        let eval = EvalSample::build(&shard, eval_batch, &mut eval_rng);
+        let max_i = *dims.iter().max().unwrap();
+        let u_bufs = (0..d.saturating_sub(1)).map(|_| Mat::zeros(fiber_samples, rank)).collect();
+        let eval_u_bufs = (0..d).map(|_| Mat::zeros(eval_batch, rank)).collect();
+        ClientState {
+            id,
+            shard,
+            indices,
+            factors,
+            momentum,
+            estimates: None,
+            ef,
+            ef_shadow: None,
+            fiber_sampler: FiberSampler::new(seed, id as u64),
+            ledger: CommLedger::default(),
+            eval,
+            xs_buf: vec![0.0; max_i * fiber_samples],
+            u_bufs,
+            eval_u_bufs,
+        }
+    }
+
+    /// Wire up gossip estimates (decentralized runs only): feature modes
+    /// start from the shared init.
+    pub fn init_estimates(&mut self, neighbors: &[usize]) {
+        let d = self.factors.order();
+        let init: Vec<Option<Mat>> = (0..d)
+            .map(|m| (m > 0).then(|| self.factors.mats[m].clone()))
+            .collect();
+        self.estimates = Some(EstimateState::new(self.id, neighbors, &init));
+    }
+
+    /// One local SGD (or momentum) step on `mode` (Alg. 1 lines 4-5,
+    /// eq. 12-13). Returns the slice loss (monitoring only).
+    pub fn local_step(
+        &mut self,
+        mode: usize,
+        loss: Loss,
+        fiber_samples: usize,
+        gamma: f64,
+        beta: Option<f64>,
+        backend: &mut dyn ComputeBackend,
+    ) -> anyhow::Result<f64> {
+        let dims = self.shard.tensor.dims.clone();
+        let n_fibers = self.shard.tensor.n_fibers(mode);
+        let fibers = self.fiber_sampler.sample(n_fibers, fiber_samples);
+        let s_dim = fibers.len();
+        let i_dim = dims[mode];
+
+        // dense slice gather (L3 hot path #1)
+        let xs = &mut self.xs_buf[..i_dim * s_dim];
+        self.indices.mode(mode).gather_slice(&fibers, i_dim, xs);
+
+        // row gathers of the other modes (L3 hot path #2)
+        gather_rows(&self.factors, mode, &dims, &fibers, &mut self.u_bufs);
+        let u_refs: Vec<&Mat> = self.u_bufs.iter().take(dims.len() - 1).collect();
+
+        // Mean over the sampled fibers (BrasCPD convention): keeps the
+        // step size interpretable independent of tensor size. (The fully
+        // unbiased sum-gradient is `n_fibers/|S| ·` this; the constant is
+        // absorbed by the grid-searched γ, exactly as in the paper.)
+        let scale = 1.0 / s_dim as f32;
+        let (g, slice_loss) =
+            backend.grad(loss, xs, i_dim, s_dim, &self.factors.mats[mode], &u_refs, scale)?;
+
+        // momentum velocity M = G + β M_prev (eq. 12, constant lr)
+        let a = &mut self.factors.mats[mode];
+        match (&mut self.momentum[mode], beta) {
+            (Some(m), Some(b)) => {
+                m.scale(b as f32);
+                m.add_assign(&g);
+                // A -= γ (G + β M)   (eq. 13)
+                a.axpy(-(gamma as f32), &g);
+                a.axpy(-(gamma * b) as f32, m);
+            }
+            _ => {
+                a.axpy(-(gamma as f32), &g);
+            }
+        }
+        Ok(slice_loss)
+    }
+
+    /// Estimate this client's contribution to the global loss on the fixed
+    /// stratified sample (two backend eval calls).
+    pub fn eval_loss(&mut self, loss: Loss, backend: &mut dyn ComputeBackend) -> anyhow::Result<f64> {
+        let d = self.factors.order();
+        // nonzero batch
+        for m in 0..d {
+            gather_rows_by_index(&self.factors.mats[m], &self.eval.nnz_rows[m], &mut self.eval_u_bufs[m]);
+        }
+        let refs: Vec<&Mat> = self.eval_u_bufs.iter().collect();
+        let sum_nnz = backend.eval(loss, &self.eval.nnz_vals, &refs)?;
+        // zero batch
+        for m in 0..d {
+            gather_rows_by_index(&self.factors.mats[m], &self.eval.zero_rows[m], &mut self.eval_u_bufs[m]);
+        }
+        let refs: Vec<&Mat> = self.eval_u_bufs.iter().collect();
+        let zeros = vec![0.0f32; self.eval.zero_rows[0].len()];
+        let sum_zero = backend.eval(loss, &zeros, &refs)?;
+        Ok(self.eval.w_nnz * sum_nnz + self.eval.w_zero * sum_zero)
+    }
+}
+
+/// Draw the shared global init and slice out this shard's patient rows.
+fn init_factors_for_shard(
+    shard: &Shard,
+    dims: &[usize],
+    rank: usize,
+    init_scale: f32,
+    seed: u64,
+) -> FactorSet {
+    // Row i of the global patient factor depends only on (seed, global row
+    // index), so any K produces the same global init — K=1 and K=8 runs
+    // are directly comparable and shards never need the global row count.
+    let mut mats = Vec::with_capacity(dims.len());
+    // patient mode: per-global-row deterministic rows
+    let mut a0 = Mat::zeros(dims[0], rank);
+    for local in 0..dims[0] {
+        let global_row = shard.row_offset + local;
+        let mut row_rng = Rng::new(seed ^ 0xA0).split(global_row as u64);
+        for r in 0..rank {
+            *a0.at_mut(local, r) = row_rng.uniform_f32() * init_scale;
+        }
+    }
+    mats.push(a0);
+    // feature modes: shared across clients
+    for (m, &dim) in dims.iter().enumerate().skip(1) {
+        let mut mode_rng = Rng::new(seed ^ 0xA0).split(0x1_0000 + m as u64);
+        mats.push(Mat::rand_uniform(dim, rank, init_scale, &mut mode_rng));
+    }
+    FactorSet { mats }
+}
+
+/// Gather the Khatri-Rao row matrices `U_m[S, R]` for every mode except
+/// `mode`, into reusable buffers (order: ascending mode, skipping `mode`).
+pub fn gather_rows(
+    factors: &FactorSet,
+    mode: usize,
+    dims: &[usize],
+    fibers: &[u64],
+    out: &mut [Mat],
+) {
+    let d = dims.len();
+    let r_dim = factors.rank();
+    let s = fibers.len();
+    let mut idx_buf = vec![0u32; d];
+    // resize buffers if the fiber count shrank (tiny tensors)
+    for buf in out.iter_mut().take(d - 1) {
+        if buf.rows != s || buf.cols != r_dim {
+            *buf = Mat::zeros(s, r_dim);
+        }
+    }
+    for (row, &fid) in fibers.iter().enumerate() {
+        crate::factor::decode_into(dims, mode, fid, &mut idx_buf);
+        let mut slot = 0;
+        for m in 0..d {
+            if m == mode {
+                continue;
+            }
+            let src = factors.mats[m].row(idx_buf[m] as usize);
+            out[slot].row_mut(row).copy_from_slice(src);
+            slot += 1;
+        }
+    }
+}
+
+/// Gather rows of `a` at `rows` into `out` (`[B, R]`).
+pub fn gather_rows_by_index(a: &Mat, rows: &[u32], out: &mut Mat) {
+    debug_assert_eq!(out.cols, a.cols);
+    if out.rows != rows.len() {
+        *out = Mat::zeros(rows.len(), a.cols);
+    }
+    for (b, &i) in rows.iter().enumerate() {
+        out.row_mut(b).copy_from_slice(a.row(i as usize));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeBackend;
+    use crate::tensor::partition::partition_mode0;
+    use crate::tensor::synth::SynthConfig;
+
+    fn mk_client(id: usize, k: usize, momentum: bool) -> ClientState {
+        let data = SynthConfig::tiny(11).generate();
+        let shards = partition_mode0(&data.tensor, k);
+        ClientState::new(id, shards[id].clone(), 4, 0.2, 123, 16, 32, momentum, false)
+    }
+
+    #[test]
+    fn shared_init_feature_modes_identical_across_clients() {
+        let c0 = mk_client(0, 2, false);
+        let c1 = mk_client(1, 2, false);
+        for m in 1..3 {
+            assert_eq!(c0.factors.mats[m].data, c1.factors.mats[m].data);
+        }
+        // patient rows differ (different global rows)
+        assert_ne!(c0.factors.mats[0].data, c1.factors.mats[0].data);
+    }
+
+    #[test]
+    fn patient_init_matches_k1_global_slice() {
+        // rows of a K=2 shard must equal the same global rows at K=1
+        let k1 = mk_client(0, 1, false);
+        let c1 = mk_client(1, 2, false);
+        let offset = c1.shard.row_offset;
+        for local in 0..c1.factors.mats[0].rows {
+            assert_eq!(
+                c1.factors.mats[0].row(local),
+                k1.factors.mats[0].row(offset + local),
+                "row {local}"
+            );
+        }
+    }
+
+    #[test]
+    fn local_step_descends_slice_loss() {
+        let mut c = mk_client(0, 1, false);
+        let mut backend = NativeBackend::new();
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for t in 0..300 {
+            let mode = t % 3;
+            let l = c.local_step(mode, Loss::Ls, 16, 0.05, None, &mut backend).unwrap();
+            if t == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first, "slice loss did not descend: {first} -> {last}");
+        assert!(c.factors.mats[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn momentum_step_differs_from_plain() {
+        let mut plain = mk_client(0, 1, false);
+        let mut mom = mk_client(0, 1, true);
+        let mut b1 = NativeBackend::new();
+        let mut b2 = NativeBackend::new();
+        for t in 0..10 {
+            plain.local_step(t % 3, Loss::Ls, 16, 0.05, None, &mut b1).unwrap();
+            mom.local_step(t % 3, Loss::Ls, 16, 0.05, Some(0.9), &mut b2).unwrap();
+        }
+        assert_ne!(plain.factors.mats[0].data, mom.factors.mats[0].data);
+    }
+
+    #[test]
+    fn eval_sample_weights_unbiased_for_ls() {
+        // For the all-zero factor set, ls loss estimate must equal ‖X‖_F²
+        // exactly: nnz batch contributes w_nnz * Σ x², zero batch 0.
+        let data = SynthConfig::tiny(12).generate();
+        let shards = partition_mode0(&data.tensor, 1);
+        let mut c = ClientState::new(0, shards[0].clone(), 4, 0.2, 5, 16, 64, false, false);
+        for m in c.factors.mats.iter_mut() {
+            m.fill(0.0);
+        }
+        let mut backend = NativeBackend::new();
+        let est = c.eval_loss(Loss::Ls, &mut backend).unwrap();
+        // estimator over the nnz batch: mean(x²)*nnz — with-replacement
+        // draws of uniform entries; for the binary tensor every x=1 so the
+        // estimate is exact
+        let exact = data.tensor.frob_sq();
+        assert!((est - exact).abs() / exact < 1e-6, "{est} vs {exact}");
+    }
+
+    #[test]
+    fn gather_rows_by_index_basic() {
+        let a = Mat::from_fn(5, 2, |i, j| (i * 10 + j) as f32);
+        let mut out = Mat::zeros(3, 2);
+        gather_rows_by_index(&a, &[4, 0, 2], &mut out);
+        assert_eq!(out.data, vec![40.0, 41.0, 0.0, 1.0, 20.0, 21.0]);
+    }
+
+    #[test]
+    fn gather_rows_skips_target_mode_and_matches_krp() {
+        let data = SynthConfig::tiny(13).generate();
+        let shards = partition_mode0(&data.tensor, 1);
+        let c = ClientState::new(0, shards[0].clone(), 4, 0.2, 9, 8, 16, false, false);
+        let dims = c.shard.tensor.dims.clone();
+        let fibers: Vec<u64> = vec![0, 5, 17];
+        let mut bufs = vec![Mat::zeros(3, 4), Mat::zeros(3, 4)];
+        gather_rows(&c.factors, 1, &dims, &fibers, &mut bufs);
+        // hadamard of gathered rows must equal FactorSet::khatri_rao_rows
+        let h_ref = c.factors.khatri_rao_rows(1, &dims, &fibers);
+        let mut h = bufs[0].clone();
+        h.hadamard_assign(&bufs[1]);
+        for (x, y) in h.data.iter().zip(h_ref.data.iter()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Run records: the per-epoch metric curves every figure is drawn from.
+
+use crate::gossip::CommLedger;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One point on a training curve (paper figures plot `loss` against
+/// `time_s` and against `bytes`).
+#[derive(Debug, Clone)]
+pub struct MetricPoint {
+    pub epoch: usize,
+    pub iter: usize,
+    /// wall-clock seconds since training start
+    pub time_s: f64,
+    /// estimated global GCP loss (stratified estimator, fixed sample)
+    pub loss: f64,
+    /// cumulative uplink bytes across all clients
+    pub bytes: u64,
+    /// FMS vs the reference factors, when tracked (Fig. 7)
+    pub fms: Option<f64>,
+}
+
+/// Complete record of one training run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub algo: String,
+    pub dataset: String,
+    pub loss: String,
+    pub topology: String,
+    pub k: usize,
+    pub tau: usize,
+    pub points: Vec<MetricPoint>,
+    pub total: CommLedger,
+    pub wall_s: f64,
+}
+
+impl RunRecord {
+    /// Final loss (last recorded point).
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+
+    /// First point at which the loss dips below `target`, if any.
+    pub fn first_reaching(&self, target: f64) -> Option<&MetricPoint> {
+        self.points.iter().find(|p| p.loss <= target)
+    }
+
+    /// Minimum loss over the run.
+    pub fn best_loss(&self) -> f64 {
+        self.points.iter().map(|p| p.loss).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["algo", "dataset", "loss_kind", "topology", "k", "tau", "epoch", "iter", "time_s", "loss", "bytes", "fms"],
+        )?;
+        for p in &self.points {
+            w.row(&[
+                self.algo.clone(),
+                self.dataset.clone(),
+                self.loss.clone(),
+                self.topology.clone(),
+                self.k.to_string(),
+                self.tau.to_string(),
+                p.epoch.to_string(),
+                p.iter.to_string(),
+                format!("{:.4}", p.time_s),
+                format!("{:.6e}", p.loss),
+                p.bytes.to_string(),
+                p.fms.map(|f| format!("{f:.4}")).unwrap_or_default(),
+            ])?;
+        }
+        w.flush()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("epoch".into(), Json::Num(p.epoch as f64));
+                m.insert("iter".into(), Json::Num(p.iter as f64));
+                m.insert("time_s".into(), Json::Num(p.time_s));
+                m.insert("loss".into(), Json::Num(p.loss));
+                m.insert("bytes".into(), Json::Num(p.bytes as f64));
+                if let Some(f) = p.fms {
+                    m.insert("fms".into(), Json::Num(f));
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        Json::obj(vec![
+            ("algo", Json::Str(self.algo.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("loss", Json::Str(self.loss.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("k", Json::Num(self.k as f64)),
+            ("tau", Json::Num(self.tau as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("total_bytes", Json::Num(self.total.bytes as f64)),
+            ("messages", Json::Num(self.total.messages as f64)),
+            ("triggered", Json::Num(self.total.triggered as f64)),
+            ("suppressed", Json::Num(self.total.suppressed as f64)),
+            ("points", Json::Arr(points)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> RunRecord {
+        RunRecord {
+            algo: "cidertf".into(),
+            dataset: "tiny".into(),
+            loss: "logit".into(),
+            topology: "ring".into(),
+            k: 4,
+            tau: 4,
+            points: vec![
+                MetricPoint { epoch: 0, iter: 99, time_s: 0.5, loss: 10.0, bytes: 100, fms: None },
+                MetricPoint { epoch: 1, iter: 199, time_s: 1.0, loss: 4.0, bytes: 200, fms: Some(0.7) },
+                MetricPoint { epoch: 2, iter: 299, time_s: 1.5, loss: 5.0, bytes: 300, fms: Some(0.8) },
+            ],
+            total: Default::default(),
+            wall_s: 1.5,
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let r = rec();
+        assert_eq!(r.final_loss(), 5.0);
+        assert_eq!(r.best_loss(), 4.0);
+        assert_eq!(r.first_reaching(4.5).unwrap().epoch, 1);
+        assert!(r.first_reaching(1.0).is_none());
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let r = rec();
+        let dir = std::env::temp_dir().join("cidertf_metrics_test");
+        let p = dir.join("run.csv");
+        r.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.lines().nth(2).unwrap().contains("0.7"));
+        let j = r.to_json();
+        assert_eq!(j.req_str("algo").unwrap(), "cidertf");
+        assert_eq!(j.req_array("points").unwrap().len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

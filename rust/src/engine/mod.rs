@@ -1,0 +1,362 @@
+//! The decentralized training engine — paper Algorithm 1 in full, plus
+//! every baseline as a configuration (see `presets.rs`).
+//!
+//! The engine runs synchronous gossip rounds over a simulated in-process
+//! network. One `ClientState` per institution holds the local shard,
+//! factors, momentum, and peer estimates; the trainer drives the
+//! four-level communication-reduction stack:
+//!
+//! 1. **element** — the compressor applied to factor deltas,
+//! 2. **block** — the shared randomized mode sequence `d_ξ[t]`,
+//! 3. **round** — communication only when `t mod τ == 0`,
+//! 4. **event** — the `‖A[t+½] − Â‖² ≥ λ[t]γ²` trigger.
+//!
+//! Gradient and loss evaluation execute through a [`ComputeBackend`] —
+//! the PJRT artifacts in production, the native mirror in tests.
+
+pub mod client;
+pub mod metrics;
+pub mod presets;
+
+use std::time::Instant;
+
+use crate::compress::Compressor;
+use crate::factor::{fms::fms, FactorSet};
+use crate::gossip::Message;
+use crate::losses::Loss;
+use crate::runtime::ComputeBackend;
+use crate::sched::{BlockSampler, TriggerSchedule};
+use crate::tensor::partition::partition_mode0;
+use crate::tensor::synth::SynthData;
+use crate::topology::{Graph, Topology};
+use crate::util::mat::Mat;
+use client::ClientState;
+use metrics::{MetricPoint, RunRecord};
+
+/// Algorithm configuration (the Table II feature matrix).
+#[derive(Debug, Clone)]
+pub struct AlgoConfig {
+    pub name: String,
+    pub compressor: Compressor,
+    /// sample one mode per round (vs updating all modes)
+    pub block_random: bool,
+    /// local rounds between communications (τ)
+    pub tau: usize,
+    pub event_triggered: bool,
+    /// Nesterov momentum β (CiderTF_m)
+    pub momentum: Option<f64>,
+    /// error-feedback compressed updates (Centralized CiderTF)
+    pub error_feedback: bool,
+    /// consensus step size ϱ
+    pub rho: f64,
+}
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub dataset: String,
+    pub loss: Loss,
+    pub rank: usize,
+    /// fiber sample size |S|
+    pub fiber_samples: usize,
+    /// number of clients K
+    pub k: usize,
+    pub topology: Topology,
+    /// learning rate γ (constant; paper grid-searches powers of two)
+    pub gamma: f64,
+    /// iterations per epoch (paper: 500)
+    pub iters_per_epoch: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    /// stratified loss-estimator batch size (must match an eval artifact)
+    pub eval_batch: usize,
+    pub init_scale: f32,
+    /// scale on the event-trigger threshold λ₀ = scale/γ (paper: 1.0)
+    pub trigger_lambda0_scale: f64,
+    /// λ[t] growth factor α (paper grid-searches in [1, 2])
+    pub trigger_alpha: f64,
+    pub algo: AlgoConfig,
+}
+
+impl TrainConfig {
+    /// The event-trigger threshold schedule for this config.
+    pub fn trigger_schedule(&self) -> TriggerSchedule {
+        let mut t = TriggerSchedule::paper_default(self.gamma, self.iters_per_epoch);
+        t.lambda0 *= self.trigger_lambda0_scale;
+        t.alpha = self.trigger_alpha;
+        t
+    }
+
+    /// Sensible defaults for the scaled datasets (overridden per figure).
+    pub fn new(dataset: &str, loss: Loss, algo: AlgoConfig) -> Self {
+        TrainConfig {
+            dataset: dataset.to_string(),
+            loss,
+            rank: 16,
+            fiber_samples: 256,
+            k: 8,
+            topology: Topology::Ring,
+            gamma: 0.25,
+            iters_per_epoch: 500,
+            epochs: 10,
+            seed: 0xC1DE,
+            eval_batch: 8192,
+            init_scale: 0.3,
+            trigger_lambda0_scale: 1.0,
+            trigger_alpha: 1.3,
+            algo,
+        }
+    }
+}
+
+/// Outcome of a run: the metric record plus the assembled global factors.
+pub struct TrainOutcome {
+    pub record: RunRecord,
+    pub factors: FactorSet,
+}
+
+/// Run one training configuration to completion.
+pub fn train(
+    cfg: &TrainConfig,
+    data: &SynthData,
+    backend: &mut dyn ComputeBackend,
+    fms_reference: Option<&FactorSet>,
+) -> anyhow::Result<TrainOutcome> {
+    let d_order = data.tensor.dims.len();
+    anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
+    let graph = Graph::build(cfg.topology, cfg.k)?;
+    let decentralized = cfg.k > 1;
+
+    // --- client setup ---
+    let shards = partition_mode0(&data.tensor, cfg.k);
+    let mut clients: Vec<ClientState> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            ClientState::new(
+                id,
+                shard,
+                cfg.rank,
+                cfg.init_scale,
+                cfg.seed,
+                cfg.fiber_samples,
+                cfg.eval_batch,
+                cfg.algo.momentum.is_some(),
+                cfg.algo.error_feedback,
+            )
+        })
+        .collect();
+    if decentralized {
+        for c in clients.iter_mut() {
+            let nbrs = graph.neighbors[c.id].clone();
+            c.init_estimates(&nbrs);
+        }
+    }
+
+    let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
+    let trigger = cfg.trigger_schedule();
+    let all_modes: Vec<usize> = (0..d_order).collect();
+
+    let t0 = Instant::now();
+    let mut points: Vec<MetricPoint> = Vec::with_capacity(cfg.epochs + 1);
+    record_point(&mut clients, cfg, backend, fms_reference, 0, 0, t0, &mut points)?;
+
+    let total_iters = cfg.epochs * cfg.iters_per_epoch;
+    for t in 0..total_iters {
+        // ---- block level: the shared mode sequence d_ξ[t] ----
+        // (drawn every round so baselines consume the same randomness)
+        let sampled_mode = block_sampler.next_mode();
+        let modes: &[usize] =
+            if cfg.algo.block_random { std::slice::from_ref(&sampled_mode) } else { &all_modes };
+
+        // ---- local gradient steps (Alg. 1 lines 4-5) ----
+        for c in clients.iter_mut() {
+            for &m in modes {
+                c.local_step(m, cfg.loss, cfg.fiber_samples, cfg.gamma, cfg.algo.momentum, backend)?;
+                // Centralized CiderTF: re-apply the step through the
+                // error-feedback compressor (paper baseline iii).
+                if cfg.algo.error_feedback {
+                    apply_error_feedback(c, m, cfg.algo.compressor);
+                }
+            }
+        }
+
+        // ---- round level: communicate only when t ≡ 0 (mod τ) ----
+        if decentralized && t % cfg.algo.tau == 0 {
+            for &m in modes {
+                if m == 0 {
+                    continue; // patient mode never travels (privacy)
+                }
+                gossip_round(&mut clients, &graph, cfg, &trigger, t, m);
+            }
+        }
+
+        // ---- metrics per epoch ----
+        if (t + 1) % cfg.iters_per_epoch == 0 {
+            let epoch = (t + 1) / cfg.iters_per_epoch;
+            record_point(&mut clients, cfg, backend, fms_reference, epoch, t + 1, t0, &mut points)?;
+            if !points.last().map(|p| p.loss.is_finite()).unwrap_or(true) {
+                eprintln!(
+                    "[{}] diverged at epoch {epoch} (gamma {} too large) — stopping early",
+                    cfg.algo.name, cfg.gamma
+                );
+                break;
+            }
+        }
+    }
+
+    let mut total = crate::gossip::CommLedger::default();
+    for c in &clients {
+        total.merge(&c.ledger);
+    }
+    let factors = assemble_global(&clients);
+    let record = RunRecord {
+        algo: cfg.algo.name.clone(),
+        dataset: cfg.dataset.clone(),
+        loss: cfg.loss.name().to_string(),
+        topology: graph.topology.name().to_string(),
+        k: cfg.k,
+        tau: cfg.algo.tau,
+        points,
+        total,
+        wall_s: t0.elapsed().as_secs_f64(),
+    };
+    Ok(TrainOutcome { record, factors })
+}
+
+/// One synchronous gossip exchange on mode `m` (Alg. 1 lines 9-18).
+fn gossip_round(
+    clients: &mut [ClientState],
+    graph: &Graph,
+    cfg: &TrainConfig,
+    trigger: &TriggerSchedule,
+    t: usize,
+    m: usize,
+) {
+    // 1) event trigger + compress (lines 10-14); ledger uplink per neighbor
+    let payloads: Vec<Option<crate::compress::Payload>> = clients
+        .iter_mut()
+        .map(|c| {
+            let est = c.estimates.as_ref().expect("estimates");
+            let a = &c.factors.mats[m];
+            let dist_sq = a.dist_sq(est.self_estimate(m));
+            let fired = !cfg.algo.event_triggered || trigger.fires(dist_sq, t, cfg.gamma);
+            if fired {
+                let mut delta = a.clone();
+                delta.sub_assign(est.self_estimate(m));
+                let payload = cfg.algo.compressor.compress(&delta);
+                let msg = Message { from: c.id, mode: m, round: t, payload };
+                for _ in &graph.neighbors[c.id] {
+                    c.ledger.record(&msg, true);
+                }
+                let Message { payload, .. } = msg;
+                Some(payload)
+            } else {
+                // nothing on the wire; receivers treat it as a zero delta
+                c.ledger.suppressed += 1;
+                None
+            }
+        })
+        .collect();
+
+    // 2) deliver: every client updates Â^j for j ∈ N_k ∪ {k} (line 16)
+    for k in 0..clients.len() {
+        let est = clients[k].estimates.as_mut().expect("estimates");
+        if let Some(p) = &payloads[k] {
+            est.apply_delta(k, m, p);
+        }
+        for &j in &graph.neighbors[k] {
+            if let Some(p) = &payloads[j] {
+                est.apply_delta(j, m, p);
+            }
+        }
+    }
+
+    // 3) consensus step (line 18)
+    for (k, c) in clients.iter_mut().enumerate() {
+        let ClientState { estimates, factors, .. } = c;
+        let est = estimates.as_ref().expect("estimates");
+        est.consensus_into(
+            &mut factors.mats[m],
+            m,
+            &graph.neighbors[k],
+            &graph.weights[k],
+            cfg.algo.rho,
+        );
+    }
+}
+
+/// Centralized CiderTF's error-feedback step: undo the raw update on mode
+/// `m` and re-apply its EF-compressed version.
+fn apply_error_feedback(c: &mut ClientState, m: usize, compressor: Compressor) {
+    // local_step already applied `A -= update`; recover the raw update from
+    // the EF residual trick: compress(update + residual) and fix A by the
+    // difference between raw and decoded updates.
+    // We reconstruct `update` as the delta since the last EF snapshot held
+    // in the residual state; simpler and equivalent: track via shadow.
+    let shadow = c
+        .ef_shadow
+        .get_or_insert_with(|| c.factors.mats.iter().map(|x| x.clone()).collect::<Vec<_>>());
+    let mut update = shadow[m].clone();
+    update.sub_assign(&c.factors.mats[m]); // update = A_old - A_new = γ·step
+    let ef = c.ef[m].as_mut().expect("error feedback state");
+    let payload = ef.compress(compressor, &update);
+    let decoded = payload.decode(update.rows, update.cols);
+    // A_new' = A_old - decoded
+    let mut a_new = shadow[m].clone();
+    a_new.sub_assign(&decoded);
+    c.factors.mats[m] = a_new.clone();
+    shadow[m] = a_new;
+}
+
+/// Concatenate patient factors (shard order) and average feature factors.
+pub fn assemble_global(clients: &[ClientState]) -> FactorSet {
+    let d = clients[0].factors.order();
+    let r = clients[0].factors.rank();
+    let mut mats = Vec::with_capacity(d);
+    // patient mode: vertical concat in row_offset order
+    let total_rows: usize = clients.iter().map(|c| c.factors.mats[0].rows).sum();
+    let mut a0 = Mat::zeros(total_rows, r);
+    let mut order: Vec<usize> = (0..clients.len()).collect();
+    order.sort_by_key(|&k| clients[k].shard.row_offset);
+    let mut at = 0;
+    for &k in &order {
+        let m = &clients[k].factors.mats[0];
+        for i in 0..m.rows {
+            a0.row_mut(at + i).copy_from_slice(m.row(i));
+        }
+        at += m.rows;
+    }
+    mats.push(a0);
+    // feature modes: average across clients
+    for m in 1..d {
+        let mut avg = clients[0].factors.mats[m].clone();
+        for c in &clients[1..] {
+            avg.add_assign(&c.factors.mats[m]);
+        }
+        avg.scale(1.0 / clients.len() as f32);
+        mats.push(avg);
+    }
+    FactorSet { mats }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record_point(
+    clients: &mut [ClientState],
+    cfg: &TrainConfig,
+    backend: &mut dyn ComputeBackend,
+    fms_reference: Option<&FactorSet>,
+    epoch: usize,
+    iter: usize,
+    t0: Instant,
+    points: &mut Vec<MetricPoint>,
+) -> anyhow::Result<()> {
+    let mut loss = 0.0;
+    for c in clients.iter_mut() {
+        loss += c.eval_loss(cfg.loss, backend)?;
+    }
+    let bytes: u64 = clients.iter().map(|c| c.ledger.bytes).sum();
+    let fms_val = fms_reference.map(|r| fms(&assemble_global(clients), r));
+    points.push(MetricPoint { epoch, iter, time_s: t0.elapsed().as_secs_f64(), loss, bytes, fms: fms_val });
+    Ok(())
+}

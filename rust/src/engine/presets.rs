@@ -1,0 +1,209 @@
+//! Algorithm presets — the feature matrix of paper Table II plus the
+//! centralized baselines of §IV-A2. Every algorithm is one configuration
+//! of the same engine; the table maps directly onto `AlgoConfig` fields.
+
+use super::AlgoConfig;
+use crate::compress::Compressor;
+
+impl AlgoConfig {
+    /// CiderTF (paper Alg. 1): sign + block randomization + periodic (τ) +
+    /// event-triggered communication.
+    pub fn cidertf(tau: usize) -> Self {
+        AlgoConfig {
+            name: format!("cidertf_t{tau}"),
+            compressor: Compressor::Sign,
+            block_random: true,
+            tau,
+            event_triggered: true,
+            momentum: None,
+            error_feedback: false,
+            rho: 0.7,
+        }
+    }
+
+    /// CiderTF_m: CiderTF + Nesterov momentum (paper §III-C, β = 0.9).
+    pub fn cidertf_m(tau: usize) -> Self {
+        AlgoConfig {
+            name: format!("cidertf_m_t{tau}"),
+            momentum: Some(0.9),
+            ..Self::cidertf(tau)
+        }
+    }
+
+    /// D-PSGD (Lian et al.): full-precision, all modes, every round.
+    pub fn dpsgd() -> Self {
+        AlgoConfig {
+            name: "dpsgd".into(),
+            compressor: Compressor::None,
+            block_random: false,
+            tau: 1,
+            event_triggered: false,
+            momentum: None,
+            error_feedback: false,
+            rho: 0.7,
+        }
+    }
+
+    /// D-PSGDbras: D-PSGD + block randomization (ablation Table II).
+    pub fn dpsgd_bras() -> Self {
+        AlgoConfig { name: "dpsgd_bras".into(), block_random: true, ..Self::dpsgd() }
+    }
+
+    /// D-PSGD + signSGD: gradient compression only (ablation Table II).
+    pub fn dpsgd_sign() -> Self {
+        AlgoConfig { name: "dpsgd_sign".into(), compressor: Compressor::Sign, ..Self::dpsgd() }
+    }
+
+    /// D-PSGDbras + signSGD (ablation Table II).
+    pub fn dpsgd_bras_sign() -> Self {
+        AlgoConfig {
+            name: "dpsgd_bras_sign".into(),
+            compressor: Compressor::Sign,
+            block_random: true,
+            ..Self::dpsgd()
+        }
+    }
+
+    /// SPARQ-SGD (Singh et al.): compression + periodic + event-triggered,
+    /// but no block randomization — all modes updated and shipped.
+    pub fn sparq_sgd(tau: usize) -> Self {
+        AlgoConfig {
+            name: format!("sparq_sgd_t{tau}"),
+            compressor: Compressor::Sign,
+            block_random: false,
+            tau,
+            event_triggered: true,
+            momentum: None,
+            error_feedback: false,
+            rho: 0.7,
+        }
+    }
+
+    /// GCP (Kolda-Hong stochastic generalized CP): centralized (run with
+    /// K = 1), all modes per iteration, no communication machinery.
+    pub fn gcp() -> Self {
+        AlgoConfig {
+            name: "gcp".into(),
+            compressor: Compressor::None,
+            block_random: false,
+            tau: 1,
+            event_triggered: false,
+            momentum: None,
+            error_feedback: false,
+            rho: 0.0,
+        }
+    }
+
+    /// BrasCPD (Fu et al.): centralized block-randomized stochastic CPD.
+    pub fn bras_cpd() -> Self {
+        AlgoConfig { name: "bras_cpd".into(), block_random: true, ..Self::gcp() }
+    }
+
+    /// Centralized CiderTF: K = 1, sign-compressed updates with error
+    /// feedback (paper baseline iii).
+    pub fn centralized_cidertf() -> Self {
+        AlgoConfig {
+            name: "centralized_cidertf".into(),
+            compressor: Compressor::Sign,
+            block_random: true,
+            tau: 1,
+            event_triggered: false,
+            momentum: None,
+            error_feedback: true,
+            rho: 0.0,
+        }
+    }
+
+    /// Look up a preset by CLI name (`cidertf:4` selects τ = 4).
+    pub fn by_name(spec: &str) -> anyhow::Result<Self> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n, Some(a.parse::<usize>().map_err(|_| anyhow::anyhow!("bad tau in '{spec}'"))?)),
+            None => (spec, None),
+        };
+        Ok(match name {
+            "cidertf" => Self::cidertf(arg.unwrap_or(4)),
+            "cidertf_m" => Self::cidertf_m(arg.unwrap_or(4)),
+            "dpsgd" => Self::dpsgd(),
+            "dpsgd_bras" => Self::dpsgd_bras(),
+            "dpsgd_sign" => Self::dpsgd_sign(),
+            "dpsgd_bras_sign" => Self::dpsgd_bras_sign(),
+            "sparq_sgd" => Self::sparq_sgd(arg.unwrap_or(4)),
+            "gcp" => Self::gcp(),
+            "bras_cpd" => Self::bras_cpd(),
+            "centralized_cidertf" => Self::centralized_cidertf(),
+            other => anyhow::bail!("unknown algorithm '{other}'"),
+        })
+    }
+
+    /// Table II "Compression Ratio" column (analytical, per communicating
+    /// round, vs full-precision all-mode D-PSGD).
+    pub fn table2_ratio(&self, d_order: usize) -> f64 {
+        let element = match self.compressor {
+            Compressor::None => 1.0,
+            Compressor::Sign => 1.0 / 32.0,
+            Compressor::TopK { ratio } => 2.0 / ratio as f64,
+        };
+        let block = if self.block_random { 1.0 / d_order as f64 } else { 1.0 };
+        let round = 1.0 / self.tau as f64;
+        1.0 - element * block * round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_feature_matrix() {
+        let d = 3;
+        assert_eq!(AlgoConfig::dpsgd().table2_ratio(d), 0.0);
+        assert!((AlgoConfig::dpsgd_bras().table2_ratio(d) - (1.0 - 1.0 / 3.0)).abs() < 1e-12);
+        assert!((AlgoConfig::dpsgd_sign().table2_ratio(d) - (1.0 - 1.0 / 32.0)).abs() < 1e-12);
+        assert!(
+            (AlgoConfig::dpsgd_bras_sign().table2_ratio(d) - (1.0 - 1.0 / (32.0 * 3.0))).abs() < 1e-12
+        );
+        assert!(
+            (AlgoConfig::sparq_sgd(4).table2_ratio(d) - (1.0 - 1.0 / (32.0 * 4.0))).abs() < 1e-12
+        );
+        assert!(
+            (AlgoConfig::cidertf(4).table2_ratio(d) - (1.0 - 1.0 / (32.0 * 3.0 * 4.0))).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn by_name_with_tau() {
+        let a = AlgoConfig::by_name("cidertf:8").unwrap();
+        assert_eq!(a.tau, 8);
+        assert!(a.event_triggered && a.block_random);
+        let m = AlgoConfig::by_name("cidertf_m").unwrap();
+        assert_eq!(m.momentum, Some(0.9));
+        assert!(AlgoConfig::by_name("magic").is_err());
+        assert!(AlgoConfig::by_name("cidertf:x").is_err());
+    }
+
+    #[test]
+    fn preset_flags_match_table2_rows() {
+        // (element, block, round, event) per Table II
+        let rows: Vec<(AlgoConfig, [bool; 4])> = vec![
+            (AlgoConfig::dpsgd(), [false, false, false, false]),
+            (AlgoConfig::dpsgd_bras(), [false, true, false, false]),
+            (AlgoConfig::dpsgd_sign(), [true, false, false, false]),
+            (AlgoConfig::dpsgd_bras_sign(), [true, true, false, false]),
+            (AlgoConfig::sparq_sgd(4), [true, false, true, true]),
+            (AlgoConfig::cidertf(4), [true, true, true, true]),
+        ];
+        for (a, [el, bl, rd, ev]) in rows {
+            assert_eq!(a.compressor == Compressor::Sign, el, "{}", a.name);
+            assert_eq!(a.block_random, bl, "{}", a.name);
+            assert_eq!(a.tau > 1, rd, "{}", a.name);
+            assert_eq!(a.event_triggered, ev, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn centralized_presets() {
+        assert!(!AlgoConfig::gcp().block_random);
+        assert!(AlgoConfig::bras_cpd().block_random);
+        assert!(AlgoConfig::centralized_cidertf().error_feedback);
+    }
+}

@@ -1,0 +1,199 @@
+//! Factor Match Score (FMS) — Acar, Dunlavy, Kolda, Mørup (2011),
+//! used by the paper's Fig. 7 / case study to compare decentralized
+//! factors against the centralized baseline's.
+//!
+//! For two factor sets {A_(m)}, {B_(m)} of equal rank R, the per-pair
+//! component similarity is
+//!
+//!   sim(r, s) = (1 - |λ_r - μ_s| / max(λ_r, μ_s))
+//!               * Π_m |cos(A_(m)(:,r), B_(m)(:,s))|
+//!
+//! and FMS is the average of sim over a one-to-one matching of components.
+//! We use greedy matching on the similarity matrix (exact Hungarian is
+//! unnecessary at R <= 64; greedy matches the reference implementations'
+//! behaviour for well-separated factors and is what we validate against).
+
+use super::FactorSet;
+
+/// Column-wise cosine similarity magnitudes between two `I x R` factors.
+fn column_cosines(a: &crate::util::mat::Mat, b: &crate::util::mat::Mat) -> Vec<Vec<f64>> {
+    assert_eq!(a.rows, b.rows, "factor row mismatch");
+    let (ra, rb) = (a.cols, b.cols);
+    let mut dots = vec![vec![0.0f64; rb]; ra];
+    let mut na = vec![0.0f64; ra];
+    let mut nb = vec![0.0f64; rb];
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let br = b.row(i);
+        for r in 0..ra {
+            let av = ar[r] as f64;
+            na[r] += av * av;
+            for s in 0..rb {
+                dots[r][s] += av * br[s] as f64;
+            }
+        }
+        for s in 0..rb {
+            let bv = br[s] as f64;
+            nb[s] += bv * bv;
+        }
+    }
+    for r in 0..ra {
+        for s in 0..rb {
+            let denom = (na[r].sqrt() * nb[s].sqrt()).max(1e-30);
+            dots[r][s] = (dots[r][s] / denom).abs();
+        }
+    }
+    dots
+}
+
+/// Component-pair similarity matrix (cosine product x λ penalty).
+pub fn similarity_matrix(a: &FactorSet, b: &FactorSet) -> Vec<Vec<f64>> {
+    assert_eq!(a.order(), b.order());
+    let r_a = a.rank();
+    let r_b = b.rank();
+    let mut sim = vec![vec![1.0f64; r_b]; r_a];
+    for m in 0..a.order() {
+        let cos = column_cosines(&a.mats[m], &b.mats[m]);
+        for r in 0..r_a {
+            for s in 0..r_b {
+                sim[r][s] *= cos[r][s];
+            }
+        }
+    }
+    let la = a.lambda_weights();
+    let lb = b.lambda_weights();
+    for r in 0..r_a {
+        for s in 0..r_b {
+            let (x, y) = (la[r], lb[s]);
+            let penalty = 1.0 - (x - y).abs() / x.max(y).max(1e-30);
+            sim[r][s] *= penalty.max(0.0);
+        }
+    }
+    sim
+}
+
+/// Greedy one-to-one matching maximizing total similarity; returns
+/// `(fms, matching)` where `matching[r] = s`.
+pub fn fms_with_matching(a: &FactorSet, b: &FactorSet) -> (f64, Vec<usize>) {
+    let sim = similarity_matrix(a, b);
+    let r_dim = sim.len();
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for r in 0..r_dim {
+        for s in 0..sim[r].len() {
+            pairs.push((r, s));
+        }
+    }
+    pairs.sort_by(|&(r1, s1), &(r2, s2)| sim[r2][s2].partial_cmp(&sim[r1][s1]).unwrap());
+    let mut used_r = vec![false; r_dim];
+    let mut used_s = vec![false; sim[0].len()];
+    let mut matching = vec![usize::MAX; r_dim];
+    let mut total = 0.0;
+    let mut matched = 0;
+    for (r, s) in pairs {
+        if !used_r[r] && !used_s[s] {
+            used_r[r] = true;
+            used_s[s] = true;
+            matching[r] = s;
+            total += sim[r][s];
+            matched += 1;
+            if matched == r_dim.min(sim[0].len()) {
+                break;
+            }
+        }
+    }
+    (total / r_dim as f64, matching)
+}
+
+/// Factor Match Score in `[0, 1]`; 1 = identical up to permutation/sign.
+pub fn fms(a: &FactorSet, b: &FactorSet) -> f64 {
+    fms_with_matching(a, b).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mat::Mat;
+    use crate::util::rng::Rng;
+
+    fn random_factors(dims: &[usize], rank: usize, seed: u64) -> FactorSet {
+        let mut rng = Rng::new(seed);
+        FactorSet {
+            mats: dims.iter().map(|&d| Mat::rand_normal(d, rank, 1.0, &mut rng)).collect(),
+        }
+    }
+
+    #[test]
+    fn identical_factors_score_one() {
+        let a = random_factors(&[20, 15, 10], 4, 1);
+        let s = fms(&a, &a.clone());
+        assert!((s - 1.0).abs() < 1e-9, "fms {s}");
+    }
+
+    #[test]
+    fn permuted_columns_score_one() {
+        let a = random_factors(&[20, 15, 10], 4, 2);
+        // permute columns by rotation in every mode consistently
+        let perm = [2usize, 3, 0, 1];
+        let b = FactorSet {
+            mats: a
+                .mats
+                .iter()
+                .map(|m| Mat::from_fn(m.rows, m.cols, |i, j| m.at(i, perm[j])))
+                .collect(),
+        };
+        let (s, matching) = fms_with_matching(&a, &b);
+        assert!((s - 1.0).abs() < 1e-6, "fms {s}");
+        // matching must invert the permutation
+        for r in 0..4 {
+            assert_eq!(perm[matching[r]], r);
+        }
+    }
+
+    #[test]
+    fn sign_flips_are_forgiven() {
+        let a = random_factors(&[12, 12, 12], 3, 3);
+        let b = FactorSet {
+            mats: a
+                .mats
+                .iter()
+                .map(|m| Mat::from_fn(m.rows, m.cols, |i, j| -m.at(i, j)))
+                .collect(),
+        };
+        assert!((fms(&a, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unrelated_factors_score_low() {
+        let a = random_factors(&[60, 50, 40], 5, 4);
+        let b = random_factors(&[60, 50, 40], 5, 5);
+        let s = fms(&a, &b);
+        assert!(s < 0.35, "fms of unrelated factors {s}");
+    }
+
+    #[test]
+    fn scaled_component_penalized_by_lambda_term() {
+        let a = random_factors(&[15, 15, 15], 2, 6);
+        let mut b = a.clone();
+        // scale one component's columns by 4 in one mode -> λ mismatch
+        for i in 0..b.mats[0].rows {
+            *b.mats[0].at_mut(i, 0) *= 4.0;
+        }
+        let s = fms(&a, &b);
+        assert!(s < 0.95 && s > 0.3, "fms {s}");
+    }
+
+    #[test]
+    fn noisy_copy_scores_between() {
+        let a = random_factors(&[40, 30, 20], 4, 7);
+        let mut rng = Rng::new(8);
+        let b = FactorSet {
+            mats: a
+                .mats
+                .iter()
+                .map(|m| Mat::from_fn(m.rows, m.cols, |i, j| m.at(i, j) + 0.1 * rng.normal_f32()))
+                .collect(),
+        };
+        let s = fms(&a, &b);
+        assert!(s > 0.9 && s < 1.0, "fms {s}");
+    }
+}

@@ -1,0 +1,197 @@
+//! CP/GCP factor machinery: factor sets, initialization, λ importance
+//! weights, Khatri-Rao row products, and dense reconstruction for small
+//! oracles.
+
+pub mod fms;
+
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+/// One factor matrix per mode, `A_(m)` of shape `I_m x R`.
+#[derive(Debug, Clone)]
+pub struct FactorSet {
+    pub mats: Vec<Mat>,
+}
+
+impl FactorSet {
+    /// Uniform `[0, scale)` init (the standard non-negative EHR TF init);
+    /// every client must start from the *same* init (paper Alg. 1 input
+    /// `A^k[0] = A[0]`), which callers achieve by passing the same seed.
+    pub fn init_uniform(dims: &[usize], rank: usize, scale: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        FactorSet {
+            mats: dims.iter().map(|&d| Mat::rand_uniform(d, rank, scale, &mut rng)).collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.mats[0].cols
+    }
+
+    pub fn order(&self) -> usize {
+        self.mats.len()
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        self.mats.iter().map(|m| m.rows).collect()
+    }
+
+    /// Phenotype importance λ_r = Π_m ‖A_(m)(:,r)‖ (paper §IV-C).
+    pub fn lambda_weights(&self) -> Vec<f64> {
+        let per_mode: Vec<Vec<f64>> = self.mats.iter().map(|m| m.col_norms()).collect();
+        (0..self.rank())
+            .map(|r| per_mode.iter().map(|n| n[r]).product())
+            .collect()
+    }
+
+    /// Indices of the top-`k` components by λ weight (descending).
+    pub fn top_components(&self, k: usize) -> Vec<usize> {
+        let lw = self.lambda_weights();
+        let mut order: Vec<usize> = (0..lw.len()).collect();
+        order.sort_by(|&a, &b| lw[b].partial_cmp(&lw[a]).unwrap());
+        order.truncate(k);
+        order
+    }
+
+    /// Model value at one multi-index: `sum_r prod_m A_(m)(i_m, r)`.
+    pub fn value_at(&self, index: &[u32]) -> f32 {
+        let r_dim = self.rank();
+        let mut acc = 0.0f32;
+        for r in 0..r_dim {
+            let mut p = 1.0f32;
+            for (m, mat) in self.mats.iter().enumerate() {
+                p *= mat.at(index[m] as usize, r);
+            }
+            acc += p;
+        }
+        acc
+    }
+
+    /// Gather Khatri-Rao rows: for each sampled fiber of mode `mode`,
+    /// the Hadamard product over the *other* modes' factor rows.
+    /// Returns `[S, R]` row-major — the `H(S_d, :)` of paper §III-B2.
+    pub fn khatri_rao_rows(&self, mode: usize, dims: &[usize], fibers: &[u64]) -> Mat {
+        let r_dim = self.rank();
+        let mut h = Mat::zeros(fibers.len(), r_dim);
+        let mut idx_buf = vec![0u32; dims.len()];
+        for (s, &fid) in fibers.iter().enumerate() {
+            decode_into(dims, mode, fid, &mut idx_buf);
+            let row = h.row_mut(s);
+            row.fill(1.0);
+            for (m, mat) in self.mats.iter().enumerate() {
+                if m == mode {
+                    continue;
+                }
+                let a_row = mat.row(idx_buf[m] as usize);
+                for (o, &v) in row.iter_mut().zip(a_row.iter()) {
+                    *o *= v;
+                }
+            }
+        }
+        h
+    }
+}
+
+/// `decode_fiber` into a reusable buffer (hot path, avoids allocation).
+#[inline]
+pub fn decode_into(dims: &[usize], mode: usize, fid: u64, out: &mut [u32]) {
+    let mut rest = fid;
+    for m in 0..dims.len() {
+        if m == mode {
+            out[m] = 0;
+            continue;
+        }
+        out[m] = (rest % dims[m] as u64) as u32;
+        rest /= dims[m] as u64;
+    }
+    debug_assert_eq!(rest, 0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{decode_fiber, SparseTensor};
+
+    fn small_factors() -> FactorSet {
+        FactorSet::init_uniform(&[4, 3, 2], 3, 0.5, 99)
+    }
+
+    #[test]
+    fn same_seed_same_init() {
+        let a = small_factors();
+        let b = small_factors();
+        for (x, y) in a.mats.iter().zip(b.mats.iter()) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn lambda_weights_match_manual() {
+        let f = small_factors();
+        let lw = f.lambda_weights();
+        for r in 0..3 {
+            let manual: f64 = f
+                .mats
+                .iter()
+                .map(|m| {
+                    (0..m.rows).map(|i| (m.at(i, r) as f64).powi(2)).sum::<f64>().sqrt()
+                })
+                .product();
+            assert!((lw[r] - manual).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn top_components_sorted_desc() {
+        let mut f = small_factors();
+        // boost column 1 of mode 0 to make it the clear winner
+        for i in 0..f.mats[0].rows {
+            *f.mats[0].at_mut(i, 1) = 10.0;
+        }
+        let top = f.top_components(2);
+        assert_eq!(top[0], 1);
+        let lw = f.lambda_weights();
+        assert!(lw[top[0]] >= lw[top[1]]);
+    }
+
+    #[test]
+    fn khatri_rao_rows_match_value_at() {
+        // H(s,:) . A_(d)(i,:) summed over r must equal the model value at
+        // the cell (i at mode d, fiber s elsewhere).
+        let dims = vec![4usize, 3, 2];
+        let f = small_factors();
+        let t = SparseTensor::new(dims.clone());
+        for mode in 0..3 {
+            let n_f = t.n_fibers(mode);
+            let fibers: Vec<u64> = (0..n_f as u64).collect();
+            let h = f.khatri_rao_rows(mode, &dims, &fibers);
+            for (s, &fid) in fibers.iter().enumerate() {
+                let mut idx = decode_fiber(&dims, mode, fid);
+                for i in 0..dims[mode] {
+                    idx[mode] = i as u32;
+                    let dot: f32 = h
+                        .row(s)
+                        .iter()
+                        .zip(f.mats[mode].row(i).iter())
+                        .map(|(a, b)| a * b)
+                        .sum();
+                    let want = f.value_at(&idx);
+                    assert!((dot - want).abs() < 1e-5, "mode {mode} fid {fid} i {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_into_matches_decode_fiber() {
+        let dims = vec![5usize, 4, 3, 2];
+        let mut buf = vec![0u32; 4];
+        for mode in 0..4 {
+            let n: usize = dims.iter().enumerate().filter(|(m, _)| *m != mode).map(|(_, &d)| d).product();
+            for fid in [0u64, 1, (n - 1) as u64] {
+                decode_into(&dims, mode, fid, &mut buf);
+                assert_eq!(buf, decode_fiber(&dims, mode, fid));
+            }
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Gossip protocol state: compressed-difference peer estimates, the
+//! event-trigger check, the consensus step, and the communication ledger
+//! (paper Alg. 1 lines 9-18).
+//!
+//! Every client `k` maintains `Â_(d)^j` — its estimate of each neighbor's
+//! (and its own) factor — updated only by the compressed deltas that
+//! actually travel (CHOCO-style). The consensus step then mixes
+//!
+//!   `A_(d)^k[t+1] = A_(d)^k[t+½] + ϱ Σ_j w_kj (Â_(d)^j - Â_(d)^k)`.
+//!
+//! Only *feature* modes (d >= 1, zero-based) ever travel: the patient mode
+//! is kept local for privacy (paper §III-B2) and is dimensionally local
+//! anyway (each client owns different patients).
+
+use crate::compress::Payload;
+use crate::util::mat::Mat;
+
+/// One gossip message (what the wire carries + accounting metadata).
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub from: usize,
+    pub mode: usize,
+    pub round: usize,
+    pub payload: Payload,
+}
+
+impl Message {
+    /// Fixed header: from/mode/round/len (u32 each) — charged per message.
+    pub const HEADER_BYTES: u64 = 16;
+
+    pub fn wire_bytes(&self) -> u64 {
+        Self::HEADER_BYTES + self.payload.wire_bytes()
+    }
+}
+
+/// Uplink communication ledger for one client (the paper's reported
+/// communication cost is uplink bytes summed over clients).
+#[derive(Debug, Clone, Default)]
+pub struct CommLedger {
+    /// payload + header bytes actually sent
+    pub bytes: u64,
+    /// messages sent (including zero-payload suppressed notifications)
+    pub messages: u64,
+    /// rounds where the event trigger fired
+    pub triggered: u64,
+    /// rounds where the trigger suppressed the payload
+    pub suppressed: u64,
+}
+
+impl CommLedger {
+    pub fn record(&mut self, msg: &Message, fired: bool) {
+        self.bytes += msg.wire_bytes();
+        self.messages += 1;
+        if fired {
+            self.triggered += 1;
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &CommLedger) {
+        self.bytes += other.bytes;
+        self.messages += other.messages;
+        self.triggered += other.triggered;
+        self.suppressed += other.suppressed;
+    }
+}
+
+/// Per-client peer-estimate state `Â_(d)^j` for `j ∈ N_k ∪ {k}`.
+#[derive(Debug, Clone)]
+pub struct EstimateState {
+    /// estimates indexed by [peer slot][mode]; slot order = `peers`
+    pub peers: Vec<usize>,
+    mats: Vec<Vec<Option<Mat>>>,
+    /// this client's slot in `peers`
+    self_slot: usize,
+}
+
+impl EstimateState {
+    /// Initialize from the shared init `A[0]` (paper: `Â^j[0] = A[0]` —
+    /// consistent because every client starts from the same factors).
+    /// `init[mode]` is `None` for modes that never travel (patient mode).
+    pub fn new(client: usize, neighbors: &[usize], init: &[Option<Mat>]) -> Self {
+        let mut peers = neighbors.to_vec();
+        peers.push(client);
+        peers.sort_unstable();
+        let self_slot = peers.iter().position(|&p| p == client).unwrap();
+        let mats = peers.iter().map(|_| init.to_vec()).collect();
+        EstimateState { peers, mats, self_slot }
+    }
+
+    fn slot_of(&self, peer: usize) -> usize {
+        self.peers.iter().position(|&p| p == peer).expect("unknown peer")
+    }
+
+    /// `Â_(mode)^peer += decode(payload)` — Alg. 1 line 16.
+    pub fn apply_delta(&mut self, peer: usize, mode: usize, payload: &Payload) {
+        let slot = self.slot_of(peer);
+        let m = self.mats[slot][mode]
+            .as_mut()
+            .expect("delta for a mode that never travels");
+        payload.add_into(m);
+    }
+
+    pub fn estimate(&self, peer: usize, mode: usize) -> &Mat {
+        self.mats[self.slot_of(peer)][mode].as_ref().expect("untracked mode")
+    }
+
+    pub fn self_estimate(&self, mode: usize) -> &Mat {
+        self.mats[self.self_slot][mode].as_ref().expect("untracked mode")
+    }
+
+    /// Consensus step (Alg. 1 line 18):
+    /// `a += ϱ Σ_{j∈N_k} w_kj (Â^j - Â^k)`, in place on `a = A[t+½]`.
+    pub fn consensus_into(
+        &self,
+        a: &mut Mat,
+        mode: usize,
+        neighbors: &[usize],
+        weights_row: &[f64],
+        rho: f64,
+    ) {
+        let self_hat = self.self_estimate(mode);
+        for &j in neighbors {
+            let w = (rho * weights_row[j]) as f32;
+            if w == 0.0 {
+                continue;
+            }
+            let hat_j = self.estimate(j, mode);
+            debug_assert_eq!(hat_j.rows, a.rows);
+            for ((av, &hj), &hk) in
+                a.data.iter_mut().zip(hat_j.data.iter()).zip(self_hat.data.iter())
+            {
+                *av += w * (hj - hk);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compressor;
+
+    fn mat(rows: usize, cols: usize, v: f32) -> Mat {
+        Mat::from_vec(rows, cols, vec![v; rows * cols])
+    }
+
+    fn init3() -> Vec<Option<Mat>> {
+        vec![None, Some(mat(3, 2, 1.0)), Some(mat(4, 2, 1.0))]
+    }
+
+    #[test]
+    fn estimates_start_at_shared_init() {
+        let st = EstimateState::new(1, &[0, 2], &init3());
+        assert_eq!(st.peers, vec![0, 1, 2]);
+        assert_eq!(st.estimate(0, 1).data, mat(3, 2, 1.0).data);
+        assert_eq!(st.self_estimate(2).data, mat(4, 2, 1.0).data);
+    }
+
+    #[test]
+    fn apply_delta_accumulates() {
+        let mut st = EstimateState::new(0, &[1], &init3());
+        let delta = Compressor::None.compress(&mat(3, 2, 0.5));
+        st.apply_delta(1, 1, &delta);
+        st.apply_delta(1, 1, &delta);
+        assert!(st.estimate(1, 1).data.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        // self untouched
+        assert!(st.self_estimate(1).data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn consensus_moves_toward_neighbors() {
+        let mut st = EstimateState::new(0, &[1, 2], &init3());
+        // neighbor 1's estimate goes up by 2, neighbor 2 stays
+        st.apply_delta(1, 1, &Compressor::None.compress(&mat(3, 2, 2.0)));
+        let mut a = mat(3, 2, 1.0);
+        // uniform weights 1/3 each, rho = 1
+        let w = vec![1.0 / 3.0; 3];
+        st.consensus_into(&mut a, 1, &[1, 2], &w, 1.0);
+        // a += 1/3*(3-1) + 1/3*(1-1) = 2/3
+        assert!(a.data.iter().all(|&v| (v - (1.0 + 2.0 / 3.0)).abs() < 1e-6));
+    }
+
+    #[test]
+    fn consensus_fixed_point_when_all_equal() {
+        let st = EstimateState::new(0, &[1, 2], &init3());
+        let mut a = mat(3, 2, 1.0);
+        let before = a.clone();
+        st.consensus_into(&mut a, 1, &[1, 2], &[0.3, 0.3, 0.4], 0.7);
+        assert_eq!(a.data, before.data);
+    }
+
+    #[test]
+    fn rho_scales_the_step() {
+        let mut st = EstimateState::new(0, &[1], &init3());
+        st.apply_delta(1, 1, &Compressor::None.compress(&mat(3, 2, 4.0)));
+        let w = vec![0.5, 0.5];
+        let mut a_full = mat(3, 2, 0.0);
+        st.consensus_into(&mut a_full, 1, &[1], &w, 1.0);
+        let mut a_half = mat(3, 2, 0.0);
+        st.consensus_into(&mut a_half, 1, &[1], &w, 0.5);
+        for (f, h) in a_full.data.iter().zip(a_half.data.iter()) {
+            assert!((f - 2.0 * h).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ledger_accounting() {
+        let mut ledger = CommLedger::default();
+        let fired = Message {
+            from: 0,
+            mode: 1,
+            round: 7,
+            payload: Compressor::Sign.compress(&mat(8, 4, 1.0)),
+        };
+        let zero = Message { from: 0, mode: 1, round: 8, payload: Payload::Zero { len: 32 } };
+        ledger.record(&fired, true);
+        ledger.record(&zero, false);
+        assert_eq!(ledger.messages, 2);
+        assert_eq!(ledger.triggered, 1);
+        assert_eq!(ledger.suppressed, 1);
+        assert_eq!(ledger.bytes, fired.wire_bytes() + Message::HEADER_BYTES);
+        let mut total = CommLedger::default();
+        total.merge(&ledger);
+        total.merge(&ledger);
+        assert_eq!(total.bytes, 2 * ledger.bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "never travels")]
+    fn patient_mode_delta_rejected() {
+        let mut st = EstimateState::new(0, &[1], &init3());
+        let delta = Compressor::None.compress(&mat(3, 2, 0.5));
+        st.apply_delta(1, 0, &delta); // mode 0 = patient, untracked
+    }
+}

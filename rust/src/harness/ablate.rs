@@ -1,0 +1,80 @@
+//! Extension ablations over CiderTF's own design knobs (DESIGN.md §Perf /
+//! "ablation benches for the design choices"): consensus step size ϱ, the
+//! local-round period τ, and the event-trigger schedule (λ₀ multiplier,
+//! growth factor α) — none of which the paper sweeps explicitly.
+
+use super::{summarize, Ctx, SUMMARY_HEADER};
+use crate::engine::AlgoConfig;
+use crate::losses::Loss;
+use crate::util::benchkit::Table;
+
+/// ϱ sweep: too small mixes slowly, too large overshoots the compressed
+/// consensus (CHOCO-style estimates tolerate ϱ <= 1).
+pub fn rho_sweep(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<()> {
+    let dataset = ctx.profile.datasets()[0];
+    let loss = Loss::Logit;
+    let data = ctx.dataset(dataset, loss)?;
+    println!("\n=== Ablation: consensus step size rho (K={k}, tau={tau}, {dataset}) ===");
+    let table = Table::new(&SUMMARY_HEADER);
+    for rho in [0.1, 0.3, 0.5, 0.7, 0.9, 1.0] {
+        let mut algo = AlgoConfig::cidertf(tau);
+        algo.rho = rho;
+        algo.name = format!("cidertf_rho{rho}");
+        let mut cfg = ctx.base_config(dataset, loss, algo);
+        cfg.k = k;
+        let out = ctx.run("ablate", &cfg, &data, None)?;
+        table.row(&summarize(&out.record));
+    }
+    Ok(())
+}
+
+/// τ sweep beyond the paper's {2,4,6,8}: the comm/convergence frontier.
+pub fn tau_sweep(ctx: &mut Ctx, k: usize) -> anyhow::Result<()> {
+    let dataset = ctx.profile.datasets()[0];
+    let loss = Loss::Logit;
+    let data = ctx.dataset(dataset, loss)?;
+    println!("\n=== Ablation: local-round period tau (K={k}, {dataset}) ===");
+    let table = Table::new(&SUMMARY_HEADER);
+    for tau in [1usize, 2, 4, 8, 16, 32] {
+        let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
+        cfg.k = k;
+        let out = ctx.run("ablate", &cfg, &data, None)?;
+        table.row(&summarize(&out.record));
+    }
+    println!("  (expect: bytes fall ~1/tau; convergence degrades gracefully at large tau)");
+    Ok(())
+}
+
+/// Event-trigger schedule sweep: λ₀ scale and growth α (paper fixes
+/// λ₀ = 1/γ and grid-searches α in [1,2]).
+pub fn trigger_sweep(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<()> {
+    let dataset = ctx.profile.datasets()[0];
+    let loss = Loss::Logit;
+    let data = ctx.dataset(dataset, loss)?;
+    println!("\n=== Ablation: event-trigger schedule (K={k}, tau={tau}, {dataset}) ===");
+    let table = Table::new(&["lambda0_scale", "alpha", "final_loss", "uplink", "suppressed%"]);
+    for (scale, alpha) in
+        [(0.0f64, 1.0f64), (0.5, 1.3), (1.0, 1.0), (1.0, 1.3), (1.0, 2.0), (4.0, 1.3)]
+    {
+        let mut algo = AlgoConfig::cidertf(tau);
+        algo.name = format!("cidertf_trig_s{scale}_a{alpha}");
+        if scale == 0.0 {
+            algo.event_triggered = false; // trigger disabled baseline
+        }
+        let mut cfg = ctx.base_config(dataset, loss, algo);
+        cfg.k = k;
+        cfg.trigger_lambda0_scale = scale.max(f64::MIN_POSITIVE);
+        cfg.trigger_alpha = alpha;
+        let out = ctx.run("ablate", &cfg, &data, None)?;
+        let sup = out.record.total.suppressed as f64
+            / (out.record.total.suppressed + out.record.total.triggered).max(1) as f64;
+        table.row(&[
+            format!("{scale}"),
+            format!("{alpha}"),
+            format!("{:.3e}", out.record.final_loss()),
+            crate::util::benchkit::fmt_bytes(out.record.total.bytes as f64),
+            format!("{:.1}%", 100.0 * sup),
+        ]);
+    }
+    Ok(())
+}

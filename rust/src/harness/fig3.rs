@@ -1,0 +1,54 @@
+//! Fig. 3 — convergence of CiderTF (τ = 2,4,6,8) and CiderTF_m against the
+//! centralized (GCP, BrasCPD, Centralized CiderTF) and decentralized
+//! (D-PSGD, SPARQ-SGD, D-PSGDbras) baselines, loss vs wall-clock and vs
+//! uplink bytes, ring topology, K = 8 — per dataset and per loss.
+
+use super::{k_for, summarize, Ctx, SUMMARY_HEADER};
+use crate::engine::AlgoConfig;
+use crate::engine::metrics::RunRecord;
+use crate::util::benchkit::Table;
+
+/// The figure's algorithm roster.
+pub fn roster(taus: &[usize]) -> Vec<AlgoConfig> {
+    let mut algos = vec![
+        AlgoConfig::gcp(),
+        AlgoConfig::bras_cpd(),
+        AlgoConfig::centralized_cidertf(),
+        AlgoConfig::dpsgd(),
+        AlgoConfig::dpsgd_bras(),
+        AlgoConfig::sparq_sgd(4),
+    ];
+    for &t in taus {
+        algos.push(AlgoConfig::cidertf(t));
+    }
+    algos.push(AlgoConfig::cidertf_m(4));
+    algos
+}
+
+pub fn run(ctx: &mut Ctx, k: usize, taus: &[usize]) -> anyhow::Result<Vec<RunRecord>> {
+    let mut records = Vec::new();
+    for dataset in ctx.profile.datasets() {
+        for loss in ctx.profile.losses() {
+            println!("\n=== Fig.3: {dataset} / {} / ring K={k} ===", loss.name());
+            let data = ctx.dataset(dataset, loss)?;
+            let table = Table::new(&SUMMARY_HEADER);
+            for algo in roster(taus) {
+                let mut cfg = ctx.base_config(dataset, loss, algo);
+                cfg.k = k_for(&cfg.algo, k);
+                let out = ctx.run("fig3", &cfg, &data, None)?;
+                table.row(&summarize(&out.record));
+                records.push(out.record);
+            }
+        }
+    }
+    println!("\nFig.3 reproduction notes:");
+    if let Some(dpsgd) = records.iter().find(|r| r.algo == "dpsgd") {
+        for r in records.iter().filter(|r| r.algo.starts_with("cidertf")) {
+            if r.dataset == dpsgd.dataset && r.loss == dpsgd.loss {
+                let red = 1.0 - r.total.bytes as f64 / dpsgd.total.bytes.max(1) as f64;
+                println!("  {}: comm reduction vs D-PSGD = {:.4}%", r.algo, 100.0 * red);
+            }
+        }
+    }
+    Ok(records)
+}

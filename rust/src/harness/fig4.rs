@@ -1,0 +1,41 @@
+//! Fig. 4 — topology study: CiderTF on ring vs star, loss vs time and vs
+//! communication, per dataset and loss. The paper's finding: convergence
+//! is topology-insensitive, but star costs fewer total uplink bytes.
+
+use super::{summarize, Ctx};
+use crate::engine::metrics::RunRecord;
+use crate::engine::AlgoConfig;
+use crate::topology::Topology;
+use crate::util::benchkit::Table;
+
+pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>> {
+    let mut records = Vec::new();
+    for dataset in ctx.profile.datasets() {
+        for loss in ctx.profile.losses() {
+            println!("\n=== Fig.4: {dataset} / {} / K={k} ring vs star ===", loss.name());
+            let data = ctx.dataset(dataset, loss)?;
+            let table = Table::new(&["topology", "K", "final_loss", "wall_s", "uplink", "msgs"]);
+            let mut pair = Vec::new();
+            for topo in [Topology::Ring, Topology::Star] {
+                let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
+                cfg.k = k;
+                cfg.topology = topo;
+                let out = ctx.run("fig4", &cfg, &data, None)?;
+                let mut row = summarize(&out.record);
+                row[0] = topo.name().to_string();
+                table.row(&row);
+                pair.push(out.record);
+            }
+            let (ring, star) = (&pair[0], &pair[1]);
+            let loss_gap = (ring.final_loss() - star.final_loss()).abs()
+                / ring.final_loss().max(star.final_loss());
+            println!(
+                "  star/ring uplink ratio = {:.3} (paper: star < ring); loss gap = {:.1}%",
+                star.total.bytes as f64 / ring.total.bytes.max(1) as f64,
+                100.0 * loss_gap
+            );
+            records.extend(pair);
+        }
+    }
+    Ok(records)
+}

@@ -1,0 +1,55 @@
+//! Fig. 5 — scalability: CiderTF with K = 8, 16, 32 workers at τ = 4, 8 on
+//! the MIMIC-like dataset (Bernoulli-logit), loss vs time and vs bytes.
+//! Paper finding: computation time scales down with K (each worker holds
+//! 1/K of the patients) while total communication grows with K.
+
+use super::{summarize, Ctx, SUMMARY_HEADER};
+use crate::engine::metrics::RunRecord;
+use crate::engine::AlgoConfig;
+use crate::losses::Loss;
+use crate::util::benchkit::Table;
+
+pub fn run(ctx: &mut Ctx, ks: &[usize], taus: &[usize]) -> anyhow::Result<Vec<RunRecord>> {
+    let dataset = if ctx.profile.datasets().contains(&"mimic_like") { "mimic_like" } else { ctx.profile.datasets()[0] };
+    let loss = Loss::Logit;
+    let data = ctx.dataset(dataset, loss)?;
+    println!("\n=== Fig.5: scalability on {dataset} / logit ===");
+    let table = Table::new(&SUMMARY_HEADER);
+    let mut records = Vec::new();
+    for &tau in taus {
+        for &k in ks {
+            let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
+            cfg.k = k;
+            let out = ctx.run("fig5", &cfg, &data, None)?;
+            table.row(&summarize(&out.record));
+            records.push(out.record);
+        }
+    }
+    // The in-process network executes clients sequentially; the paper's
+    // Fig. 5 time axis is parallel wall-clock, i.e. ~wall/K here.
+    for r in &records {
+        println!(
+            "  K={:<3} tau={}: simulated-parallel time ~{:.1}s (wall {:.1}s / K)",
+            r.k,
+            r.tau,
+            r.wall_s / r.k as f64,
+            r.wall_s
+        );
+    }
+    // paper's trade-off: larger K -> more uplink bytes
+    for &tau in taus {
+        let by_k: Vec<&RunRecord> =
+            records.iter().filter(|r| r.tau == tau).collect();
+        if by_k.len() >= 2 {
+            let first = by_k.first().unwrap();
+            let last = by_k.last().unwrap();
+            println!(
+                "  tau={tau}: bytes K={} -> K={} grew {:.2}x (paper: grows with K)",
+                first.k,
+                last.k,
+                last.total.bytes as f64 / first.total.bytes.max(1) as f64
+            );
+        }
+    }
+    Ok(records)
+}

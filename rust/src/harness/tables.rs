@@ -1,0 +1,212 @@
+//! Tables II, III, IV and the §III-D theorem checks.
+
+use super::{Ctx};
+use crate::analysis::phenotype::{assign_subgroups, extract, support_recovery};
+use crate::analysis::tsne::{tsne, TsneConfig};
+use crate::analysis::silhouette;
+use crate::engine::AlgoConfig;
+use crate::gossip::Message;
+use crate::losses::Loss;
+use crate::util::benchkit::Table;
+use crate::util::csv::CsvWriter;
+use crate::util::mat::Mat;
+
+/// Table II: the algorithm feature/compression-ratio matrix (analytical).
+pub fn table2(d_order: usize, tau: usize) {
+    println!("\n=== Table II: communication reduction feature matrix (D={d_order}, tau={tau}) ===");
+    let table = Table::new(&["algo", "element", "block", "round", "event", "ratio"]);
+    for algo in [
+        AlgoConfig::dpsgd(),
+        AlgoConfig::dpsgd_bras(),
+        AlgoConfig::dpsgd_sign(),
+        AlgoConfig::dpsgd_bras_sign(),
+        AlgoConfig::sparq_sgd(tau),
+        AlgoConfig::cidertf(tau),
+    ] {
+        let check = |b: bool| if b { "yes" } else { "-" }.to_string();
+        table.row(&[
+            algo.name.clone(),
+            check(algo.compressor != crate::compress::Compressor::None),
+            check(algo.block_random),
+            check(algo.tau > 1),
+            check(algo.event_triggered),
+            format!("1 - {:.5}", 1.0 - algo.table2_ratio(d_order)),
+        ]);
+    }
+}
+
+/// Table III: patient subgroup identification — tSNE embedding CSVs plus
+/// silhouette scores for CiderTF vs centralized BrasCPD vs D-PSGD(+bras)
+/// at matched communication budgets.
+pub fn table3(ctx: &mut Ctx, k: usize, tau: usize, max_patients: usize) -> anyhow::Result<()> {
+    let dataset = if ctx.profile.datasets().contains(&"mimic_like") { "mimic_like" } else { ctx.profile.datasets()[0] };
+    let loss = Loss::Ls; // case study compares against BrasCPD (least squares)
+    let data = ctx.dataset(dataset, loss)?;
+    println!("\n=== Table III: subgroup identification on {dataset} ===");
+    // two silhouettes: "top3" labels by the paper's top-3 rule; "all"
+    // labels by argmax over every component (planted rank > 3, so top-3
+    // labelling is inherently lossy — see EXPERIMENTS.md Table III notes)
+    let table = Table::new(&["algo", "epochs", "sil_top3", "sil_all", "embedding_csv"]);
+
+    // (algo, epochs): decentralized full-precision baselines get 1 epoch —
+    // the paper matches *communication* budgets, and one D-PSGD epoch
+    // already out-spends a full CiderTF run.
+    // converging runs need >= ~10 epochs for the factors to settle into
+    // interpretable phenotypes even on the quick profile
+    let conv_epochs = ctx.profile.epochs().max(10);
+    let runs: Vec<(AlgoConfig, usize, usize)> = vec![
+        (AlgoConfig::bras_cpd(), conv_epochs * 2, 1),
+        (AlgoConfig::cidertf(tau), conv_epochs, k),
+        (AlgoConfig::dpsgd(), 1, k),
+        (AlgoConfig::dpsgd_bras(), 1, k),
+    ];
+    for (algo, epochs, run_k) in runs {
+        let mut cfg = ctx.base_config(dataset, loss, algo);
+        cfg.k = run_k;
+        cfg.epochs = epochs;
+        let out = ctx.run("table3", &cfg, &data, None)?;
+        let factors = out.factors;
+        let top = factors.top_components(3);
+        let all: Vec<usize> = (0..factors.rank()).collect();
+        let patients = subsample_rows(&factors.mats[0], max_patients);
+        let groups3 = assign_subgroups(&patients, &top);
+        let groups_all = assign_subgroups(&patients, &all);
+        let embedding = tsne(&patients, &TsneConfig::default());
+        let sil3 = silhouette(&embedding, &groups3);
+        let sil_all = silhouette(&embedding, &groups_all);
+        let csv = format!("table3/tsne_{}_{}.csv", cfg.dataset, cfg.algo.name);
+        let mut w =
+            CsvWriter::create(ctx.out_dir.join(&csv), &["x", "y", "group_top3", "group_all"])?;
+        for i in 0..embedding.rows {
+            w.row_f64(&[
+                embedding.at(i, 0) as f64,
+                embedding.at(i, 1) as f64,
+                groups3[i] as f64,
+                groups_all[i] as f64,
+            ])?;
+        }
+        w.flush()?;
+        table.row(&[
+            cfg.algo.name.clone(),
+            epochs.to_string(),
+            format!("{sil3:.3}"),
+            format!("{sil_all:.3}"),
+            csv,
+        ]);
+    }
+    println!("  (paper Table III: CiderTF clusters comparably to BrasCPD, better than 1-epoch D-PSGD*)");
+    Ok(())
+}
+
+/// Table IV: top-3 phenotypes with their top features per mode, plus the
+/// support-recovery score vs the planted ground truth (our checkable
+/// analogue of the clinician annotation).
+pub fn table4(ctx: &mut Ctx, k: usize, tau: usize, feats_per_mode: usize) -> anyhow::Result<()> {
+    let dataset = if ctx.profile.datasets().contains(&"mimic_like") { "mimic_like" } else { ctx.profile.datasets()[0] };
+    let loss = Loss::Ls; // interpretable nonneg-ish factors come from the ls fit
+    let data = ctx.dataset(dataset, loss)?;
+    println!("\n=== Table IV: phenotypes extracted by CiderTF (tau={tau}) on {dataset} ===");
+    let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
+    cfg.k = k;
+    cfg.epochs = ctx.profile.epochs().max(10); // converge into the planted basin
+    let out = ctx.run("table4", &cfg, &data, None)?;
+    let phenos = extract(&out.factors, 3, feats_per_mode);
+    let mode_names = ["Dx", "Px/Med"]; // feature-mode labels for D=3
+    for (i, ph) in phenos.iter().enumerate() {
+        println!("  P{}: component {} (lambda = {:.3})", i + 1, ph.component, ph.weight);
+        for (fm, feats) in ph.top_features.iter().enumerate() {
+            let items: Vec<String> =
+                feats.iter().map(|&(id, w)| format!("f{id}({w:.2})")).collect();
+            println!("    {}: {}", mode_names.get(fm).unwrap_or(&"mode"), items.join(", "));
+        }
+    }
+    let truth: Vec<Mat> = data.truth.clone();
+    let recovery = support_recovery(&phenos, &truth);
+    println!("  planted-support recovery (best-Jaccard avg): {recovery:.3}");
+    Ok(())
+}
+
+/// §III-D theorem checks: measured communication against the analytical
+/// `1 - 1/(32 D tau)` lower bound, and memory/computation scalings.
+pub fn theorems(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<()> {
+    let dataset = ctx.profile.datasets()[0];
+    let loss = Loss::Logit;
+    let data = ctx.dataset(dataset, loss)?;
+    let d_order = data.tensor.dims.len();
+    println!("\n=== Theorems III.1-III.3 checks ({dataset}, K={k}, tau={tau}) ===");
+
+    // Thm III.2 — communication reduction vs full-precision D-PSGD.
+    // The bound is an *expectation* over the block-randomized mode
+    // sequence; use enough iterations to shrink sampling noise.
+    let mut cfg_d = ctx.base_config(dataset, loss, AlgoConfig::dpsgd());
+    cfg_d.k = k;
+    cfg_d.epochs = 1;
+    cfg_d.iters_per_epoch = 1000;
+    let dpsgd = ctx.run("theorems", &cfg_d, &data, None)?;
+    let mut cfg_c = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
+    cfg_c.k = k;
+    cfg_c.epochs = 1;
+    cfg_c.iters_per_epoch = 1000;
+    let cider = ctx.run("theorems", &cfg_c, &data, None)?;
+    let bound = 1.0 - 1.0 / (32.0 * d_order as f64 * tau as f64);
+    // wire-level includes per-message headers (which dominate CiderTF's
+    // tiny sign payloads); the theorem's bound is payload-level math.
+    let wire = 1.0 - cider.record.total.bytes as f64 / dpsgd.record.total.bytes.max(1) as f64;
+    let payload = |r: &crate::engine::metrics::RunRecord| {
+        (r.total.bytes - r.total.messages * Message::HEADER_BYTES) as f64
+    };
+    let payload_red = 1.0 - payload(&cider.record) / payload(&dpsgd.record).max(1.0);
+    // retained-fraction ratio vs the bound's expectation; <= 1 means the
+    // bound holds, small excess is block-sampling noise (~1/sqrt(events))
+    let retained_ratio = (1.0 - payload_red) / (1.0 - bound);
+    let verdict = if payload_red >= bound {
+        "YES"
+    } else if retained_ratio < 1.15 {
+        "YES (within block-sampling noise)"
+    } else {
+        "NO"
+    };
+    println!(
+        "  Thm III.2: payload-level reduction {:.5} vs bound {:.5} -> {}  (wire incl. headers: {:.5})",
+        payload_red, bound, verdict, wire,
+    );
+    println!(
+        "  uplink: dpsgd {} vs cidertf {} per epoch",
+        crate::util::benchkit::fmt_bytes(dpsgd.record.total.bytes as f64),
+        crate::util::benchkit::fmt_bytes(cider.record.total.bytes as f64),
+    );
+
+    // Thm III.3 — memory: fiber-sampled slice vs full matricization
+    let s = cfg_c.fiber_samples;
+    let full: f64 = data.tensor.n_cells();
+    let sketch: f64 = data.tensor.dims.iter().map(|&i| (i * s) as f64).sum::<f64>() / d_order as f64;
+    println!(
+        "  Thm III.3: slice memory {:.2e} floats vs full matricization {:.2e} ({}x smaller)",
+        sketch,
+        full,
+        (full / sketch) as u64
+    );
+
+    // Thm III.1 — per-iteration computational complexity O((1/D) sum I_d R |S|)
+    let r = cfg_c.rank;
+    let flops_per_iter: f64 =
+        data.tensor.dims.iter().map(|&i| (i * r * s) as f64).sum::<f64>() / d_order as f64;
+    println!(
+        "  Thm III.1: per-iteration work ~{:.2e} MACs per client (R={r}, |S|={s})",
+        flops_per_iter
+    );
+    Ok(())
+}
+
+fn subsample_rows(m: &Mat, max_rows: usize) -> Mat {
+    if m.rows <= max_rows {
+        return m.clone();
+    }
+    let stride = m.rows.div_ceil(max_rows);
+    let rows: Vec<usize> = (0..m.rows).step_by(stride).collect();
+    let mut out = Mat::zeros(rows.len(), m.cols);
+    for (o, &i) in rows.iter().enumerate() {
+        out.row_mut(o).copy_from_slice(m.row(i));
+    }
+    out
+}

@@ -1,0 +1,29 @@
+//! # CiderTF — Communication-Efficient Decentralized Generalized Tensor Factorization
+//!
+//! Production-grade reproduction of *"Communication Efficient Generalized
+//! Tensor Factorization for Decentralized Healthcare Networks"* (Ma et al.,
+//! 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the decentralized gossip coordinator with the
+//!   paper's four-level communication-reduction stack (sign compression,
+//!   block randomization, periodic communication, event triggering),
+//!   Nesterov momentum, every baseline, and the experiment harness.
+//! * **L2/L1 (python/, build-time only)** — the generalized-CP gradient
+//!   graph and its fused Pallas kernel, AOT-lowered to HLO text under
+//!   `artifacts/` and executed here through the PJRT CPU client.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+
+pub mod analysis;
+pub mod compress;
+pub mod engine;
+pub mod factor;
+pub mod gossip;
+pub mod harness;
+pub mod losses;
+pub mod net;
+pub mod runtime;
+pub mod sched;
+pub mod tensor;
+pub mod topology;
+pub mod util;

@@ -1,0 +1,118 @@
+//! GCP elementwise losses — the Rust mirror of `python/compile/kernels/
+//! losses.py`. The Rust side needs them for the native differential-test
+//! gradient path and for exact small-oracle loss evaluation; the PJRT
+//! artifacts carry the authoritative implementations at train time.
+
+/// Which elementwise GCP loss models the data (paper eq. 3-4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Loss {
+    /// least squares — Gaussian data, classic CP
+    Ls,
+    /// Bernoulli-logit — binary data (implemented per the cited GCP papers:
+    /// `f = log(1+e^m) - x m`; the paper's eq. (4) as printed is a typo,
+    /// see DESIGN.md substitutions)
+    Logit,
+}
+
+impl Loss {
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Ls => "ls",
+            Loss::Logit => "logit",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "ls" | "least_squares" | "gaussian" => Ok(Loss::Ls),
+            "logit" | "bernoulli" | "bernoulli_logit" => Ok(Loss::Logit),
+            other => anyhow::bail!("unknown loss '{other}' (ls|logit)"),
+        }
+    }
+
+    /// f(m, x)
+    #[inline]
+    pub fn value(self, m: f32, x: f32) -> f32 {
+        match self {
+            Loss::Ls => {
+                let d = m - x;
+                d * d
+            }
+            // log(1 + e^m) - x m, stable for large |m|
+            Loss::Logit => {
+                let softplus = if m > 0.0 { m + (-m).exp().ln_1p() } else { m.exp().ln_1p() };
+                softplus - x * m
+            }
+        }
+    }
+
+    /// df/dm
+    #[inline]
+    pub fn grad(self, m: f32, x: f32) -> f32 {
+        match self {
+            Loss::Ls => 2.0 * (m - x),
+            Loss::Logit => sigmoid(m) - x,
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(m: f32) -> f32 {
+    if m >= 0.0 {
+        1.0 / (1.0 + (-m).exp())
+    } else {
+        let e = m.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ls_value_and_grad() {
+        assert_eq!(Loss::Ls.value(3.0, 1.0), 4.0);
+        assert_eq!(Loss::Ls.grad(3.0, 1.0), 4.0);
+        assert_eq!(Loss::Ls.grad(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn logit_matches_bernoulli_nll() {
+        for &m in &[-5.0f32, -0.5, 0.0, 0.5, 5.0] {
+            for &x in &[0.0f32, 1.0] {
+                let p = sigmoid(m);
+                let nll = -(x * p.ln() + (1.0 - x) * (1.0 - p).ln());
+                let f = Loss::Logit.value(m, x);
+                assert!((f - nll).abs() < 1e-5, "m={m} x={x}: {f} vs {nll}");
+            }
+        }
+    }
+
+    #[test]
+    fn logit_grad_is_derivative() {
+        let eps = 1e-3f32;
+        for &m in &[-2.0f32, -0.1, 0.0, 0.7, 3.0] {
+            for &x in &[0.0f32, 1.0] {
+                let fd = (Loss::Logit.value(m + eps, x) - Loss::Logit.value(m - eps, x)) / (2.0 * eps);
+                assert!((fd - Loss::Logit.grad(m, x)).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn logit_stable_for_large_m() {
+        assert!(Loss::Logit.value(80.0, 1.0).is_finite());
+        assert!(Loss::Logit.value(-80.0, 0.0).is_finite());
+        assert!((Loss::Logit.value(80.0, 1.0) - 0.0).abs() < 1e-3);
+        assert!((Loss::Logit.grad(80.0, 0.0) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for l in [Loss::Ls, Loss::Logit] {
+            assert_eq!(Loss::from_name(l.name()).unwrap(), l);
+        }
+        assert!(Loss::from_name("poisson").is_err());
+    }
+}

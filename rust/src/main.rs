@@ -1,0 +1,234 @@
+//! `cidertf` — CLI entry point for the CiderTF reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md index):
+//!
+//! ```text
+//! cidertf train  --algo cidertf:4 --dataset mimic_like --loss logit ...
+//! cidertf fig3 | fig4 | fig5 | fig6 | fig7         # regenerate figures
+//! cidertf table2 | table3 | table4 | theorems      # regenerate tables
+//! cidertf tune   --dataset synthetic --loss logit  # γ grid search
+//! cidertf info                                      # artifact/manifest info
+//! ```
+//!
+//! Common flags: `--profile quick|paper`, `--k N`, `--tau T`,
+//! `--epochs E`, `--backend pjrt|native`, `--out results/`.
+
+use cidertf::engine::{train, AlgoConfig, TrainConfig};
+use cidertf::harness::{self, Ctx, Profile};
+use cidertf::losses::Loss;
+use cidertf::runtime::{default_artifact_dir, ComputeBackend, Manifest, NativeOrPjrt};
+use cidertf::topology::Topology;
+use cidertf::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn make_backend(args: &Args) -> anyhow::Result<Box<dyn ComputeBackend>> {
+    NativeOrPjrt::from_flag(&args.get_str("backend", "pjrt"))
+}
+
+fn ctx_from(args: &Args) -> anyhow::Result<Ctx> {
+    let profile = Profile::from_name(&args.get_str("profile", "quick"))?;
+    let mut ctx = Ctx::with_backend(make_backend(args)?, profile);
+    ctx.out_dir = args.get_str("out", "results").into();
+    Ok(ctx)
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let command = args.command.clone().unwrap_or_else(|| "help".to_string());
+    match command.as_str() {
+        "train" => cmd_train(&args)?,
+        "fig3" => {
+            let mut ctx = ctx_from(&args)?;
+            let k = args.get_usize("k", 8);
+            let taus = args.get_usize_list("taus", &[2, 4, 6, 8]);
+            harness::fig3::run(&mut ctx, k, &taus)?;
+        }
+        "fig4" => {
+            let mut ctx = ctx_from(&args)?;
+            harness::fig4::run(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+        }
+        "fig5" => {
+            let mut ctx = ctx_from(&args)?;
+            let ks = args.get_usize_list("ks", &[8, 16, 32]);
+            let taus = args.get_usize_list("taus", &[4, 8]);
+            harness::fig5::run(&mut ctx, &ks, &taus)?;
+        }
+        "fig6" => {
+            let mut ctx = ctx_from(&args)?;
+            harness::fig6::run(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+        }
+        "fig7" => {
+            let mut ctx = ctx_from(&args)?;
+            harness::fig7::run(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+        }
+        "table2" => {
+            harness::tables::table2(args.get_usize("d", 3), args.get_usize("tau", 4));
+            args.finish()?;
+            return Ok(());
+        }
+        "table3" => {
+            let mut ctx = ctx_from(&args)?;
+            harness::tables::table3(
+                &mut ctx,
+                args.get_usize("k", 8),
+                args.get_usize("tau", 8),
+                args.get_usize("max-patients", 1000),
+            )?;
+        }
+        "table4" => {
+            let mut ctx = ctx_from(&args)?;
+            harness::tables::table4(
+                &mut ctx,
+                args.get_usize("k", 8),
+                args.get_usize("tau", 8),
+                args.get_usize("features", 8),
+            )?;
+        }
+        "ablate" => {
+            let mut ctx = ctx_from(&args)?;
+            let k = args.get_usize("k", 8);
+            let tau = args.get_usize("tau", 4);
+            match args.get_str("sweep", "all").as_str() {
+                "rho" => harness::ablate::rho_sweep(&mut ctx, k, tau)?,
+                "tau" => harness::ablate::tau_sweep(&mut ctx, k)?,
+                "trigger" => harness::ablate::trigger_sweep(&mut ctx, k, tau)?,
+                _ => {
+                    harness::ablate::rho_sweep(&mut ctx, k, tau)?;
+                    harness::ablate::tau_sweep(&mut ctx, k)?;
+                    harness::ablate::trigger_sweep(&mut ctx, k, tau)?;
+                }
+            }
+        }
+        "theorems" => {
+            let mut ctx = ctx_from(&args)?;
+            harness::tables::theorems(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+        }
+        "tune" => cmd_tune(&args)?,
+        "info" => cmd_info(&args)?,
+        "help" | _ => {
+            print_help();
+            return Ok(());
+        }
+    }
+    args.finish()
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let algo = AlgoConfig::by_name(&args.get_str("algo", "cidertf:4"))?;
+    let dataset = args.get_str("dataset", "synthetic");
+    let loss = Loss::from_name(&args.get_str("loss", "logit"))?;
+    let profile = Profile::from_name(&args.get_str("profile", "quick"))?;
+    let mut ctx = Ctx::with_backend(make_backend(args)?, profile);
+    ctx.out_dir = args.get_str("out", "results").into();
+    let data = ctx.dataset(&dataset, loss)?;
+    let mut cfg = ctx.base_config(&dataset, loss, algo);
+    cfg.k = args.get_usize("k", 8);
+    cfg.topology = Topology::from_name(&args.get_str("topology", "ring"))?;
+    cfg.epochs = args.get_usize("epochs", cfg.epochs);
+    cfg.iters_per_epoch = args.get_usize("iters-per-epoch", cfg.iters_per_epoch);
+    cfg.gamma = args.get_f64("gamma", cfg.gamma);
+    cfg.rank = args.get_usize("rank", cfg.rank);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    println!(
+        "training {} on {dataset}/{} K={} topology={} gamma={} ({} epochs x {} iters)",
+        cfg.algo.name, cfg.loss.name(), cfg.k, cfg.topology.name(), cfg.gamma, cfg.epochs, cfg.iters_per_epoch
+    );
+    let out = ctx.run("train", &cfg, &data, None)?;
+    for p in &out.record.points {
+        println!(
+            "epoch {:>3}  t={:>7.1}s  loss={:.6e}  uplink={}",
+            p.epoch,
+            p.time_s,
+            p.loss,
+            cidertf::util::benchkit::fmt_bytes(p.bytes as f64)
+        );
+    }
+    println!(
+        "done: final loss {:.6e}, wall {:.1}s, uplink {}, msgs {} (triggered {}, suppressed {})",
+        out.record.final_loss(),
+        out.record.wall_s,
+        cidertf::util::benchkit::fmt_bytes(out.record.total.bytes as f64),
+        out.record.total.messages,
+        out.record.total.triggered,
+        out.record.total.suppressed
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let dataset = args.get_str("dataset", "synthetic");
+    let loss = Loss::from_name(&args.get_str("loss", "logit"))?;
+    let mut backend = make_backend(args)?;
+    let data = {
+        let ctx = Ctx::with_backend(NativeOrPjrt::from_flag("native")?, Profile::Quick);
+        ctx.dataset(&dataset, loss)?
+    };
+    let mut best = (f64::INFINITY, 0.0);
+    for exp in -3i32..=3 {
+        let gamma = 2f64.powi(exp);
+        let mut cfg = TrainConfig::new(&dataset, loss, AlgoConfig::cidertf(4));
+        cfg.gamma = gamma;
+        cfg.epochs = args.get_usize("epochs", 2);
+        cfg.iters_per_epoch = args.get_usize("iters-per-epoch", 150);
+        let out = train(&cfg, &data, backend.as_mut(), None)?;
+        let l = out.record.final_loss();
+        println!("gamma = {gamma:>8}: final loss {l:.6e}");
+        if l.is_finite() && l < best.0 {
+            best = (l, gamma);
+        }
+    }
+    println!("best gamma for {dataset}/{}: {}", loss.name(), best.1);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    let m = Manifest::load(&dir)?;
+    let mut names: Vec<&String> = m.artifacts.keys().collect();
+    names.sort();
+    println!("{} artifacts:", names.len());
+    for n in names {
+        let a = &m.artifacts[n];
+        println!("  {:<28} op={:<5} loss={:<5} inputs={:?}", a.name, a.op, a.loss, a.inputs);
+    }
+    args.finish()
+}
+
+fn print_help() {
+    println!(
+        "cidertf — decentralized generalized tensor factorization (CiderTF reproduction)
+
+USAGE: cidertf <command> [flags]
+
+COMMANDS
+  train      run one algorithm        --algo cidertf:4|cidertf_m:4|dpsgd|dpsgd_bras|
+                                       dpsgd_sign|dpsgd_bras_sign|sparq_sgd:4|gcp|
+                                       bras_cpd|centralized_cidertf
+             --dataset synthetic|mimic_like|cms_like|mimic_full|tiny --loss logit|ls
+             --k 8 --topology ring|star|complete|chain|torus --epochs N --gamma G
+  fig3       convergence vs baselines (paper Fig. 3)   [--k --taus 2,4,6,8]
+  fig4       ring vs star topology    (paper Fig. 4)   [--k --tau]
+  fig5       scalability K=8,16,32    (paper Fig. 5)   [--ks --taus]
+  fig6       ablation + measured compression (Fig. 6)  [--k --tau]
+  fig7       FMS vs centralized BrasCPD (Fig. 7)       [--k --tau]
+  table2     feature/ratio matrix     (Table II)       [--d --tau]
+  table3     tSNE subgroup study      (Table III)      [--k --tau --max-patients]
+  table4     phenotype extraction     (Table IV)       [--k --tau --features]
+  theorems   Thm III.1-III.3 checks                    [--k --tau]
+  ablate     design-knob sweeps (rho/tau/trigger)      [--sweep rho|tau|trigger|all]
+  tune       learning-rate grid search                 [--dataset --loss]
+  info       list AOT artifacts
+
+COMMON FLAGS
+  --profile quick|paper   effort level (default quick)
+  --backend pjrt|native   compute backend (default pjrt; native = pure Rust mirror)
+  --out results/          output directory for CSVs"
+    );
+}

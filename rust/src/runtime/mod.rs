@@ -1,0 +1,287 @@
+//! AOT runtime: load the HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the PJRT CPU client.
+//!
+//! Python never runs on this path — `make artifacts` lowers the L2/L1
+//! graphs once, the manifest describes every artifact's shapes, and this
+//! module compiles each HLO lazily (cached per name) and marshals f32
+//! buffers in and out.
+//!
+//! `ComputeBackend` abstracts the gradient/eval executor so the engine can
+//! also run against the bit-faithful pure-Rust mirror (`native.rs`) for
+//! differential testing and artifact-free unit tests.
+
+pub mod native;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::losses::Loss;
+use crate::util::json::Json;
+use crate::util::mat::Mat;
+
+/// A single artifact as described by `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub op: String,
+    pub loss: String,
+    /// input shapes in call order (empty vec = scalar)
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e} — run `make artifacts`"))?;
+        let json = Json::parse(&text)?;
+        anyhow::ensure!(
+            json.req_str("format")? == "hlo-text-v1",
+            "unsupported manifest format"
+        );
+        let mut artifacts = HashMap::new();
+        for a in json.req_array("artifacts")? {
+            let shapes = |key: &str| -> anyhow::Result<Vec<Vec<usize>>> {
+                a.req_array(key)?
+                    .iter()
+                    .map(|s| {
+                        s.as_array()
+                            .ok_or_else(|| anyhow::anyhow!("bad shape entry"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                            .collect()
+                    })
+                    .collect()
+            };
+            let info = ArtifactInfo {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                op: a.req_str("op")?.to_string(),
+                loss: a.req_str("loss")?.to_string(),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            };
+            artifacts.insert(info.name.clone(), info);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn grad_name(loss: Loss, i: usize, s: usize, r: usize, d: usize) -> String {
+        format!("grad_{}_i{i}_s{s}_r{r}_d{d}", loss.name())
+    }
+
+    pub fn eval_name(loss: Loss, b: usize, r: usize, d: usize) -> String {
+        format!("eval_{}_b{b}_r{r}_d{d}", loss.name())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+}
+
+/// Backend abstraction: how gradients and loss sums are computed.
+pub trait ComputeBackend {
+    /// Fiber-sampled GCP gradient (paper eq. 10) for one mode:
+    /// `xs` is the dense `[i_dim, s_dim]` slice (row-major), `a` the
+    /// `[i_dim, R]` factor, `us` the D-1 row-gathered `[s_dim, R]` factor
+    /// matrices of the other modes, `scale` the unbiasedness weight.
+    /// Returns `(scale * G, slice_loss_sum)`.
+    fn grad(
+        &mut self,
+        loss: Loss,
+        xs: &[f32],
+        i_dim: usize,
+        s_dim: usize,
+        a: &Mat,
+        us: &[&Mat],
+        scale: f32,
+    ) -> anyhow::Result<(Mat, f64)>;
+
+    /// Stratified loss-estimator batch: `x[B]` data values, `us` D
+    /// row-gathered `[B, R]` matrices (one per mode). Returns the loss sum.
+    fn eval(&mut self, loss: Loss, x: &[f32], us: &[&Mat]) -> anyhow::Result<f64>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// PJRT-backed executor: the production backend.
+pub struct PjrtBackend {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtBackend { manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let info = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest — re-run `make artifacts` after updating artifact_specs.json"))?;
+            let path = self.manifest.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Host -> device buffer (single copy; ~2.5x faster end-to-end than
+    /// the Literal marshaling path, see EXPERIMENTS.md §Perf).
+    fn buffer(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn run(&mut self, name: &str, inputs: &[xla::PjRtBuffer]) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute_b(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn grad(
+        &mut self,
+        loss: Loss,
+        xs: &[f32],
+        i_dim: usize,
+        s_dim: usize,
+        a: &Mat,
+        us: &[&Mat],
+        scale: f32,
+    ) -> anyhow::Result<(Mat, f64)> {
+        let r_dim = a.cols;
+        let d_order = us.len() + 1;
+        let name = Manifest::grad_name(loss, i_dim, s_dim, r_dim, d_order);
+        anyhow::ensure!(xs.len() == i_dim * s_dim, "xs shape mismatch");
+        let mut bufs = Vec::with_capacity(d_order + 2);
+        bufs.push(self.buffer(xs, &[i_dim, s_dim])?);
+        bufs.push(self.buffer(&a.data, &[i_dim, r_dim])?);
+        for u in us {
+            anyhow::ensure!(u.rows == s_dim && u.cols == r_dim, "U shape mismatch");
+            bufs.push(self.buffer(&u.data, &[s_dim, r_dim])?);
+        }
+        bufs.push(self.buffer(&[scale], &[])?);
+        let outs = self.run(&name, &bufs)?;
+        anyhow::ensure!(
+            outs.len() == 1 || outs.len() == 2,
+            "grad artifact returned {} outputs",
+            outs.len()
+        );
+        let g = Mat::from_vec(i_dim, r_dim, outs[0].to_vec::<f32>()?);
+        // Production artifacts omit the monitoring loss (§Perf): the
+        // training path only consumes G; loss curves come from eval_*.
+        let loss_sum = match outs.get(1) {
+            Some(l) => l.get_first_element::<f32>()? as f64,
+            None => f64::NAN,
+        };
+        Ok((g, loss_sum))
+    }
+
+    fn eval(&mut self, loss: Loss, x: &[f32], us: &[&Mat]) -> anyhow::Result<f64> {
+        let b = x.len();
+        let r_dim = us[0].cols;
+        let d_order = us.len();
+        let name = Manifest::eval_name(loss, b, r_dim, d_order);
+        let mut bufs = Vec::with_capacity(d_order + 1);
+        bufs.push(self.buffer(x, &[b])?);
+        for u in us {
+            anyhow::ensure!(u.rows == b && u.cols == r_dim, "U shape mismatch");
+            bufs.push(self.buffer(&u.data, &[b, r_dim])?);
+        }
+        let outs = self.run(&name, &bufs)?;
+        anyhow::ensure!(outs.len() == 1, "eval artifact returned {} outputs", outs.len());
+        Ok(outs[0].get_first_element::<f32>()? as f64)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Backend selector for CLI `--backend` flags.
+pub struct NativeOrPjrt;
+
+impl NativeOrPjrt {
+    pub fn from_flag(flag: &str) -> anyhow::Result<Box<dyn ComputeBackend>> {
+        match flag {
+            "pjrt" => Ok(Box::new(PjrtBackend::new(&default_artifact_dir())?)),
+            "native" => Ok(Box::new(native::NativeBackend::new())),
+            other => anyhow::bail!("unknown backend '{other}' (pjrt|native)"),
+        }
+    }
+}
+
+/// Locate the artifact directory: `$CIDERTF_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (walking up from cwd).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CIDERTF_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_generated_file() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 10);
+        let g = &m.artifacts["grad_ls_i32_s16_r4_d3"];
+        assert_eq!(g.op, "grad");
+        assert_eq!(g.inputs[0], vec![32, 16]);
+        assert_eq!(g.inputs[1], vec![32, 4]);
+        assert_eq!(g.inputs.last().unwrap(), &Vec::<usize>::new()); // scalar
+        assert_eq!(g.outputs[0], vec![32, 4]);
+        assert!(m.has(&Manifest::eval_name(Loss::Logit, 64, 4, 3)));
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Manifest::grad_name(Loss::Ls, 512, 256, 16, 3), "grad_ls_i512_s256_r16_d3");
+        assert_eq!(Manifest::eval_name(Loss::Logit, 8192, 16, 3), "eval_logit_b8192_r16_d3");
+    }
+}

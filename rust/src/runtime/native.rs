@@ -1,0 +1,218 @@
+//! Pure-Rust mirror of the L1/L2 compute graph.
+//!
+//! Bit-faithful to the math of `python/compile/kernels/` (same formulas,
+//! same f32 accumulation structure): `M = A Hᵀ`, `Y = ∂f(M, Xs)`,
+//! `G = scale · Y H`, `L = Σ f(M, Xs)` with `H` the Hadamard of the row
+//! gathers. Used for
+//! * differential testing against the PJRT artifacts (runtime_integration),
+//! * artifact-free unit tests and debugging,
+//! * the perf baseline the PJRT path is compared to in EXPERIMENTS.md §Perf.
+
+use super::ComputeBackend;
+use crate::losses::Loss;
+use crate::util::mat::Mat;
+
+/// Native (no-PJRT) compute backend.
+#[derive(Debug)]
+pub struct NativeBackend {
+    /// scratch for H = hadamard(us), reused across calls
+    h_scratch: Mat,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend { h_scratch: Mat::zeros(0, 0) }
+    }
+
+    /// H = elementwise product of the D-1 row-gather matrices.
+    fn hadamard_into(&mut self, us: &[&Mat]) {
+        let (s, r) = (us[0].rows, us[0].cols);
+        if self.h_scratch.rows != s || self.h_scratch.cols != r {
+            self.h_scratch = Mat::zeros(s, r);
+        }
+        self.h_scratch.data.copy_from_slice(&us[0].data);
+        for u in &us[1..] {
+            debug_assert_eq!((u.rows, u.cols), (s, r));
+            self.h_scratch.hadamard_assign(u);
+        }
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn grad(
+        &mut self,
+        loss: Loss,
+        xs: &[f32],
+        i_dim: usize,
+        s_dim: usize,
+        a: &Mat,
+        us: &[&Mat],
+        scale: f32,
+    ) -> anyhow::Result<(Mat, f64)> {
+        anyhow::ensure!(xs.len() == i_dim * s_dim, "xs shape mismatch");
+        anyhow::ensure!(a.rows == i_dim, "A shape mismatch");
+        let r_dim = a.cols;
+        self.hadamard_into(us);
+        let h = &self.h_scratch;
+
+        let mut g = Mat::zeros(i_dim, r_dim);
+        let mut loss_sum = 0.0f64;
+        let mut m_row = vec![0.0f32; s_dim];
+        for i in 0..i_dim {
+            let a_row = a.row(i);
+            // M(i,:) = A(i,:) · Hᵀ
+            for (s, mv) in m_row.iter_mut().enumerate() {
+                let h_row = h.row(s);
+                let mut acc = 0.0f32;
+                for (av, hv) in a_row.iter().zip(h_row.iter()) {
+                    acc += av * hv;
+                }
+                *mv = acc;
+            }
+            // Y(i,:) = ∂f, fused with G(i,:) += Y(i,s) · H(s,:)
+            let g_row = g.row_mut(i);
+            let xs_row = &xs[i * s_dim..(i + 1) * s_dim];
+            for s in 0..s_dim {
+                let m = m_row[s];
+                let x = xs_row[s];
+                loss_sum += loss.value(m, x) as f64;
+                let y = loss.grad(m, x);
+                if y == 0.0 {
+                    continue;
+                }
+                let h_row = h.row(s);
+                for (gv, hv) in g_row.iter_mut().zip(h_row.iter()) {
+                    *gv += y * hv;
+                }
+            }
+        }
+        g.scale(scale);
+        Ok((g, loss_sum))
+    }
+
+    fn eval(&mut self, loss: Loss, x: &[f32], us: &[&Mat]) -> anyhow::Result<f64> {
+        let b = x.len();
+        anyhow::ensure!(us.iter().all(|u| u.rows == b), "U shape mismatch");
+        let r_dim = us[0].cols;
+        let mut sum = 0.0f64;
+        let mut prod = vec![0.0f32; r_dim];
+        for e in 0..b {
+            prod.copy_from_slice(us[0].row(e));
+            for u in &us[1..] {
+                for (p, v) in prod.iter_mut().zip(u.row(e).iter()) {
+                    *p *= v;
+                }
+            }
+            let m: f32 = prod.iter().sum();
+            sum += loss.value(m, x[e]) as f64;
+        }
+        Ok(sum)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat::rand_normal(rows, cols, 0.4, rng)
+    }
+
+    /// Straight-line oracle with no fusion/scratch tricks.
+    fn oracle_grad(loss: Loss, xs: &[f32], i: usize, s: usize, a: &Mat, h: &Mat, scale: f32) -> (Mat, f64) {
+        let m = a.matmul_transb(h); // [i, s]
+        let mut y = Mat::zeros(i, s);
+        let mut lsum = 0.0f64;
+        for r in 0..i {
+            for c in 0..s {
+                lsum += loss.value(m.at(r, c), xs[r * s + c]) as f64;
+                *y.at_mut(r, c) = loss.grad(m.at(r, c), xs[r * s + c]);
+            }
+        }
+        let mut g = y.matmul(h);
+        g.scale(scale);
+        (g, lsum)
+    }
+
+    #[test]
+    fn grad_matches_oracle_both_losses() {
+        let mut rng = Rng::new(21);
+        let (i, s, r) = (13, 9, 5);
+        for loss in [Loss::Ls, Loss::Logit] {
+            let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32()).collect();
+            let a = randmat(i, r, &mut rng);
+            let u1 = randmat(s, r, &mut rng);
+            let u2 = randmat(s, r, &mut rng);
+            let mut h = u1.clone();
+            h.hadamard_assign(&u2);
+            let mut be = NativeBackend::new();
+            let (g, l) = be.grad(loss, &xs, i, s, &a, &[&u1, &u2], 1.7).unwrap();
+            let (g2, l2) = oracle_grad(loss, &xs, i, s, &a, &h, 1.7);
+            for (x, y) in g.data.iter().zip(g2.data.iter()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+            assert!((l - l2).abs() / l2.abs().max(1.0) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn eval_matches_manual() {
+        let mut rng = Rng::new(22);
+        let (b, r) = (31, 4);
+        let us: Vec<Mat> = (0..3).map(|_| randmat(b, r, &mut rng)).collect();
+        let x: Vec<f32> = (0..b).map(|_| rng.normal_f32()).collect();
+        let mut be = NativeBackend::new();
+        let refs: Vec<&Mat> = us.iter().collect();
+        let got = be.eval(Loss::Ls, &x, &refs).unwrap();
+        let mut want = 0.0f64;
+        for e in 0..b {
+            let mut m = 0.0f32;
+            for rr in 0..r {
+                m += us[0].at(e, rr) * us[1].at(e, rr) * us[2].at(e, rr);
+            }
+            want += Loss::Ls.value(m, x[e]) as f64;
+        }
+        assert!((got - want).abs() < 1e-6 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn order4_hadamard_chain() {
+        let mut rng = Rng::new(23);
+        let (i, s, r) = (6, 7, 3);
+        let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32()).collect();
+        let a = randmat(i, r, &mut rng);
+        let us: Vec<Mat> = (0..3).map(|_| randmat(s, r, &mut rng)).collect();
+        let refs: Vec<&Mat> = us.iter().collect();
+        let mut h = us[0].clone();
+        h.hadamard_assign(&us[1]);
+        h.hadamard_assign(&us[2]);
+        let mut be = NativeBackend::new();
+        let (g, _) = be.grad(Loss::Ls, &xs, i, s, &a, &refs, 1.0).unwrap();
+        let (g2, _) = oracle_grad(Loss::Ls, &xs, i, s, &a, &h, 1.0);
+        for (x, y) in g.data.iter().zip(g2.data.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn scale_is_applied() {
+        let mut rng = Rng::new(24);
+        let (i, s, r) = (4, 5, 2);
+        let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32()).collect();
+        let a = randmat(i, r, &mut rng);
+        let u1 = randmat(s, r, &mut rng);
+        let u2 = randmat(s, r, &mut rng);
+        let mut be = NativeBackend::new();
+        let (g1, l1) = be.grad(Loss::Ls, &xs, i, s, &a, &[&u1, &u2], 1.0).unwrap();
+        let (g2, l2) = be.grad(Loss::Ls, &xs, i, s, &a, &[&u1, &u2], 3.0).unwrap();
+        for (x, y) in g1.data.iter().zip(g2.data.iter()) {
+            assert!((3.0 * x - y).abs() < 1e-4);
+        }
+        assert!((l1 - l2).abs() < 1e-9, "loss is unscaled");
+    }
+}

@@ -1,0 +1,186 @@
+//! Schedules and samplers: the block-randomization sequence `d_ξ[t]`, the
+//! per-client fiber sampler, the learning-rate schedule, and the
+//! event-trigger threshold schedule `λ[t]` (paper §III-B, §IV-A3).
+
+use crate::util::rng::Rng;
+
+/// Shared randomized block (mode) sampling sequence — all clients draw the
+/// same mode each round (Alg. 1 input), so the sequence is derived from a
+/// shared seed, independent of client id.
+#[derive(Debug, Clone)]
+pub struct BlockSampler {
+    d_order: usize,
+    rng: Rng,
+    /// when false, cycle deterministically (for baselines that update all
+    /// modes this is unused)
+    randomized: bool,
+    t: usize,
+}
+
+impl BlockSampler {
+    pub fn new(d_order: usize, seed: u64, randomized: bool) -> Self {
+        BlockSampler { d_order, rng: Rng::new(seed ^ 0xB10C), randomized, t: 0 }
+    }
+
+    /// Mode for round t (paper eq. 11: uniform over modes).
+    pub fn next_mode(&mut self) -> usize {
+        let m = if self.randomized {
+            self.rng.below(self.d_order)
+        } else {
+            self.t % self.d_order
+        };
+        self.t += 1;
+        m
+    }
+}
+
+/// Per-client fiber sampler: `|S|` distinct mode-d fibers per iteration.
+#[derive(Debug, Clone)]
+pub struct FiberSampler {
+    rng: Rng,
+}
+
+impl FiberSampler {
+    pub fn new(seed: u64, client: u64) -> Self {
+        FiberSampler { rng: Rng::new(seed ^ 0xF1BE).split(client + 1) }
+    }
+
+    /// Sample `s` distinct fibers out of `n_fibers` (or all if fewer).
+    pub fn sample(&mut self, n_fibers: usize, s: usize) -> Vec<u64> {
+        let take = s.min(n_fibers);
+        self.rng.sample_indices(n_fibers, take).into_iter().map(|i| i as u64).collect()
+    }
+}
+
+/// Learning-rate schedule. The paper uses a constant rate found by grid
+/// search over powers of two; a decay variant is provided for extensions.
+#[derive(Debug, Clone, Copy)]
+pub enum LrSchedule {
+    Constant(f64),
+    /// γ[t] = γ0 / (1 + decay · epoch)
+    InverseEpoch { gamma0: f64, decay: f64, iters_per_epoch: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, t: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant(g) => g,
+            LrSchedule::InverseEpoch { gamma0, decay, iters_per_epoch } => {
+                gamma0 / (1.0 + decay * (t / iters_per_epoch.max(1)) as f64)
+            }
+        }
+    }
+}
+
+/// Event-trigger threshold schedule (follows SPARQ-SGD [41], §IV-A3):
+/// `λ[0] = 1/γ`, multiplied by `alpha` every `every_epochs` epochs so that
+/// late in training the trigger fires less and less often.
+#[derive(Debug, Clone, Copy)]
+pub struct TriggerSchedule {
+    pub lambda0: f64,
+    pub alpha: f64,
+    pub every_epochs: usize,
+    pub iters_per_epoch: usize,
+}
+
+impl TriggerSchedule {
+    /// Paper's setting: λ[0] = 1/γ.
+    pub fn paper_default(gamma: f64, iters_per_epoch: usize) -> Self {
+        TriggerSchedule {
+            lambda0: 1.0 / gamma,
+            alpha: 1.3,
+            every_epochs: 2,
+            iters_per_epoch,
+        }
+    }
+
+    pub fn at(&self, t: usize) -> f64 {
+        let epoch = t / self.iters_per_epoch.max(1);
+        let bumps = (epoch / self.every_epochs.max(1)) as i32;
+        self.lambda0 * self.alpha.powi(bumps)
+    }
+
+    /// The Alg. 1 line-10 condition:
+    /// `‖A[t+½] - Â[t]‖_F² >= λ[t] · γ[t]²`.
+    pub fn fires(&self, dist_sq: f64, t: usize, gamma: f64) -> bool {
+        dist_sq >= self.at(t) * gamma * gamma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_sampler_uniform_over_modes() {
+        let mut s = BlockSampler::new(3, 1, true);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[s.next_mode()] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn block_sampler_shared_seed_agrees() {
+        let mut a = BlockSampler::new(4, 77, true);
+        let mut b = BlockSampler::new(4, 77, true);
+        for _ in 0..100 {
+            assert_eq!(a.next_mode(), b.next_mode());
+        }
+    }
+
+    #[test]
+    fn cyclic_mode_when_not_randomized() {
+        let mut s = BlockSampler::new(3, 5, false);
+        assert_eq!(
+            (0..6).map(|_| s.next_mode()).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn fiber_sampler_distinct_in_range() {
+        let mut f = FiberSampler::new(9, 3);
+        let s = f.sample(1000, 64);
+        assert_eq!(s.len(), 64);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 64);
+        assert!(s.iter().all(|&x| x < 1000));
+        // fewer fibers than requested -> all of them
+        let all = f.sample(10, 64);
+        assert_eq!(all.len(), 10);
+    }
+
+    #[test]
+    fn fiber_sampler_client_streams_independent() {
+        let mut a = FiberSampler::new(9, 0);
+        let mut b = FiberSampler::new(9, 1);
+        assert_ne!(a.sample(10_000, 32), b.sample(10_000, 32));
+    }
+
+    #[test]
+    fn lr_schedules() {
+        let c = LrSchedule::Constant(0.25);
+        assert_eq!(c.at(0), 0.25);
+        assert_eq!(c.at(10_000), 0.25);
+        let d = LrSchedule::InverseEpoch { gamma0: 1.0, decay: 1.0, iters_per_epoch: 100 };
+        assert_eq!(d.at(0), 1.0);
+        assert_eq!(d.at(100), 0.5);
+        assert_eq!(d.at(350), 0.25);
+    }
+
+    #[test]
+    fn trigger_schedule_grows_and_fires() {
+        let ts = TriggerSchedule::paper_default(0.5, 500);
+        assert!((ts.lambda0 - 2.0).abs() < 1e-12);
+        assert_eq!(ts.at(0), ts.at(499));
+        assert!(ts.at(500 * 2) > ts.at(0)); // bumped after every_epochs
+        // fires iff dist_sq >= λ γ²
+        let thr = ts.at(0) * 0.5 * 0.5;
+        assert!(ts.fires(thr + 1e-9, 0, 0.5));
+        assert!(!ts.fires(thr - 1e-9, 0, 0.5));
+    }
+}

@@ -1,0 +1,207 @@
+//! Per-mode fiber index: the sparse -> dense gather behind fiber-sampled
+//! MTTKRP (paper §III-B2, eq. 10).
+//!
+//! For a sampled fiber set `S_d` the engine needs the dense slice
+//! `Y_<d>(:, S_d)` as an `I_d x |S|` row-major buffer for the PJRT gradient
+//! artifact. Building it per iteration from raw COO would be O(nnz); the
+//! `FiberIndex` groups entries of each mode by fiber id once (O(nnz log
+//! nnz) at load), making each gather O(sum of nnz in the sampled fibers).
+//! This is an L3 hot path — see EXPERIMENTS.md §Perf.
+
+use std::collections::HashMap;
+
+use super::SparseTensor;
+
+/// Entries of one mode grouped by fiber id.
+#[derive(Debug, Clone)]
+pub struct FiberIndex {
+    pub mode: usize,
+    /// row index within the mode (i_d) per grouped entry
+    rows: Vec<u32>,
+    /// value per grouped entry (parallel to `rows`)
+    vals: Vec<f32>,
+    /// fiber id -> (start, end) range into rows/vals
+    ranges: HashMap<u64, (u32, u32)>,
+    /// number of fibers with at least one nonzero
+    pub n_nonempty: usize,
+}
+
+impl FiberIndex {
+    /// Group all entries of `t` by their mode-`mode` fiber.
+    pub fn build(t: &SparseTensor, mode: usize) -> Self {
+        let nnz = t.nnz();
+        // (fiber id, entry id) pairs sorted by fiber id.
+        let mut keyed: Vec<(u64, u32)> =
+            (0..nnz).map(|e| (t.fiber_of_entry(e, mode), e as u32)).collect();
+        keyed.sort_unstable_by_key(|&(f, _)| f);
+
+        let mut rows = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        let mut ranges = HashMap::new();
+        let mut i = 0usize;
+        while i < keyed.len() {
+            let fid = keyed[i].0;
+            let start = i;
+            while i < keyed.len() && keyed[i].0 == fid {
+                let e = keyed[i].1 as usize;
+                rows.push(t.entry_index(e, mode));
+                vals.push(t.vals[e]);
+                i += 1;
+            }
+            ranges.insert(fid, (start as u32, i as u32));
+        }
+        let n_nonempty = ranges.len();
+        FiberIndex { mode, rows, vals, ranges, n_nonempty }
+    }
+
+    /// Number of nonzeros in fiber `fid`.
+    pub fn fiber_nnz(&self, fid: u64) -> usize {
+        self.ranges.get(&fid).map(|&(s, e)| (e - s) as usize).unwrap_or(0)
+    }
+
+    /// Iterate `(row, value)` pairs of fiber `fid`.
+    pub fn fiber_entries(&self, fid: u64) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let (s, e) = self.ranges.get(&fid).copied().unwrap_or((0, 0));
+        (s as usize..e as usize).map(move |k| (self.rows[k], self.vals[k]))
+    }
+
+    /// Scatter the sampled fibers into a dense row-major `I x |S|` buffer.
+    ///
+    /// `out` must hold `i_dim * fibers.len()` f32 and is fully overwritten
+    /// (zero fill + scatter) — callers reuse the buffer across iterations.
+    pub fn gather_slice(&self, fibers: &[u64], i_dim: usize, out: &mut [f32]) {
+        let s = fibers.len();
+        assert_eq!(out.len(), i_dim * s);
+        out.fill(0.0);
+        for (col, &fid) in fibers.iter().enumerate() {
+            if let Some(&(a, b)) = self.ranges.get(&fid) {
+                for k in a as usize..b as usize {
+                    let row = self.rows[k] as usize;
+                    debug_assert!(row < i_dim);
+                    out[row * s + col] = self.vals[k];
+                }
+            }
+        }
+    }
+
+    /// Total stored entries (== tensor nnz).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// All per-mode fiber indices of a local tensor (built once at load).
+#[derive(Debug, Clone)]
+pub struct ModeIndices {
+    pub per_mode: Vec<FiberIndex>,
+}
+
+impl ModeIndices {
+    pub fn build(t: &SparseTensor) -> Self {
+        ModeIndices { per_mode: (0..t.order()).map(|m| FiberIndex::build(t, m)).collect() }
+    }
+
+    pub fn mode(&self, m: usize) -> &FiberIndex {
+        &self.per_mode[m]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::encode_fiber;
+    use crate::util::rng::Rng;
+
+    fn random_tensor(dims: &[usize], nnz: usize, seed: u64) -> SparseTensor {
+        let mut t = SparseTensor::new(dims.to_vec());
+        let mut rng = Rng::new(seed);
+        let mut seen = std::collections::HashSet::new();
+        while t.nnz() < nnz {
+            let idx: Vec<u32> = dims.iter().map(|&d| rng.below(d) as u32).collect();
+            if seen.insert(t.linearize(&idx)) {
+                let v = rng.normal_f32();
+                t.push(&idx, if v == 0.0 { 1.0 } else { v });
+            }
+        }
+        t
+    }
+
+    /// Dense oracle: materialize the full mode-d matricization.
+    fn dense_unfold(t: &SparseTensor, mode: usize) -> Vec<f32> {
+        let i_dim = t.dims[mode];
+        let nf = t.n_fibers(mode);
+        let mut m = vec![0.0f32; i_dim * nf];
+        for e in 0..t.nnz() {
+            let row = t.entry_index(e, mode) as usize;
+            let col = t.fiber_of_entry(e, mode) as usize;
+            m[row * nf + col] = t.vals[e];
+        }
+        m
+    }
+
+    #[test]
+    fn gather_matches_dense_unfold_all_modes() {
+        let t = random_tensor(&[6, 5, 4], 40, 9);
+        for mode in 0..3 {
+            let fi = FiberIndex::build(&t, mode);
+            let i_dim = t.dims[mode];
+            let nf = t.n_fibers(mode);
+            let dense = dense_unfold(&t, mode);
+            // gather every fiber in one call and compare column-by-column
+            let fibers: Vec<u64> = (0..nf as u64).collect();
+            let mut out = vec![0.0f32; i_dim * nf];
+            fi.gather_slice(&fibers, i_dim, &mut out);
+            assert_eq!(out, dense, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn gather_subset_and_duplicates() {
+        let t = random_tensor(&[8, 3, 3], 30, 5);
+        let fi = FiberIndex::build(&t, 0);
+        let fibers = vec![2u64, 2, 7, 0];
+        let mut out = vec![1.0f32; 8 * 4];
+        fi.gather_slice(&fibers, 8, &mut out);
+        // duplicated fiber columns must be identical
+        for row in 0..8 {
+            assert_eq!(out[row * 4], out[row * 4 + 1]);
+        }
+        // zero-fill happened (buffer had garbage 1.0s)
+        let dense = dense_unfold(&t, 0);
+        let nf = t.n_fibers(0);
+        for row in 0..8 {
+            assert_eq!(out[row * 4 + 3], dense[row * nf]);
+        }
+    }
+
+    #[test]
+    fn fiber_entries_and_nnz() {
+        let mut t = SparseTensor::new(vec![4, 3, 2]);
+        t.push(&[0, 1, 1], 5.0);
+        t.push(&[2, 1, 1], 6.0);
+        t.push(&[1, 0, 0], 7.0);
+        let fi = FiberIndex::build(&t, 0);
+        let fid = encode_fiber(&t.dims, 0, &[0, 1, 1]);
+        assert_eq!(fi.fiber_nnz(fid), 2);
+        let got: Vec<(u32, f32)> = fi.fiber_entries(fid).collect();
+        assert!(got.contains(&(0, 5.0)) && got.contains(&(2, 6.0)));
+        assert_eq!(fi.fiber_nnz(999), 0);
+        assert_eq!(fi.n_nonempty, 2);
+        assert_eq!(fi.len(), 3);
+    }
+
+    #[test]
+    fn mode_indices_builds_all() {
+        let t = random_tensor(&[5, 4, 3, 2], 25, 3);
+        let mi = ModeIndices::build(&t);
+        assert_eq!(mi.per_mode.len(), 4);
+        for m in 0..4 {
+            assert_eq!(mi.mode(m).len(), 25);
+            assert_eq!(mi.mode(m).mode, m);
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Sparse tensor substrate: COO storage, mode-d fiber addressing, and the
+//! horizontal (patient-mode) partitioner used by the decentralized setting.
+//!
+//! Conventions follow the paper / Kolda: a D-order tensor `X` with dims
+//! `I_1..I_D`; its mode-d matricization `X_<d>` is `I_d x (I_Pi / I_d)`.
+//! A *mode-d fiber* is one column of `X_<d>`, addressed by a fiber id that
+//! mixed-radix-encodes the indices of all modes except `d` (modes in
+//! increasing order, first mode fastest — Kolda's unfolding order).
+
+pub mod fiber;
+pub mod partition;
+pub mod synth;
+
+use std::collections::HashSet;
+
+/// COO sparse tensor, f32 values, u32 per-mode indices.
+#[derive(Debug, Clone)]
+pub struct SparseTensor {
+    /// mode sizes `I_1..I_D`
+    pub dims: Vec<usize>,
+    /// entry indices, row-major per entry: `idx[e*D + m]` is mode-m index
+    pub idx: Vec<u32>,
+    /// entry values, `vals[e]`
+    pub vals: Vec<f32>,
+}
+
+impl SparseTensor {
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(dims.len() >= 2);
+        assert!(dims.iter().all(|&d| d > 0 && d < u32::MAX as usize));
+        SparseTensor { dims, idx: Vec::new(), vals: Vec::new() }
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Total number of cells `I_Pi`.
+    pub fn n_cells(&self) -> f64 {
+        self.dims.iter().map(|&d| d as f64).product()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / self.n_cells()
+    }
+
+    /// Number of mode-d fibers, `I_Pi / I_d`.
+    pub fn n_fibers(&self, mode: usize) -> usize {
+        self.dims
+            .iter()
+            .enumerate()
+            .filter(|(m, _)| *m != mode)
+            .map(|(_, &d)| d)
+            .product()
+    }
+
+    pub fn push(&mut self, index: &[u32], val: f32) {
+        debug_assert_eq!(index.len(), self.order());
+        debug_assert!(index.iter().zip(&self.dims).all(|(&i, &d)| (i as usize) < d));
+        self.idx.extend_from_slice(index);
+        self.vals.push(val);
+    }
+
+    /// Mode-m index of entry e.
+    #[inline]
+    pub fn entry_index(&self, e: usize, mode: usize) -> u32 {
+        self.idx[e * self.order() + mode]
+    }
+
+    /// Full multi-index of entry e.
+    #[inline]
+    pub fn entry(&self, e: usize) -> &[u32] {
+        let d = self.order();
+        &self.idx[e * d..(e + 1) * d]
+    }
+
+    /// Linearize a full multi-index (first mode fastest) to a global cell id.
+    pub fn linearize(&self, index: &[u32]) -> u64 {
+        let mut id = 0u64;
+        for m in (0..self.order()).rev() {
+            id = id * self.dims[m] as u64 + index[m] as u64;
+        }
+        id
+    }
+
+    /// Set of linearized nonzero cell ids (for stratified zero sampling).
+    pub fn cell_set(&self) -> HashSet<u64> {
+        (0..self.nnz()).map(|e| self.linearize(self.entry(e))).collect()
+    }
+
+    /// Encode the mode-d fiber id of entry `e` (mixed radix over all modes
+    /// except `d`, increasing mode order, first remaining mode fastest).
+    pub fn fiber_of_entry(&self, e: usize, mode: usize) -> u64 {
+        let entry = self.entry(e);
+        let mut id = 0u64;
+        for m in (0..self.order()).rev() {
+            if m == mode {
+                continue;
+            }
+            id = id * self.dims[m] as u64 + entry[m] as u64;
+        }
+        id
+    }
+
+    /// Decode a mode-d fiber id into per-mode row indices (the entry for
+    /// mode `d` itself is left as 0 and must be ignored by the caller).
+    pub fn decode_fiber(&self, mode: usize, fid: u64) -> Vec<u32> {
+        decode_fiber(&self.dims, mode, fid)
+    }
+
+    /// Sum of squared values (used by ls loss bookkeeping / tests).
+    pub fn frob_sq(&self) -> f64 {
+        self.vals.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+/// Decode a mode-`mode` fiber id into a full multi-index with 0 at `mode`.
+pub fn decode_fiber(dims: &[usize], mode: usize, fid: u64) -> Vec<u32> {
+    let mut out = vec![0u32; dims.len()];
+    let mut rest = fid;
+    for m in 0..dims.len() {
+        if m == mode {
+            continue;
+        }
+        out[m] = (rest % dims[m] as u64) as u32;
+        rest /= dims[m] as u64;
+    }
+    debug_assert_eq!(rest, 0, "fiber id out of range");
+    out
+}
+
+/// Encode the mode-`mode` fiber id of a full multi-index.
+pub fn encode_fiber(dims: &[usize], mode: usize, index: &[u32]) -> u64 {
+    let mut id = 0u64;
+    for m in (0..dims.len()).rev() {
+        if m == mode {
+            continue;
+        }
+        id = id * dims[m] as u64 + index[m] as u64;
+    }
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t3() -> SparseTensor {
+        let mut t = SparseTensor::new(vec![4, 3, 2]);
+        t.push(&[0, 0, 0], 1.0);
+        t.push(&[1, 2, 0], 2.0);
+        t.push(&[3, 1, 1], 3.0);
+        t
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let t = t3();
+        assert_eq!(t.order(), 3);
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.n_cells(), 24.0);
+        assert!((t.density() - 3.0 / 24.0).abs() < 1e-12);
+        assert_eq!(t.n_fibers(0), 6);
+        assert_eq!(t.n_fibers(1), 8);
+        assert_eq!(t.n_fibers(2), 12);
+        assert_eq!(t.entry(1), &[1, 2, 0]);
+        assert_eq!(t.entry_index(2, 2), 1);
+    }
+
+    #[test]
+    fn fiber_encode_decode_roundtrip() {
+        let t = t3();
+        for mode in 0..3 {
+            for fid in 0..t.n_fibers(mode) as u64 {
+                let idx = t.decode_fiber(mode, fid);
+                assert_eq!(encode_fiber(&t.dims, mode, &idx), fid, "mode {mode} fid {fid}");
+            }
+        }
+    }
+
+    #[test]
+    fn fiber_of_entry_consistent_with_encode() {
+        let t = t3();
+        for e in 0..t.nnz() {
+            for mode in 0..3 {
+                assert_eq!(
+                    t.fiber_of_entry(e, mode),
+                    encode_fiber(&t.dims, mode, t.entry(e))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn linearize_is_injective() {
+        let t = t3();
+        let mut seen = std::collections::HashSet::new();
+        for i0 in 0..4u32 {
+            for i1 in 0..3u32 {
+                for i2 in 0..2u32 {
+                    assert!(seen.insert(t.linearize(&[i0, i1, i2])));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 24);
+        assert!(seen.iter().all(|&x| x < 24));
+    }
+
+    #[test]
+    fn cell_set_contains_exactly_nnz() {
+        let t = t3();
+        let s = t.cell_set();
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(&t.linearize(&[3, 1, 1])));
+        assert!(!s.contains(&t.linearize(&[0, 0, 1])));
+    }
+
+    #[test]
+    fn order4_fibers() {
+        let mut t = SparseTensor::new(vec![3, 4, 5, 6]);
+        t.push(&[2, 3, 4, 5], 1.0);
+        assert_eq!(t.n_fibers(0), 120);
+        let fid = t.fiber_of_entry(0, 2);
+        let idx = t.decode_fiber(2, fid);
+        assert_eq!(&idx[..2], &[2, 3]);
+        assert_eq!(idx[3], 5);
+    }
+}

@@ -1,0 +1,136 @@
+//! Horizontal (patient-mode) partitioning — paper eq. (5).
+//!
+//! The global tensor is split along mode 0 into K contiguous row blocks,
+//! one per client/institution. Mode-0 indices are re-based so each local
+//! tensor is self-contained; `row_offset` maps back to global patient ids.
+
+use super::SparseTensor;
+
+/// One client's shard.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub tensor: SparseTensor,
+    /// global patient-row offset of local row 0
+    pub row_offset: usize,
+}
+
+/// Split `t` into `k` shards of (near-)equal patient rows.
+///
+/// Row counts differ by at most 1; every global row lands in exactly one
+/// shard and local indices are re-based.
+pub fn partition_mode0(t: &SparseTensor, k: usize) -> Vec<Shard> {
+    assert!(k >= 1);
+    let i0 = t.dims[0];
+    assert!(k <= i0, "more clients ({k}) than patient rows ({i0})");
+    let base = i0 / k;
+    let extra = i0 % k;
+    // shard s covers rows [starts[s], starts[s+1])
+    let mut starts = Vec::with_capacity(k + 1);
+    let mut acc = 0usize;
+    for s in 0..k {
+        starts.push(acc);
+        acc += base + usize::from(s < extra);
+    }
+    starts.push(i0);
+
+    let mut shards: Vec<Shard> = (0..k)
+        .map(|s| {
+            let mut dims = t.dims.clone();
+            dims[0] = starts[s + 1] - starts[s];
+            Shard { tensor: SparseTensor::new(dims), row_offset: starts[s] }
+        })
+        .collect();
+
+    let d = t.order();
+    let mut local_idx = vec![0u32; d];
+    for e in 0..t.nnz() {
+        let idx = t.entry(e);
+        let row = idx[0] as usize;
+        // find shard by binary search over starts
+        let s = match starts.binary_search(&row) {
+            Ok(pos) => pos.min(k - 1),
+            Err(pos) => pos - 1,
+        };
+        local_idx.copy_from_slice(idx);
+        local_idx[0] = (row - starts[s]) as u32;
+        shards[s].tensor.push(&local_idx, t.vals[e]);
+    }
+    shards
+}
+
+/// Even split sizes for dimension `i0` across `k` clients (used by configs
+/// to pick artifact shapes; equals the shard row counts of
+/// [`partition_mode0`] when `k` divides `i0`).
+pub fn shard_rows(i0: usize, k: usize) -> Vec<usize> {
+    let base = i0 / k;
+    let extra = i0 % k;
+    (0..k).map(|s| base + usize::from(s < extra)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::SynthConfig;
+
+    #[test]
+    fn partition_covers_all_entries_exactly_once() {
+        let data = SynthConfig::tiny(5).generate();
+        let t = &data.tensor;
+        for k in [1, 3, 8] {
+            let shards = partition_mode0(t, k);
+            assert_eq!(shards.len(), k);
+            let total: usize = shards.iter().map(|s| s.tensor.nnz()).sum();
+            assert_eq!(total, t.nnz(), "k={k}");
+            let rows: usize = shards.iter().map(|s| s.tensor.dims[0]).sum();
+            assert_eq!(rows, t.dims[0]);
+            // every local entry maps back to a global entry
+            let global: std::collections::HashSet<u64> = t.cell_set();
+            for sh in &shards {
+                for e in 0..sh.tensor.nnz() {
+                    let mut idx = sh.tensor.entry(e).to_vec();
+                    idx[0] += sh.row_offset as u32;
+                    assert!(global.contains(&t.linearize(&idx)));
+                    assert!((sh.tensor.entry(e)[0] as usize) < sh.tensor.dims[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_offsets_are_contiguous() {
+        let data = SynthConfig::tiny(6).generate();
+        let shards = partition_mode0(&data.tensor, 5);
+        let mut expect = 0;
+        for sh in &shards {
+            assert_eq!(sh.row_offset, expect);
+            expect += sh.tensor.dims[0];
+        }
+        assert_eq!(expect, data.tensor.dims[0]);
+    }
+
+    #[test]
+    fn uneven_division_spreads_remainder() {
+        // 64 rows, 6 clients -> 11,11,11,11,10,10
+        let rows = shard_rows(64, 6);
+        assert_eq!(rows, vec![11, 11, 11, 11, 10, 10]);
+        assert_eq!(rows.iter().sum::<usize>(), 64);
+    }
+
+    #[test]
+    fn k1_is_identity() {
+        let data = SynthConfig::tiny(7).generate();
+        let shards = partition_mode0(&data.tensor, 1);
+        assert_eq!(shards[0].tensor.nnz(), data.tensor.nnz());
+        assert_eq!(shards[0].tensor.idx, data.tensor.idx);
+        assert_eq!(shards[0].row_offset, 0);
+    }
+
+    #[test]
+    fn feature_modes_untouched() {
+        let data = SynthConfig::tiny(8).generate();
+        let shards = partition_mode0(&data.tensor, 4);
+        for sh in &shards {
+            assert_eq!(&sh.tensor.dims[1..], &data.tensor.dims[1..]);
+        }
+    }
+}

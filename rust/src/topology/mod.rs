@@ -1,0 +1,249 @@
+//! Decentralized communication topologies (paper §III-A, Fig. 2).
+//!
+//! An undirected graph over K clients plus the symmetric doubly-stochastic
+//! connectivity matrix `W` built with Metropolis–Hastings weights:
+//! `w_kj = 1/(1 + max(deg_k, deg_j))` on edges, `w_kk = 1 - Σ_j w_kj`.
+
+use crate::util::rng::Rng;
+
+/// Supported topologies (ring and star are the paper's; the rest support
+/// extension experiments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    Ring,
+    Star,
+    Complete,
+    Chain,
+    /// 2-D torus (K must be a perfect square)
+    Torus,
+}
+
+impl Topology {
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::Star => "star",
+            Topology::Complete => "complete",
+            Topology::Chain => "chain",
+            Topology::Torus => "torus",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "ring" => Topology::Ring,
+            "star" => Topology::Star,
+            "complete" | "full" => Topology::Complete,
+            "chain" | "line" => Topology::Chain,
+            "torus" | "grid" => Topology::Torus,
+            other => anyhow::bail!("unknown topology '{other}' (ring|star|complete|chain|torus)"),
+        })
+    }
+}
+
+/// Undirected communication graph with consensus weights.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub n: usize,
+    pub topology: Topology,
+    /// adjacency lists (sorted, no self-loops)
+    pub neighbors: Vec<Vec<usize>>,
+    /// dense K x K Metropolis weight matrix
+    pub weights: Vec<Vec<f64>>,
+}
+
+impl Graph {
+    pub fn build(topology: Topology, n: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(n >= 1, "need at least one client");
+        let mut neighbors: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let connect = |a: usize, b: usize, nb: &mut Vec<Vec<usize>>| {
+            if a != b && !nb[a].contains(&b) {
+                nb[a].push(b);
+                nb[b].push(a);
+            }
+        };
+        match topology {
+            Topology::Ring => {
+                for k in 0..n {
+                    connect(k, (k + 1) % n, &mut neighbors);
+                }
+            }
+            Topology::Star => {
+                for k in 1..n {
+                    connect(0, k, &mut neighbors);
+                }
+            }
+            Topology::Complete => {
+                for a in 0..n {
+                    for b in (a + 1)..n {
+                        connect(a, b, &mut neighbors);
+                    }
+                }
+            }
+            Topology::Chain => {
+                for k in 0..n.saturating_sub(1) {
+                    connect(k, k + 1, &mut neighbors);
+                }
+            }
+            Topology::Torus => {
+                let side = (n as f64).sqrt().round() as usize;
+                anyhow::ensure!(side * side == n, "torus needs a square client count, got {n}");
+                for r in 0..side {
+                    for c in 0..side {
+                        let id = r * side + c;
+                        connect(id, r * side + (c + 1) % side, &mut neighbors);
+                        connect(id, ((r + 1) % side) * side + c, &mut neighbors);
+                    }
+                }
+            }
+        }
+        for adj in &mut neighbors {
+            adj.sort_unstable();
+        }
+        let weights = metropolis_weights(&neighbors);
+        Ok(Graph { n, topology, neighbors, weights })
+    }
+
+    pub fn degree(&self, k: usize) -> usize {
+        self.neighbors[k].len()
+    }
+
+    /// Total directed communication links (each undirected edge counts
+    /// twice — every client uplinks to each neighbor). This is the factor
+    /// behind the paper's ring-vs-star byte comparison (Fig. 4).
+    pub fn total_links(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).sum()
+    }
+
+    pub fn w(&self, k: usize, j: usize) -> f64 {
+        self.weights[k][j]
+    }
+
+    /// Spectral gap `1 - λ₂(W)` estimated by power iteration on the
+    /// deflated operator (connectivity/mixing speed diagnostic).
+    pub fn spectral_gap(&self) -> f64 {
+        let n = self.n;
+        if n == 1 {
+            return 1.0;
+        }
+        let mut rng = Rng::new(0xBEEF);
+        // start orthogonal to the all-ones top eigenvector
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut tmp = vec![0.0f64; n];
+        let mut lambda2 = 0.0;
+        for _ in 0..300 {
+            let mean = v.iter().sum::<f64>() / n as f64;
+            v.iter_mut().for_each(|x| *x -= mean);
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-30);
+            v.iter_mut().for_each(|x| *x /= norm);
+            for k in 0..n {
+                tmp[k] = (0..n).map(|j| self.weights[k][j] * v[j]).sum();
+            }
+            lambda2 = v.iter().zip(tmp.iter()).map(|(a, b)| a * b).sum::<f64>();
+            std::mem::swap(&mut v, &mut tmp);
+        }
+        1.0 - lambda2.abs()
+    }
+}
+
+/// Metropolis–Hastings symmetric doubly-stochastic weights.
+pub fn metropolis_weights(neighbors: &[Vec<usize>]) -> Vec<Vec<f64>> {
+    let n = neighbors.len();
+    let deg: Vec<usize> = neighbors.iter().map(Vec::len).collect();
+    let mut w = vec![vec![0.0f64; n]; n];
+    for k in 0..n {
+        for &j in &neighbors[k] {
+            w[k][j] = 1.0 / (1.0 + deg[k].max(deg[j]) as f64);
+        }
+        w[k][k] = 1.0 - w[k].iter().sum::<f64>();
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_doubly_stochastic(g: &Graph) {
+        for k in 0..g.n {
+            let row: f64 = g.weights[k].iter().sum();
+            assert!((row - 1.0).abs() < 1e-12, "row {k} sums to {row}");
+            let col: f64 = (0..g.n).map(|j| g.weights[j][k]).sum();
+            assert!((col - 1.0).abs() < 1e-12, "col {k} sums to {col}");
+            for j in 0..g.n {
+                assert!((g.weights[k][j] - g.weights[j][k]).abs() < 1e-15, "not symmetric");
+                assert!(g.weights[k][j] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_structure_and_weights() {
+        let g = Graph::build(Topology::Ring, 8).unwrap();
+        for k in 0..8 {
+            assert_eq!(g.degree(k), 2);
+            assert!(g.neighbors[k].contains(&((k + 1) % 8)));
+            assert!(g.neighbors[k].contains(&((k + 7) % 8)));
+        }
+        assert_eq!(g.total_links(), 16);
+        check_doubly_stochastic(&g);
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = Graph::build(Topology::Star, 8).unwrap();
+        assert_eq!(g.degree(0), 7);
+        for k in 1..8 {
+            assert_eq!(g.degree(k), 1);
+            assert_eq!(g.neighbors[k], vec![0]);
+        }
+        // star has fewer total links than ring at same K (paper Fig. 4)
+        let ring = Graph::build(Topology::Ring, 8).unwrap();
+        assert!(g.total_links() < ring.total_links());
+        check_doubly_stochastic(&g);
+    }
+
+    #[test]
+    fn complete_chain_torus() {
+        let g = Graph::build(Topology::Complete, 6).unwrap();
+        assert!(g.neighbors.iter().all(|a| a.len() == 5));
+        check_doubly_stochastic(&g);
+
+        let c = Graph::build(Topology::Chain, 5).unwrap();
+        assert_eq!(c.degree(0), 1);
+        assert_eq!(c.degree(2), 2);
+        check_doubly_stochastic(&c);
+
+        let t = Graph::build(Topology::Torus, 16).unwrap();
+        assert!(t.neighbors.iter().all(|a| a.len() == 4));
+        check_doubly_stochastic(&t);
+        assert!(Graph::build(Topology::Torus, 12).is_err());
+    }
+
+    #[test]
+    fn single_client_degenerates() {
+        let g = Graph::build(Topology::Ring, 1).unwrap();
+        assert_eq!(g.degree(0), 0);
+        assert_eq!(g.weights[0][0], 1.0);
+        assert_eq!(g.total_links(), 0);
+    }
+
+    #[test]
+    fn spectral_gap_ordering() {
+        // complete mixes faster than ring, ring faster than chain
+        let complete = Graph::build(Topology::Complete, 16).unwrap().spectral_gap();
+        let ring = Graph::build(Topology::Ring, 16).unwrap().spectral_gap();
+        let chain = Graph::build(Topology::Chain, 16).unwrap().spectral_gap();
+        assert!(complete > ring, "complete {complete} vs ring {ring}");
+        assert!(ring > chain, "ring {ring} vs chain {chain}");
+        assert!(chain > 0.0);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for t in [Topology::Ring, Topology::Star, Topology::Complete, Topology::Chain, Topology::Torus] {
+            assert_eq!(Topology::from_name(t.name()).unwrap(), t);
+        }
+        assert!(Topology::from_name("hypercube").is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Bench harness substrate (no `criterion` available offline).
+//!
+//! Two modes:
+//! * [`bench`] — classic timing micro-bench with warmup, returning
+//!   mean/p50/p95 per iteration; used by `micro_hotpaths`.
+//! * [`Table`] — a row printer for the per-figure experiment benches, which
+//!   report *domain* metrics (loss reached, bytes communicated, wall time)
+//!   in the same rows/series the paper's plots show.
+
+use std::time::Instant;
+
+/// Timing statistics for one benchmark, in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns)
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`target_ms` ms (after 10% warmup), collect
+/// per-iteration timings, and report stats. `f` should return something
+/// observable to prevent the optimizer from deleting the work; we
+/// `black_box` it.
+pub fn bench<T>(name: &str, target_ms: u64, mut f: impl FnMut() -> T) -> Stats {
+    // Warmup + calibration: find iterations per sample.
+    let t0 = Instant::now();
+    let mut calib_iters = 0usize;
+    while t0.elapsed().as_millis() < (target_ms / 10).max(5) as u128 {
+        std::hint::black_box(f());
+        calib_iters += 1;
+    }
+    let per_iter_ns = (t0.elapsed().as_nanos() as f64 / calib_iters as f64).max(1.0);
+    // Aim for <= 200 samples over the target duration.
+    let sample_iters = ((target_ms as f64 * 1e6) / per_iter_ns / 200.0).ceil().max(1.0) as usize;
+
+    let mut samples = Vec::new();
+    let bench_start = Instant::now();
+    let mut total_iters = 0usize;
+    while bench_start.elapsed().as_millis() < target_ms as u128 && samples.len() < 1000 {
+        let s = Instant::now();
+        for _ in 0..sample_iters {
+            std::hint::black_box(f());
+        }
+        samples.push(s.elapsed().as_nanos() as f64 / sample_iters as f64);
+        total_iters += sample_iters;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    let stats = Stats {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: mean,
+        p50_ns: pct(0.5),
+        p95_ns: pct(0.95),
+        min_ns: samples[0],
+    };
+    stats.print();
+    stats
+}
+
+/// Aligned table printer for experiment benches.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        let headers: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+        let widths = headers.iter().map(|h| h.len().max(12)).collect();
+        let t = Table { headers, widths };
+        t.print_header();
+        t
+    }
+
+    fn print_header(&self) {
+        let cells: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("{}", cells.join("  "));
+        println!("{}", "-".repeat(cells.join("  ").len()));
+    }
+
+    pub fn row(&self, fields: &[String]) {
+        let cells: Vec<String> = fields
+            .iter()
+            .zip(&self.widths)
+            .map(|(f, w)| format!("{f:>w$}"))
+            .collect();
+        println!("{}", cells.join("  "));
+    }
+}
+
+/// Human-readable byte counts.
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1e3 {
+        format!("{b:.0} B")
+    } else if b < 1e6 {
+        format!("{:.1} kB", b / 1e3)
+    } else if b < 1e9 {
+        format!("{:.2} MB", b / 1e6)
+    } else {
+        format!("{:.2} GB", b / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop-ish", 20, || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p95_ns * 1.0001);
+        assert!(s.iters > 100);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_bytes(2_000_000.0).contains("MB"));
+    }
+}

@@ -1,0 +1,174 @@
+//! Tiny CLI argument parser substrate (no `clap` available offline).
+//!
+//! Model: `prog <subcommand> [--key value]... [--flag]...`. Typed getters
+//! with defaults; unknown-argument detection via `finish()`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// subcommand (first non-flag argument), if any
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut command = None;
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else if command.is_none() {
+                command = Some(a);
+            }
+        }
+        Args { command, opts, flags, consumed: Default::default() }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.mark(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--taus 2,4,6,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}")))
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn get_str_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    /// Error on any option/flag that was never queried (catches typos).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown arguments: {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig3 --dataset mimic_like --workers 16 --lr 0.125 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig3"));
+        assert_eq!(a.get_str("dataset", "synthetic"), "mimic_like");
+        assert_eq!(a.get_usize("workers", 8), 16);
+        assert!((a.get_f64("lr", 1.0) - 0.125).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_syntax_and_lists() {
+        let a = parse("train --taus=2,4,6,8 --algos cidertf,dpsgd");
+        assert_eq!(a.get_usize_list("taus", &[1]), vec![2, 4, 6, 8]);
+        assert_eq!(a.get_str_list("algos", &[]), vec!["cidertf", "dpsgd"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("k", 8), 8);
+        assert_eq!(a.get_str("loss", "logit"), "logit");
+        assert_eq!(a.opt_str("out"), None);
+    }
+
+    #[test]
+    fn unknown_args_detected() {
+        let a = parse("run --oops 3");
+        a.get_usize("k", 8);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn type_error_panics() {
+        let a = parse("run --k abc");
+        a.get_usize("k", 8);
+    }
+}

@@ -1,0 +1,80 @@
+//! CSV output substrate for experiment results (loss curves, ledgers, ...).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, n_cols: header.len() })
+    }
+
+    /// Write a row of already-formatted fields.
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(fields.len() == self.n_cols, "row arity {} != header {}", fields.len(), self.n_cols);
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    /// Write a row of f64s (common case for metric curves).
+    pub fn row_f64(&mut self, fields: &[f64]) -> anyhow::Result<()> {
+        let v: Vec<String> = fields.iter().map(|x| format_f64(*x)).collect();
+        self.row(&v)
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Compact float formatting (no trailing zeros beyond precision needs).
+pub fn format_f64(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("cidertf_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["epoch", "loss", "bytes"]).unwrap();
+            w.row_f64(&[0.0, 1.25, 1024.0]).unwrap();
+            w.row(&["1".into(), "0.5".into(), "2048".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "epoch,loss,bytes");
+        assert!(lines[1].starts_with("0,1.25"));
+        assert_eq!(lines.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn arity_checked() {
+        let dir = std::env::temp_dir().join("cidertf_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,294 @@
+//! Dense row-major f32 matrix substrate (no ndarray/BLAS offline).
+//!
+//! Factor matrices are tall-skinny (`I x R`, R <= 64), so the kernels here
+//! are written for that regime: row-major layout, ikj GEMM loops that
+//! vectorize well, and allocation-free `*_into` variants for the engine's
+//! hot paths.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. uniform entries in `[0, scale)` — the standard non-negative
+    /// init for EHR tensor factorization.
+    pub fn rand_uniform(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.uniform_f32() * scale);
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn rand_normal(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal_f32() * std);
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// `self += alpha * other` (the engine's most-executed loop).
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self = alpha * self`.
+    pub fn scale(&mut self, alpha: f32) {
+        self.data.iter_mut().for_each(|x| *x *= alpha);
+    }
+
+    /// `self -= other`.
+    pub fn sub_assign(&mut self, other: &Mat) {
+        self.axpy(-1.0, other);
+    }
+
+    /// `self += other`.
+    pub fn add_assign(&mut self, other: &Mat) {
+        self.axpy(1.0, other);
+    }
+
+    /// Elementwise product accumulate: `self *= other`.
+    pub fn hadamard_assign(&mut self, other: &Mat) {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a *= b;
+        }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn frob(&self) -> f64 {
+        self.frob_sq().sqrt()
+    }
+
+    /// l1 norm of all entries (sign-compressor scale).
+    pub fn l1(&self) -> f64 {
+        self.data.iter().map(|&x| x.abs() as f64).sum()
+    }
+
+    /// Squared Frobenius norm of `self - other` without allocating.
+    pub fn dist_sq(&self, other: &Mat) -> f64 {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// `C = self * other` (`[m,k] x [k,n]`), ikj loop order.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut c);
+        c
+    }
+
+    pub fn matmul_into(&self, other: &Mat, c: &mut Mat) {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!((c.rows, c.cols), (self.rows, other.cols));
+        c.fill(0.0);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * n..(k + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += a * bv;
+                }
+            }
+        }
+    }
+
+    /// `C = self * other^T` (`[m,k] x [n,k]^T`), row-dot-row — cache friendly.
+    pub fn matmul_transb(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut c = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                let brow = other.row(j);
+                let mut s = 0.0f32;
+                for (x, y) in arow.iter().zip(brow.iter()) {
+                    s += x * y;
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    /// Gram matrix `self^T * self` (`[R,R]`, used by analysis/FMS).
+    pub fn gram(&self) -> Mat {
+        let r = self.cols;
+        let mut g = Mat::zeros(r, r);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for a in 0..r {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in 0..r {
+                    *g.at_mut(a, b) += ra * row[b];
+                }
+            }
+        }
+        g
+    }
+
+    /// Per-column Euclidean norms.
+    pub fn col_norms(&self) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                out[j] += (v as f64) * (v as f64);
+            }
+        }
+        out.iter_mut().for_each(|x| *x = x.sqrt());
+        out
+    }
+
+    /// Extract column j.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Mat {
+        Mat::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_transb_agrees_with_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Mat::rand_normal(7, 5, 1.0, &mut rng);
+        let b = Mat::rand_normal(6, 5, 1.0, &mut rng);
+        let bt = Mat::from_fn(5, 6, |i, j| b.at(j, i));
+        let c1 = a.matmul_transb(&b);
+        let c2 = a.matmul(&bt);
+        for (x, y) in c1.data.iter().zip(c2.data.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn axpy_scale_sub() {
+        let mut a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = m(2, 2, &[1., 1., 1., 1.]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3., 4., 5., 6.]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5, 2., 2.5, 3.]);
+        a.sub_assign(&b);
+        assert_eq!(a.data, vec![0.5, 1., 1.5, 2.]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = m(1, 4, &[3., -4., 0., 0.]);
+        assert!((a.frob() - 5.0).abs() < 1e-9);
+        assert!((a.l1() - 7.0).abs() < 1e-9);
+        let b = m(1, 4, &[0., 0., 0., 0.]);
+        assert!((a.dist_sq(&b) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gram_and_col_norms() {
+        let a = m(3, 2, &[1., 0., 0., 2., 2., 0.]);
+        let g = a.gram();
+        assert_eq!(g.data, vec![5., 0., 0., 4.]);
+        let n = a.col_norms();
+        assert!((n[0] - 5.0f64.sqrt()).abs() < 1e-9);
+        assert!((n[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hadamard() {
+        let mut a = m(2, 2, &[1., 2., 3., 4.]);
+        a.hadamard_assign(&m(2, 2, &[2., 0.5, 1., 0.]));
+        assert_eq!(a.data, vec![2., 1., 3., 0.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_dim_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

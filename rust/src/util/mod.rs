@@ -1,0 +1,12 @@
+//! From-scratch substrates: PRNG, JSON, CLI, dense matrices, CSV, bench
+//! harness, and property testing. See DESIGN.md "Environment constraints" —
+//! none of the usual crates (rand/serde_json/clap/ndarray/criterion/
+//! proptest) are available offline, so this crate carries its own.
+
+pub mod benchkit;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod mat;
+pub mod propcheck;
+pub mod rng;

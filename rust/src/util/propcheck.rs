@@ -1,0 +1,90 @@
+//! Seeded property-testing substrate (no `proptest` available offline).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` random inputs drawn by
+//! `gen`; on failure it panics with the *case seed*, which can be pinned via
+//! the `CIDERTF_PROP_SEED` environment variable to reproduce a single case.
+
+use crate::util::rng::Rng;
+
+/// Run a property over `cases` generated inputs.
+///
+/// `gen` receives a per-case RNG; `prop` returns `Err(reason)` to fail.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T, &mut Rng) -> Result<(), String>,
+) {
+    let pinned: Option<u64> = std::env::var("CIDERTF_PROP_SEED").ok().and_then(|s| s.parse().ok());
+    let base = 0xC1DE_21F0_u64;
+    let seeds: Vec<u64> = match pinned {
+        Some(s) => vec![s],
+        None => (0..cases as u64).map(|i| base.wrapping_add(i)).collect(),
+    };
+    for seed in seeds {
+        let mut g = Rng::new(seed);
+        let input = gen(&mut g);
+        let mut check_rng = g.split(1);
+        if let Err(msg) = prop(&input, &mut check_rng) {
+            panic!(
+                "property '{name}' failed (CIDERTF_PROP_SEED={seed} to reproduce)\n  input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let denom = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() / denom > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            "sum-commutes",
+            25,
+            |g| (g.below(100) as i64, g.below(100) as i64),
+            |&(a, b), _| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "CIDERTF_PROP_SEED")]
+    fn failing_property_reports_seed() {
+        forall(
+            "always-fails",
+            3,
+            |g| g.below(10),
+            |_, _| Err("expected failure".into()),
+        );
+    }
+
+    #[test]
+    fn assert_close_catches_divergence() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! End-to-end engine tests on the tiny dataset with the native backend:
+//! convergence, determinism, communication accounting, consensus.
+
+use cidertf::engine::{train, AlgoConfig, TrainConfig};
+use cidertf::losses::Loss;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::tensor::synth::{SynthConfig, ValueKind};
+use cidertf::topology::Topology;
+
+fn tiny_cfg(algo: AlgoConfig, loss: Loss, k: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny", loss, algo);
+    cfg.rank = 4;
+    cfg.fiber_samples = 16;
+    cfg.k = k;
+    cfg.gamma = 0.5;
+    cfg.iters_per_epoch = 100;
+    cfg.epochs = 6;
+    cfg.eval_batch = 64;
+    cfg.init_scale = 0.3;
+    cfg
+}
+
+fn tiny_data(loss: Loss) -> cidertf::tensor::synth::SynthData {
+    let vk = if loss == Loss::Ls { ValueKind::Gaussian } else { ValueKind::Binary };
+    SynthConfig::tiny(42).with_values(vk).generate()
+}
+
+#[test]
+fn cidertf_converges_decentralized_logit() {
+    let data = tiny_data(Loss::Logit);
+    let cfg = tiny_cfg(AlgoConfig::cidertf(4), Loss::Logit, 4);
+    let mut backend = NativeBackend::new();
+    let out = train(&cfg, &data, &mut backend, None).unwrap();
+    let first = out.record.points.first().unwrap().loss;
+    let last = out.record.final_loss();
+    assert!(last < 0.7 * first, "no convergence: {first} -> {last}");
+    assert!(out.record.total.bytes > 0, "no communication recorded");
+}
+
+#[test]
+fn cidertf_converges_decentralized_ls() {
+    let data = tiny_data(Loss::Ls);
+    let mut cfg = tiny_cfg(AlgoConfig::cidertf(2), Loss::Ls, 4);
+    cfg.gamma = 0.5;
+    cfg.epochs = 12;
+    let mut backend = NativeBackend::new();
+    let out = train(&cfg, &data, &mut backend, None).unwrap();
+    let first = out.record.points.first().unwrap().loss;
+    let last = out.record.final_loss();
+    assert!(last < 0.9 * first, "no convergence: {first} -> {last}");
+    assert!(last.is_finite());
+}
+
+#[test]
+fn training_is_deterministic() {
+    let data = tiny_data(Loss::Logit);
+    let cfg = tiny_cfg(AlgoConfig::cidertf(4), Loss::Logit, 4);
+    let mut b1 = NativeBackend::new();
+    let mut b2 = NativeBackend::new();
+    let o1 = train(&cfg, &data, &mut b1, None).unwrap();
+    let o2 = train(&cfg, &data, &mut b2, None).unwrap();
+    for (p1, p2) in o1.record.points.iter().zip(o2.record.points.iter()) {
+        assert_eq!(p1.loss, p2.loss);
+        assert_eq!(p1.bytes, p2.bytes);
+    }
+    for (m1, m2) in o1.factors.mats.iter().zip(o2.factors.mats.iter()) {
+        assert_eq!(m1.data, m2.data);
+    }
+}
+
+#[test]
+fn centralized_baselines_run_without_comm() {
+    let data = tiny_data(Loss::Logit);
+    for algo in [AlgoConfig::gcp(), AlgoConfig::bras_cpd(), AlgoConfig::centralized_cidertf()] {
+        let name = algo.name.clone();
+        let mut cfg = tiny_cfg(algo, Loss::Logit, 1);
+        cfg.epochs = 4;
+        let mut backend = NativeBackend::new();
+        let out = train(&cfg, &data, &mut backend, None).unwrap();
+        assert_eq!(out.record.total.bytes, 0, "{name}: centralized run communicated");
+        let first = out.record.points.first().unwrap().loss;
+        assert!(
+            out.record.final_loss() < first,
+            "{name}: loss went up: {first} -> {}",
+            out.record.final_loss()
+        );
+    }
+}
+
+#[test]
+fn comm_cost_ordering_matches_paper() {
+    // D-PSGD >> D-PSGDbras (x~D) >> sign variants (x~32) >> CiderTF
+    let data = tiny_data(Loss::Logit);
+    let mut bytes = std::collections::BTreeMap::new();
+    for algo in [
+        AlgoConfig::dpsgd(),
+        AlgoConfig::dpsgd_bras(),
+        AlgoConfig::dpsgd_sign(),
+        AlgoConfig::dpsgd_bras_sign(),
+        AlgoConfig::sparq_sgd(4),
+        AlgoConfig::cidertf(4),
+    ] {
+        let name = algo.name.clone();
+        let mut cfg = tiny_cfg(algo, Loss::Logit, 4);
+        cfg.epochs = 2;
+        let mut backend = NativeBackend::new();
+        let out = train(&cfg, &data, &mut backend, None).unwrap();
+        bytes.insert(name, out.record.total.bytes);
+    }
+    assert!(bytes["dpsgd"] > bytes["dpsgd_bras"]);
+    assert!(bytes["dpsgd"] > bytes["dpsgd_sign"]);
+    assert!(bytes["dpsgd_sign"] > bytes["dpsgd_bras_sign"]);
+    assert!(bytes["dpsgd_bras_sign"] > bytes["cidertf_t4"]);
+    assert!(bytes["sparq_sgd_t4"] > bytes["cidertf_t4"]);
+    // headline: sign+block+periodic+event cuts D-PSGD bytes by >99%
+    let reduction = 1.0 - bytes["cidertf_t4"] as f64 / bytes["dpsgd"] as f64;
+    assert!(reduction > 0.99, "reduction only {reduction}");
+}
+
+#[test]
+fn topology_affects_bytes_not_convergence() {
+    let data = tiny_data(Loss::Logit);
+    let mut results = Vec::new();
+    for topo in [Topology::Ring, Topology::Star] {
+        let mut cfg = tiny_cfg(AlgoConfig::cidertf(2), Loss::Logit, 4);
+        cfg.topology = topo;
+        let mut backend = NativeBackend::new();
+        let out = train(&cfg, &data, &mut backend, None).unwrap();
+        results.push((topo, out.record.total.bytes, out.record.final_loss()));
+    }
+    let (_, ring_bytes, ring_loss) = results[0];
+    let (_, star_bytes, star_loss) = results[1];
+    // star has fewer total links -> fewer uplink bytes (paper Fig. 4)
+    assert!(star_bytes < ring_bytes, "star {star_bytes} vs ring {ring_bytes}");
+    // both converge to the same ballpark
+    let rel = (ring_loss - star_loss).abs() / ring_loss.max(star_loss);
+    assert!(rel < 0.25, "topologies diverged: ring {ring_loss} star {star_loss}");
+}
+
+#[test]
+fn event_trigger_suppresses_late_in_training() {
+    let data = tiny_data(Loss::Logit);
+    let mut cfg = tiny_cfg(AlgoConfig::cidertf(2), Loss::Logit, 4);
+    cfg.epochs = 8;
+    let mut backend = NativeBackend::new();
+    let out = train(&cfg, &data, &mut backend, None).unwrap();
+    assert!(
+        out.record.total.suppressed > 0,
+        "event trigger never suppressed a round (triggered {})",
+        out.record.total.triggered
+    );
+    assert!(out.record.total.triggered > 0, "event trigger never fired");
+}
+
+#[test]
+fn momentum_converges_faster_at_same_gamma() {
+    // Nesterov momentum amplifies the effective step (~1/(1-beta)); at a
+    // small shared gamma the momentum run must converge much further
+    // (paper Fig. 3 observation iv).
+    let data = tiny_data(Loss::Logit);
+    let mut backend = NativeBackend::new();
+    let mut cfg_plain = tiny_cfg(AlgoConfig::cidertf(4), Loss::Logit, 4);
+    cfg_plain.gamma = 0.05;
+    cfg_plain.epochs = 8;
+    let mut cfg_mom = tiny_cfg(AlgoConfig::cidertf_m(4), Loss::Logit, 4);
+    cfg_mom.gamma = 0.05;
+    cfg_mom.epochs = 8;
+    let plain = train(&cfg_plain, &data, &mut backend, None).unwrap();
+    let mom = train(&cfg_mom, &data, &mut backend, None).unwrap();
+    assert!(
+        mom.record.final_loss() < 0.5 * plain.record.final_loss(),
+        "momentum not faster: {} vs {}",
+        mom.record.final_loss(),
+        plain.record.final_loss()
+    );
+}
+
+#[test]
+fn fms_vs_centralized_baseline_is_high() {
+    // Paper Fig. 7: FMS compares decentralized factors against the
+    // *centralized BrasCPD* factors (not ground truth) — converged runs
+    // land in matching basins.
+    let data = tiny_data(Loss::Logit);
+    let mut backend = NativeBackend::new();
+    let mut cfg_b = tiny_cfg(AlgoConfig::bras_cpd(), Loss::Logit, 1);
+    cfg_b.epochs = 25;
+    let bras = train(&cfg_b, &data, &mut backend, None).unwrap();
+    let mut cfg_c = tiny_cfg(AlgoConfig::cidertf(2), Loss::Logit, 4);
+    cfg_c.epochs = 25;
+    let cider = train(&cfg_c, &data, &mut backend, None).unwrap();
+    let score = cidertf::factor::fms::fms(&cider.factors, &bras.factors);
+    // an untrained factor set scores low against the converged baseline
+    let init = cidertf::factor::FactorSet::init_uniform(&data.tensor.dims, 4, 0.3, 9);
+    let base = cidertf::factor::fms::fms(&init, &bras.factors);
+    assert!(score > 0.4, "fms(cider, bras) = {score}");
+    assert!(score > base, "converged fms {score} <= untrained {base}");
+}
+
+#[test]
+fn assemble_global_shapes() {
+    let data = tiny_data(Loss::Logit);
+    let cfg = tiny_cfg(AlgoConfig::cidertf(4), Loss::Logit, 4);
+    let mut backend = NativeBackend::new();
+    let out = train(&cfg, &data, &mut backend, None).unwrap();
+    assert_eq!(out.factors.mats[0].rows, data.tensor.dims[0]);
+    for m in 1..3 {
+        assert_eq!(out.factors.mats[m].rows, data.tensor.dims[m]);
+    }
+}
+
+#[test]
+fn scalability_k_sweep_converges() {
+    let data = tiny_data(Loss::Logit);
+    for k in [2usize, 4, 8] {
+        let mut cfg = tiny_cfg(AlgoConfig::cidertf(4), Loss::Logit, k);
+        cfg.epochs = 5;
+        let mut backend = NativeBackend::new();
+        let out = train(&cfg, &data, &mut backend, None).unwrap();
+        let first = out.record.points.first().unwrap().loss;
+        assert!(out.record.final_loss() < first, "k={k} did not improve");
+    }
+}

@@ -1,0 +1,371 @@
+//! Randomized property tests over the core invariants, using the in-crate
+//! `propcheck` substrate (seeded; reproduce single cases with
+//! `CIDERTF_PROP_SEED=<seed>`).
+
+use cidertf::compress::Compressor;
+use cidertf::factor::{fms::fms, FactorSet};
+use cidertf::losses::Loss;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::runtime::ComputeBackend;
+use cidertf::tensor::fiber::FiberIndex;
+use cidertf::tensor::partition::partition_mode0;
+use cidertf::tensor::{encode_fiber, SparseTensor};
+use cidertf::topology::{metropolis_weights, Graph, Topology};
+use cidertf::util::json::Json;
+use cidertf::util::mat::Mat;
+use cidertf::util::propcheck::forall;
+use cidertf::util::rng::Rng;
+
+fn random_tensor(rng: &mut Rng) -> SparseTensor {
+    let d = 3 + rng.below(2); // order 3 or 4
+    let dims: Vec<usize> = (0..d).map(|_| 3 + rng.below(8)).collect();
+    let mut t = SparseTensor::new(dims.clone());
+    let n_cells: usize = dims.iter().product();
+    let nnz = 1 + rng.below(n_cells / 2);
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..nnz {
+        let idx: Vec<u32> = dims.iter().map(|&dm| rng.below(dm) as u32).collect();
+        if seen.insert(t.linearize(&idx)) {
+            t.push(&idx, rng.normal_f32() + 0.01);
+        }
+    }
+    t
+}
+
+#[test]
+fn prop_sign_compressor_definition() {
+    // decode(Sign(x)) == ||x||_1/n * sign(x) elementwise, and the payload
+    // is ~1 bit per entry
+    forall(
+        "sign-definition",
+        50,
+        |g| {
+            let rows = 1 + g.below(40);
+            let cols = 1 + g.below(20);
+            Mat::rand_normal(rows, cols, 1.0, g)
+        },
+        |m, _| {
+            let p = Compressor::Sign.compress(m);
+            let d = p.decode(m.rows, m.cols);
+            let n = m.data.len();
+            let scale = (m.l1() / n as f64) as f32;
+            for (x, y) in m.data.iter().zip(d.data.iter()) {
+                let want = if *x >= 0.0 { scale } else { -scale };
+                if (y - want).abs() > 1e-6 {
+                    return Err(format!("decode {y} != {want}"));
+                }
+            }
+            let max_bytes = 4 + n.div_ceil(8) as u64;
+            if p.wire_bytes() != max_bytes {
+                return Err(format!("wire {} != {max_bytes}", p.wire_bytes()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_decode_is_subset_and_largest() {
+    forall(
+        "topk-largest",
+        40,
+        |g| {
+            let n = 8 + g.below(64);
+            (Mat::rand_normal(1, n, 1.0, g), 2 + (g.below(6) as u32))
+        },
+        |(m, ratio), _| {
+            let p = Compressor::TopK { ratio: *ratio }.compress(m);
+            let d = p.decode(1, m.cols);
+            let k = (m.cols as u32 / ratio).max(1) as usize;
+            let kept: Vec<usize> = (0..m.cols).filter(|&i| d.data[i] != 0.0).collect();
+            if kept.len() > k {
+                return Err(format!("kept {} > k {k}", kept.len()));
+            }
+            let min_kept = kept.iter().map(|&i| m.data[i].abs()).fold(f32::INFINITY, f32::min);
+            for i in 0..m.cols {
+                if d.data[i] == 0.0 && m.data[i].abs() > min_kept + 1e-6 {
+                    return Err(format!("dropped larger value at {i}"));
+                }
+                if d.data[i] != 0.0 && d.data[i] != m.data[i] {
+                    return Err("kept value mutated".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fiber_gather_matches_bruteforce() {
+    forall(
+        "fiber-gather",
+        30,
+        |g| random_tensor(g),
+        |t, check_rng| {
+            for mode in 0..t.order() {
+                let fi = FiberIndex::build(t, mode);
+                let i_dim = t.dims[mode];
+                let nf = t.n_fibers(mode);
+                let s = 1 + check_rng.below(nf.min(16));
+                let fibers: Vec<u64> =
+                    check_rng.sample_indices(nf, s).into_iter().map(|x| x as u64).collect();
+                let mut out = vec![f32::NAN; i_dim * s];
+                fi.gather_slice(&fibers, i_dim, &mut out);
+                // brute force: scan all entries
+                let mut want = vec![0.0f32; i_dim * s];
+                for e in 0..t.nnz() {
+                    let fid = encode_fiber(&t.dims, mode, t.entry(e));
+                    for (col, &f) in fibers.iter().enumerate() {
+                        if f == fid {
+                            want[t.entry(e)[mode] as usize * s + col] = t.vals[e];
+                        }
+                    }
+                }
+                if out != want {
+                    return Err(format!("mode {mode} gather mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partition_preserves_everything() {
+    forall(
+        "partition-conservation",
+        30,
+        |g| {
+            let t = random_tensor(g);
+            let k = 1 + g.below(t.dims[0]);
+            (t, k)
+        },
+        |(t, k), _| {
+            let shards = partition_mode0(t, *k);
+            let total_nnz: usize = shards.iter().map(|s| s.tensor.nnz()).sum();
+            if total_nnz != t.nnz() {
+                return Err(format!("nnz {total_nnz} != {}", t.nnz()));
+            }
+            let total_rows: usize = shards.iter().map(|s| s.tensor.dims[0]).sum();
+            if total_rows != t.dims[0] {
+                return Err("row count mismatch".into());
+            }
+            // rows balanced within 1
+            let min = shards.iter().map(|s| s.tensor.dims[0]).min().unwrap();
+            let max = shards.iter().map(|s| s.tensor.dims[0]).max().unwrap();
+            if max - min > 1 {
+                return Err(format!("imbalanced shards {min}..{max}"));
+            }
+            // value multiset preserved per global cell
+            let mut global: Vec<(u64, u32)> = Vec::new();
+            for sh in &shards {
+                for e in 0..sh.tensor.nnz() {
+                    let mut idx = sh.tensor.entry(e).to_vec();
+                    idx[0] += sh.row_offset as u32;
+                    global.push((t.linearize(&idx), sh.tensor.vals[e].to_bits()));
+                }
+            }
+            global.sort_unstable();
+            let mut want: Vec<(u64, u32)> =
+                (0..t.nnz()).map(|e| (t.linearize(t.entry(e)), t.vals[e].to_bits())).collect();
+            want.sort_unstable();
+            if global != want {
+                return Err("entry multiset changed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_metropolis_weights_doubly_stochastic() {
+    forall(
+        "metropolis-doubly-stochastic",
+        40,
+        |g| {
+            let choice = g.below(5);
+            let n = match choice {
+                4 => {
+                    let side = 2 + g.below(4);
+                    side * side
+                }
+                _ => 1 + g.below(32),
+            };
+            (choice, n)
+        },
+        |&(choice, n), _| {
+            let topo = [Topology::Ring, Topology::Star, Topology::Complete, Topology::Chain, Topology::Torus]
+                [choice];
+            let g = Graph::build(topo, n).map_err(|e| e.to_string())?;
+            for k in 0..n {
+                let row: f64 = g.weights[k].iter().sum();
+                if (row - 1.0).abs() > 1e-9 {
+                    return Err(format!("row {k} sums {row}"));
+                }
+                for j in 0..n {
+                    if (g.weights[k][j] - g.weights[j][k]).abs() > 1e-12 {
+                        return Err("asymmetric".into());
+                    }
+                    if g.weights[k][j] < 0.0 {
+                        return Err("negative weight".into());
+                    }
+                }
+            }
+            let _ = metropolis_weights(&g.neighbors);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fms_permutation_and_sign_invariances() {
+    forall(
+        "fms-permutation",
+        25,
+        |g| {
+            let r = 2 + g.below(6);
+            let dims: Vec<usize> = (0..3).map(|_| 5 + g.below(20)).collect();
+            let f = FactorSet {
+                mats: dims.iter().map(|&d| Mat::rand_normal(d, r, 1.0, g)).collect(),
+            };
+            let mut perm: Vec<usize> = (0..r).collect();
+            g.shuffle(&mut perm);
+            (f, perm)
+        },
+        |(f, perm), _| {
+            let permuted = FactorSet {
+                mats: f
+                    .mats
+                    .iter()
+                    .map(|m| Mat::from_fn(m.rows, m.cols, |i, j| m.at(i, perm[j])))
+                    .collect(),
+            };
+            let s = fms(f, &permuted);
+            if (s - 1.0).abs() > 1e-5 {
+                return Err(format!("permuted fms {s}"));
+            }
+            // global sign flip in one mode is forgiven
+            let flipped = FactorSet {
+                mats: f
+                    .mats
+                    .iter()
+                    .enumerate()
+                    .map(|(k, m)| {
+                        let sgn = if k == 0 { -1.0 } else { 1.0 };
+                        Mat::from_fn(m.rows, m.cols, |i, j| sgn * m.at(i, j))
+                    })
+                    .collect(),
+            };
+            let s = fms(f, &flipped);
+            if (s - 1.0).abs() > 1e-5 {
+                return Err(format!("flipped fms {s}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { g.below(4) } else { g.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bernoulli(0.5)),
+            2 => Json::Num((g.normal() * 1e3).round() / 8.0),
+            3 => {
+                let n = g.below(8);
+                Json::Str((0..n).map(|_| char::from(32 + g.below(90) as u8)).collect())
+            }
+            4 => Json::Arr((0..g.below(4)).map(|_| random_json(g, depth + 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..g.below(4) {
+                    m.insert(format!("k{i}"), random_json(g, depth + 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    forall(
+        "json-roundtrip",
+        60,
+        |g| random_json(g, 0),
+        |j, _| {
+            for text in [j.to_string(), j.to_pretty_string()] {
+                let back = Json::parse(&text).map_err(|e| e.to_string())?;
+                if &back != j {
+                    return Err(format!("roundtrip changed: {text}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_native_grad_is_finite_and_linear_in_scale() {
+    forall(
+        "grad-scale-linearity",
+        25,
+        |g| {
+            let i = 2 + g.below(20);
+            let s = 2 + g.below(16);
+            let r = 1 + g.below(8);
+            let xs: Vec<f32> = (0..i * s).map(|_| g.normal_f32() * 0.5).collect();
+            let a = Mat::rand_normal(i, r, 0.5, g);
+            let u1 = Mat::rand_normal(s, r, 0.5, g);
+            let u2 = Mat::rand_normal(s, r, 0.5, g);
+            (i, s, xs, a, u1, u2)
+        },
+        |(i, s, xs, a, u1, u2), _| {
+            let mut be = NativeBackend::new();
+            for loss in [Loss::Ls, Loss::Logit] {
+                let (g1, l1) = be.grad(loss, xs, *i, *s, a, &[u1, u2], 1.0).unwrap();
+                let (g2, l2) = be.grad(loss, xs, *i, *s, a, &[u1, u2], -2.0).unwrap();
+                if !g1.data.iter().all(|v| v.is_finite()) {
+                    return Err("non-finite gradient".into());
+                }
+                if (l1 - l2).abs() > 1e-6 * l1.abs().max(1.0) {
+                    return Err("loss depends on scale".into());
+                }
+                for (x, y) in g1.data.iter().zip(g2.data.iter()) {
+                    if (-2.0 * x - y).abs() > 1e-3 * x.abs().max(1e-3) {
+                        return Err(format!("not linear in scale: {x} vs {y}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lambda_weights_scale_covariance() {
+    // scaling one mode's column c by alpha scales lambda_c by |alpha|
+    forall(
+        "lambda-covariance",
+        25,
+        |g| {
+            let r = 2 + g.below(5);
+            let f = FactorSet {
+                mats: (0..3).map(|_| Mat::rand_normal(4 + g.below(10), r, 1.0, g)).collect(),
+            };
+            let col = g.below(r);
+            let alpha = 0.5 + g.uniform() * 4.0;
+            (f, col, alpha)
+        },
+        |(f, col, alpha), _| {
+            let before = f.lambda_weights();
+            let mut scaled = f.clone();
+            for i in 0..scaled.mats[0].rows {
+                *scaled.mats[0].at_mut(i, *col) *= *alpha as f32;
+            }
+            let after = scaled.lambda_weights();
+            let want = before[*col] * *alpha;
+            if (after[*col] - want).abs() > 1e-3 * want.abs().max(1e-6) {
+                return Err(format!("lambda {} != {want}", after[*col]));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,132 @@
+//! Differential tests: PJRT artifacts vs the native Rust mirror.
+//!
+//! These close the cross-language loop — the same HLO text the Python
+//! tests validated is loaded through the `xla` crate and must agree with
+//! the pure-Rust implementation on random inputs.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! stays runnable on a fresh checkout).
+
+use cidertf::losses::Loss;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::runtime::{default_artifact_dir, ComputeBackend, Manifest, PjrtBackend};
+use cidertf::util::mat::Mat;
+use cidertf::util::rng::Rng;
+
+fn backend_or_skip() -> Option<PjrtBackend> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtBackend::new(&dir).expect("pjrt backend"))
+}
+
+fn randmat(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    Mat::rand_normal(rows, cols, 0.4, rng)
+}
+
+#[test]
+fn grad_artifacts_match_native_d3() {
+    let Some(mut pjrt) = backend_or_skip() else { return };
+    let mut native = NativeBackend::new();
+    let (i, s, r) = (32, 16, 4);
+    let mut rng = Rng::new(77);
+    for loss in [Loss::Ls, Loss::Logit] {
+        let xs: Vec<f32> = (0..i * s).map(|_| if rng.bernoulli(0.1) { 1.0 } else { 0.0 }).collect();
+        let a = randmat(i, r, &mut rng);
+        let u1 = randmat(s, r, &mut rng);
+        let u2 = randmat(s, r, &mut rng);
+        let (g_p, l_p) = pjrt.grad(loss, &xs, i, s, &a, &[&u1, &u2], 2.5).unwrap();
+        let (g_n, l_n) = native.grad(loss, &xs, i, s, &a, &[&u1, &u2], 2.5).unwrap();
+        assert_eq!(g_p.rows, i);
+        assert_eq!(g_p.cols, r);
+        for (p, n) in g_p.data.iter().zip(g_n.data.iter()) {
+            assert!((p - n).abs() < 1e-3, "{loss:?}: {p} vs {n}");
+        }
+        let rel = (l_p - l_n).abs() / l_n.abs().max(1.0);
+        assert!(rel < 1e-4, "{loss:?} loss {l_p} vs {l_n}");
+    }
+}
+
+#[test]
+fn grad_artifacts_match_native_d4() {
+    let Some(mut pjrt) = backend_or_skip() else { return };
+    let mut native = NativeBackend::new();
+    let (i, s, r) = (64, 32, 8);
+    let mut rng = Rng::new(78);
+    for loss in [Loss::Ls, Loss::Logit] {
+        let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32() * 0.3).collect();
+        let a = randmat(i, r, &mut rng);
+        let us: Vec<Mat> = (0..3).map(|_| randmat(s, r, &mut rng)).collect();
+        let refs: Vec<&Mat> = us.iter().collect();
+        let (g_p, l_p) = pjrt.grad(loss, &xs, i, s, &a, &refs, 1.0).unwrap();
+        let (g_n, l_n) = native.grad(loss, &xs, i, s, &a, &refs, 1.0).unwrap();
+        for (p, n) in g_p.data.iter().zip(g_n.data.iter()) {
+            assert!((p - n).abs() < 1e-3, "{loss:?}: {p} vs {n}");
+        }
+        assert!((l_p - l_n).abs() / l_n.abs().max(1.0) < 1e-4);
+    }
+}
+
+#[test]
+fn eval_artifacts_match_native() {
+    let Some(mut pjrt) = backend_or_skip() else { return };
+    let mut native = NativeBackend::new();
+    let (b, r) = (64, 4);
+    let mut rng = Rng::new(79);
+    for loss in [Loss::Ls, Loss::Logit] {
+        let us: Vec<Mat> = (0..3).map(|_| randmat(b, r, &mut rng)).collect();
+        let refs: Vec<&Mat> = us.iter().collect();
+        let x: Vec<f32> = (0..b).map(|_| if rng.bernoulli(0.2) { 1.0 } else { 0.0 }).collect();
+        let l_p = pjrt.eval(loss, &x, &refs).unwrap();
+        let l_n = native.eval(loss, &x, &refs).unwrap();
+        assert!((l_p - l_n).abs() / l_n.abs().max(1.0) < 1e-4, "{loss:?}: {l_p} vs {l_n}");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(mut pjrt) = backend_or_skip() else { return };
+    let mut rng = Rng::new(80);
+    let (i, s, r) = (32, 16, 4);
+    let xs: Vec<f32> = vec![0.0; i * s];
+    let a = randmat(i, r, &mut rng);
+    let u1 = randmat(s, r, &mut rng);
+    let u2 = randmat(s, r, &mut rng);
+    assert_eq!(pjrt.cached(), 0);
+    pjrt.grad(Loss::Ls, &xs, i, s, &a, &[&u1, &u2], 1.0).unwrap();
+    assert_eq!(pjrt.cached(), 1);
+    pjrt.grad(Loss::Ls, &xs, i, s, &a, &[&u1, &u2], 1.0).unwrap();
+    assert_eq!(pjrt.cached(), 1);
+    pjrt.grad(Loss::Logit, &xs, i, s, &a, &[&u1, &u2], 1.0).unwrap();
+    assert_eq!(pjrt.cached(), 2);
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(mut pjrt) = backend_or_skip() else { return };
+    let mut rng = Rng::new(81);
+    let a = randmat(7, 3, &mut rng);
+    let u = randmat(5, 3, &mut rng);
+    let xs = vec![0.0f32; 35];
+    let err = pjrt.grad(Loss::Ls, &xs, 7, 5, &a, &[&u, &u], 1.0).unwrap_err();
+    assert!(err.to_string().contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn manifest_covers_all_experiment_shapes() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    // every (dataset, K) patient-mode shard size + feature dims, both losses
+    for loss in [Loss::Ls, Loss::Logit] {
+        for i in [4096usize, 512, 256, 128, 4352, 544, 272, 136, 320, 8192, 1024, 384] {
+            let name = Manifest::grad_name(loss, i, 256, 16, 3);
+            assert!(m.has(&name), "missing {name}");
+        }
+        assert!(m.has(&Manifest::eval_name(loss, 8192, 16, 3)));
+    }
+}
