@@ -1,0 +1,85 @@
+//! Faulty-network demo: CiderTF when the network actually misbehaves.
+//!
+//! Runs the same 8-hospital ring configuration four ways — ideal network,
+//! 20% i.i.d. message loss, one 4x compute straggler (async), and the
+//! "hostile" everything-at-once envelope — and prints final loss,
+//! delivery accounting, and simulated wall-clock side by side.
+//!
+//! Uses the pure-Rust native backend, so it needs **no artifacts**:
+//!
+//!     cargo run --release --example faulty_network
+//!
+//! Knobs to play with: `FaultConfig` (drop/burst/latency/straggler/churn),
+//! the driver (`train_sim` = lock-step barriers, `train_async` =
+//! event-driven, no barriers), and the topology.
+
+use cidertf::engine::{AlgoConfig, TrainConfig};
+use cidertf::harness::Ctx;
+use cidertf::losses::Loss;
+use cidertf::net::async_gossip::train_async;
+use cidertf::net::driver::train_sim;
+use cidertf::net::sim::{self, FaultConfig, NetworkModel};
+use cidertf::runtime::native::NativeBackend;
+use cidertf::tensor::synth::SynthConfig;
+use cidertf::util::benchkit::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let data = SynthConfig::tiny(42).generate();
+    println!(
+        "tensor {:?}, {} nonzeros — 8 hospitals on a ring, CiderTF tau=4\n",
+        data.tensor.dims,
+        data.tensor.nnz()
+    );
+
+    let mut cfg = TrainConfig::new("tiny", Loss::Logit, AlgoConfig::cidertf(4));
+    cfg.rank = 4;
+    cfg.fiber_samples = 16;
+    cfg.k = 8;
+    cfg.gamma = Ctx::gamma_for("tiny", Loss::Logit);
+    cfg.eval_batch = 64;
+    cfg.epochs = 4;
+    cfg.iters_per_epoch = 150;
+
+    let scenarios: Vec<(&str, &str, Box<dyn NetworkModel>)> = vec![
+        ("sim", "ideal", sim::ideal()),
+        ("sim", "20% loss", FaultConfig::lossy(0.2).with_seed(cfg.seed).boxed()),
+        (
+            "async",
+            "1 straggler 4x",
+            FaultConfig { straggler_ids: vec![0], straggler_slow: 4.0, ..Default::default() }
+                .boxed(),
+        ),
+        ("async", "hostile", FaultConfig::hostile().with_seed(cfg.seed).boxed()),
+    ];
+
+    let table = Table::new(&[
+        "driver", "network", "final_loss", "delivered", "dropped", "stale", "offline", "uplink",
+        "sim_s",
+    ]);
+    for (driver, label, mut net) in scenarios {
+        let mut backend = NativeBackend::new();
+        let out = match driver {
+            "sim" => train_sim(&cfg, &data, &mut backend, net.as_mut(), None)?,
+            _ => train_async(&cfg, &data, &mut backend, net.as_mut(), None)?,
+        };
+        table.row(&[
+            driver.to_string(),
+            label.to_string(),
+            format!("{:.4e}", out.record.final_loss()),
+            out.record.net.delivered.to_string(),
+            out.record.net.dropped.to_string(),
+            out.record.net.stale.to_string(),
+            out.record.net.offline_rounds.to_string(),
+            fmt_bytes(out.record.total.bytes as f64),
+            format!("{:.0}", out.record.wall_s),
+        ]);
+    }
+
+    println!(
+        "\nReading the table: drops leave peer estimates stale instead of\n\
+         corrupting them (CHOCO-style difference encoding), so loss degrades\n\
+         gracefully; the async driver hides stragglers in wall-clock terms\n\
+         at the price of stale mixing, which the consensus step absorbs."
+    );
+    Ok(())
+}

@@ -5,7 +5,24 @@
 //! randomization + periodic + event-triggered communication) through the
 //! AOT-compiled PJRT artifacts.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! The default build compiles a stub `PjrtBackend` whose constructor
+//! errors with instructions — to actually execute through PJRT, vendor
+//! the `xla` crate from the rust_pallas toolchain image, wire it into
+//! the `pjrt` feature (see rust/Cargo.toml `[features]`), run
+//! `make artifacts`, and build with `--features pjrt`. For an
+//! artifact-free run today, swap `PjrtBackend` for
+//! `runtime::native::NativeBackend` — the bit-faithful pure-Rust mirror
+//! (what every test and `examples/faulty_network.rs` use).
+//!
+//! Beyond this file: every run can also go through the unified
+//! `net::driver::RoundDriver` entry point, which swaps the execution path
+//! without touching the config — `seq` (this file), `par` (one thread per
+//! hospital), `sim` (lock-step over a `net::sim::NetworkModel` with
+//! latency/drops/stragglers/churn knobs), or `async` (event-driven gossip
+//! with no barriers). See `examples/faulty_network.rs` and
+//! `cidertf train --driver sim --network lossy:0.2`.
 
 use cidertf::engine::{train, AlgoConfig, TrainConfig};
 use cidertf::harness::Ctx;

@@ -5,6 +5,7 @@ use crate::compress::ErrorFeedback;
 use crate::factor::FactorSet;
 use crate::gossip::{CommLedger, EstimateState};
 use crate::losses::Loss;
+use crate::net::sim::NetStats;
 use crate::runtime::ComputeBackend;
 use crate::sched::FiberSampler;
 use crate::tensor::fiber::ModeIndices;
@@ -93,6 +94,8 @@ pub struct ClientState {
     pub ef_shadow: Option<Vec<Mat>>,
     pub fiber_sampler: FiberSampler,
     pub ledger: CommLedger,
+    /// receive-side delivery accounting (populated by the net drivers)
+    pub net: NetStats,
     pub eval: EvalSample,
     /// reused dense-slice gather buffer
     xs_buf: Vec<f32>,
@@ -144,6 +147,7 @@ impl ClientState {
             ef_shadow: None,
             fiber_sampler: FiberSampler::new(seed, id as u64),
             ledger: CommLedger::default(),
+            net: NetStats::default(),
             eval,
             xs_buf: vec![0.0; max_i * fiber_samples],
             u_bufs,

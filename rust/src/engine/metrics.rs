@@ -1,6 +1,7 @@
 //! Run records: the per-epoch metric curves every figure is drawn from.
 
 use crate::gossip::CommLedger;
+use crate::net::sim::NetStats;
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -33,6 +34,11 @@ pub struct RunRecord {
     pub tau: usize,
     pub points: Vec<MetricPoint>,
     pub total: CommLedger,
+    /// delivery/staleness counters. Every decentralized path counts
+    /// `delivered` (the lock-step in-process engines deliver everything),
+    /// but `dropped`/`stale`/`offline_rounds` can only become nonzero when
+    /// a run is routed through a faulty `NetworkModel`.
+    pub net: NetStats,
     pub wall_s: f64,
 }
 
@@ -105,6 +111,10 @@ impl RunRecord {
             ("messages", Json::Num(self.total.messages as f64)),
             ("triggered", Json::Num(self.total.triggered as f64)),
             ("suppressed", Json::Num(self.total.suppressed as f64)),
+            ("delivered", Json::Num(self.net.delivered as f64)),
+            ("dropped", Json::Num(self.net.dropped as f64)),
+            ("stale", Json::Num(self.net.stale as f64)),
+            ("offline_rounds", Json::Num(self.net.offline_rounds as f64)),
             ("points", Json::Arr(points)),
         ])
     }
@@ -128,6 +138,7 @@ mod tests {
                 MetricPoint { epoch: 2, iter: 299, time_s: 1.5, loss: 5.0, bytes: 300, fms: Some(0.8) },
             ],
             total: Default::default(),
+            net: Default::default(),
             wall_s: 1.5,
         }
     }

@@ -20,10 +20,11 @@ pub mod presets;
 
 use std::time::Instant;
 
-use crate::compress::Compressor;
+use crate::compress::{Compressor, Payload};
 use crate::factor::{fms::fms, FactorSet};
 use crate::gossip::Message;
 use crate::losses::Loss;
+use crate::net::sim::NetStats;
 use crate::runtime::ComputeBackend;
 use crate::sched::{BlockSampler, TriggerSchedule};
 use crate::tensor::partition::partition_mode0;
@@ -75,6 +76,10 @@ pub struct TrainConfig {
     pub trigger_lambda0_scale: f64,
     /// λ[t] growth factor α (paper grid-searches in [1, 2])
     pub trigger_alpha: f64,
+    /// nominal per-iteration compute cost in *simulated* seconds, scaled
+    /// by `NetworkModel::compute_multiplier` in the net drivers (the
+    /// sequential engine keeps wall-clock time and ignores this)
+    pub sim_iter_s: f64,
     pub algo: AlgoConfig,
 }
 
@@ -104,6 +109,7 @@ impl TrainConfig {
             init_scale: 0.3,
             trigger_lambda0_scale: 1.0,
             trigger_alpha: 1.3,
+            sim_iter_s: 1.0,
             algo,
         }
     }
@@ -126,32 +132,7 @@ pub fn train(
     anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
     let graph = Graph::build(cfg.topology, cfg.k)?;
     let decentralized = cfg.k > 1;
-
-    // --- client setup ---
-    let shards = partition_mode0(&data.tensor, cfg.k);
-    let mut clients: Vec<ClientState> = shards
-        .into_iter()
-        .enumerate()
-        .map(|(id, shard)| {
-            ClientState::new(
-                id,
-                shard,
-                cfg.rank,
-                cfg.init_scale,
-                cfg.seed,
-                cfg.fiber_samples,
-                cfg.eval_batch,
-                cfg.algo.momentum.is_some(),
-                cfg.algo.error_feedback,
-            )
-        })
-        .collect();
-    if decentralized {
-        for c in clients.iter_mut() {
-            let nbrs = graph.neighbors[c.id].clone();
-            c.init_estimates(&nbrs);
-        }
-    }
+    let mut clients = build_clients(cfg, data, &graph);
 
     let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
     let trigger = cfg.trigger_schedule();
@@ -159,7 +140,7 @@ pub fn train(
 
     let t0 = Instant::now();
     let mut points: Vec<MetricPoint> = Vec::with_capacity(cfg.epochs + 1);
-    record_point(&mut clients, cfg, backend, fms_reference, 0, 0, t0, &mut points)?;
+    record_point(&mut clients, cfg, backend, fms_reference, 0, 0, 0.0, &mut points)?;
 
     let total_iters = cfg.epochs * cfg.iters_per_epoch;
     for t in 0..total_iters {
@@ -194,7 +175,8 @@ pub fn train(
         // ---- metrics per epoch ----
         if (t + 1) % cfg.iters_per_epoch == 0 {
             let epoch = (t + 1) / cfg.iters_per_epoch;
-            record_point(&mut clients, cfg, backend, fms_reference, epoch, t + 1, t0, &mut points)?;
+            let now = t0.elapsed().as_secs_f64();
+            record_point(&mut clients, cfg, backend, fms_reference, epoch, t + 1, now, &mut points)?;
             if !points.last().map(|p| p.loss.is_finite()).unwrap_or(true) {
                 eprintln!(
                     "[{}] diverged at epoch {epoch} (gamma {} too large) — stopping early",
@@ -205,12 +187,62 @@ pub fn train(
         }
     }
 
-    let mut total = crate::gossip::CommLedger::default();
-    for c in &clients {
-        total.merge(&c.ledger);
-    }
     let factors = assemble_global(&clients);
-    let record = RunRecord {
+    let record = finalize_record(cfg, &graph, &clients, points, t0.elapsed().as_secs_f64());
+    Ok(TrainOutcome { record, factors })
+}
+
+/// Shard the tensor and build one [`ClientState`] per institution,
+/// wiring gossip estimates when the run is decentralized. Shared by every
+/// execution path so they all start from bit-identical state.
+pub(crate) fn build_clients(
+    cfg: &TrainConfig,
+    data: &SynthData,
+    graph: &Graph,
+) -> Vec<ClientState> {
+    let shards = partition_mode0(&data.tensor, cfg.k);
+    let mut clients: Vec<ClientState> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            ClientState::new(
+                id,
+                shard,
+                cfg.rank,
+                cfg.init_scale,
+                cfg.seed,
+                cfg.fiber_samples,
+                cfg.eval_batch,
+                cfg.algo.momentum.is_some(),
+                cfg.algo.error_feedback,
+            )
+        })
+        .collect();
+    if cfg.k > 1 {
+        for c in clients.iter_mut() {
+            let nbrs = graph.neighbors[c.id].clone();
+            c.init_estimates(&nbrs);
+        }
+    }
+    clients
+}
+
+/// Merge per-client ledgers/stats into the final [`RunRecord`]. Shared by
+/// every execution path so the comm accounting stays comparable.
+pub(crate) fn finalize_record(
+    cfg: &TrainConfig,
+    graph: &Graph,
+    clients: &[ClientState],
+    points: Vec<MetricPoint>,
+    wall_s: f64,
+) -> RunRecord {
+    let mut total = crate::gossip::CommLedger::default();
+    let mut net = NetStats::default();
+    for c in clients {
+        total.merge(&c.ledger);
+        net.merge(&c.net);
+    }
+    RunRecord {
         algo: cfg.algo.name.clone(),
         dataset: cfg.dataset.clone(),
         loss: cfg.loss.name().to_string(),
@@ -219,12 +251,13 @@ pub fn train(
         tau: cfg.algo.tau,
         points,
         total,
-        wall_s: t0.elapsed().as_secs_f64(),
-    };
-    Ok(TrainOutcome { record, factors })
+        net,
+        wall_s,
+    }
 }
 
-/// One synchronous gossip exchange on mode `m` (Alg. 1 lines 9-18).
+/// One synchronous gossip exchange on mode `m` (Alg. 1 lines 9-18),
+/// composed from the shared phases below over an implicit ideal network.
 fn gossip_round(
     clients: &mut [ClientState],
     graph: &Graph,
@@ -233,47 +266,106 @@ fn gossip_round(
     t: usize,
     m: usize,
 ) {
-    // 1) event trigger + compress (lines 10-14); ledger uplink per neighbor
-    let payloads: Vec<Option<crate::compress::Payload>> = clients
-        .iter_mut()
-        .map(|c| {
-            let est = c.estimates.as_ref().expect("estimates");
-            let a = &c.factors.mats[m];
-            let dist_sq = a.dist_sq(est.self_estimate(m));
-            let fired = !cfg.algo.event_triggered || trigger.fires(dist_sq, t, cfg.gamma);
-            if fired {
-                let mut delta = a.clone();
-                delta.sub_assign(est.self_estimate(m));
-                let payload = cfg.algo.compressor.compress(&delta);
-                let msg = Message { from: c.id, mode: m, round: t, payload };
-                for _ in &graph.neighbors[c.id] {
-                    c.ledger.record(&msg, true);
-                }
-                let Message { payload, .. } = msg;
-                Some(payload)
-            } else {
-                // nothing on the wire; receivers treat it as a zero delta
-                c.ledger.suppressed += 1;
-                None
-            }
-        })
-        .collect();
+    let payloads = publish_phase(clients, graph, cfg, trigger, t, m, None);
 
-    // 2) deliver: every client updates Â^j for j ∈ N_k ∪ {k} (line 16)
+    // deliver: every client updates Â^j for j ∈ N_k ∪ {k} (line 16)
     for k in 0..clients.len() {
-        let est = clients[k].estimates.as_mut().expect("estimates");
-        if let Some(p) = &payloads[k] {
-            est.apply_delta(k, m, p);
-        }
-        for &j in &graph.neighbors[k] {
-            if let Some(p) = &payloads[j] {
-                est.apply_delta(j, m, p);
+        let mut delivered = 0;
+        {
+            let est = clients[k].estimates.as_mut().expect("estimates");
+            if let Some(p) = &payloads[k] {
+                est.apply_delta(k, m, p);
+            }
+            for &j in &graph.neighbors[k] {
+                if let Some(p) = &payloads[j] {
+                    est.apply_delta(j, m, p);
+                    delivered += 1;
+                }
             }
         }
+        clients[k].net.delivered += delivered;
     }
 
-    // 3) consensus step (line 18)
+    consensus_phase(clients, graph, cfg.algo.rho, m, None);
+}
+
+/// Publish phase (Alg. 1 lines 10-14): event-trigger check, delta
+/// compression, and uplink ledger accounting for every client. Returns
+/// each client's broadcast payload (`None` = trigger suppressed, or the
+/// client is offline under `online`). Shared by the sequential engine and
+/// the network-simulator drivers; passing `online: None` reproduces the
+/// ideal lock-step behaviour exactly.
+pub(crate) fn publish_phase(
+    clients: &mut [ClientState],
+    graph: &Graph,
+    cfg: &TrainConfig,
+    trigger: &TriggerSchedule,
+    t: usize,
+    m: usize,
+    online: Option<&[bool]>,
+) -> Vec<Option<Payload>> {
+    clients
+        .iter_mut()
+        .map(|c| {
+            if let Some(mask) = online {
+                if !mask[c.id] {
+                    return None;
+                }
+            }
+            publish_one(c, graph, cfg, trigger, t, m)
+        })
+        .collect()
+}
+
+/// One client's publish decision (Alg. 1 lines 10-14): event-trigger
+/// check, delta compression, and per-neighbor uplink ledger accounting.
+/// The single source of truth for publish semantics — every execution
+/// path (sequential, thread-parallel, sync simulator, async gossip)
+/// calls this.
+pub(crate) fn publish_one(
+    c: &mut ClientState,
+    graph: &Graph,
+    cfg: &TrainConfig,
+    trigger: &TriggerSchedule,
+    t: usize,
+    m: usize,
+) -> Option<Payload> {
+    let est = c.estimates.as_ref().expect("estimates");
+    let a = &c.factors.mats[m];
+    let dist_sq = a.dist_sq(est.self_estimate(m));
+    let fired = !cfg.algo.event_triggered || trigger.fires(dist_sq, t, cfg.gamma);
+    if fired {
+        let mut delta = a.clone();
+        delta.sub_assign(est.self_estimate(m));
+        let payload = cfg.algo.compressor.compress(&delta);
+        let msg = Message { from: c.id, mode: m, round: t, payload };
+        for _ in &graph.neighbors[c.id] {
+            c.ledger.record(&msg, true);
+        }
+        let Message { payload, .. } = msg;
+        Some(payload)
+    } else {
+        // nothing on the wire; receivers treat it as a zero delta
+        c.ledger.suppressed += 1;
+        None
+    }
+}
+
+/// Consensus phase (Alg. 1 line 18) for every (online) client:
+/// `A^k += ϱ Σ_j w_kj (Â^j − Â^k)` on mode `m`.
+pub(crate) fn consensus_phase(
+    clients: &mut [ClientState],
+    graph: &Graph,
+    rho: f64,
+    m: usize,
+    online: Option<&[bool]>,
+) {
     for (k, c) in clients.iter_mut().enumerate() {
+        if let Some(mask) = online {
+            if !mask[k] {
+                continue;
+            }
+        }
         let ClientState { estimates, factors, .. } = c;
         let est = estimates.as_ref().expect("estimates");
         est.consensus_into(
@@ -281,14 +373,14 @@ fn gossip_round(
             m,
             &graph.neighbors[k],
             &graph.weights[k],
-            cfg.algo.rho,
+            rho,
         );
     }
 }
 
 /// Centralized CiderTF's error-feedback step: undo the raw update on mode
 /// `m` and re-apply its EF-compressed version.
-fn apply_error_feedback(c: &mut ClientState, m: usize, compressor: Compressor) {
+pub(crate) fn apply_error_feedback(c: &mut ClientState, m: usize, compressor: Compressor) {
     // local_step already applied `A -= update`; recover the raw update from
     // the EF residual trick: compress(update + residual) and fix A by the
     // difference between raw and decoded updates.
@@ -340,15 +432,18 @@ pub fn assemble_global(clients: &[ClientState]) -> FactorSet {
     FactorSet { mats }
 }
 
+/// Evaluate the global loss estimator across clients and append a metric
+/// point stamped with `time_s` (wall seconds for the sequential engine,
+/// virtual seconds for the simulators).
 #[allow(clippy::too_many_arguments)]
-fn record_point(
+pub(crate) fn record_point(
     clients: &mut [ClientState],
     cfg: &TrainConfig,
     backend: &mut dyn ComputeBackend,
     fms_reference: Option<&FactorSet>,
     epoch: usize,
     iter: usize,
-    t0: Instant,
+    time_s: f64,
     points: &mut Vec<MetricPoint>,
 ) -> anyhow::Result<()> {
     let mut loss = 0.0;
@@ -357,6 +452,6 @@ fn record_point(
     }
     let bytes: u64 = clients.iter().map(|c| c.ledger.bytes).sum();
     let fms_val = fms_reference.map(|r| fms(&assemble_global(clients), r));
-    points.push(MetricPoint { epoch, iter, time_s: t0.elapsed().as_secs_f64(), loss, bytes, fms: fms_val });
+    points.push(MetricPoint { epoch, iter, time_s, loss, bytes, fms: fms_val });
     Ok(())
 }

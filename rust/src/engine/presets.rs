@@ -4,6 +4,8 @@
 
 use super::AlgoConfig;
 use crate::compress::Compressor;
+use crate::net::driver::DriverKind;
+use crate::net::sim::FaultConfig;
 
 impl AlgoConfig {
     /// CiderTF (paper Alg. 1): sign + block randomization + periodic (τ) +
@@ -149,6 +151,68 @@ impl AlgoConfig {
     }
 }
 
+/// A fully-specified execution scenario: algorithm preset + network fault
+/// envelope + round driver, resolvable from a single CLI spec
+/// `<algo>[@<network>[@<driver>]]` — e.g. `cidertf:4@lossy:0.2@async`.
+///
+/// This is the entry point the `train` subcommand and the
+/// `harness::faults` sweep share: the algorithm table (Table II) stays
+/// orthogonal to the network conditions it runs under.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// algorithm configuration (Table II row)
+    pub algo: AlgoConfig,
+    /// network fault envelope (`None` = ideal network)
+    pub fault: Option<FaultConfig>,
+    /// execution path
+    pub driver: DriverKind,
+}
+
+impl Scenario {
+    /// Parse `<algo>[@<network>[@<driver>]]`.
+    ///
+    /// The driver defaults to `sim` whenever a non-ideal network is named
+    /// (faults need the simulator) and to the sequential engine otherwise.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut parts = spec.split('@');
+        let algo = AlgoConfig::by_name(parts.next().unwrap_or_default())?;
+        let fault = match parts.next() {
+            Some(name) => FaultConfig::by_name(name)?,
+            None => None,
+        };
+        let driver = match parts.next() {
+            Some(d) => DriverKind::from_name(d)?,
+            None => {
+                if fault.is_some() {
+                    DriverKind::Sim
+                } else {
+                    DriverKind::Sequential
+                }
+            }
+        };
+        anyhow::ensure!(
+            parts.next().is_none(),
+            "too many '@' segments in scenario '{spec}' (algo[@network[@driver]])"
+        );
+        anyhow::ensure!(
+            !(fault.is_some() && matches!(driver, DriverKind::Sequential | DriverKind::Parallel)),
+            "driver '{}' cannot inject network faults — use sim or async",
+            driver.name()
+        );
+        Ok(Scenario { algo, fault, driver })
+    }
+
+    /// Display name, e.g. `cidertf_t4@lossy@async`.
+    pub fn label(&self) -> String {
+        let net = match &self.fault {
+            None => "ideal".to_string(),
+            Some(f) if f.drop_rate > 0.0 => format!("lossy{:.0}%", 100.0 * f.drop_rate),
+            Some(_) => "faulty".to_string(),
+        };
+        format!("{}@{}@{}", self.algo.name, net, self.driver.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,5 +269,29 @@ mod tests {
         assert!(!AlgoConfig::gcp().block_random);
         assert!(AlgoConfig::bras_cpd().block_random);
         assert!(AlgoConfig::centralized_cidertf().error_feedback);
+    }
+
+    #[test]
+    fn scenario_specs_parse() {
+        let s = Scenario::parse("cidertf:8").unwrap();
+        assert_eq!(s.algo.tau, 8);
+        assert!(s.fault.is_none());
+        assert_eq!(s.driver, DriverKind::Sequential);
+
+        let s = Scenario::parse("cidertf:4@lossy:0.2").unwrap();
+        assert!((s.fault.as_ref().unwrap().drop_rate - 0.2).abs() < 1e-12);
+        assert_eq!(s.driver, DriverKind::Sim);
+
+        let s = Scenario::parse("dpsgd@hostile@async").unwrap();
+        assert_eq!(s.driver, DriverKind::Async);
+        assert!(s.label().contains("async"));
+
+        let s = Scenario::parse("cidertf:4@ideal@par").unwrap();
+        assert_eq!(s.driver, DriverKind::Parallel);
+        assert!(s.fault.is_none());
+
+        assert!(Scenario::parse("cidertf:4@lossy:0.2@seq").is_err());
+        assert!(Scenario::parse("nope@ideal").is_err());
+        assert!(Scenario::parse("cidertf@ideal@seq@extra").is_err());
     }
 }

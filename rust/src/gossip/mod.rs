@@ -12,15 +12,23 @@
 //! is kept local for privacy (paper §III-B2) and is dimensionally local
 //! anyway (each client owns different patients).
 
+#![warn(missing_docs)]
+
 use crate::compress::Payload;
 use crate::util::mat::Mat;
 
 /// One gossip message (what the wire carries + accounting metadata).
 #[derive(Debug, Clone)]
 pub struct Message {
+    /// sending client id
     pub from: usize,
+    /// which factor mode the delta applies to (never 0 — the patient mode
+    /// stays local, paper §III-B2)
     pub mode: usize,
+    /// the sender's iteration `t` when the delta was published (receivers
+    /// under asynchrony use this to detect staleness)
     pub round: usize,
+    /// the compressed delta `C(A_(d)[t+½] − Â_(d)[t])` (Alg. 1 line 12)
     pub payload: Payload,
 }
 
@@ -28,6 +36,7 @@ impl Message {
     /// Fixed header: from/mode/round/len (u32 each) — charged per message.
     pub const HEADER_BYTES: u64 = 16;
 
+    /// Total bytes this message occupies on the wire (header + payload).
     pub fn wire_bytes(&self) -> u64 {
         Self::HEADER_BYTES + self.payload.wire_bytes()
     }
@@ -48,6 +57,8 @@ pub struct CommLedger {
 }
 
 impl CommLedger {
+    /// Charge one uplink message (Alg. 1 line 14); `fired` records whether
+    /// the event trigger passed (vs a suppressed zero-payload round).
     pub fn record(&mut self, msg: &Message, fired: bool) {
         self.bytes += msg.wire_bytes();
         self.messages += 1;
@@ -58,6 +69,7 @@ impl CommLedger {
         }
     }
 
+    /// Accumulate another client's ledger (for run-level totals).
     pub fn merge(&mut self, other: &CommLedger) {
         self.bytes += other.bytes;
         self.messages += other.messages;
@@ -102,10 +114,13 @@ impl EstimateState {
         payload.add_into(m);
     }
 
+    /// `Â_(mode)^peer` — this client's current estimate of a peer's factor.
     pub fn estimate(&self, peer: usize, mode: usize) -> &Mat {
         self.mats[self.slot_of(peer)][mode].as_ref().expect("untracked mode")
     }
 
+    /// `Â_(mode)^k` — the estimate every neighbor holds of *this* client
+    /// (consistent because all peers apply the same broadcast deltas).
     pub fn self_estimate(&self, mode: usize) -> &Mat {
         self.mats[self.self_slot][mode].as_ref().expect("untracked mode")
     }

@@ -1,0 +1,157 @@
+//! Fault-tolerance sweep: CiderTF under message loss, across topologies,
+//! compressors, and execution drivers.
+//!
+//! This is the experiment the paper's decentralization argument implies
+//! but never runs: if gossip removes the single point of failure, how
+//! much network failure does the *protocol* absorb? The sweep grids
+//! drop rate × topology × compressor through the synchronous network
+//! simulator, adds async rows for the headline configuration, and reports
+//! every run relative to its ideal-network twin.
+//!
+//! Expected shape of the results (and what the tests assert in
+//! miniature): moderate i.i.d. loss behaves like a smaller effective
+//! consensus step — convergence degrades gracefully rather than
+//! collapsing, because dropped compressed deltas leave peer estimates
+//! stale, an error mode Thm. III.2's analysis already covers.
+
+use super::Ctx;
+use crate::compress::Compressor;
+use crate::engine::metrics::RunRecord;
+use crate::engine::AlgoConfig;
+use crate::net::async_gossip::train_async;
+use crate::net::driver::train_sim;
+use crate::net::sim::{self, FaultConfig};
+use crate::topology::Topology;
+use crate::util::benchkit::{fmt_bytes, Table};
+use crate::util::csv::CsvWriter;
+
+/// Drop rates the sweep grids over (0 = ideal-network baseline).
+pub const DROP_RATES: [f64; 4] = [0.0, 0.1, 0.2, 0.4];
+
+/// Run the sweep. `k` clients, τ = `tau` local rounds.
+pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>> {
+    let mut records = Vec::new();
+    let topologies = [Topology::Ring, Topology::Star];
+    let compressors = [(Compressor::Sign, "sign"), (Compressor::None, "dense")];
+
+    for dataset in ctx.profile.datasets() {
+        for loss in ctx.profile.losses() {
+            println!("\n=== Faults: {dataset} / {} / K={k} tau={tau} ===", loss.name());
+            let data = ctx.dataset(dataset, loss)?;
+            let table = Table::new(&[
+                "driver", "topology", "compressor", "drop", "final_loss", "vs_ideal",
+                "delivered", "dropped", "uplink",
+            ]);
+            let csv_name = format!("faults/{dataset}_{}_summary.csv", loss.name());
+            let csv_path = ctx.out_dir.join(csv_name);
+            let mut csv = CsvWriter::create(
+                &csv_path,
+                &[
+                    "driver", "topology", "compressor", "drop_rate", "final_loss",
+                    "ideal_loss", "delivered", "dropped", "stale", "offline_rounds",
+                    "uplink_bytes", "virtual_s",
+                ],
+            )?;
+
+            for topo in topologies {
+                for (compressor, cname) in compressors {
+                    let mut ideal_loss = f64::NAN;
+                    for drop in DROP_RATES {
+                        let algo = algo_for(tau, compressor, cname);
+                        let mut cfg = ctx.base_config(dataset, loss, algo);
+                        cfg.k = k;
+                        cfg.topology = topo;
+                        let mut net: Box<dyn sim::NetworkModel> = if drop == 0.0 {
+                            sim::ideal()
+                        } else {
+                            FaultConfig::lossy(drop).with_seed(cfg.seed).boxed()
+                        };
+                        let out =
+                            train_sim(&cfg, &data, ctx.backend.as_mut(), net.as_mut(), None)?;
+                        if drop == 0.0 {
+                            ideal_loss = out.record.final_loss();
+                        }
+                        emit(&table, &mut csv, "sim", topo, cname, drop, ideal_loss, &out.record)?;
+                        records.push(out.record);
+                    }
+                }
+            }
+
+            // async rows: the headline config, ideal + lossy + stragglers
+            let mut ideal_loss = f64::NAN;
+            for (label, fault) in [
+                ("ideal", None),
+                ("lossy", Some(FaultConfig::lossy(0.2))),
+                ("stragglers", Some(FaultConfig::stragglers())),
+            ] {
+                let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
+                cfg.k = k;
+                let drop = fault.as_ref().map(|f| f.drop_rate).unwrap_or(0.0);
+                let mut net: Box<dyn sim::NetworkModel> = match fault {
+                    None => sim::ideal(),
+                    Some(f) => f.with_seed(cfg.seed).boxed(),
+                };
+                let out = train_async(&cfg, &data, ctx.backend.as_mut(), net.as_mut(), None)?;
+                if label == "ideal" {
+                    ideal_loss = out.record.final_loss();
+                }
+                let rec = &out.record;
+                emit(&table, &mut csv, "async", Topology::Ring, label, drop, ideal_loss, rec)?;
+                records.push(out.record);
+            }
+            csv.flush()?;
+            println!("  wrote {}", csv_path.display());
+        }
+    }
+    Ok(records)
+}
+
+/// CiderTF with the compressor swapped (the sweep's compressor axis).
+fn algo_for(tau: usize, compressor: Compressor, cname: &str) -> AlgoConfig {
+    let mut algo = AlgoConfig::cidertf(tau);
+    algo.compressor = compressor;
+    algo.name = format!("cidertf_{cname}_t{tau}");
+    algo
+}
+
+/// One table row + CSV row for a finished run.
+#[allow(clippy::too_many_arguments)]
+fn emit(
+    table: &Table,
+    csv: &mut CsvWriter,
+    driver: &str,
+    topo: Topology,
+    compressor: &str,
+    drop: f64,
+    ideal_loss: f64,
+    rec: &RunRecord,
+) -> anyhow::Result<()> {
+    let fl = rec.final_loss();
+    let vs = if ideal_loss.is_finite() && ideal_loss != 0.0 { fl / ideal_loss } else { f64::NAN };
+    table.row(&[
+        driver.to_string(),
+        topo.name().to_string(),
+        compressor.to_string(),
+        format!("{drop:.0e}"),
+        format!("{fl:.3e}"),
+        format!("{vs:.2}x"),
+        rec.net.delivered.to_string(),
+        rec.net.dropped.to_string(),
+        fmt_bytes(rec.total.bytes as f64),
+    ]);
+    csv.row(&[
+        driver.to_string(),
+        topo.name().to_string(),
+        compressor.to_string(),
+        format!("{drop}"),
+        format!("{fl:.6e}"),
+        format!("{ideal_loss:.6e}"),
+        rec.net.delivered.to_string(),
+        rec.net.dropped.to_string(),
+        rec.net.stale.to_string(),
+        rec.net.offline_rounds.to_string(),
+        rec.total.bytes.to_string(),
+        format!("{:.2}", rec.wall_s),
+    ])?;
+    Ok(())
+}

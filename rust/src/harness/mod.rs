@@ -9,6 +9,7 @@
 //!   losses); tens of minutes.
 
 pub mod ablate;
+pub mod faults;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;

@@ -13,9 +13,12 @@
 //! Common flags: `--profile quick|paper`, `--k N`, `--tau T`,
 //! `--epochs E`, `--backend pjrt|native`, `--out results/`.
 
+use cidertf::engine::presets::Scenario;
 use cidertf::engine::{train, AlgoConfig, TrainConfig};
 use cidertf::harness::{self, Ctx, Profile};
 use cidertf::losses::Loss;
+use cidertf::net::driver::{driver_from_flags, DriverKind};
+use cidertf::net::sim::{self, FaultConfig, NetworkModel};
 use cidertf::runtime::{default_artifact_dir, ComputeBackend, Manifest, NativeOrPjrt};
 use cidertf::topology::Topology;
 use cidertf::util::cli::Args;
@@ -27,8 +30,19 @@ fn main() {
     }
 }
 
+/// Default `--backend`: PJRT when this binary was built with the `pjrt`
+/// feature, otherwise the artifact-free native mirror (so the
+/// out-of-the-box commands in README.md work on a plain build).
+fn default_backend() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt"
+    } else {
+        "native"
+    }
+}
+
 fn make_backend(args: &Args) -> anyhow::Result<Box<dyn ComputeBackend>> {
-    NativeOrPjrt::from_flag(&args.get_str("backend", "pjrt"))
+    NativeOrPjrt::from_flag(&args.get_str("backend", default_backend()))
 }
 
 fn ctx_from(args: &Args) -> anyhow::Result<Ctx> {
@@ -90,6 +104,10 @@ fn run() -> anyhow::Result<()> {
                 args.get_usize("features", 8),
             )?;
         }
+        "faults" => {
+            let mut ctx = ctx_from(&args)?;
+            harness::faults::run(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+        }
         "ablate" => {
             let mut ctx = ctx_from(&args)?;
             let k = args.get_usize("k", 8);
@@ -120,14 +138,38 @@ fn run() -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let algo = AlgoConfig::by_name(&args.get_str("algo", "cidertf:4"))?;
+    // scenario: `--algo cidertf:4@lossy:0.2@async`, with `--network` and
+    // `--driver` as explicit overrides for the last two segments
+    let mut scenario = Scenario::parse(&args.get_str("algo", "cidertf:4"))?;
+    if let Some(net) = args.opt_str("network") {
+        scenario.fault = FaultConfig::by_name(&net)?;
+        if scenario.fault.is_some()
+            && matches!(scenario.driver, DriverKind::Sequential | DriverKind::Parallel)
+        {
+            scenario.driver = DriverKind::Sim;
+        }
+    }
+    if let Some(d) = args.opt_str("driver") {
+        scenario.driver = DriverKind::from_name(&d)?;
+    }
+    // same invariant Scenario::parse enforces, re-checked because the
+    // --driver override above can undo the auto-upgrade to sim
+    anyhow::ensure!(
+        !(scenario.fault.is_some()
+            && matches!(scenario.driver, DriverKind::Sequential | DriverKind::Parallel)),
+        "driver '{}' cannot inject network faults — use --driver sim or --driver async",
+        scenario.driver.name()
+    );
     let dataset = args.get_str("dataset", "synthetic");
     let loss = Loss::from_name(&args.get_str("loss", "logit"))?;
     let profile = Profile::from_name(&args.get_str("profile", "quick"))?;
-    let mut ctx = Ctx::with_backend(make_backend(args)?, profile);
-    ctx.out_dir = args.get_str("out", "results").into();
+    let out_dir: std::path::PathBuf = args.get_str("out", "results").into();
+    // This Ctx only generates the dataset and profile-scaled defaults —
+    // its backend is never exercised. The run's actual compute backend is
+    // resolved from --backend by driver_from_flags below.
+    let ctx = Ctx::with_backend(Box::new(cidertf::runtime::native::NativeBackend::new()), profile);
     let data = ctx.dataset(&dataset, loss)?;
-    let mut cfg = ctx.base_config(&dataset, loss, algo);
+    let mut cfg = ctx.base_config(&dataset, loss, scenario.algo.clone());
     cfg.k = args.get_usize("k", 8);
     cfg.topology = Topology::from_name(&args.get_str("topology", "ring"))?;
     cfg.epochs = args.get_usize("epochs", cfg.epochs);
@@ -136,10 +178,33 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.rank = args.get_usize("rank", cfg.rank);
     cfg.seed = args.get_u64("seed", cfg.seed);
     println!(
-        "training {} on {dataset}/{} K={} topology={} gamma={} ({} epochs x {} iters)",
-        cfg.algo.name, cfg.loss.name(), cfg.k, cfg.topology.name(), cfg.gamma, cfg.epochs, cfg.iters_per_epoch
+        "training {} on {dataset}/{} K={} topology={} gamma={} driver={} ({} epochs x {} iters)",
+        cfg.algo.name,
+        cfg.loss.name(),
+        cfg.k,
+        cfg.topology.name(),
+        cfg.gamma,
+        scenario.driver.name(),
+        cfg.epochs,
+        cfg.iters_per_epoch
     );
-    let out = ctx.run("train", &cfg, &data, None)?;
+    let net: Box<dyn NetworkModel> = match scenario.fault.clone() {
+        None => sim::ideal(),
+        Some(f) => f.with_seed(cfg.seed).boxed(),
+    };
+    let mut driver =
+        driver_from_flags(scenario.driver, &args.get_str("backend", default_backend()), net)?;
+    let out = driver.run(&cfg, &data, None)?;
+    let fname = format!(
+        "train/{}_{}_{}_{}_{}_k{}.csv",
+        cfg.dataset,
+        cfg.loss.name(),
+        cfg.algo.name,
+        driver.name(),
+        cfg.topology.name(),
+        cfg.k
+    );
+    out.record.write_csv(&out_dir.join(fname))?;
     for p in &out.record.points {
         println!(
             "epoch {:>3}  t={:>7.1}s  loss={:.6e}  uplink={}",
@@ -158,6 +223,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         out.record.total.triggered,
         out.record.total.suppressed
     );
+    let net_stats = &out.record.net;
+    if matches!(scenario.driver, DriverKind::Sim | DriverKind::Async) {
+        println!(
+            "network: delivered {}, dropped {} ({:.1}% loss), stale {}, offline rounds {}",
+            net_stats.delivered,
+            net_stats.dropped,
+            100.0 * net_stats.drop_fraction(),
+            net_stats.stale,
+            net_stats.offline_rounds
+        );
+    }
     Ok(())
 }
 
@@ -213,6 +289,9 @@ COMMANDS
                                        bras_cpd|centralized_cidertf
              --dataset synthetic|mimic_like|cms_like|mimic_full|tiny --loss logit|ls
              --k 8 --topology ring|star|complete|chain|torus --epochs N --gamma G
+             --driver seq|par|sim|async   execution path (default seq)
+             --network ideal|lossy[:p]|bursty|wan|stragglers|churning|hostile
+             (or one spec: --algo cidertf:4@lossy:0.2@async)
   fig3       convergence vs baselines (paper Fig. 3)   [--k --taus 2,4,6,8]
   fig4       ring vs star topology    (paper Fig. 4)   [--k --tau]
   fig5       scalability K=8,16,32    (paper Fig. 5)   [--ks --taus]
@@ -222,13 +301,15 @@ COMMANDS
   table3     tSNE subgroup study      (Table III)      [--k --tau --max-patients]
   table4     phenotype extraction     (Table IV)       [--k --tau --features]
   theorems   Thm III.1-III.3 checks                    [--k --tau]
+  faults     drop-rate x topology x compressor sweep   [--k --tau]
   ablate     design-knob sweeps (rho/tau/trigger)      [--sweep rho|tau|trigger|all]
   tune       learning-rate grid search                 [--dataset --loss]
   info       list AOT artifacts
 
 COMMON FLAGS
   --profile quick|paper   effort level (default quick)
-  --backend pjrt|native   compute backend (default pjrt; native = pure Rust mirror)
+  --backend pjrt|native   compute backend (default: pjrt when built with the
+                          `pjrt` feature, else native — the pure-Rust mirror)
   --out results/          output directory for CSVs"
     );
 }

@@ -1,0 +1,258 @@
+//! Event-driven asynchronous gossip: no barriers, no lock-step rounds.
+//!
+//! Each client is a state machine advanced by a deterministic discrete-
+//! event loop ([`EventQueue`]): a `Resume` event runs one local iteration
+//! (compute time scaled by the client's straggler multiplier), publishes
+//! compressed deltas whose `Deliver` events fire after the link's latency,
+//! and immediately runs consensus with whatever peer estimates it
+//! currently holds. Deltas that arrive late are simply *stale* — the
+//! CHOCO-style difference encoding in [`crate::gossip`] accumulates them
+//! into `Â` whenever they land, which is exactly the staleness the
+//! compressed-consensus analysis tolerates (paper Thm. III.2; see also
+//! the asynchronous-gossip lineage of Lian et al. AD-PSGD).
+//!
+//! Differences from the lock-step paths, by design:
+//! * clients at different virtual times mix estimates of different ages
+//!   (`RunRecord.net.stale` counts how often),
+//! * a straggler no longer stalls the fleet — fast clients keep
+//!   iterating, which is the wall-clock argument for going async,
+//! * per-epoch losses are evaluated when *each client* crosses its own
+//!   epoch boundary, so curves are comparable but not barrier-aligned.
+//!
+//! Determinism: all stochasticity comes from seeded streams; the event
+//! queue breaks timestamp ties FIFO. Two runs with the same config are
+//! bit-identical (asserted in `tests/network_sim.rs`).
+
+use std::sync::Arc;
+
+use crate::engine::client::ClientState;
+use crate::engine::metrics::MetricPoint;
+use crate::engine::{
+    apply_error_feedback, assemble_global, build_clients, finalize_record, publish_one,
+    TrainConfig, TrainOutcome,
+};
+use crate::factor::{fms::fms, FactorSet};
+use crate::gossip::Message;
+use crate::net::sim::{EventKind, EventQueue, NetworkModel};
+use crate::runtime::ComputeBackend;
+use crate::sched::BlockSampler;
+use crate::tensor::synth::SynthData;
+use crate::topology::Graph;
+
+/// One client's simulation wrapper.
+struct Node {
+    c: ClientState,
+    sampler: BlockSampler,
+    /// local iteration counter (the client's own clock)
+    iter: usize,
+    /// messages that have arrived but not yet been consumed
+    inbox: Vec<Arc<Message>>,
+    done: bool,
+}
+
+/// Run `cfg` under event-driven asynchronous gossip over `net`.
+///
+/// See the module docs for semantics. The returned record's `points`
+/// carry virtual-time stamps (the slowest client's crossing time per
+/// epoch slot), and `net` counts delivered/dropped/stale messages.
+pub fn train_async(
+    cfg: &TrainConfig,
+    data: &SynthData,
+    backend: &mut dyn ComputeBackend,
+    net: &mut dyn NetworkModel,
+    fms_reference: Option<&FactorSet>,
+) -> anyhow::Result<TrainOutcome> {
+    let d_order = data.tensor.dims.len();
+    anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
+    let graph = Graph::build(cfg.topology, cfg.k)?;
+    let decentralized = cfg.k > 1;
+    let trigger = cfg.trigger_schedule();
+    let all_modes: Vec<usize> = (0..d_order).collect();
+    let total_iters = cfg.epochs * cfg.iters_per_epoch;
+    let n_points = cfg.epochs + 1;
+
+    let mut nodes: Vec<Node> = build_clients(cfg, data, &graph)
+        .into_iter()
+        .map(|c| Node {
+            c,
+            // every client samples the same per-iteration mode sequence —
+            // the lock-step protocol's shared d_ξ[t], indexed by *local*
+            // iteration under asynchrony
+            sampler: BlockSampler::new(d_order, cfg.seed, true),
+            iter: 0,
+            inbox: Vec::new(),
+            done: total_iters == 0,
+        })
+        .collect();
+
+    // per-epoch-slot accumulators (same layout as train_parallel)
+    let mut losses = vec![0.0f64; n_points];
+    let mut bytes_per_point = vec![0u64; n_points];
+    let mut times = vec![0.0f64; n_points];
+    for node in nodes.iter_mut() {
+        losses[0] += node.c.eval_loss(cfg.loss, backend)?;
+    }
+
+    let mut q = EventQueue::new();
+    for k in 0..cfg.k {
+        q.push(0.0, EventKind::Resume { client: k });
+    }
+
+    let mut final_time = 0.0f64;
+    while let Some(ev) = q.pop() {
+        let now = ev.time;
+        final_time = final_time.max(now);
+        match ev.kind {
+            EventKind::Deliver { to, msg } => {
+                // arrivals after the receiver's last iteration are moot —
+                // the run is over for it, so they count as neither
+                // delivered nor dropped (no link fault occurred)
+                if !nodes[to].done {
+                    nodes[to].inbox.push(msg);
+                }
+            }
+            EventKind::Resume { client: k } => {
+                if nodes[k].done {
+                    continue;
+                }
+                let t = nodes[k].iter;
+                // the iteration starting now completes at `end` — compute
+                // cost is charged whether the client works or sits out
+                let end = now + cfg.sim_iter_s * net.compute_multiplier(k);
+                final_time = final_time.max(end);
+                if net.online(k, t) {
+                    // 1) consume everything that has arrived (Alg. 1 line
+                    //    16, applied lazily at the receiver's pace)
+                    let msgs = std::mem::take(&mut nodes[k].inbox);
+                    for msg in msgs {
+                        let node = &mut nodes[k];
+                        node.c
+                            .estimates
+                            .as_mut()
+                            .expect("estimates")
+                            .apply_delta(msg.from, msg.mode, &msg.payload);
+                        node.c.net.delivered += 1;
+                        // lock-step freshness is "consumed before the round
+                        // after the sender's": anything older is stale
+                        if msg.round + 1 < t {
+                            node.c.net.stale += 1;
+                        }
+                    }
+
+                    // 2) local step(s)
+                    let sampled_mode = nodes[k].sampler.next_mode();
+                    let modes: &[usize] = if cfg.algo.block_random {
+                        std::slice::from_ref(&sampled_mode)
+                    } else {
+                        &all_modes
+                    };
+                    for &m in modes {
+                        nodes[k].c.local_step(
+                            m,
+                            cfg.loss,
+                            cfg.fiber_samples,
+                            cfg.gamma,
+                            cfg.algo.momentum,
+                            backend,
+                        )?;
+                        if cfg.algo.error_feedback {
+                            apply_error_feedback(&mut nodes[k].c, m, cfg.algo.compressor);
+                        }
+                    }
+
+                    // 3) publish + consensus on communication rounds;
+                    //    messages depart when the iteration *finishes*
+                    if decentralized && t % cfg.algo.tau == 0 {
+                        for &m in modes {
+                            if m == 0 {
+                                continue; // patient mode never travels
+                            }
+                            async_gossip_step(
+                                &mut nodes[k], &graph, cfg, &trigger, net, &mut q, end, t, m,
+                            );
+                        }
+                    }
+                } else {
+                    let node = &mut nodes[k];
+                    node.c.net.offline_rounds += 1;
+                    // anything queued for a down node is lost
+                    let lost = node.inbox.len() as u64;
+                    node.inbox.clear();
+                    node.c.net.dropped += lost;
+                }
+
+                // 4) bookkeeping + next wake-up
+                nodes[k].iter += 1;
+                let done_iters = nodes[k].iter;
+                if done_iters % cfg.iters_per_epoch == 0 {
+                    let slot = done_iters / cfg.iters_per_epoch;
+                    losses[slot] += nodes[k].c.eval_loss(cfg.loss, backend)?;
+                    bytes_per_point[slot] += nodes[k].c.ledger.bytes;
+                    times[slot] = times[slot].max(end);
+                }
+                if done_iters >= total_iters {
+                    nodes[k].done = true;
+                } else {
+                    q.push(end, EventKind::Resume { client: k });
+                }
+            }
+        }
+    }
+
+    let clients: Vec<ClientState> = nodes.into_iter().map(|n| n.c).collect();
+    let factors = assemble_global(&clients);
+    let fms_final = fms_reference.map(|r| fms(&factors, r));
+    let points: Vec<MetricPoint> = (0..n_points)
+        .map(|slot| MetricPoint {
+            epoch: slot,
+            iter: slot * cfg.iters_per_epoch,
+            time_s: times[slot],
+            loss: losses[slot],
+            bytes: bytes_per_point[slot],
+            fms: if slot + 1 == n_points { fms_final } else { None },
+        })
+        .collect();
+    let record = finalize_record(cfg, &graph, &clients, points, final_time);
+    Ok(TrainOutcome { record, factors })
+}
+
+/// One client's publish-then-consense step on mode `m` at local round `t`
+/// (the async counterpart of the engine's gossip phases).
+#[allow(clippy::too_many_arguments)]
+fn async_gossip_step(
+    node: &mut Node,
+    graph: &Graph,
+    cfg: &TrainConfig,
+    trigger: &crate::sched::TriggerSchedule,
+    net: &mut dyn NetworkModel,
+    q: &mut EventQueue,
+    depart: f64,
+    t: usize,
+    m: usize,
+) {
+    let k = node.c.id;
+    if let Some(payload) = publish_one(&mut node.c, graph, cfg, trigger, t, m) {
+        let msg = Arc::new(Message { from: k, mode: m, round: t, payload });
+        // own estimate updates immediately (no wire involved)
+        node.c.estimates.as_mut().expect("estimates").apply_delta(k, m, &msg.payload);
+        let wire = msg.wire_bytes();
+        for &j in &graph.neighbors[k] {
+            if net.delivers(k, j, t) {
+                let latency = net.latency_s(k, j, wire);
+                q.push(depart + latency, EventKind::Deliver { to: j, msg: Arc::clone(&msg) });
+            } else {
+                node.c.net.dropped += 1;
+            }
+        }
+    }
+
+    // consensus with whatever estimates are on hand (stale included)
+    let ClientState { estimates, factors, .. } = &mut node.c;
+    estimates.as_ref().expect("estimates").consensus_into(
+        &mut factors.mats[m],
+        m,
+        &graph.neighbors[k],
+        &graph.weights[k],
+        cfg.algo.rho,
+    );
+}

@@ -1,0 +1,331 @@
+//! The unified round-driver abstraction plus the synchronous network
+//! simulator path.
+//!
+//! [`RoundDriver`] erases *how* a configuration executes (sequential,
+//! threaded, simulated-faulty, async) behind one `run` call, so harnesses
+//! and the CLI can sweep execution paths exactly like they sweep
+//! algorithms. [`train_sim`] is the tentpole path: the engine's lock-step
+//! protocol (Alg. 1) with every message routed through a
+//! [`NetworkModel`] — per-link latency/bandwidth, i.i.d. and bursty drops,
+//! straggler compute, and churn — on a [`VirtualClock`].
+//!
+//! Invariant (asserted in `tests/network_sim.rs`): with
+//! [`crate::net::sim::IdealNetwork`] the simulator performs exactly the
+//! float operations of `engine::train`, so the factors are bit-identical.
+
+use crate::engine::{
+    apply_error_feedback, assemble_global, build_clients, consensus_phase, finalize_record,
+    publish_phase, record_point, TrainConfig, TrainOutcome,
+};
+use crate::factor::FactorSet;
+use crate::gossip::Message;
+use crate::net::sim::{NetworkModel, VirtualClock};
+use crate::runtime::ComputeBackend;
+use crate::sched::BlockSampler;
+use crate::tensor::synth::SynthData;
+use crate::topology::Graph;
+
+/// Which execution path drives the rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverKind {
+    /// in-process lock-step (`engine::train`) — the reference path
+    Sequential,
+    /// one OS thread per client with barrier-synchronized rounds
+    Parallel,
+    /// lock-step rounds through a `NetworkModel` on a virtual clock
+    Sim,
+    /// event-driven asynchronous gossip (no barriers)
+    Async,
+}
+
+impl DriverKind {
+    /// CLI name of this driver.
+    pub fn name(self) -> &'static str {
+        match self {
+            DriverKind::Sequential => "seq",
+            DriverKind::Parallel => "par",
+            DriverKind::Sim => "sim",
+            DriverKind::Async => "async",
+        }
+    }
+
+    /// Parse a CLI `--driver` flag.
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "seq" | "sequential" => DriverKind::Sequential,
+            "par" | "parallel" => DriverKind::Parallel,
+            "sim" => DriverKind::Sim,
+            "async" => DriverKind::Async,
+            other => anyhow::bail!("unknown driver '{other}' (seq|par|sim|async)"),
+        })
+    }
+}
+
+/// One way to execute a training configuration end-to-end. Every
+/// implementation consumes the same [`TrainConfig`] and produces the same
+/// [`TrainOutcome`] shape (metrics, ledger, delivery stats), so callers
+/// can swap drivers without touching anything else.
+pub trait RoundDriver {
+    /// Short name for tables and filenames.
+    fn name(&self) -> &'static str;
+
+    /// Run `cfg` on `data` to completion.
+    fn run(
+        &mut self,
+        cfg: &TrainConfig,
+        data: &SynthData,
+        fms_reference: Option<&FactorSet>,
+    ) -> anyhow::Result<TrainOutcome>;
+}
+
+/// [`RoundDriver`] over the sequential reference engine.
+pub struct SequentialDriver {
+    /// compute backend shared by all simulated clients
+    pub backend: Box<dyn ComputeBackend>,
+}
+
+impl RoundDriver for SequentialDriver {
+    fn name(&self) -> &'static str {
+        "seq"
+    }
+
+    fn run(
+        &mut self,
+        cfg: &TrainConfig,
+        data: &SynthData,
+        fms_reference: Option<&FactorSet>,
+    ) -> anyhow::Result<TrainOutcome> {
+        crate::engine::train(cfg, data, self.backend.as_mut(), fms_reference)
+    }
+}
+
+/// [`RoundDriver`] over the thread-per-client runtime.
+pub struct ParallelDriver {
+    /// per-thread backend factory (PJRT clients are per-thread)
+    pub make_backend: Box<dyn Fn(usize) -> anyhow::Result<Box<dyn ComputeBackend>> + Sync>,
+}
+
+impl RoundDriver for ParallelDriver {
+    fn name(&self) -> &'static str {
+        "par"
+    }
+
+    fn run(
+        &mut self,
+        cfg: &TrainConfig,
+        data: &SynthData,
+        fms_reference: Option<&FactorSet>,
+    ) -> anyhow::Result<TrainOutcome> {
+        crate::net::parallel::train_parallel(cfg, data, |k| (self.make_backend)(k), fms_reference)
+    }
+}
+
+/// [`RoundDriver`] over the synchronous network simulator.
+pub struct SimDriver {
+    /// compute backend shared by all simulated clients
+    pub backend: Box<dyn ComputeBackend>,
+    /// the fault envelope messages travel through
+    pub net: Box<dyn NetworkModel>,
+}
+
+impl RoundDriver for SimDriver {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run(
+        &mut self,
+        cfg: &TrainConfig,
+        data: &SynthData,
+        fms_reference: Option<&FactorSet>,
+    ) -> anyhow::Result<TrainOutcome> {
+        train_sim(cfg, data, self.backend.as_mut(), self.net.as_mut(), fms_reference)
+    }
+}
+
+/// [`RoundDriver`] over the event-driven async gossip engine.
+pub struct AsyncGossipDriver {
+    /// compute backend shared by all simulated clients
+    pub backend: Box<dyn ComputeBackend>,
+    /// the fault envelope messages travel through
+    pub net: Box<dyn NetworkModel>,
+}
+
+impl RoundDriver for AsyncGossipDriver {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn run(
+        &mut self,
+        cfg: &TrainConfig,
+        data: &SynthData,
+        fms_reference: Option<&FactorSet>,
+    ) -> anyhow::Result<TrainOutcome> {
+        crate::net::async_gossip::train_async(
+            cfg,
+            data,
+            self.backend.as_mut(),
+            self.net.as_mut(),
+            fms_reference,
+        )
+    }
+}
+
+/// Build a boxed driver from CLI-ish inputs. `backend_flag` is resolved
+/// per [`crate::runtime::NativeOrPjrt`]; `net` is consumed by the
+/// simulator paths and ignored by the lock-step in-process paths (their
+/// network is ideal by construction).
+pub fn driver_from_flags(
+    kind: DriverKind,
+    backend_flag: &str,
+    net: Box<dyn NetworkModel>,
+) -> anyhow::Result<Box<dyn RoundDriver>> {
+    use crate::runtime::NativeOrPjrt;
+    Ok(match kind {
+        DriverKind::Sequential => {
+            Box::new(SequentialDriver { backend: NativeOrPjrt::from_flag(backend_flag)? })
+        }
+        DriverKind::Parallel => {
+            let flag = backend_flag.to_string();
+            Box::new(ParallelDriver {
+                make_backend: Box::new(move |_| NativeOrPjrt::from_flag(&flag)),
+            })
+        }
+        DriverKind::Sim => {
+            Box::new(SimDriver { backend: NativeOrPjrt::from_flag(backend_flag)?, net })
+        }
+        DriverKind::Async => {
+            Box::new(AsyncGossipDriver { backend: NativeOrPjrt::from_flag(backend_flag)?, net })
+        }
+    })
+}
+
+/// Lock-step training over a [`NetworkModel`] (the sync simulator).
+///
+/// Per iteration `t` (mirroring `engine::train` exactly):
+/// 1. an online mask is drawn — churned-out clients skip the round,
+/// 2. online clients take their local SGD/momentum step(s),
+/// 3. on communication rounds, payloads from online clients go through
+///    [`crate::engine::publish_phase`] (same trigger, compressor, and
+///    uplink ledger as the engine), then each neighbor message is
+///    subjected to `net.delivers`; survivors update `Â` and their latency
+///    is charged to the barrier,
+/// 4. online clients run the consensus step,
+/// 5. the [`VirtualClock`] advances by the slowest online client's
+///    compute time (stragglers stretch the round) plus the slowest
+///    surviving message.
+///
+/// With `IdealNetwork` every mask is all-true, every message survives with
+/// zero latency, and steps 1–4 reduce to the engine's loop — bit-identical
+/// factors.
+pub fn train_sim(
+    cfg: &TrainConfig,
+    data: &SynthData,
+    backend: &mut dyn ComputeBackend,
+    net: &mut dyn NetworkModel,
+    fms_reference: Option<&FactorSet>,
+) -> anyhow::Result<TrainOutcome> {
+    let d_order = data.tensor.dims.len();
+    anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
+    let graph = Graph::build(cfg.topology, cfg.k)?;
+    let decentralized = cfg.k > 1;
+    let mut clients = build_clients(cfg, data, &graph);
+
+    let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
+    let trigger = cfg.trigger_schedule();
+    let all_modes: Vec<usize> = (0..d_order).collect();
+    let mut clock = VirtualClock::default();
+
+    let mut points = Vec::with_capacity(cfg.epochs + 1);
+    record_point(&mut clients, cfg, backend, fms_reference, 0, 0, clock.now(), &mut points)?;
+
+    let total_iters = cfg.epochs * cfg.iters_per_epoch;
+    for t in 0..total_iters {
+        let online: Vec<bool> = (0..cfg.k).map(|k| net.online(k, t)).collect();
+        let sampled_mode = block_sampler.next_mode();
+        let modes: &[usize] =
+            if cfg.algo.block_random { std::slice::from_ref(&sampled_mode) } else { &all_modes };
+
+        // ---- local steps (skipped while churned out) ----
+        let mut round_compute = 0.0f64;
+        for c in clients.iter_mut() {
+            if !online[c.id] {
+                c.net.offline_rounds += 1;
+                continue;
+            }
+            for &m in modes {
+                let beta = cfg.algo.momentum;
+                c.local_step(m, cfg.loss, cfg.fiber_samples, cfg.gamma, beta, backend)?;
+                if cfg.algo.error_feedback {
+                    apply_error_feedback(c, m, cfg.algo.compressor);
+                }
+            }
+            let cost = cfg.sim_iter_s * net.compute_multiplier(c.id);
+            if cost > round_compute {
+                round_compute = cost;
+            }
+        }
+        clock.advance(round_compute);
+
+        // ---- gossip through the network model ----
+        if decentralized && t % cfg.algo.tau == 0 {
+            for &m in modes {
+                if m == 0 {
+                    continue; // patient mode never travels
+                }
+                let payloads =
+                    publish_phase(&mut clients, &graph, cfg, &trigger, t, m, Some(&online[..]));
+
+                for k in 0..clients.len() {
+                    if !online[k] {
+                        // receiver is down: everything addressed to it is lost
+                        for &j in &graph.neighbors[k] {
+                            if payloads[j].is_some() {
+                                clients[k].net.dropped += 1;
+                            }
+                        }
+                        continue;
+                    }
+                    // own delta applies locally, never on the wire
+                    if let Some(p) = &payloads[k] {
+                        clients[k].estimates.as_mut().expect("estimates").apply_delta(k, m, p);
+                    }
+                    for &j in &graph.neighbors[k] {
+                        let Some(p) = &payloads[j] else { continue };
+                        if net.delivers(j, k, t) {
+                            clients[k].estimates.as_mut().expect("estimates").apply_delta(j, m, p);
+                            clients[k].net.delivered += 1;
+                            let wire = p.wire_bytes() + Message::HEADER_BYTES;
+                            clock.note_latency(net.latency_s(j, k, wire));
+                        } else {
+                            clients[k].net.dropped += 1;
+                        }
+                    }
+                }
+                clock.flush_latency();
+
+                consensus_phase(&mut clients, &graph, cfg.algo.rho, m, Some(&online[..]));
+            }
+        }
+
+        // ---- metrics per epoch ----
+        if (t + 1) % cfg.iters_per_epoch == 0 {
+            let epoch = (t + 1) / cfg.iters_per_epoch;
+            let now = clock.now();
+            let iter = t + 1;
+            record_point(&mut clients, cfg, backend, fms_reference, epoch, iter, now, &mut points)?;
+            if !points.last().map(|p| p.loss.is_finite()).unwrap_or(true) {
+                eprintln!(
+                    "[{}] diverged at epoch {epoch} (gamma {} too large) — stopping early",
+                    cfg.algo.name, cfg.gamma
+                );
+                break;
+            }
+        }
+    }
+
+    let factors = assemble_global(&clients);
+    let record = finalize_record(cfg, &graph, &clients, points, clock.now());
+    Ok(TrainOutcome { record, factors })
+}

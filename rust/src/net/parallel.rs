@@ -1,0 +1,274 @@
+//! Thread-parallel gossip runtime.
+//!
+//! The default engine (`engine::train`) executes clients sequentially —
+//! deterministic and ideal for experiments. This module runs the *same*
+//! protocol with one OS thread per client, synchronous rounds enforced by
+//! barriers, and payload exchange through shared mailboxes: the deployment
+//! shape of the coordinator (one process per hospital, lock-step gossip).
+//!
+//! Determinism is preserved: every client draws from its own seeded
+//! stream and the shared block sequence, so `train_parallel` produces
+//! **bit-identical factors** to `engine::train` (asserted in tests) —
+//! threads only change wall-clock, not results.
+//!
+//! For runs over *imperfect* networks (latency, loss, stragglers, churn)
+//! see [`crate::net::driver`] and [`crate::net::sim`].
+
+use std::sync::{Arc, Barrier, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::compress::Payload;
+use crate::engine::client::ClientState;
+use crate::engine::metrics::MetricPoint;
+use crate::engine::{
+    apply_error_feedback, assemble_global, build_clients, finalize_record, publish_one,
+    TrainConfig, TrainOutcome,
+};
+use crate::factor::{fms::fms, FactorSet};
+use crate::runtime::ComputeBackend;
+use crate::sched::BlockSampler;
+use crate::tensor::synth::SynthData;
+use crate::topology::Graph;
+
+/// Per-round mailbox: slot `k` holds client k's broadcast payload for the
+/// current (mode, round), or `None` when its event trigger suppressed.
+type Mailbox = Arc<Vec<RwLock<Option<Payload>>>>;
+
+/// Run one configuration with one thread per client.
+///
+/// `make_backend(k)` builds client k's compute backend *inside its
+/// thread* (PJRT clients are per-thread; the native mirror is cheap).
+pub fn train_parallel<F>(
+    cfg: &TrainConfig,
+    data: &SynthData,
+    make_backend: F,
+    fms_reference: Option<&FactorSet>,
+) -> anyhow::Result<TrainOutcome>
+where
+    F: Fn(usize) -> anyhow::Result<Box<dyn ComputeBackend>> + Sync,
+{
+    let k_clients = cfg.k;
+    anyhow::ensure!(k_clients >= 1);
+    let graph = Arc::new(Graph::build(cfg.topology, k_clients)?);
+    let decentralized = k_clients > 1;
+    let d_order = data.tensor.dims.len();
+
+    // clients built on the main thread by the shared helper (bit-identical
+    // starting state across all execution paths), then moved into threads
+    let initial_clients = build_clients(cfg, data, &graph);
+    let barrier = Arc::new(Barrier::new(k_clients));
+    let mailbox: Mailbox = Arc::new((0..k_clients).map(|_| RwLock::new(None)).collect());
+    // per-epoch loss accumulator: (epoch slot) -> summed loss
+    let total_iters = cfg.epochs * cfg.iters_per_epoch;
+    let n_points = cfg.epochs + 1;
+    let losses = Arc::new(Mutex::new(vec![0.0f64; n_points]));
+    let bytes_per_point = Arc::new(Mutex::new(vec![0u64; n_points]));
+    let trigger = cfg.trigger_schedule();
+    let t0 = Instant::now();
+
+    let results: Vec<anyhow::Result<(ClientState, Vec<f64>)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(k_clients);
+        for (id, mut client) in initial_clients.into_iter().enumerate() {
+            let graph = Arc::clone(&graph);
+            let barrier = Arc::clone(&barrier);
+            let mailbox = Arc::clone(&mailbox);
+            let losses = Arc::clone(&losses);
+            let bytes_per_point = Arc::clone(&bytes_per_point);
+            let cfg = cfg.clone();
+            let make_backend = &make_backend;
+            handles.push(scope.spawn(move || -> anyhow::Result<(ClientState, Vec<f64>)> {
+                let mut backend = make_backend(id)?;
+                // shared block sequence: same seed on every thread
+                let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
+                let all_modes: Vec<usize> = (0..d_order).collect();
+                let mut times = Vec::with_capacity(n_points);
+
+                // epoch-0 metric point
+                let l0 = client.eval_loss(cfg.loss, backend.as_mut())?;
+                losses.lock().unwrap()[0] += l0;
+                times.push(t0.elapsed().as_secs_f64());
+                barrier.wait();
+
+                for t in 0..total_iters {
+                    let sampled_mode = block_sampler.next_mode();
+                    let modes: &[usize] = if cfg.algo.block_random {
+                        std::slice::from_ref(&sampled_mode)
+                    } else {
+                        &all_modes
+                    };
+                    for &m in modes {
+                        client.local_step(
+                            m,
+                            cfg.loss,
+                            cfg.fiber_samples,
+                            cfg.gamma,
+                            cfg.algo.momentum,
+                            backend.as_mut(),
+                        )?;
+                        if cfg.algo.error_feedback {
+                            apply_error_feedback(&mut client, m, cfg.algo.compressor);
+                        }
+                    }
+
+                    if decentralized && t % cfg.algo.tau == 0 {
+                        for &m in modes {
+                            if m == 0 {
+                                continue; // patient mode never travels
+                            }
+                            // 1) publish (Alg. 1 lines 10-14), via the
+                            // shared single-client publish core
+                            let payload = publish_one(&mut client, &graph, &cfg, &trigger, t, m);
+                            *mailbox[id].write().unwrap() = payload;
+                            barrier.wait(); // all published
+
+                            // 2) deliver (line 16)
+                            let mut delivered = 0;
+                            {
+                                let est = client.estimates.as_mut().expect("estimates");
+                                if let Some(p) = mailbox[id].read().unwrap().as_ref() {
+                                    est.apply_delta(id, m, p);
+                                }
+                                for &j in &graph.neighbors[id] {
+                                    if let Some(p) = mailbox[j].read().unwrap().as_ref() {
+                                        est.apply_delta(j, m, p);
+                                        delivered += 1;
+                                    }
+                                }
+                            }
+                            client.net.delivered += delivered;
+                            barrier.wait(); // all delivered before slots are reused
+
+                            // 3) consensus (line 18)
+                            let ClientState { estimates, factors, .. } = &mut client;
+                            estimates.as_ref().expect("estimates").consensus_into(
+                                &mut factors.mats[m],
+                                m,
+                                &graph.neighbors[id],
+                                &graph.weights[id],
+                                cfg.algo.rho,
+                            );
+                        }
+                    }
+
+                    if (t + 1) % cfg.iters_per_epoch == 0 {
+                        let slot = (t + 1) / cfg.iters_per_epoch;
+                        let l = client.eval_loss(cfg.loss, backend.as_mut())?;
+                        losses.lock().unwrap()[slot] += l;
+                        bytes_per_point.lock().unwrap()[slot] += client.ledger.bytes;
+                        times.push(t0.elapsed().as_secs_f64());
+                        barrier.wait(); // consistent epoch boundaries
+                    }
+                }
+                Ok((client, times))
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+
+    let mut clients = Vec::with_capacity(k_clients);
+    let mut times: Vec<f64> = vec![0.0; n_points];
+    for r in results {
+        let (c, t) = r?;
+        for (slot, v) in t.iter().enumerate() {
+            times[slot] = times[slot].max(*v);
+        }
+        clients.push(c);
+    }
+    clients.sort_by_key(|c| c.id);
+
+    let losses = Arc::try_unwrap(losses).unwrap().into_inner().unwrap();
+    let bytes = Arc::try_unwrap(bytes_per_point).unwrap().into_inner().unwrap();
+    let factors = assemble_global(&clients);
+    let fms_final = fms_reference.map(|r| fms(&factors, r));
+    let points: Vec<MetricPoint> = (0..n_points)
+        .map(|slot| MetricPoint {
+            epoch: slot,
+            iter: slot * cfg.iters_per_epoch,
+            time_s: times[slot],
+            loss: losses[slot],
+            bytes: bytes[slot],
+            fms: if slot + 1 == n_points { fms_final } else { None },
+        })
+        .collect();
+    let record = finalize_record(cfg, &graph, &clients, points, t0.elapsed().as_secs_f64());
+    Ok(TrainOutcome { record, factors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{train, AlgoConfig};
+    use crate::losses::Loss;
+    use crate::runtime::native::NativeBackend;
+    use crate::tensor::synth::SynthConfig;
+
+    fn tiny_cfg(algo: AlgoConfig, k: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::new("tiny", Loss::Logit, algo);
+        cfg.rank = 4;
+        cfg.fiber_samples = 16;
+        cfg.k = k;
+        cfg.gamma = 0.5;
+        cfg.iters_per_epoch = 60;
+        cfg.epochs = 3;
+        cfg.eval_batch = 64;
+        cfg
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let data = SynthConfig::tiny(42).generate();
+        let cfg = tiny_cfg(AlgoConfig::cidertf(2), 4);
+        let mut backend = NativeBackend::new();
+        let seq = train(&cfg, &data, &mut backend, None).unwrap();
+        let par = train_parallel(
+            &cfg,
+            &data,
+            |_| Ok(Box::new(NativeBackend::new()) as Box<dyn ComputeBackend>),
+            None,
+        )
+        .unwrap();
+        for (a, b) in seq.factors.mats.iter().zip(par.factors.mats.iter()) {
+            assert_eq!(a.data, b.data, "parallel and sequential factors diverge");
+        }
+        assert_eq!(seq.record.total.bytes, par.record.total.bytes);
+        assert_eq!(seq.record.total.triggered, par.record.total.triggered);
+        assert_eq!(seq.record.net.delivered, par.record.net.delivered);
+        // per-epoch loss sums agree
+        for (p, q) in seq.record.points.iter().zip(par.record.points.iter()) {
+            assert!((p.loss - q.loss).abs() < 1e-6 * p.loss.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn parallel_all_mode_algorithms_match_too() {
+        let data = SynthConfig::tiny(7).generate();
+        let cfg = tiny_cfg(AlgoConfig::dpsgd_sign(), 3);
+        let mut backend = NativeBackend::new();
+        let seq = train(&cfg, &data, &mut backend, None).unwrap();
+        let par = train_parallel(
+            &cfg,
+            &data,
+            |_| Ok(Box::new(NativeBackend::new()) as Box<dyn ComputeBackend>),
+            None,
+        )
+        .unwrap();
+        for (a, b) in seq.factors.mats.iter().zip(par.factors.mats.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn parallel_k1_centralized() {
+        let data = SynthConfig::tiny(9).generate();
+        let cfg = tiny_cfg(AlgoConfig::bras_cpd(), 1);
+        let par = train_parallel(
+            &cfg,
+            &data,
+            |_| Ok(Box::new(NativeBackend::new()) as Box<dyn ComputeBackend>),
+            None,
+        )
+        .unwrap();
+        assert_eq!(par.record.total.bytes, 0);
+        assert!(par.record.final_loss().is_finite());
+    }
+}

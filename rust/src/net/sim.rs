@@ -1,0 +1,688 @@
+//! Event-driven network simulator: link models, faults, and virtual time.
+//!
+//! The engine's gossip exchange (Alg. 1 lines 9-18) assumes an *ideal*
+//! network — every message arrives, instantly, every round. Real hospital
+//! deployments see none of that: WAN links drop packets (i.i.d. and in
+//! bursts), clients compute at different speeds (stragglers), and nodes
+//! leave and rejoin (churn). This module models those behaviours behind
+//! the [`NetworkModel`] trait so every execution path in
+//! [`crate::net::driver`] can run against the same fault envelope.
+//!
+//! Design notes:
+//!
+//! * **Determinism.** Static traits (per-link latency spread, straggler
+//!   assignment, churn windows) come from stable hashes of
+//!   `(seed, link/client[, period])`; drop decisions come from an
+//!   independent seeded [`Rng`] stream *per directed link*, advanced once
+//!   per message on that link. Either way a run is a pure function of its
+//!   config, and one link's loss pattern does not depend on traffic
+//!   elsewhere. No wall clock is consulted anywhere; time is
+//!   [`VirtualClock`] time.
+//! * **Ideal == no-op.** [`IdealNetwork`] returns "deliver, instantly,
+//!   everyone online" unconditionally, which is what makes the sync
+//!   simulator bit-identical to `engine::train` (asserted in tests).
+//! * **CHOCO-style tolerance.** Dropped or late deltas leave the peer
+//!   estimate `Â` stale rather than corrupt — exactly the error the
+//!   compressed-gossip analysis (paper Thm. III.2) already absorbs, which
+//!   is why convergence degrades gracefully under loss.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::gossip::Message;
+use crate::util::rng::Rng;
+
+/// Per-run network delivery statistics (reported in
+/// [`crate::engine::metrics::RunRecord`]).
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    /// neighbor deltas that arrived and were applied to `Â`
+    pub delivered: u64,
+    /// neighbor deltas lost to link faults or offline receivers
+    pub dropped: u64,
+    /// deltas applied after the receiver had already passed the sender's
+    /// round (async path only — sync rounds are never stale)
+    pub stale: u64,
+    /// (client, round) pairs skipped because the client was churned out
+    pub offline_rounds: u64,
+}
+
+impl NetStats {
+    /// Accumulate another client's counters.
+    pub fn merge(&mut self, other: &NetStats) {
+        self.delivered += other.delivered;
+        self.dropped += other.dropped;
+        self.stale += other.stale;
+        self.offline_rounds += other.offline_rounds;
+    }
+
+    /// Fraction of attempted deliveries that were lost (`0.0` when no
+    /// traffic was attempted).
+    pub fn drop_fraction(&self) -> f64 {
+        let attempted = self.delivered + self.dropped;
+        if attempted == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / attempted as f64
+        }
+    }
+}
+
+/// Behavioural model of the communication fabric between clients.
+///
+/// Methods take `&mut self` because fault models keep per-link state
+/// (burst machines) and internal RNG streams. Calls happen in a
+/// deterministic order from the single-threaded simulators, so equal
+/// seeds yield equal runs.
+pub trait NetworkModel {
+    /// Human-readable model name (for tables and run records).
+    fn name(&self) -> &'static str;
+
+    /// One-way delay in (virtual) seconds for `bytes` on the directed
+    /// link `from -> to`.
+    fn latency_s(&mut self, from: usize, to: usize, bytes: u64) -> f64;
+
+    /// Does a message on `from -> to` at `round` survive the link?
+    fn delivers(&mut self, from: usize, to: usize, round: usize) -> bool;
+
+    /// Relative compute cost of one local iteration on `client`
+    /// (`1.0` = nominal, `> 1.0` = straggler).
+    fn compute_multiplier(&mut self, client: usize) -> f64;
+
+    /// Is `client` participating at `round`? Offline clients neither
+    /// compute nor send, and anything addressed to them is lost.
+    fn online(&mut self, client: usize, round: usize) -> bool;
+}
+
+/// The lossless, zero-latency, homogeneous network (the engine's implicit
+/// assumption). Running any driver against it reproduces ideal-network
+/// semantics exactly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdealNetwork;
+
+impl IdealNetwork {
+    /// Boxed trait object, for driver constructors.
+    pub fn boxed() -> Box<dyn NetworkModel> {
+        Box::new(IdealNetwork)
+    }
+}
+
+impl NetworkModel for IdealNetwork {
+    fn name(&self) -> &'static str {
+        "ideal"
+    }
+
+    fn latency_s(&mut self, _from: usize, _to: usize, _bytes: u64) -> f64 {
+        0.0
+    }
+
+    fn delivers(&mut self, _from: usize, _to: usize, _round: usize) -> bool {
+        true
+    }
+
+    fn compute_multiplier(&mut self, _client: usize) -> f64 {
+        1.0
+    }
+
+    fn online(&mut self, _client: usize, _round: usize) -> bool {
+        true
+    }
+}
+
+/// Convenience constructor for the ideal network model.
+pub fn ideal() -> Box<dyn NetworkModel> {
+    IdealNetwork::boxed()
+}
+
+/// Declarative fault envelope for [`FaultyNetwork`].
+///
+/// Every knob defaults to "off", so `FaultConfig::default()` behaves like
+/// [`IdealNetwork`] up to latency bookkeeping.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// seed for every stochastic decision in the model
+    pub seed: u64,
+    /// i.i.d. per-message drop probability in the link's *good* state
+    pub drop_rate: f64,
+    /// probability per message of a link entering a loss burst
+    pub burst_rate: f64,
+    /// expected number of messages a burst lasts (geometric exit)
+    pub burst_len: f64,
+    /// drop probability while a link is inside a burst
+    pub burst_drop: f64,
+    /// base one-way propagation delay per link, seconds
+    pub latency_base_s: f64,
+    /// relative static per-link latency spread in `[0, jitter]`
+    /// (heterogeneous links: hospital A-B is consistently slower than B-C)
+    pub latency_jitter: f64,
+    /// link bandwidth in bytes/second (`0.0` = infinite)
+    pub bandwidth_bps: f64,
+    /// fraction of clients that are compute stragglers (sampled by a
+    /// stable per-client hash)
+    pub straggler_frac: f64,
+    /// explicit straggler client ids (deterministic, in addition to the
+    /// sampled fraction — useful for tests and targeted scenarios)
+    pub straggler_ids: Vec<usize>,
+    /// compute multiplier applied to stragglers (`>= 1.0`)
+    pub straggler_slow: f64,
+    /// per-period probability that a client is churned out
+    pub churn_rate: f64,
+    /// rounds per churn decision period (availability granularity)
+    pub churn_period: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0xFA17,
+            drop_rate: 0.0,
+            burst_rate: 0.0,
+            burst_len: 8.0,
+            burst_drop: 0.9,
+            latency_base_s: 0.0,
+            latency_jitter: 0.0,
+            bandwidth_bps: 0.0,
+            straggler_frac: 0.0,
+            straggler_ids: Vec::new(),
+            straggler_slow: 4.0,
+            churn_rate: 0.0,
+            churn_period: 50,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// i.i.d. message loss at probability `p`.
+    pub fn lossy(p: f64) -> Self {
+        FaultConfig { drop_rate: p, ..Default::default() }
+    }
+
+    /// Bursty Gilbert–Elliott-style loss: mostly clean links that
+    /// occasionally collapse for `burst_len` messages at a time.
+    pub fn bursty() -> Self {
+        FaultConfig { drop_rate: 0.01, burst_rate: 0.02, ..Default::default() }
+    }
+
+    /// Heterogeneous WAN latency/bandwidth, no loss.
+    pub fn wan() -> Self {
+        FaultConfig {
+            latency_base_s: 0.05,
+            latency_jitter: 1.0,
+            bandwidth_bps: 1e6,
+            ..Default::default()
+        }
+    }
+
+    /// A quarter of the clients compute 4x slower.
+    pub fn stragglers() -> Self {
+        FaultConfig { straggler_frac: 0.25, straggler_slow: 4.0, ..Default::default() }
+    }
+
+    /// Clients leave and rejoin (10% downtime in 50-round blocks).
+    pub fn churning() -> Self {
+        FaultConfig { churn_rate: 0.1, ..Default::default() }
+    }
+
+    /// Everything at once — the stress scenario.
+    pub fn hostile() -> Self {
+        FaultConfig {
+            drop_rate: 0.1,
+            burst_rate: 0.01,
+            latency_base_s: 0.05,
+            latency_jitter: 1.0,
+            bandwidth_bps: 1e6,
+            straggler_frac: 0.25,
+            churn_rate: 0.05,
+            ..Default::default()
+        }
+    }
+
+    /// Look up a scenario by CLI name; `lossy:<p>` selects the drop rate.
+    pub fn by_name(spec: &str) -> anyhow::Result<Option<Self>> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => {
+                let v = a
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad numeric argument in '{spec}'"))?;
+                (n, Some(v))
+            }
+            None => (spec, None),
+        };
+        Ok(match name {
+            "ideal" => None,
+            "lossy" => {
+                let p = arg.unwrap_or(0.2);
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "drop probability {p} out of range [0, 1] in '{spec}'"
+                );
+                Some(Self::lossy(p))
+            }
+            "bursty" => Some(Self::bursty()),
+            "wan" => Some(Self::wan()),
+            "stragglers" => Some(Self::stragglers()),
+            "churning" => Some(Self::churning()),
+            "hostile" => Some(Self::hostile()),
+            other => anyhow::bail!(
+                "unknown network scenario '{other}' \
+                 (ideal|lossy[:p]|bursty|wan|stragglers|churning|hostile)"
+            ),
+        })
+    }
+
+    /// Override the scenario seed (builder style).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Materialize the model.
+    pub fn build(self) -> FaultyNetwork {
+        FaultyNetwork::new(self)
+    }
+
+    /// Materialize as a boxed trait object.
+    pub fn boxed(self) -> Box<dyn NetworkModel> {
+        Box::new(self.build())
+    }
+}
+
+/// Deterministic hash of a small tuple into `[0, 1)` — used for *static*
+/// per-link / per-client traits (latency spread, straggler assignment,
+/// churn windows) so they do not depend on call order.
+fn unit_hash(seed: u64, a: u64, b: u64, c: u64) -> f64 {
+    let mut x = seed ^ 0x9E37_79B9_7F4A_7C15;
+    for v in [a.wrapping_add(1), b.wrapping_add(0x1000), c.wrapping_add(0x2000)] {
+        x ^= v.wrapping_mul(0xA24B_AED4_963E_E407);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+    }
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Per-directed-link fault state: an independent RNG stream plus the
+/// Gilbert–Elliott burst flag, so a link's loss pattern is a pure
+/// function of `(seed, link, message sequence)` — independent of the
+/// traffic on every other link.
+#[derive(Debug, Clone)]
+struct LinkState {
+    in_burst: bool,
+    rng: Rng,
+}
+
+impl LinkState {
+    fn new(seed: u64, from: usize, to: usize) -> Self {
+        let stream = ((from as u64) << 32) | to as u64;
+        LinkState { in_burst: false, rng: Rng::new(seed ^ 0x5EED_0F_FA_u64).split(stream) }
+    }
+}
+
+/// Seeded realization of a [`FaultConfig`].
+pub struct FaultyNetwork {
+    cfg: FaultConfig,
+    /// directed-link fault machines, keyed `(from, to)`
+    links: std::collections::HashMap<(usize, usize), LinkState>,
+}
+
+impl FaultyNetwork {
+    /// Build the model; all decision streams derive from `cfg.seed`.
+    pub fn new(cfg: FaultConfig) -> Self {
+        FaultyNetwork { cfg, links: std::collections::HashMap::new() }
+    }
+
+    /// The fault envelope this model realizes.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+}
+
+impl NetworkModel for FaultyNetwork {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn latency_s(&mut self, from: usize, to: usize, bytes: u64) -> f64 {
+        // static heterogeneity: each undirected link gets a fixed spread
+        let (a, b) = if from < to { (from, to) } else { (to, from) };
+        let link_hash = unit_hash(self.cfg.seed, a as u64, b as u64, 7);
+        let spread = 1.0 + self.cfg.latency_jitter * link_hash;
+        let transfer = if self.cfg.bandwidth_bps > 0.0 {
+            bytes as f64 / self.cfg.bandwidth_bps
+        } else {
+            0.0
+        };
+        self.cfg.latency_base_s * spread + transfer
+    }
+
+    fn delivers(&mut self, from: usize, to: usize, _round: usize) -> bool {
+        let seed = self.cfg.seed;
+        let state =
+            self.links.entry((from, to)).or_insert_with(|| LinkState::new(seed, from, to));
+        // burst transitions (Gilbert–Elliott): geometric entry and exit
+        if state.in_burst {
+            if state.rng.bernoulli(1.0 / self.cfg.burst_len.max(1.0)) {
+                state.in_burst = false;
+            }
+        } else if self.cfg.burst_rate > 0.0 && state.rng.bernoulli(self.cfg.burst_rate) {
+            state.in_burst = true;
+        }
+        let p_drop = if state.in_burst { self.cfg.burst_drop } else { self.cfg.drop_rate };
+        !(p_drop > 0.0 && state.rng.bernoulli(p_drop))
+    }
+
+    fn compute_multiplier(&mut self, client: usize) -> f64 {
+        if self.cfg.straggler_ids.contains(&client)
+            || unit_hash(self.cfg.seed, client as u64, 0, 13) < self.cfg.straggler_frac
+        {
+            self.cfg.straggler_slow.max(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    fn online(&mut self, client: usize, round: usize) -> bool {
+        if self.cfg.churn_rate <= 0.0 {
+            return true;
+        }
+        let period = (round / self.cfg.churn_period.max(1)) as u64;
+        unit_hash(self.cfg.seed, client as u64, period, 29) >= self.cfg.churn_rate
+    }
+}
+
+/// Monotone simulated clock shared by the network-mediated drivers.
+///
+/// Compute and propagation costs are *accounted*, not slept: the sync
+/// driver advances by the slowest client per round (barrier semantics),
+/// the async driver advances to each event's timestamp.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: f64,
+    pending_latency: f64,
+}
+
+impl VirtualClock {
+    /// Current simulated time in seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt` seconds (`dt < 0` is clamped to zero).
+    pub fn advance(&mut self, dt: f64) {
+        self.now += dt.max(0.0);
+    }
+
+    /// Record an in-flight message latency; a synchronous barrier waits
+    /// for the slowest one (applied by [`Self::flush_latency`]).
+    pub fn note_latency(&mut self, latency_s: f64) {
+        if latency_s > self.pending_latency {
+            self.pending_latency = latency_s;
+        }
+    }
+
+    /// Apply the slowest recorded latency and reset it.
+    pub fn flush_latency(&mut self) {
+        self.now += self.pending_latency;
+        self.pending_latency = 0.0;
+    }
+
+    /// Jump to an absolute timestamp (events never run backwards).
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Discrete event kinds for the async gossip loop.
+#[derive(Debug, Clone)]
+pub enum EventKind {
+    /// client `client` is ready to start its next local iteration
+    Resume {
+        /// client id
+        client: usize,
+    },
+    /// a gossip message reaches its receiver
+    Deliver {
+        /// receiving client id
+        to: usize,
+        /// the message (payload + provenance), shared across the
+        /// sender's per-neighbor deliveries instead of deep-cloned
+        msg: Arc<Message>,
+    },
+}
+
+/// A timestamped simulator event; ordering is `(time, seq)` so ties break
+/// deterministically in insertion order.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// virtual-time firing point, seconds
+    pub time: f64,
+    /// global insertion sequence (tie-breaker)
+    pub seq: u64,
+    /// what happens
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time) == Ordering::Equal && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap event queue with deterministic FIFO tie-breaking.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `kind` at absolute virtual time `time`.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse(Event { time, seq, kind }));
+    }
+
+    /// Pop the earliest event (FIFO among equal timestamps).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|r| r.0)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Payload;
+
+    #[test]
+    fn ideal_network_is_transparent() {
+        let mut net = IdealNetwork;
+        for r in 0..100 {
+            assert!(net.delivers(0, 1, r));
+            assert!(net.online(r % 4, r));
+        }
+        assert_eq!(net.latency_s(0, 1, 1 << 20), 0.0);
+        assert_eq!(net.compute_multiplier(3), 1.0);
+    }
+
+    #[test]
+    fn lossy_drop_fraction_matches_rate() {
+        let mut net = FaultConfig::lossy(0.3).build();
+        let mut dropped = 0usize;
+        let n = 50_000;
+        for r in 0..n {
+            if !net.delivers(0, 1, r) {
+                dropped += 1;
+            }
+        }
+        let frac = dropped as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.02, "observed drop fraction {frac}");
+    }
+
+    #[test]
+    fn faulty_network_is_deterministic() {
+        let decisions = |seed: u64| {
+            let mut net = FaultConfig::hostile().with_seed(seed).build();
+            (0..500)
+                .map(|r| {
+                    (
+                        net.delivers(r % 3, (r + 1) % 3, r),
+                        net.online(r % 5, r),
+                        net.latency_s(0, 1, 100).to_bits(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(decisions(7), decisions(7));
+        assert_ne!(decisions(7), decisions(8));
+    }
+
+    #[test]
+    fn bursts_drop_in_runs() {
+        // rare bursts (mean good run ~100 msgs) of total loss (~10 msgs):
+        // overall drop fraction ~9%, but heavily clustered
+        let cfg = FaultConfig {
+            drop_rate: 0.0,
+            burst_rate: 0.01,
+            burst_len: 10.0,
+            burst_drop: 1.0,
+            ..Default::default()
+        };
+        let mut net = cfg.build();
+        let outcomes: Vec<bool> = (0..20_000).map(|r| net.delivers(0, 1, r)).collect();
+        let total_drops = outcomes.iter().filter(|d| !**d).count();
+        assert!(total_drops > 500, "bursts never engaged ({total_drops} drops)");
+        // drops must cluster: count drop->drop adjacencies vs what i.i.d.
+        // loss at the same rate would produce
+        let pairs = outcomes.windows(2).filter(|w| !w[0] && !w[1]).count();
+        let p = total_drops as f64 / outcomes.len() as f64;
+        let iid_pairs = (outcomes.len() as f64 * p * p) as usize;
+        assert!(pairs > 4 * iid_pairs, "no clustering: {pairs} pairs vs iid {iid_pairs}");
+    }
+
+    #[test]
+    fn stragglers_are_a_stable_subset() {
+        let cfg = FaultConfig {
+            straggler_frac: 0.25,
+            straggler_ids: vec![3],
+            ..Default::default()
+        };
+        let mut net = cfg.build();
+        let mults: Vec<f64> = (0..16).map(|k| net.compute_multiplier(k)).collect();
+        let again: Vec<f64> = (0..16).map(|k| net.compute_multiplier(k)).collect();
+        assert_eq!(mults, again, "straggler assignment must be static");
+        assert!(mults[3] > 1.0, "explicit straggler id ignored");
+        let slow = mults.iter().filter(|&&m| m > 1.0).count();
+        assert!((1..=12).contains(&slow), "straggler count {slow} out of band");
+    }
+
+    #[test]
+    fn latency_is_static_per_link_and_charges_bandwidth() {
+        let mut net = FaultConfig::wan().build();
+        let l1 = net.latency_s(2, 5, 1000);
+        let l2 = net.latency_s(2, 5, 1000);
+        assert_eq!(l1, l2, "per-link latency must be static");
+        assert_eq!(net.latency_s(5, 2, 1000), l1, "latency must be symmetric");
+        let bigger = net.latency_s(2, 5, 1_000_000);
+        assert!(bigger > l1, "bandwidth term missing");
+    }
+
+    #[test]
+    fn churn_takes_clients_offline_sometimes() {
+        let mut net = FaultConfig::churning().build();
+        let mut offline = 0;
+        let mut total = 0;
+        for k in 0..8 {
+            for r in (0..5000).step_by(50) {
+                total += 1;
+                if !net.online(k, r) {
+                    offline += 1;
+                }
+            }
+        }
+        let frac = offline as f64 / total as f64;
+        assert!(frac > 0.02 && frac < 0.3, "churn fraction {frac}");
+        // stable within a period
+        assert_eq!(net.online(0, 0), net.online(0, 49));
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::Resume { client: 0 });
+        q.push(1.0, EventKind::Resume { client: 1 });
+        q.push(1.0, EventKind::Resume { client: 2 });
+        q.push(0.5, EventKind::Deliver { to: 3, msg: Arc::new(dummy_msg()) });
+        let mut order = Vec::new();
+        while let Some(ev) = q.pop() {
+            order.push(match ev.kind {
+                EventKind::Resume { client } => client,
+                EventKind::Deliver { to, .. } => to,
+            });
+        }
+        assert_eq!(order, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn virtual_clock_barriers() {
+        let mut c = VirtualClock::default();
+        c.advance(1.0);
+        c.note_latency(0.25);
+        c.note_latency(0.75);
+        c.note_latency(0.5);
+        c.flush_latency();
+        assert!((c.now() - 1.75).abs() < 1e-12);
+        c.advance_to(1.0); // never backwards
+        assert!((c.now() - 1.75).abs() < 1e-12);
+        c.advance_to(3.0);
+        assert!((c.now() - 3.0).abs() < 1e-12);
+    }
+
+    fn dummy_msg() -> Message {
+        Message { from: 0, mode: 1, round: 0, payload: Payload::Zero { len: 4 } }
+    }
+
+    #[test]
+    fn scenario_names_resolve() {
+        assert!(FaultConfig::by_name("ideal").unwrap().is_none());
+        let lossy = FaultConfig::by_name("lossy:0.35").unwrap().unwrap();
+        assert!((lossy.drop_rate - 0.35).abs() < 1e-12);
+        for name in ["bursty", "wan", "stragglers", "churning", "hostile"] {
+            assert!(FaultConfig::by_name(name).unwrap().is_some(), "{name}");
+        }
+        assert!(FaultConfig::by_name("carrier-pigeon").is_err());
+        assert!(FaultConfig::by_name("lossy:x").is_err());
+    }
+}

@@ -114,12 +114,21 @@ pub trait ComputeBackend {
 }
 
 /// PJRT-backed executor: the production backend.
+///
+/// Only available with the `pjrt` cargo feature (which needs the `xla`
+/// crate from the rust_pallas toolchain image — see Cargo.toml). Without
+/// it, a stub with the same API surface is compiled instead whose
+/// constructor returns a descriptive error, so everything downstream
+/// (CLI, examples, harness) builds and runs artifact-free on the native
+/// mirror.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     manifest: Manifest,
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn new(artifact_dir: &Path) -> anyhow::Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
@@ -166,6 +175,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ComputeBackend for PjrtBackend {
     fn grad(
         &mut self,
@@ -223,6 +233,59 @@ impl ComputeBackend for PjrtBackend {
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+/// Artifact-free stand-in for [`PjrtBackend`] when the `pjrt` feature is
+/// off: same API, but construction fails with instructions, so call sites
+/// (CLI `--backend pjrt`, examples, benches) compile unchanged and fail
+/// gracefully at runtime. Use `--backend native` / [`native::NativeBackend`]
+/// to run without artifacts.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtBackend {
+    /// uninhabitable: `new()` always errors, so no stub instance exists
+    _no_runtime: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtBackend {
+    pub fn new(_artifact_dir: &Path) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "PJRT backend unavailable: this binary was built without the `pjrt` \
+             cargo feature (requires the `xla` crate from the rust_pallas \
+             toolchain image). Use the native backend instead \
+             (`--backend native`), which mirrors the artifacts bit-faithfully."
+        )
+    }
+
+    /// Number of compiled executables currently cached (always 0: the
+    /// stub cannot compile anything).
+    pub fn cached(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ComputeBackend for PjrtBackend {
+    fn grad(
+        &mut self,
+        _loss: Loss,
+        _xs: &[f32],
+        _i_dim: usize,
+        _s_dim: usize,
+        _a: &Mat,
+        _us: &[&Mat],
+        _scale: f32,
+    ) -> anyhow::Result<(Mat, f64)> {
+        anyhow::bail!("PJRT backend stub: rebuild with `--features pjrt`")
+    }
+
+    fn eval(&mut self, _loss: Loss, _x: &[f32], _us: &[&Mat]) -> anyhow::Result<f64> {
+        anyhow::bail!("PJRT backend stub: rebuild with `--features pjrt`")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
     }
 }
 

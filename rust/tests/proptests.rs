@@ -2,7 +2,7 @@
 //! `propcheck` substrate (seeded; reproduce single cases with
 //! `CIDERTF_PROP_SEED=<seed>`).
 
-use cidertf::compress::Compressor;
+use cidertf::compress::{Compressor, Payload};
 use cidertf::factor::{fms::fms, FactorSet};
 use cidertf::losses::Loss;
 use cidertf::runtime::native::NativeBackend;
@@ -58,6 +58,143 @@ fn prop_sign_compressor_definition() {
             let max_bytes = 4 + n.div_ceil(8) as u64;
             if p.wire_bytes() != max_bytes {
                 return Err(format!("wire {} != {max_bytes}", p.wire_bytes()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Encode/decode round-trip for every compressor, with matrix sizes
+/// deliberately hitting non-multiple-of-8 lengths (Sign bit-packing tail
+/// bytes) and single-element edge cases.
+#[test]
+fn prop_payload_roundtrip_and_wire_bytes() {
+    forall(
+        "payload-roundtrip",
+        60,
+        |g| {
+            // n in [1, 257], biased toward sizes straddling byte boundaries
+            let rows = 1 + g.below(17);
+            let cols = 1 + g.below(15);
+            let ratio = 2 + g.below(8) as u32;
+            (Mat::rand_normal(rows, cols, 1.0, g), ratio)
+        },
+        |(m, ratio), _| {
+            let n = m.data.len();
+            for c in [Compressor::None, Compressor::Sign, Compressor::TopK { ratio: *ratio }] {
+                let p = c.compress(m);
+                // wire_bytes must match the documented encoding exactly
+                let want_bytes = match &p {
+                    Payload::Dense(v) => 4 * v.len() as u64,
+                    Payload::Sign { bits, .. } => 4 + bits.len() as u64,
+                    Payload::TopK { indices, values, .. } => {
+                        4 + 4 * (indices.len() + values.len()) as u64
+                    }
+                    Payload::Zero { .. } => 0,
+                };
+                if p.wire_bytes() != want_bytes {
+                    return Err(format!("{c:?}: wire {} != {want_bytes}", p.wire_bytes()));
+                }
+                if let Payload::Sign { bits, len, .. } = &p {
+                    if *len != n || bits.len() != n.div_ceil(8) {
+                        return Err(format!("sign packing: {} bytes for n={n}", bits.len()));
+                    }
+                }
+                // decode and add_into must agree (add_into on zeros = decode)
+                let d = p.decode(m.rows, m.cols);
+                let mut z = Mat::zeros(m.rows, m.cols);
+                p.add_into(&mut z);
+                if d.data != z.data {
+                    return Err(format!("{c:?}: decode != add_into-on-zero"));
+                }
+                // None round-trips exactly
+                if matches!(c, Compressor::None) && d.data != m.data {
+                    return Err("dense payload not lossless".into());
+                }
+                // Sign: |value| = ||m||_1/n everywhere, sign preserved
+                if matches!(c, Compressor::Sign) {
+                    let scale = (m.l1() / n as f64) as f32;
+                    for (x, y) in m.data.iter().zip(d.data.iter()) {
+                        let want = if *x >= 0.0 { scale } else { -scale };
+                        if (y - want).abs() > 1e-6 {
+                            return Err(format!("sign decode {y} != {want}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// TopK payloads keep indices strictly in-bounds, sorted, and unique —
+/// the invariants the receive-side `add_into` scatter relies on.
+#[test]
+fn prop_topk_index_bounds_and_uniqueness() {
+    forall(
+        "topk-indices",
+        50,
+        |g| {
+            let rows = 1 + g.below(12);
+            let cols = 1 + g.below(12);
+            let ratio = 2 + g.below(12) as u32;
+            (Mat::rand_normal(rows, cols, 1.0, g), ratio)
+        },
+        |(m, ratio), _| {
+            let n = m.data.len();
+            let p = Compressor::TopK { ratio: *ratio }.compress(m);
+            let Payload::TopK { indices, values, len } = &p else {
+                return Err("TopK compressor produced a non-TopK payload".into());
+            };
+            if *len != n {
+                return Err(format!("len {len} != {n}"));
+            }
+            if indices.len() != values.len() {
+                return Err("index/value arity mismatch".into());
+            }
+            let k = (n as u32 / ratio).max(1) as usize;
+            if indices.is_empty() || indices.len() > k {
+                return Err(format!("kept {} of expected <= {k}", indices.len()));
+            }
+            for w in indices.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("indices not strictly increasing: {w:?}"));
+                }
+            }
+            if indices.iter().any(|&i| i as usize >= n) {
+                return Err("index out of bounds".into());
+            }
+            for (&i, &v) in indices.iter().zip(values.iter()) {
+                if m.data[i as usize] != v {
+                    return Err(format!("value at {i} mutated: {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Zero payloads cost nothing on the wire and decode to zeros at every
+/// shape — the suppressed-trigger fast path.
+#[test]
+fn prop_zero_payload_is_free() {
+    forall(
+        "zero-payload",
+        30,
+        |g| (1 + g.below(20), 1 + g.below(20)),
+        |&(rows, cols), _| {
+            let p = Payload::Zero { len: rows * cols };
+            if p.wire_bytes() != 0 {
+                return Err("zero payload charged bytes".into());
+            }
+            if p.decode(rows, cols).data.iter().any(|&v| v != 0.0) {
+                return Err("zero payload decoded nonzero".into());
+            }
+            let mut t = Mat::from_fn(rows, cols, |i, j| (i + j) as f32);
+            let before = t.clone();
+            p.add_into(&mut t);
+            if t.data != before.data {
+                return Err("zero add_into changed the target".into());
             }
             Ok(())
         },

@@ -1,0 +1,157 @@
+//! Minimal vendored subset of the `anyhow` error-handling API.
+//!
+//! The build environment has no network access to crates.io, so this crate
+//! provides the (small) slice of `anyhow` the workspace actually uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//! The design mirrors upstream `anyhow`: `Error` is an opaque wrapper around
+//! a boxed [`std::error::Error`], deliberately does **not** implement
+//! `std::error::Error` itself (so the blanket `From` impl below stays
+//! coherent with `impl<T> From<T> for T`), and renders the source chain in
+//! its `Debug` output.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` — the crate-wide fallible return type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque, dynamically-typed error.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap any concrete error type.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Build an error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// The chain's root-level message (identical to `Display`).
+    pub fn to_string_chainless(&self) -> String {
+        self.inner.to_string()
+    }
+
+    /// Borrow the wrapped error.
+    pub fn as_dyn(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        self.inner.as_ref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error { inner: Box::new(error) }
+    }
+}
+
+/// A plain-string error (the payload behind `anyhow!`-built errors).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!(
+                "condition failed: `{}`",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn needs_message() -> Result<()> {
+        bail!("failed with code {}", 7)
+    }
+
+    fn needs_ensure(x: usize) -> Result<usize> {
+        ensure!(x > 1);
+        ensure!(x < 10, "x too large: {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn macros_produce_messages() {
+        let e = needs_message().unwrap_err();
+        assert_eq!(e.to_string(), "failed with code 7");
+        assert!(needs_ensure(5).is_ok());
+        assert!(needs_ensure(0).unwrap_err().to_string().contains("condition failed"));
+        assert_eq!(needs_ensure(50).unwrap_err().to_string(), "x too large: 50");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("nope").unwrap_err();
+        assert!(!e.to_string().is_empty());
+        // Debug rendering never panics and includes the message.
+        assert!(format!("{e:?}").contains(&e.to_string()));
+    }
+}
