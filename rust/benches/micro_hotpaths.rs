@@ -57,12 +57,27 @@ fn main() {
     let mut target = Mat::zeros(dims[1], r);
     bench("consensus_axpy_320x16", 300, || target.axpy(0.33, &a));
 
-    // --- hot path 5: full gradient step, native vs PJRT ---
+    // --- hot path 5: full gradient step, naive vs blocked vs PJRT ---
     let u_refs: Vec<&Mat> = u_bufs.iter().collect();
     let mut native = NativeBackend::new();
-    bench("grad_native_patient_544xS", 2000, || {
+    bench("grad_native_naive_patient_544xS", 2000, || {
         native
-            .grad(Loss::Logit, &xs0, dims[0], s, &factors.mats[0], &u_refs, 1.0 / s as f32)
+            .grad_naive(Loss::Logit, &xs0, dims[0], s, &factors.mats[0], &u_refs, 1.0 / s as f32)
+            .unwrap()
+    });
+    let mut g_out = Mat::zeros(dims[0], r);
+    bench("grad_native_blocked_patient_544xS", 2000, || {
+        native
+            .grad_into(
+                Loss::Logit,
+                &xs0,
+                dims[0],
+                s,
+                &factors.mats[0],
+                &u_bufs,
+                1.0 / s as f32,
+                &mut g_out,
+            )
             .unwrap()
     });
     let dir = default_artifact_dir();

@@ -5,6 +5,22 @@
 //! actual serialized byte count (bit-packed signs, u32 indices, f32
 //! values), not an analytical estimate, so the measured compression ratios
 //! in Fig. 6 / Table II come from genuine payload sizes.
+//!
+//! # Wire accounting convention
+//!
+//! Every message carries one fixed 16-byte header charged by the engine
+//! (`gossip::Message::HEADER_BYTES`: sender, mode, round, and the payload
+//! body length — u32 each). [`Payload::wire_bytes`] therefore counts
+//! **only the serialized body**, uniformly across variants, with no
+//! redundant per-variant length or count words (the header's body length
+//! determines them):
+//!
+//! | variant | body | bytes |
+//! |---------|------|-------|
+//! | `Dense` | `n` f32 values | `4n` |
+//! | `Sign`  | f32 scale + bit-packed signs | `4 + ⌈n/8⌉` |
+//! | `TopK`  | `k` u32 indices + `k` f32 values (`k` = body len / 8) | `8k` |
+//! | `Zero`  | nothing — a header-only message | `0` |
 
 use crate::util::mat::Mat;
 
@@ -23,13 +39,14 @@ pub enum Payload {
 }
 
 impl Payload {
-    /// Bytes on the wire (payload only; the engine adds a fixed
-    /// per-message header).
+    /// Serialized body bytes (uniform convention: the engine separately
+    /// charges the fixed 16-byte per-message header, which carries the
+    /// body length — see the module docs).
     pub fn wire_bytes(&self) -> u64 {
         match self {
             Payload::Dense(v) => 4 * v.len() as u64,
             Payload::Sign { bits, .. } => 4 + bits.len() as u64,
-            Payload::TopK { indices, values, .. } => 4 + 4 * (indices.len() + values.len()) as u64,
+            Payload::TopK { indices, values, .. } => 4 * (indices.len() + values.len()) as u64,
             Payload::Zero { .. } => 0,
         }
     }
@@ -121,8 +138,9 @@ impl Compressor {
         match self {
             Compressor::None => Payload::Dense(m.data.clone()),
             Compressor::Sign => {
-                // scale = ‖x‖₁ / n  (Def. III.1)
-                let scale = (m.l1() / n as f64) as f32;
+                // scale = ‖x‖₁ / n  (Def. III.1); guard the 0/0 of an
+                // empty matrix so the scale stays finite
+                let scale = if n == 0 { 0.0 } else { (m.l1() / n as f64) as f32 };
                 let mut bits = vec![0u8; n.div_ceil(8)];
                 for (i, &v) in m.data.iter().enumerate() {
                     if v >= 0.0 {
@@ -132,13 +150,19 @@ impl Compressor {
                 Payload::Sign { scale, bits, len: n }
             }
             Compressor::TopK { ratio } => {
-                let k = (n as u32 / ratio).max(1) as usize;
+                if n == 0 {
+                    // nothing to select from — a header-only message
+                    // (select_nth_unstable_by(k-1) would panic on n == 0)
+                    return Payload::Zero { len: 0 };
+                }
+                let k = (n / (ratio.max(1) as usize)).max(1);
                 let mut order: Vec<u32> = (0..n as u32).collect();
+                // total_cmp on the |value| keys: a total order that never
+                // panics. NaN sorts above +inf under total_cmp, so NaN
+                // entries are deterministically *kept* (and surfaced to
+                // the receiver) rather than crashing the selection.
                 order.select_nth_unstable_by(k - 1, |&a, &b| {
-                    m.data[b as usize]
-                        .abs()
-                        .partial_cmp(&m.data[a as usize].abs())
-                        .unwrap()
+                    m.data[b as usize].abs().total_cmp(&m.data[a as usize].abs())
                 });
                 let mut indices: Vec<u32> = order[..k].to_vec();
                 indices.sort_unstable();
@@ -149,12 +173,14 @@ impl Compressor {
     }
 
     /// Theoretical compression ratio vs 32-bit dense (Table II row entry),
-    /// ignoring the O(1) scale header.
+    /// ignoring the O(1) scale header. Clamped to `[0, 1)`: degenerate
+    /// `TopK` ratios (< 2) keep every entry as an (index, value) pair,
+    /// which saves nothing — the ratio is 0, never negative.
     pub fn element_ratio(self) -> f64 {
         match self {
             Compressor::None => 0.0,
             Compressor::Sign => 1.0 - 1.0 / 32.0,
-            Compressor::TopK { ratio } => 1.0 - 2.0 / ratio as f64,
+            Compressor::TopK { ratio } => (1.0 - 2.0 / ratio.max(1) as f64).max(0.0),
         }
     }
 }
@@ -286,5 +312,64 @@ mod tests {
     fn element_ratios_match_table2() {
         assert_eq!(Compressor::None.element_ratio(), 0.0);
         assert!((Compressor::Sign.element_ratio() - (1.0 - 1.0 / 32.0)).abs() < 1e-12);
+        assert!((Compressor::TopK { ratio: 8 }.element_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_topk_ratios_clamp_to_zero() {
+        // ratio < 2 keeps every entry as an 8-byte pair: no savings, and
+        // the ratio must clamp to 0 instead of going negative (or
+        // dividing by zero for ratio == 0)
+        assert_eq!(Compressor::TopK { ratio: 1 }.element_ratio(), 0.0);
+        assert_eq!(Compressor::TopK { ratio: 0 }.element_ratio(), 0.0);
+        let m = Mat::from_vec(1, 4, vec![1.0, -2.0, 3.0, -4.0]);
+        let p = Compressor::TopK { ratio: 0 }.compress(&m); // treated as 1
+        assert_eq!(p.decode(1, 4).data, m.data);
+    }
+
+    #[test]
+    fn topk_handles_nan_and_inf_without_panicking() {
+        // partial_cmp().unwrap() used to panic on any NaN; total_cmp
+        // orders NaN above +inf, so NaN entries are kept deterministically
+        let m = Mat::from_vec(2, 4, vec![0.1, f32::NAN, 0.2, f32::INFINITY, -0.3, 0.0, -5.0, -0.1]);
+        let p = Compressor::TopK { ratio: 4 }.compress(&m); // k = 2
+        let Payload::TopK { indices, values, len } = &p else { panic!("not TopK") };
+        assert_eq!(*len, 8);
+        assert_eq!(indices.as_slice(), &[1, 3], "NaN then +inf are the largest |keys|");
+        assert!(values[0].is_nan());
+        assert_eq!(values[1], f32::INFINITY);
+        let d = p.decode(2, 4);
+        assert!(d.data[1].is_nan());
+        // all-NaN input still selects k entries
+        let m = Mat::from_vec(1, 4, vec![f32::NAN; 4]);
+        let p = Compressor::TopK { ratio: 2 }.compress(&m);
+        let Payload::TopK { indices, .. } = &p else { panic!("not TopK") };
+        assert_eq!(indices.len(), 2);
+    }
+
+    #[test]
+    fn empty_matrix_compresses_to_header_only() {
+        let m = Mat::zeros(0, 5);
+        let p = Compressor::TopK { ratio: 4 }.compress(&m);
+        assert!(matches!(p, Payload::Zero { len: 0 }));
+        assert_eq!(p.wire_bytes(), 0);
+        let mut t = Mat::zeros(0, 5);
+        p.add_into(&mut t); // len assertion: 0 == 0
+        assert_eq!(p.decode(0, 5).data.len(), 0);
+        // sign/dense also stay finite and well-formed on empty input
+        let s = Compressor::Sign.compress(&m);
+        let Payload::Sign { scale, bits, len } = &s else { panic!("not Sign") };
+        assert_eq!((*len, bits.len()), (0, 0));
+        assert!(scale.is_finite(), "empty-matrix sign scale must not be 0/0 NaN");
+        assert_eq!(Compressor::None.compress(&m).wire_bytes(), 0);
+    }
+
+    #[test]
+    fn topk_wire_bytes_body_only() {
+        // uniform convention: the body is exactly 8k bytes — the count
+        // lives in the engine's fixed per-message header
+        let m = Mat::from_vec(2, 8, (0..16).map(|i| i as f32 - 8.0).collect());
+        let p = Compressor::TopK { ratio: 4 }.compress(&m); // k = 4
+        assert_eq!(p.wire_bytes(), 8 * 4);
     }
 }

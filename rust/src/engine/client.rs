@@ -54,9 +54,19 @@ impl EvalSample {
             nnz_vals.push(t.vals[e]);
         }
 
+        // Zero-cell rejection sampling, bounded: a fully (or nearly) dense
+        // shard has few or no true zero cells, and the unbounded loop
+        // would spin forever. After 64 x batch failed draws, keep whatever
+        // zero cells *were* found and reweight the stratum by the actual
+        // sample size — the estimator stays unbiased (accepted rejection
+        // draws are uniform over the zero cells); a fully dense shard
+        // ends with an empty stratum and `w_zero = 0`.
         let mut zero_rows = vec![Vec::with_capacity(batch); d];
         let mut found = 0usize;
-        while found < batch {
+        let max_attempts = 64 * batch.max(1);
+        let mut attempts = 0usize;
+        while found < batch && attempts < max_attempts {
+            attempts += 1;
             let idx: Vec<u32> = t.dims.iter().map(|&dim| rng.below(dim) as u32).collect();
             if cell_set.contains(&t.linearize(&idx)) {
                 continue; // rejection: must be a true zero cell
@@ -66,13 +76,14 @@ impl EvalSample {
             }
             found += 1;
         }
+        let w_zero = if found == 0 { 0.0 } else { (cells - nnz as f64) / found as f64 };
 
         EvalSample {
             nnz_rows,
             nnz_vals,
             zero_rows,
             w_nnz: nnz as f64 / batch as f64,
-            w_zero: (cells - nnz as f64) / batch as f64,
+            w_zero,
         }
     }
 }
@@ -97,12 +108,18 @@ pub struct ClientState {
     /// receive-side delivery accounting (populated by the net drivers)
     pub net: NetStats,
     pub eval: EvalSample,
-    /// reused dense-slice gather buffer
+    /// reused dense-slice gather buffer (grown on demand when a caller
+    /// passes a larger `fiber_samples` than the construction-time default)
     xs_buf: Vec<f32>,
     /// reused per-mode row-gather buffers for the gradient call
     u_bufs: Vec<Mat>,
     /// reused row-gather buffers for eval batches
     eval_u_bufs: Vec<Mat>,
+    /// reused per-mode gradient output buffers (`grad_into` target) —
+    /// per mode so cycling modes never reallocates
+    grad_bufs: Vec<Mat>,
+    /// reused fiber-id sample buffer
+    fiber_buf: Vec<u64>,
 }
 
 impl ClientState {
@@ -136,6 +153,7 @@ impl ClientState {
         let max_i = *dims.iter().max().unwrap();
         let u_bufs = (0..d.saturating_sub(1)).map(|_| Mat::zeros(fiber_samples, rank)).collect();
         let eval_u_bufs = (0..d).map(|_| Mat::zeros(eval_batch, rank)).collect();
+        let grad_bufs = dims.iter().map(|&dm| Mat::zeros(dm, rank)).collect();
         ClientState {
             id,
             shard,
@@ -152,6 +170,8 @@ impl ClientState {
             xs_buf: vec![0.0; max_i * fiber_samples],
             u_bufs,
             eval_u_bufs,
+            grad_bufs,
+            fiber_buf: Vec::with_capacity(fiber_samples),
         }
     }
 
@@ -167,6 +187,10 @@ impl ClientState {
 
     /// One local SGD (or momentum) step on `mode` (Alg. 1 lines 4-5,
     /// eq. 12-13). Returns the slice loss (monitoring only).
+    ///
+    /// Steady state this is **allocation-free** end to end: the fiber
+    /// sample, the dense slice, the row gathers, and the gradient all land
+    /// in buffers owned by `self` (asserted by `tests/alloc_free.rs`).
     pub fn local_step(
         &mut self,
         mode: usize,
@@ -176,40 +200,63 @@ impl ClientState {
         beta: Option<f64>,
         backend: &mut dyn ComputeBackend,
     ) -> anyhow::Result<f64> {
-        let dims = self.shard.tensor.dims.clone();
+        let d = self.shard.tensor.dims.len();
+        let i_dim = self.shard.tensor.dims[mode];
         let n_fibers = self.shard.tensor.n_fibers(mode);
-        let fibers = self.fiber_sampler.sample(n_fibers, fiber_samples);
-        let s_dim = fibers.len();
-        let i_dim = dims[mode];
+        self.fiber_sampler.sample_into(n_fibers, fiber_samples, &mut self.fiber_buf);
+        let s_dim = self.fiber_buf.len();
 
-        // dense slice gather (L3 hot path #1)
-        let xs = &mut self.xs_buf[..i_dim * s_dim];
-        self.indices.mode(mode).gather_slice(&fibers, i_dim, xs);
+        // dense slice gather (L3 hot path #1); the buffer is sized for the
+        // construction-time fiber_samples but callers may legitimately
+        // pass more — grow on demand instead of slicing out of bounds
+        if self.xs_buf.len() < i_dim * s_dim {
+            self.xs_buf.resize(i_dim * s_dim, 0.0);
+        }
+        self.indices.mode(mode).gather_slice(
+            &self.fiber_buf,
+            i_dim,
+            &mut self.xs_buf[..i_dim * s_dim],
+        );
 
         // row gathers of the other modes (L3 hot path #2)
-        gather_rows(&self.factors, mode, &dims, &fibers, &mut self.u_bufs);
-        let u_refs: Vec<&Mat> = self.u_bufs.iter().take(dims.len() - 1).collect();
+        gather_rows(
+            &self.factors,
+            mode,
+            &self.shard.tensor.dims,
+            &self.fiber_buf,
+            &mut self.u_bufs,
+        );
 
         // Mean over the sampled fibers (BrasCPD convention): keeps the
         // step size interpretable independent of tensor size. (The fully
         // unbiased sum-gradient is `n_fibers/|S| ·` this; the constant is
         // absorbed by the grid-searched γ, exactly as in the paper.)
         let scale = 1.0 / s_dim as f32;
-        let (g, slice_loss) =
-            backend.grad(loss, xs, i_dim, s_dim, &self.factors.mats[mode], &u_refs, scale)?;
+        let slice_loss = backend.grad_into(
+            loss,
+            &self.xs_buf[..i_dim * s_dim],
+            i_dim,
+            s_dim,
+            &self.factors.mats[mode],
+            &self.u_bufs[..d - 1],
+            scale,
+            &mut self.grad_bufs[mode],
+        )?;
 
-        // momentum velocity M = G + β M_prev (eq. 12, constant lr)
+        // momentum velocity M = G + β M_prev (eq. 12, constant lr),
+        // applied fully in place on the reused buffers
+        let g = &self.grad_bufs[mode];
         let a = &mut self.factors.mats[mode];
         match (&mut self.momentum[mode], beta) {
             (Some(m), Some(b)) => {
                 m.scale(b as f32);
-                m.add_assign(&g);
+                m.add_assign(g);
                 // A -= γ (G + β M)   (eq. 13)
-                a.axpy(-(gamma as f32), &g);
+                a.axpy(-(gamma as f32), g);
                 a.axpy(-(gamma * b) as f32, m);
             }
             _ => {
-                a.axpy(-(gamma as f32), &g);
+                a.axpy(-(gamma as f32), g);
             }
         }
         Ok(slice_loss)
@@ -266,6 +313,11 @@ fn init_factors_for_shard(
     FactorSet { mats }
 }
 
+/// Tensor orders the gather scratch covers on the stack (so the hot path
+/// never touches the heap; EHR tensors are order 3-4). Higher orders fall
+/// back to a heap buffer — slower, never wrong.
+const MAX_ORDER: usize = 8;
+
 /// Gather the Khatri-Rao row matrices `U_m[S, R]` for every mode except
 /// `mode`, into reusable buffers (order: ascending mode, skipping `mode`).
 pub fn gather_rows(
@@ -278,7 +330,14 @@ pub fn gather_rows(
     let d = dims.len();
     let r_dim = factors.rank();
     let s = fibers.len();
-    let mut idx_buf = vec![0u32; d];
+    let mut idx_arr = [0u32; MAX_ORDER];
+    let mut idx_vec;
+    let idx_buf: &mut [u32] = if d <= MAX_ORDER {
+        &mut idx_arr[..d]
+    } else {
+        idx_vec = vec![0u32; d];
+        &mut idx_vec
+    };
     // resize buffers if the fiber count shrank (tiny tensors)
     for buf in out.iter_mut().take(d - 1) {
         if buf.rows != s || buf.cols != r_dim {
@@ -286,7 +345,7 @@ pub fn gather_rows(
         }
     }
     for (row, &fid) in fibers.iter().enumerate() {
-        crate::factor::decode_into(dims, mode, fid, &mut idx_buf);
+        crate::factor::decode_into(dims, mode, fid, idx_buf);
         let mut slot = 0;
         for m in 0..d {
             if m == mode {
@@ -397,6 +456,50 @@ mod tests {
         // estimate is exact
         let exact = data.tensor.frob_sq();
         assert!((est - exact).abs() / exact < 1e-6, "{est} vs {exact}");
+    }
+
+    #[test]
+    fn eval_sample_terminates_on_fully_dense_shard() {
+        // every cell nonzero: the zero-cell rejection sampler has nothing
+        // to find and must fall back (previously: infinite loop)
+        let dims = vec![3usize, 3, 3];
+        let mut t = crate::tensor::SparseTensor::new(dims.clone());
+        for i in 0..3u32 {
+            for j in 0..3u32 {
+                for k in 0..3u32 {
+                    t.push(&[i, j, k], 1.0);
+                }
+            }
+        }
+        let shard = Shard { tensor: t, row_offset: 0 };
+        let mut rng = Rng::new(77);
+        let es = EvalSample::build(&shard, 16, &mut rng);
+        assert_eq!(es.w_zero, 0.0, "dense shard has an empty zero stratum");
+        assert_eq!(es.zero_rows[0].len(), 0, "no fake zero cells");
+        // the loss estimate is still exact for the all-zero factor set
+        let mut c = ClientState::new(0, shard, 4, 0.2, 5, 8, 16, false, false);
+        for m in c.factors.mats.iter_mut() {
+            m.fill(0.0);
+        }
+        let mut backend = NativeBackend::new();
+        let est = c.eval_loss(Loss::Ls, &mut backend).unwrap();
+        let exact = 27.0; // ‖X‖_F² of the all-ones 3x3x3 tensor
+        assert!((est - exact).abs() / exact < 1e-6, "{est} vs {exact}");
+    }
+
+    #[test]
+    fn local_step_accepts_larger_fiber_samples_than_construction() {
+        // construction-time fiber_samples = 4; stepping with 64 must grow
+        // xs_buf instead of slicing out of bounds (previous panic)
+        let data = SynthConfig::tiny(15).generate();
+        let shards = partition_mode0(&data.tensor, 1);
+        let mut c = ClientState::new(0, shards[0].clone(), 4, 0.2, 123, 4, 32, false, false);
+        let mut backend = NativeBackend::new();
+        for t in 0..6 {
+            let l = c.local_step(t % 3, Loss::Ls, 64, 0.05, None, &mut backend).unwrap();
+            assert!(l.is_finite());
+        }
+        assert!(c.factors.mats[0].data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -80,6 +80,13 @@ pub struct TrainConfig {
     /// by `NetworkModel::compute_multiplier` in the net drivers (the
     /// sequential engine keeps wall-clock time and ignores this)
     pub sim_iter_s: f64,
+    /// compute threads the backend may use per gradient call
+    /// (`ComputeBackend::set_threads`). Default 1 — fully deterministic.
+    /// >1 tiles the native row-panel kernel across a scoped thread pool;
+    /// gradients stay bit-identical (lane-deterministic kernels), and all
+    /// execution paths (`train` / `train_parallel` / `train_sim`) receive
+    /// the same value so they remain bit-identical to each other.
+    pub compute_threads: usize,
     pub algo: AlgoConfig,
 }
 
@@ -110,6 +117,7 @@ impl TrainConfig {
             trigger_lambda0_scale: 1.0,
             trigger_alpha: 1.3,
             sim_iter_s: 1.0,
+            compute_threads: 1,
             algo,
         }
     }
@@ -130,6 +138,7 @@ pub fn train(
 ) -> anyhow::Result<TrainOutcome> {
     let d_order = data.tensor.dims.len();
     anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
+    backend.set_threads(cfg.compute_threads);
     let graph = Graph::build(cfg.topology, cfg.k)?;
     let decentralized = cfg.k > 1;
     let mut clients = build_clients(cfg, data, &graph);

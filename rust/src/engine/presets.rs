@@ -143,7 +143,7 @@ impl AlgoConfig {
         let element = match self.compressor {
             Compressor::None => 1.0,
             Compressor::Sign => 1.0 / 32.0,
-            Compressor::TopK { ratio } => 2.0 / ratio as f64,
+            Compressor::TopK { ratio } => (2.0 / ratio.max(1) as f64).min(1.0),
         };
         let block = if self.block_random { 1.0 / d_order as f64 } else { 1.0 };
         let round = 1.0 / self.tau as f64;

@@ -1,0 +1,171 @@
+//! `cidertf bench` — the persistent performance gate.
+//!
+//! Runs the L3 hot-path micro-benchmarks (slice gather, Khatri-Rao row
+//! gather, sign codec, consensus AXPY), the gradient kernel in **both**
+//! its pre-blocked naive form and the blocked allocation-free form (so
+//! each run measures the speedup on the same machine in the same
+//! process), plus one end-to-end training-round benchmark, then appends
+//! the results to `BENCH.json` at the repo root
+//! (schema [`crate::util::benchkit::BENCH_SCHEMA`]).
+//!
+//! `--smoke` shrinks sizes and durations to CI scale; `--out-json PATH`
+//! redirects the report. The gradient comparison defaults to the
+//! acceptance shape `(i=512, s=128, r=32)`.
+
+use std::path::PathBuf;
+
+use crate::compress::Compressor;
+use crate::engine::client::gather_rows;
+use crate::engine::{train, AlgoConfig, TrainConfig};
+use crate::factor::FactorSet;
+use crate::losses::Loss;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::ComputeBackend;
+use crate::sched::FiberSampler;
+use crate::tensor::fiber::FiberIndex;
+use crate::tensor::synth::SynthConfig;
+use crate::util::benchkit::{append_bench_json, bench, BenchRun};
+use crate::util::cli::Args;
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+/// Entry point for the `bench` subcommand.
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let smoke = args.flag("smoke");
+    let out_path = PathBuf::from(args.get_str("out-json", "BENCH.json"));
+    let threads = args.get_usize("threads", 1);
+    // acceptance shape for the grad comparison; smoke shrinks everything
+    let (i_dim, s_dim, r_dim, ms) =
+        if smoke { (64, 32, 8, 25u64) } else { (512, 128, 32, 400u64) };
+    let mode = if smoke { "smoke" } else { "full" };
+    println!("bench mode={mode}  grad shape i={i_dim} s={s_dim} r={r_dim}  threads={threads}\n");
+
+    let mut rng = Rng::new(0xBE7C);
+    let a = Mat::rand_uniform(i_dim, r_dim, 0.3, &mut rng);
+    let us: Vec<Mat> = (0..2).map(|_| Mat::rand_uniform(s_dim, r_dim, 0.3, &mut rng)).collect();
+    let u_refs: Vec<&Mat> = us.iter().collect();
+    let xs: Vec<f32> =
+        (0..i_dim * s_dim).map(|_| if rng.bernoulli(0.25) { 1.0 } else { 0.0 }).collect();
+    let scale = 1.0 / s_dim as f32;
+
+    let mut benches = Vec::new();
+
+    // --- the perf-gate pair: naive vs blocked gradient, same process.
+    // Gated on the ls loss (pure FLOPs — measures the kernel, where the
+    // logit loss spends most of its time in scalar exp/log either way;
+    // a logit pair is recorded below as supplementary data). ---
+    let mut backend = NativeBackend::with_threads(threads);
+    let naive = bench(&format!("grad_naive_ls_i{i_dim}_s{s_dim}_r{r_dim}"), ms, || {
+        backend.grad_naive(Loss::Ls, &xs, i_dim, s_dim, &a, &u_refs, scale).unwrap()
+    });
+    let mut g_out = Mat::zeros(i_dim, r_dim);
+    let blocked = bench(&format!("grad_blocked_ls_i{i_dim}_s{s_dim}_r{r_dim}"), ms, || {
+        backend.grad_into(Loss::Ls, &xs, i_dim, s_dim, &a, &us, scale, &mut g_out).unwrap()
+    });
+    let speedup = naive.mean_ns / blocked.mean_ns.max(1.0);
+    benches.push(bench(&format!("grad_naive_logit_i{i_dim}_s{s_dim}_r{r_dim}"), ms / 2, || {
+        backend.grad_naive(Loss::Logit, &xs, i_dim, s_dim, &a, &u_refs, scale).unwrap()
+    }));
+    benches.push(bench(&format!("grad_blocked_logit_i{i_dim}_s{s_dim}_r{r_dim}"), ms / 2, || {
+        backend
+            .grad_into(Loss::Logit, &xs, i_dim, s_dim, &a, &us, scale, &mut g_out)
+            .unwrap()
+    }));
+
+    // --- kernel micro-benches ---
+    let mut h = us[0].clone();
+    h.hadamard_assign(&us[1]);
+    let mut m_buf = Mat::zeros(i_dim, s_dim);
+    benches.push(bench(&format!("gemm_transb_{i_dim}x{s_dim}x{r_dim}"), ms / 2, || {
+        a.matmul_transb_into(&h, &mut m_buf)
+    }));
+    let mut g_buf = Mat::zeros(i_dim, r_dim);
+    benches.push(bench(&format!("gemm_acc_{i_dim}x{r_dim}x{s_dim}"), ms / 2, || {
+        m_buf.matmul_acc_into(&h, &mut g_buf)
+    }));
+
+    // --- comms micro-benches (the other L3 hot paths) ---
+    let delta = Mat::rand_normal(s_dim, r_dim, 0.1, &mut rng);
+    benches.push(bench(&format!("sign_compress_{s_dim}x{r_dim}"), ms / 2, || {
+        Compressor::Sign.compress(&delta)
+    }));
+    let payload = Compressor::Sign.compress(&delta);
+    let mut hat = Mat::zeros(s_dim, r_dim);
+    benches.push(bench(&format!("sign_decode_add_{s_dim}x{r_dim}"), ms / 2, || {
+        payload.add_into(&mut hat)
+    }));
+    let mut target = Mat::zeros(s_dim, r_dim);
+    benches.push(bench(&format!("consensus_axpy_{s_dim}x{r_dim}"), ms / 2, || {
+        target.axpy(0.33, &delta)
+    }));
+
+    // --- threading: the standard shapes sit below the row-panel pool's
+    // engagement threshold (i >= 2048), so with --threads > 1 also bench
+    // a tall shape where the scoped pool actually runs ---
+    if threads > 1 {
+        let (ti, ts) = (4096usize, 64usize);
+        let ta = Mat::rand_uniform(ti, r_dim, 0.3, &mut rng);
+        let tus: Vec<Mat> =
+            (0..2).map(|_| Mat::rand_uniform(ts, r_dim, 0.3, &mut rng)).collect();
+        let txs: Vec<f32> =
+            (0..ti * ts).map(|_| if rng.bernoulli(0.25) { 1.0 } else { 0.0 }).collect();
+        let tscale = 1.0 / ts as f32;
+        let mut tout = Mat::zeros(ti, r_dim);
+        let mut one = NativeBackend::new();
+        benches.push(bench(&format!("grad_tall_1thread_i{ti}_s{ts}_r{r_dim}"), ms / 2, || {
+            one.grad_into(Loss::Ls, &txs, ti, ts, &ta, &tus, tscale, &mut tout).unwrap()
+        }));
+        benches.push(bench(
+            &format!("grad_tall_{threads}threads_i{ti}_s{ts}_r{r_dim}"),
+            ms / 2,
+            || backend.grad_into(Loss::Ls, &txs, ti, ts, &ta, &tus, tscale, &mut tout).unwrap(),
+        ));
+    }
+
+    // --- L3 gather hot paths: sparse slice gather + Khatri-Rao rows ---
+    let data = SynthConfig::tiny(5).generate();
+    let gdims = data.tensor.dims.clone();
+    let fi = FiberIndex::build(&data.tensor, 0);
+    let mut fib_sampler = FiberSampler::new(7, 0);
+    let fibers = fib_sampler.sample(data.tensor.n_fibers(0), s_dim);
+    let gs = fibers.len();
+    let mut xs_gather = vec![0.0f32; gdims[0] * gs];
+    benches.push(bench(&format!("gather_slice_{}x{gs}", gdims[0]), ms / 2, || {
+        fi.gather_slice(&fibers, gdims[0], &mut xs_gather)
+    }));
+    let gfactors = FactorSet::init_uniform(&gdims, r_dim, 0.3, 3);
+    let mut gather_bufs = vec![Mat::zeros(gs, r_dim), Mat::zeros(gs, r_dim)];
+    benches.push(bench(&format!("gather_krp_rows_{gs}x{r_dim}"), ms / 2, || {
+        gather_rows(&gfactors, 0, &gdims, &fibers, &mut gather_bufs)
+    }));
+
+    // --- end-to-end: one full (tiny) decentralized training run ---
+    let mut cfg = TrainConfig::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+    cfg.k = 4;
+    cfg.rank = 4;
+    cfg.fiber_samples = 16;
+    cfg.eval_batch = 64;
+    cfg.gamma = 0.5;
+    cfg.epochs = 1;
+    cfg.iters_per_epoch = if smoke { 10 } else { 60 };
+    cfg.compute_threads = threads;
+    let e2e = bench(&format!("train_e2e_tiny_k4_iters{}", cfg.iters_per_epoch), ms, || {
+        let mut b = NativeBackend::new();
+        train(&cfg, &data, &mut b, None).unwrap()
+    });
+
+    let mut all = vec![naive.clone(), blocked.clone()];
+    all.append(&mut benches);
+    all.push(e2e);
+    let run = BenchRun {
+        mode: mode.to_string(),
+        benches: all,
+        derived: vec![("grad_speedup_blocked_vs_naive".to_string(), speedup)],
+    };
+    append_bench_json(&out_path, &run)?;
+    println!("\ngrad blocked vs naive: {speedup:.2}x ({} -> {})",
+        crate::util::benchkit::fmt_ns(naive.mean_ns),
+        crate::util::benchkit::fmt_ns(blocked.mean_ns));
+    println!("appended run to {}", out_path.display());
+    Ok(())
+}

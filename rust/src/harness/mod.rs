@@ -9,6 +9,7 @@
 //!   losses); tens of minutes.
 
 pub mod ablate;
+pub mod bench;
 pub mod faults;
 pub mod fig3;
 pub mod fig4;

@@ -127,6 +127,7 @@ fn run() -> anyhow::Result<()> {
             let mut ctx = ctx_from(&args)?;
             harness::tables::theorems(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
         }
+        "bench" => harness::bench::run(&args)?,
         "tune" => cmd_tune(&args)?,
         "info" => cmd_info(&args)?,
         "help" | _ => {
@@ -177,6 +178,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.gamma = args.get_f64("gamma", cfg.gamma);
     cfg.rank = args.get_usize("rank", cfg.rank);
     cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.compute_threads = args.get_usize("threads", cfg.compute_threads);
     println!(
         "training {} on {dataset}/{} K={} topology={} gamma={} driver={} ({} epochs x {} iters)",
         cfg.algo.name,
@@ -290,6 +292,7 @@ COMMANDS
              --dataset synthetic|mimic_like|cms_like|mimic_full|tiny --loss logit|ls
              --k 8 --topology ring|star|complete|chain|torus --epochs N --gamma G
              --driver seq|par|sim|async   execution path (default seq)
+             --threads N   native-backend compute threads (default 1 = deterministic)
              --network ideal|lossy[:p]|bursty|wan|stragglers|churning|hostile
              (or one spec: --algo cidertf:4@lossy:0.2@async)
   fig3       convergence vs baselines (paper Fig. 3)   [--k --taus 2,4,6,8]
@@ -303,6 +306,8 @@ COMMANDS
   theorems   Thm III.1-III.3 checks                    [--k --tau]
   faults     drop-rate x topology x compressor sweep   [--k --tau]
   ablate     design-knob sweeps (rho/tau/trigger)      [--sweep rho|tau|trigger|all]
+  bench      hot-path micro + e2e benchmarks; appends to BENCH.json
+             [--smoke] [--out-json BENCH.json] [--threads N]
   tune       learning-rate grid search                 [--dataset --loss]
   info       list AOT artifacts
 

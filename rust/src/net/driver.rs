@@ -228,6 +228,7 @@ pub fn train_sim(
 ) -> anyhow::Result<TrainOutcome> {
     let d_order = data.tensor.dims.len();
     anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
+    backend.set_threads(cfg.compute_threads);
     let graph = Graph::build(cfg.topology, cfg.k)?;
     let decentralized = cfg.k > 1;
     let mut clients = build_clients(cfg, data, &graph);

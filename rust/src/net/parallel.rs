@@ -78,6 +78,7 @@ where
             let make_backend = &make_backend;
             handles.push(scope.spawn(move || -> anyhow::Result<(ClientState, Vec<f64>)> {
                 let mut backend = make_backend(id)?;
+                backend.set_threads(cfg.compute_threads);
                 // shared block sequence: same seed on every thread
                 let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
                 let all_modes: Vec<usize> = (0..d_order).collect();

@@ -106,9 +106,42 @@ pub trait ComputeBackend {
         scale: f32,
     ) -> anyhow::Result<(Mat, f64)>;
 
+    /// Allocation-free variant of [`ComputeBackend::grad`]: writes
+    /// `scale * G` into the caller-owned `out` buffer (resized only when
+    /// its shape is wrong) and returns the slice loss sum. The engine's
+    /// steady-state inner loop calls this with per-mode reused buffers so
+    /// a local step performs zero heap allocations on the native backend.
+    ///
+    /// The default implementation delegates to `grad` and copies — correct
+    /// for every backend, allocation-free only where overridden.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_into(
+        &mut self,
+        loss: Loss,
+        xs: &[f32],
+        i_dim: usize,
+        s_dim: usize,
+        a: &Mat,
+        us: &[Mat],
+        scale: f32,
+        out: &mut Mat,
+    ) -> anyhow::Result<f64> {
+        let refs: Vec<&Mat> = us.iter().collect();
+        let (g, l) = self.grad(loss, xs, i_dim, s_dim, a, &refs, scale)?;
+        *out = g;
+        Ok(l)
+    }
+
     /// Stratified loss-estimator batch: `x[B]` data values, `us` D
     /// row-gathered `[B, R]` matrices (one per mode). Returns the loss sum.
     fn eval(&mut self, loss: Loss, x: &[f32], us: &[&Mat]) -> anyhow::Result<f64>;
+
+    /// Hint how many compute threads the backend may use for one gradient
+    /// call (`TrainConfig::compute_threads`). Backends without a threaded
+    /// path ignore it; the native backend tiles row panels across a scoped
+    /// pool when `threads > 1` (gradients stay bit-identical — see
+    /// `runtime::native`).
+    fn set_threads(&mut self, _threads: usize) {}
 
     fn name(&self) -> &'static str;
 }

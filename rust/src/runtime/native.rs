@@ -1,45 +1,211 @@
 //! Pure-Rust mirror of the L1/L2 compute graph.
 //!
 //! Bit-faithful to the math of `python/compile/kernels/` (same formulas,
-//! same f32 accumulation structure): `M = A Hᵀ`, `Y = ∂f(M, Xs)`,
-//! `G = scale · Y H`, `L = Σ f(M, Xs)` with `H` the Hadamard of the row
-//! gathers. Used for
+//! f32 accumulation): `M = A Hᵀ`, `Y = ∂f(M, Xs)`, `G = scale · Y H`,
+//! `L = Σ f(M, Xs)` with `H` the Hadamard of the row gathers. Used for
 //! * differential testing against the PJRT artifacts (runtime_integration),
 //! * artifact-free unit tests and debugging,
 //! * the perf baseline the PJRT path is compared to in EXPERIMENTS.md §Perf.
+//!
+//! # Blocked panel kernel
+//!
+//! The gradient runs in **row panels**: the `i` dimension is processed in
+//! tiles of [`PANEL`] rows, and for each tile the `M` panel
+//! (`[PANEL, s]`) is computed by the 2x2 register-tiled
+//! [`mat::gemm_transb_into`] kernel into a scratch buffer owned by the
+//! backend, overwritten in place by `Y = ∂f`, then folded into the output
+//! with [`mat::gemm_acc_into`]. Steady state performs **zero heap
+//! allocations** (the `grad_into` entry point writes into a caller-owned
+//! buffer and both scratch panels persist across calls).
+//!
+//! Because every output cell accumulates in the fixed lane structure of
+//! the blocked kernels, the gradient is **bit-identical regardless of
+//! panel boundaries or thread count** (see
+//! `blocked_transb_cells_are_tiling_invariant` in `util::mat`). The
+//! monitoring loss sum is reduced panel-major; with `threads > 1` the
+//! per-chunk partials are added in chunk order, which can differ from the
+//! single-thread running sum in the last ulp — which is why the
+//! deterministic engine default is `threads = 1`
+//! (`TrainConfig::compute_threads`).
 
 use super::ComputeBackend;
 use crate::losses::Loss;
-use crate::util::mat::Mat;
+use crate::util::mat::{self, Mat};
+
+/// Rows per gradient panel: `PANEL x s` f32 scratch (32 x 256 = 32 kB)
+/// stays comfortably inside L1/L2 next to the `[s, R]` Hadamard matrix.
+const PANEL: usize = 32;
+
+/// Minimum `i` rows per worker before the scoped pool is engaged.
+///
+/// Workers are `std::thread::scope`-spawned per gradient call (simple and
+/// safe without crates-io thread-pool deps), which costs tens of
+/// microseconds of spawn + per-worker scratch per call. At 1024 rows a
+/// worker's kernel time is hundreds of microseconds, so the overhead is
+/// amortized; below the threshold the call silently runs single-thread,
+/// which is faster anyway. A persistent pool would lower this threshold
+/// and is the natural next step if mid-sized shards need threading.
+const MIN_ROWS_PER_THREAD: usize = 1024;
 
 /// Native (no-PJRT) compute backend.
 #[derive(Debug)]
 pub struct NativeBackend {
     /// scratch for H = hadamard(us), reused across calls
     h_scratch: Mat,
+    /// reused `[PANEL, s]` M/Y panel scratch (single-thread path)
+    panel: Vec<f32>,
+    /// row-panel worker threads (1 = deterministic default)
+    threads: usize,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
-        NativeBackend { h_scratch: Mat::zeros(0, 0) }
+        NativeBackend { h_scratch: Mat::zeros(0, 0), panel: Vec::new(), threads: 1 }
     }
 
-    /// H = elementwise product of the D-1 row-gather matrices.
-    fn hadamard_into(&mut self, us: &[&Mat]) {
-        let (s, r) = (us[0].rows, us[0].cols);
+    /// Backend with `threads` row-panel workers (see
+    /// [`ComputeBackend::set_threads`]).
+    pub fn with_threads(threads: usize) -> Self {
+        let mut b = Self::new();
+        b.threads = threads.max(1);
+        b
+    }
+
+    /// H = elementwise product of the D-1 row-gather matrices (fused
+    /// two-operand fast path for the common D=3 case).
+    fn hadamard_into<'a, I>(&mut self, first: &Mat, rest: I)
+    where
+        I: Iterator<Item = &'a Mat> + Clone,
+    {
+        let (s, r) = (first.rows, first.cols);
         if self.h_scratch.rows != s || self.h_scratch.cols != r {
             self.h_scratch = Mat::zeros(s, r);
         }
-        self.h_scratch.data.copy_from_slice(&us[0].data);
-        for u in &us[1..] {
-            debug_assert_eq!((u.rows, u.cols), (s, r));
-            self.h_scratch.hadamard_assign(u);
+        let mut peek = rest.clone();
+        match (peek.next(), peek.next()) {
+            (Some(u), None) => {
+                debug_assert_eq!((u.rows, u.cols), (s, r));
+                mat::hadamard2_into(&first.data, &u.data, &mut self.h_scratch.data);
+            }
+            _ => {
+                self.h_scratch.data.copy_from_slice(&first.data);
+                for u in rest {
+                    debug_assert_eq!((u.rows, u.cols), (s, r));
+                    self.h_scratch.hadamard_assign(u);
+                }
+            }
         }
     }
-}
 
-impl ComputeBackend for NativeBackend {
-    fn grad(
+    /// Panel-blocked gradient core. Expects `h_scratch` to already hold
+    /// `H`; writes `scale * Y H` into `out` and returns the loss sum.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_core(
+        &mut self,
+        loss: Loss,
+        xs: &[f32],
+        i_dim: usize,
+        s_dim: usize,
+        r_dim: usize,
+        a: &Mat,
+        scale: f32,
+        out: &mut Mat,
+    ) -> f64 {
+        if out.rows != i_dim || out.cols != r_dim {
+            *out = Mat::zeros(i_dim, r_dim);
+        }
+        out.fill(0.0);
+        let NativeBackend { h_scratch, panel, threads } = self;
+        let h = &h_scratch.data;
+        let a_data = &a.data;
+
+        let n_threads = if i_dim >= 2 * MIN_ROWS_PER_THREAD {
+            (*threads).min(i_dim / MIN_ROWS_PER_THREAD).max(1)
+        } else {
+            1
+        };
+
+        let mut loss_sum = 0.0f64;
+        if n_threads <= 1 {
+            if panel.len() < PANEL * s_dim {
+                panel.resize(PANEL * s_dim, 0.0);
+            }
+            let mut i0 = 0;
+            while i0 < i_dim {
+                let p = PANEL.min(i_dim - i0);
+                loss_sum += panel_step(
+                    loss,
+                    xs,
+                    i0,
+                    p,
+                    s_dim,
+                    r_dim,
+                    a_data,
+                    h,
+                    &mut panel[..p * s_dim],
+                    &mut out.data[i0 * r_dim..(i0 + p) * r_dim],
+                );
+                i0 += p;
+            }
+        } else {
+            // contiguous panel-aligned row chunks, one scoped thread each;
+            // each worker owns its panel scratch (threaded mode allocates
+            // one scratch per worker per call — the deterministic
+            // single-thread default stays allocation-free)
+            let panels_total = i_dim.div_ceil(PANEL);
+            let rows_per = panels_total.div_ceil(n_threads) * PANEL;
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(n_threads);
+                let mut rest: &mut [f32] = &mut out.data;
+                let mut i0 = 0usize;
+                while i0 < i_dim {
+                    let take = rows_per.min(i_dim - i0);
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * r_dim);
+                    rest = tail;
+                    let start = i0;
+                    handles.push(scope.spawn(move || {
+                        let mut scratch = vec![0.0f32; PANEL.min(take) * s_dim];
+                        let mut ls = 0.0f64;
+                        let mut off = 0;
+                        while off < take {
+                            let p = PANEL.min(take - off);
+                            ls += panel_step(
+                                loss,
+                                xs,
+                                start + off,
+                                p,
+                                s_dim,
+                                r_dim,
+                                a_data,
+                                h,
+                                &mut scratch[..p * s_dim],
+                                &mut chunk[off * r_dim..(off + p) * r_dim],
+                            );
+                            off += p;
+                        }
+                        ls
+                    }));
+                    i0 += take;
+                }
+                for handle in handles {
+                    loss_sum += handle.join().expect("panel worker panicked");
+                }
+            });
+        }
+        out.scale(scale);
+        loss_sum
+    }
+
+    /// The pre-blocked scalar reference kernel (rowwise dots, allocates
+    /// its output). Kept for the `bench` perf gate and differential tests
+    /// against the blocked path.
+    pub fn grad_naive(
         &mut self,
         loss: Loss,
         xs: &[f32],
@@ -49,10 +215,11 @@ impl ComputeBackend for NativeBackend {
         us: &[&Mat],
         scale: f32,
     ) -> anyhow::Result<(Mat, f64)> {
+        anyhow::ensure!(!us.is_empty(), "need at least one row-gather matrix");
         anyhow::ensure!(xs.len() == i_dim * s_dim, "xs shape mismatch");
         anyhow::ensure!(a.rows == i_dim, "A shape mismatch");
         let r_dim = a.cols;
-        self.hadamard_into(us);
+        self.hadamard_into(us[0], us[1..].iter().copied());
         let h = &self.h_scratch;
 
         let mut g = Mat::zeros(i_dim, r_dim);
@@ -88,6 +255,84 @@ impl ComputeBackend for NativeBackend {
         }
         g.scale(scale);
         Ok((g, loss_sum))
+    }
+}
+
+/// One `[p, s]` row panel of the gradient: `M = A_panel Hᵀ` (blocked),
+/// `Y = ∂f` in place, `G_panel += Y H` (accumulating). Returns the panel
+/// loss sum, accumulated in row-major `(i, s)` order.
+#[allow(clippy::too_many_arguments)]
+fn panel_step(
+    loss: Loss,
+    xs: &[f32],
+    i0: usize,
+    p: usize,
+    s_dim: usize,
+    r_dim: usize,
+    a: &[f32],
+    h: &[f32],
+    panel: &mut [f32],
+    g: &mut [f32],
+) -> f64 {
+    let a_panel = &a[i0 * r_dim..(i0 + p) * r_dim];
+    mat::gemm_transb_into(a_panel, h, panel, p, s_dim, r_dim);
+    let mut loss_sum = 0.0f64;
+    for (row, prow) in panel.chunks_exact_mut(s_dim).enumerate() {
+        let xs_row = &xs[(i0 + row) * s_dim..(i0 + row + 1) * s_dim];
+        for (mv, &x) in prow.iter_mut().zip(xs_row.iter()) {
+            loss_sum += loss.value(*mv, x) as f64;
+            *mv = loss.grad(*mv, x);
+        }
+    }
+    mat::gemm_acc_into(panel, h, g, p, r_dim, s_dim);
+    loss_sum
+}
+
+impl ComputeBackend for NativeBackend {
+    fn grad(
+        &mut self,
+        loss: Loss,
+        xs: &[f32],
+        i_dim: usize,
+        s_dim: usize,
+        a: &Mat,
+        us: &[&Mat],
+        scale: f32,
+    ) -> anyhow::Result<(Mat, f64)> {
+        anyhow::ensure!(!us.is_empty(), "need at least one row-gather matrix");
+        anyhow::ensure!(xs.len() == i_dim * s_dim, "xs shape mismatch");
+        anyhow::ensure!(a.rows == i_dim, "A shape mismatch");
+        self.hadamard_into(us[0], us[1..].iter().copied());
+        let mut g = Mat::zeros(i_dim, a.cols);
+        let l = self.grad_core(loss, xs, i_dim, s_dim, a.cols, a, scale, &mut g);
+        Ok((g, l))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn grad_into(
+        &mut self,
+        loss: Loss,
+        xs: &[f32],
+        i_dim: usize,
+        s_dim: usize,
+        a: &Mat,
+        us: &[Mat],
+        scale: f32,
+        out: &mut Mat,
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(!us.is_empty(), "need at least one row-gather matrix");
+        anyhow::ensure!(xs.len() == i_dim * s_dim, "xs shape mismatch");
+        anyhow::ensure!(a.rows == i_dim, "A shape mismatch");
+        anyhow::ensure!(
+            us.iter().all(|u| u.rows == s_dim && u.cols == a.cols),
+            "U shape mismatch"
+        );
+        self.hadamard_into(&us[0], us[1..].iter());
+        Ok(self.grad_core(loss, xs, i_dim, s_dim, a.cols, a, scale, out))
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     fn eval(&mut self, loss: Loss, x: &[f32], us: &[&Mat]) -> anyhow::Result<f64> {
@@ -158,6 +403,63 @@ mod tests {
             }
             assert!((l - l2).abs() / l2.abs().max(1.0) < 1e-5);
         }
+    }
+
+    #[test]
+    fn blocked_matches_naive_reference() {
+        // the blocked panel path must agree with the pre-blocked scalar
+        // kernel across panel-edge shapes (i below, at, and above PANEL)
+        let mut rng = Rng::new(25);
+        for (i, s, r) in [(5, 9, 4), (32, 16, 8), (33, 16, 8), (71, 24, 5)] {
+            for loss in [Loss::Ls, Loss::Logit] {
+                let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32()).collect();
+                let a = randmat(i, r, &mut rng);
+                let u1 = randmat(s, r, &mut rng);
+                let u2 = randmat(s, r, &mut rng);
+                let mut be = NativeBackend::new();
+                let (g_b, l_b) = be.grad(loss, &xs, i, s, &a, &[&u1, &u2], 1.3).unwrap();
+                let (g_n, l_n) = be.grad_naive(loss, &xs, i, s, &a, &[&u1, &u2], 1.3).unwrap();
+                for (x, y) in g_b.data.iter().zip(g_n.data.iter()) {
+                    assert!((x - y).abs() < 1e-4, "({i},{s},{r}) {loss:?}: {x} vs {y}");
+                }
+                assert!((l_b - l_n).abs() / l_n.abs().max(1.0) < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_into_is_bit_identical_to_grad() {
+        let mut rng = Rng::new(26);
+        let (i, s, r) = (40, 12, 6);
+        let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32()).collect();
+        let a = randmat(i, r, &mut rng);
+        let us: Vec<Mat> = (0..2).map(|_| randmat(s, r, &mut rng)).collect();
+        let refs: Vec<&Mat> = us.iter().collect();
+        let mut be = NativeBackend::new();
+        let (g, l) = be.grad(Loss::Logit, &xs, i, s, &a, &refs, 0.5).unwrap();
+        let mut out = Mat::zeros(i, r);
+        let l2 = be.grad_into(Loss::Logit, &xs, i, s, &a, &us, 0.5, &mut out).unwrap();
+        assert_eq!(g.data, out.data);
+        assert_eq!(l, l2);
+    }
+
+    #[test]
+    fn threads_do_not_change_gradient() {
+        // the lane-deterministic kernels make G bit-identical across
+        // thread counts; the loss sum may differ only in rounding
+        let mut rng = Rng::new(27);
+        let (i, s, r) = (4 * MIN_ROWS_PER_THREAD, 16, 4);
+        let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32()).collect();
+        let a = randmat(i, r, &mut rng);
+        let us: Vec<Mat> = (0..2).map(|_| randmat(s, r, &mut rng)).collect();
+        let mut out1 = Mat::zeros(i, r);
+        let mut out4 = Mat::zeros(i, r);
+        let mut be1 = NativeBackend::new();
+        let l1 = be1.grad_into(Loss::Ls, &xs, i, s, &a, &us, 1.0, &mut out1).unwrap();
+        let mut be4 = NativeBackend::with_threads(4);
+        let l4 = be4.grad_into(Loss::Ls, &xs, i, s, &a, &us, 1.0, &mut out4).unwrap();
+        assert_eq!(out1.data, out4.data, "thread count changed the gradient");
+        assert!((l1 - l4).abs() / l1.abs().max(1.0) < 1e-12, "{l1} vs {l4}");
     }
 
     #[test]

@@ -35,20 +35,50 @@ impl BlockSampler {
 }
 
 /// Per-client fiber sampler: `|S|` distinct mode-d fibers per iteration.
+///
+/// Owns the scratch buffers of [`Rng::sample_indices_into`] so the
+/// steady-state [`FiberSampler::sample_into`] path performs no heap
+/// allocations once the buffers have reached their working size.
 #[derive(Debug, Clone)]
 pub struct FiberSampler {
     rng: Rng,
+    idx: Vec<usize>,
+    scratch: Vec<usize>,
+    chosen: std::collections::HashSet<usize>,
 }
 
 impl FiberSampler {
     pub fn new(seed: u64, client: u64) -> Self {
-        FiberSampler { rng: Rng::new(seed ^ 0xF1BE).split(client + 1) }
+        FiberSampler {
+            rng: Rng::new(seed ^ 0xF1BE).split(client + 1),
+            idx: Vec::new(),
+            scratch: Vec::new(),
+            chosen: std::collections::HashSet::new(),
+        }
     }
 
     /// Sample `s` distinct fibers out of `n_fibers` (or all if fewer).
     pub fn sample(&mut self, n_fibers: usize, s: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.sample_into(n_fibers, s, &mut out);
+        out
+    }
+
+    /// Allocation-free (steady-state) variant of [`FiberSampler::sample`]:
+    /// delegates to [`Rng::sample_indices_into`] — the single source of
+    /// truth for the sampling algorithm — so the draws are identical to
+    /// `Rng::sample_indices` on the same stream.
+    pub fn sample_into(&mut self, n_fibers: usize, s: usize, out: &mut Vec<u64>) {
         let take = s.min(n_fibers);
-        self.rng.sample_indices(n_fibers, take).into_iter().map(|i| i as u64).collect()
+        self.rng.sample_indices_into(
+            n_fibers,
+            take,
+            &mut self.idx,
+            &mut self.scratch,
+            &mut self.chosen,
+        );
+        out.clear();
+        out.extend(self.idx.iter().map(|&i| i as u64));
     }
 }
 

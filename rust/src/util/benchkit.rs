@@ -1,13 +1,22 @@
 //! Bench harness substrate (no `criterion` available offline).
 //!
-//! Two modes:
+//! Three pieces:
 //! * [`bench`] — classic timing micro-bench with warmup, returning
-//!   mean/p50/p95 per iteration; used by `micro_hotpaths`.
+//!   mean/p50/p95 per iteration; used by `micro_hotpaths` and the `bench`
+//!   CLI subcommand.
 //! * [`Table`] — a row printer for the per-figure experiment benches, which
 //!   report *domain* metrics (loss reached, bytes communicated, wall time)
 //!   in the same rows/series the paper's plots show.
+//! * [`BenchRun`] / [`append_bench_json`] — the persistent perf gate:
+//!   every `cidertf bench` invocation appends one run to `BENCH.json`
+//!   (schema [`BENCH_SCHEMA`]) so the repo carries its own perf
+//!   trajectory across PRs. See ARCHITECTURE.md §"BENCH.json".
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Timing statistics for one benchmark, in nanoseconds per iteration.
 #[derive(Debug, Clone)]
@@ -23,6 +32,19 @@ pub struct Stats {
 impl Stats {
     pub fn mean_us(&self) -> f64 {
         self.mean_ns / 1e3
+    }
+
+    /// JSON object for BENCH.json:
+    /// `{name, iters, mean_ns, p50_ns, p95_ns, min_ns}`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        m.insert("p50_ns".to_string(), Json::Num(self.p50_ns));
+        m.insert("p95_ns".to_string(), Json::Num(self.p95_ns));
+        m.insert("min_ns".to_string(), Json::Num(self.min_ns));
+        Json::Obj(m)
     }
     pub fn print(&self) {
         println!(
@@ -126,6 +148,98 @@ impl Table {
     }
 }
 
+/// BENCH.json top-level schema identifier.
+pub const BENCH_SCHEMA: &str = "cidertf-bench-v1";
+
+/// One `cidertf bench` invocation: a set of micro/e2e [`Stats`] plus
+/// derived scalars (e.g. the blocked-vs-naive gradient speedup).
+///
+/// Serialized shape (one element of the top-level `runs` array):
+/// ```json
+/// {
+///   "created_unix": 1730000000,
+///   "mode": "full" | "smoke",
+///   "benches": [ { "name": ..., "iters": ..., "mean_ns": ...,
+///                  "p50_ns": ..., "p95_ns": ..., "min_ns": ... } ],
+///   "derived": { "grad_speedup_blocked_vs_naive": 2.7 }
+/// }
+/// ```
+pub struct BenchRun {
+    /// `"full"` or `"smoke"`
+    pub mode: String,
+    pub benches: Vec<Stats>,
+    /// derived named scalars (speedups, ratios)
+    pub derived: Vec<(String, f64)>,
+}
+
+impl BenchRun {
+    pub fn to_json(&self) -> Json {
+        let created = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut m = BTreeMap::new();
+        m.insert("created_unix".to_string(), Json::Num(created as f64));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert(
+            "benches".to_string(),
+            Json::Arr(self.benches.iter().map(Stats::to_json).collect()),
+        );
+        let mut d = BTreeMap::new();
+        for (k, v) in &self.derived {
+            d.insert(k.clone(), Json::Num(*v));
+        }
+        m.insert("derived".to_string(), Json::Obj(d));
+        Json::Obj(m)
+    }
+}
+
+/// Append `run` to the BENCH.json at `path`
+/// (`{"schema": "cidertf-bench-v1", "runs": [...]}`), creating the file if
+/// missing.
+///
+/// The write is atomic (temp file + rename in the same directory) so an
+/// interrupted bench can never leave a truncated file behind, and an
+/// existing file whose history cannot be carried forward — unparseable
+/// *or* a foreign/newer schema — is preserved as `<path>.bak` instead of
+/// being silently wiped: the accumulated perf trajectory is the whole
+/// point of this file.
+pub fn append_bench_json(path: &Path, run: &BenchRun) -> anyhow::Result<()> {
+    let mut runs: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        let keep = match Json::parse(&text) {
+            Ok(j) if j.get("schema").and_then(|s| s.as_str()) == Some(BENCH_SCHEMA) => {
+                if let Some(Json::Arr(a)) = j.get("runs") {
+                    runs = a.clone();
+                }
+                true
+            }
+            Ok(_) => false,  // parseable, but not our schema
+            Err(_) => false, // corrupt/truncated
+        };
+        if !keep {
+            let backup = path.with_extension("json.bak");
+            std::fs::rename(path, &backup)
+                .map_err(|re| anyhow::anyhow!("cannot back up {path:?}: {re}"))?;
+            eprintln!(
+                "warning: {} is not a {BENCH_SCHEMA} file; preserved as {} and starting fresh",
+                path.display(),
+                backup.display()
+            );
+        }
+    }
+    runs.push(run.to_json());
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(BENCH_SCHEMA.to_string()));
+    top.insert("runs".to_string(), Json::Arr(runs));
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, Json::Obj(top).to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("cannot write {tmp:?}: {e}"))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot move {tmp:?} into place: {e}"))?;
+    Ok(())
+}
+
 /// Human-readable byte counts.
 pub fn fmt_bytes(b: f64) -> String {
     if b < 1e3 {
@@ -162,5 +276,45 @@ mod tests {
         assert_eq!(fmt_ns(500.0), "500 ns");
         assert!(fmt_ns(2_500.0).contains("µs"));
         assert!(fmt_bytes(2_000_000.0).contains("MB"));
+    }
+
+    fn fake_stats(name: &str) -> Stats {
+        Stats {
+            name: name.to_string(),
+            iters: 100,
+            mean_ns: 1234.5,
+            p50_ns: 1200.0,
+            p95_ns: 1500.0,
+            min_ns: 1100.0,
+        }
+    }
+
+    #[test]
+    fn bench_json_appends_runs() {
+        let dir = std::env::temp_dir().join(format!("cidertf_benchkit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH.json");
+        let _ = std::fs::remove_file(&path);
+        let run = BenchRun {
+            mode: "smoke".to_string(),
+            benches: vec![fake_stats("a"), fake_stats("b")],
+            derived: vec![("speedup".to_string(), 2.5)],
+        };
+        append_bench_json(&path, &run).unwrap();
+        append_bench_json(&path, &run).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("schema").and_then(|s| s.as_str()), Some(BENCH_SCHEMA));
+        let Some(Json::Arr(runs)) = j.get("runs") else { panic!("runs missing") };
+        assert_eq!(runs.len(), 2, "append must extend, not overwrite");
+        let b0 = runs[0].get("benches").unwrap();
+        let Json::Arr(entries) = b0 else { panic!("benches not an array") };
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("name").and_then(|n| n.as_str()), Some("a"));
+        assert_eq!(entries[0].get("mean_ns").and_then(|n| n.as_f64()), Some(1234.5));
+        assert_eq!(
+            runs[0].get("derived").unwrap().get("speedup").and_then(|n| n.as_f64()),
+            Some(2.5)
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -130,19 +130,39 @@ impl Rng {
     ///
     /// Uses Floyd's algorithm for small k, partial Fisher-Yates otherwise.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k);
+        let mut scratch = Vec::new();
+        let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+        self.sample_indices_into(n, k, &mut out, &mut scratch, &mut chosen);
+        out
+    }
+
+    /// Buffer-based core of [`Rng::sample_indices`]: **identical draws
+    /// from the same stream**, written into caller-owned buffers so the
+    /// steady-state path (the engine's per-iteration fiber sampler) is
+    /// allocation-free once the buffers reach working size.
+    pub fn sample_indices_into(
+        &mut self,
+        n: usize,
+        k: usize,
+        out: &mut Vec<usize>,
+        scratch: &mut Vec<usize>,
+        chosen: &mut std::collections::HashSet<usize>,
+    ) {
         assert!(k <= n, "cannot sample {k} of {n}");
+        out.clear();
         if k * 8 >= n {
-            let mut all: Vec<usize> = (0..n).collect();
+            // partial Fisher-Yates over a reused identity permutation
+            scratch.clear();
+            scratch.extend(0..n);
             for i in 0..k {
                 let j = i + self.below(n - i);
-                all.swap(i, j);
+                scratch.swap(i, j);
             }
-            all.truncate(k);
-            all
+            out.extend_from_slice(&scratch[..k]);
         } else {
             // Floyd: O(k) expected with a small hash set.
-            let mut chosen = std::collections::HashSet::with_capacity(k * 2);
-            let mut out = Vec::with_capacity(k);
+            chosen.clear();
             for j in (n - k)..n {
                 let t = self.below(j + 1);
                 let v = if chosen.insert(t) { t } else { j };
@@ -151,7 +171,6 @@ impl Rng {
                 }
                 out.push(v);
             }
-            out
         }
     }
 
@@ -231,6 +250,22 @@ mod tests {
             let set: std::collections::HashSet<_> = s.iter().collect();
             assert_eq!(set.len(), k, "duplicates for n={n} k={k}");
             assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn sample_indices_into_matches_allocating_variant() {
+        // reused buffers across many calls must produce the exact draws of
+        // the allocating API on an identically-seeded stream (the engine's
+        // trajectories depend on this)
+        let mut a = Rng::new(55);
+        let mut b = Rng::new(55);
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        let mut chosen = std::collections::HashSet::new();
+        for (n, k) in [(1000, 5), (100, 90), (16, 16), (1, 1), (5000, 64), (64, 8)] {
+            a.sample_indices_into(n, k, &mut out, &mut scratch, &mut chosen);
+            assert_eq!(out, b.sample_indices(n, k), "n={n} k={k}");
         }
     }
 

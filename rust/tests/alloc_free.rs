@@ -1,0 +1,70 @@
+//! Steady-state allocation gate for the engine's inner loop.
+//!
+//! The blocked compute core promises that after warmup,
+//! `ClientState::local_step` through `NativeBackend::grad_into` performs
+//! **zero heap allocations per call**: the fiber sample, the dense slice
+//! gather, the Khatri-Rao row gathers, the gradient panels, and the
+//! momentum update all land in buffers owned by the client/backend. This
+//! test wraps the global allocator in a counter and asserts exactly that.
+//!
+//! (Own integration-test crate so the counting allocator cannot interfere
+//! with any other test binary.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cidertf::engine::client::ClientState;
+use cidertf::losses::Loss;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::tensor::partition::partition_mode0;
+use cidertf::tensor::synth::SynthConfig;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+#[test]
+fn local_step_steady_state_is_allocation_free() {
+    let data = SynthConfig::tiny(11).generate();
+    let shards = partition_mode0(&data.tensor, 1);
+    // momentum on: the momentum path must also be in place
+    let mut c = ClientState::new(0, shards[0].clone(), 4, 0.2, 123, 16, 32, true, false);
+    let mut backend = NativeBackend::new();
+
+    // warmup: every per-mode scratch buffer (xs slice, u gathers, grad
+    // panels, fiber sample set) reaches its steady-state capacity
+    for t in 0..60 {
+        c.local_step(t % 3, Loss::Ls, 16, 0.05, Some(0.9), &mut backend).unwrap();
+    }
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for t in 0..300 {
+        c.local_step(t % 3, Loss::Ls, 16, 0.05, Some(0.9), &mut backend).unwrap();
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state local_step allocated {} time(s) over 300 steps",
+        after - before
+    );
+}

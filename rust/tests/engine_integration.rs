@@ -52,6 +52,39 @@ fn cidertf_converges_decentralized_ls() {
 }
 
 #[test]
+fn compute_threads_do_not_change_training() {
+    // the lane-deterministic blocked kernels keep the gradient — and
+    // therefore the whole training trajectory — bit-identical whether the
+    // row-panel loop runs on 1 thread or several. The patient mode needs
+    // i_dim >= 2*MIN_ROWS_PER_THREAD (2048) for the scoped pool to
+    // actually engage (tiny's 64 rows would silently fall back to the
+    // single-thread path), so this test plants a taller tensor.
+    let data = SynthConfig {
+        dims: vec![2304, 8, 8],
+        rank: 4,
+        support_frac: 0.3,
+        fire_prob: 0.5,
+        noise_frac: 0.2,
+        value_kind: ValueKind::Binary,
+        seed: 31,
+    }
+    .generate();
+    let mut cfg1 = tiny_cfg(AlgoConfig::cidertf(4), Loss::Logit, 1);
+    cfg1.iters_per_epoch = 30;
+    cfg1.epochs = 2;
+    let mut cfg4 = cfg1.clone();
+    cfg4.compute_threads = 4;
+    let mut b1 = NativeBackend::new();
+    let mut b4 = NativeBackend::new();
+    let o1 = train(&cfg1, &data, &mut b1, None).unwrap();
+    let o4 = train(&cfg4, &data, &mut b4, None).unwrap();
+    for (a, b) in o1.factors.mats.iter().zip(o4.factors.mats.iter()) {
+        assert_eq!(a.data, b.data, "thread count changed the factors");
+    }
+    assert_eq!(o1.record.total.bytes, o4.record.total.bytes);
+}
+
+#[test]
 fn training_is_deterministic() {
     let data = tiny_data(Loss::Logit);
     let cfg = tiny_cfg(AlgoConfig::cidertf(4), Loss::Logit, 4);

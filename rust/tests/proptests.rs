@@ -88,7 +88,7 @@ fn prop_payload_roundtrip_and_wire_bytes() {
                     Payload::Dense(v) => 4 * v.len() as u64,
                     Payload::Sign { bits, .. } => 4 + bits.len() as u64,
                     Payload::TopK { indices, values, .. } => {
-                        4 + 4 * (indices.len() + values.len()) as u64
+                        4 * (indices.len() + values.len()) as u64
                     }
                     Payload::Zero { .. } => 0,
                 };
@@ -167,6 +167,69 @@ fn prop_topk_index_bounds_and_uniqueness() {
             for (&i, &v) in indices.iter().zip(values.iter()) {
                 if m.data[i as usize] != v {
                     return Err(format!("value at {i} mutated: {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Compressing arbitrary matrices — including empty, single-element, and
+/// NaN/±inf-poisoned ones — must never panic for any compressor variant,
+/// and `wire_bytes` must match the serialized body size of whatever
+/// payload comes back (the uniform body-only convention: Dense `4n`,
+/// Sign `4 + ⌈n/8⌉`, TopK `8k`, Zero `0`).
+#[test]
+fn prop_compress_decode_never_panics_even_with_nan() {
+    forall(
+        "compressor-nan-robustness",
+        80,
+        |g| {
+            let rows = g.below(10); // 0 is a valid (empty) shape
+            let cols = g.below(10);
+            let mut m = Mat::rand_normal(rows, cols, 1.0, g);
+            let n = m.data.len();
+            if n > 0 {
+                for _ in 0..g.below(4) {
+                    let i = g.below(n);
+                    m.data[i] = match g.below(3) {
+                        0 => f32::NAN,
+                        1 => f32::INFINITY,
+                        _ => f32::NEG_INFINITY,
+                    };
+                }
+            }
+            let ratio = g.below(10) as u32; // includes degenerate 0 and 1
+            (m, ratio)
+        },
+        |(m, ratio), _| {
+            let n = m.data.len();
+            for c in [Compressor::None, Compressor::Sign, Compressor::TopK { ratio: *ratio }] {
+                let p = c.compress(m); // must not panic
+                let want_bytes = match &p {
+                    Payload::Dense(v) => 4 * v.len() as u64,
+                    Payload::Sign { bits, .. } => 4 + bits.len() as u64,
+                    Payload::TopK { indices, values, .. } => {
+                        4 * (indices.len() + values.len()) as u64
+                    }
+                    Payload::Zero { .. } => 0,
+                };
+                if p.wire_bytes() != want_bytes {
+                    return Err(format!("{c:?}: wire {} != {want_bytes}", p.wire_bytes()));
+                }
+                let d = p.decode(m.rows, m.cols); // must not panic
+                if d.data.len() != n {
+                    return Err(format!("{c:?}: decode len {} != {n}", d.data.len()));
+                }
+                let mut t = Mat::zeros(m.rows, m.cols);
+                p.add_into(&mut t); // must not panic
+                if let Payload::TopK { indices, values, .. } = &p {
+                    if indices.len() != values.len() {
+                        return Err("TopK arity mismatch".into());
+                    }
+                    if indices.iter().any(|&i| i as usize >= n) {
+                        return Err("TopK index out of bounds".into());
+                    }
                 }
             }
             Ok(())
