@@ -1,69 +1,115 @@
-//! Faulty-network demo: CiderTF when the network actually misbehaves.
+//! Faulty-network demo: CiderTF when the network actually misbehaves —
+//! now written against the one-pipeline Experiment API.
 //!
-//! Runs the same 8-hospital ring configuration four ways — ideal network,
-//! 20% i.i.d. message loss, one 4x compute straggler (async), and the
-//! "hostile" everything-at-once envelope — and prints final loss,
-//! delivery accounting, and simulated wall-clock side by side.
+//! Builds a single declarative `ExperimentSpec` for an 8-hospital ring
+//! (CiderTF τ=4), then runs it four ways — ideal network, 20% i.i.d.
+//! message loss, one 4x compute straggler (async), and the "hostile"
+//! everything-at-once envelope — by swapping only the `driver` and
+//! `fault` axes. Each variant runs through a `Session`; on the `sim`
+//! rows an observer counts dropped-delta events live (the delegated
+//! `async` driver reports its faults post-hoc through `RunRecord`),
+//! while the table collects final loss, delivery accounting, and
+//! simulated wall-clock side by side.
 //!
 //! Uses the pure-Rust native backend, so it needs **no artifacts**:
 //!
 //!     cargo run --release --example faulty_network
 //!
-//! Knobs to play with: `FaultConfig` (drop/burst/latency/straggler/churn),
-//! the driver (`train_sim` = lock-step barriers, `train_async` =
-//! event-driven, no barriers), and the topology.
+//! Knobs to play with: the `FaultConfig` axes (drop/burst/latency/
+//! straggler/churn), the driver (`sim` = lock-step barriers, `async` =
+//! event-driven, no barriers), the topology — or print any variant as
+//! JSON (`spec.to_json()`) and reuse it via `cidertf train --spec`.
 
-use cidertf::engine::{AlgoConfig, TrainConfig};
+use cidertf::engine::session::{NetFaultKind, Observer, Session, SessionEvent};
+use cidertf::engine::spec::ExperimentSpec;
+use cidertf::engine::AlgoConfig;
 use cidertf::harness::Ctx;
 use cidertf::losses::Loss;
-use cidertf::net::async_gossip::train_async;
-use cidertf::net::driver::train_sim;
-use cidertf::net::sim::{self, FaultConfig, NetworkModel};
+use cidertf::net::driver::DriverKind;
+use cidertf::net::sim::FaultConfig;
 use cidertf::runtime::native::NativeBackend;
-use cidertf::tensor::synth::SynthConfig;
 use cidertf::util::benchkit::{fmt_bytes, Table};
 
+/// Counts drop/offline events as they stream past — the kind of live
+/// telemetry that used to require patching the engine. Only the `sim`
+/// driver streams per-fault events; the delegated `async` driver emits
+/// the coarse RunStart/EvalPoint/RunEnd sequence, so this observer
+/// stays silent on those rows.
+#[derive(Default)]
+struct FaultCounter {
+    dropped: u64,
+    offline: u64,
+}
+
+impl Observer for FaultCounter {
+    fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()> {
+        match event {
+            SessionEvent::NetFault { kind, .. } => match kind {
+                NetFaultKind::Dropped { .. } => self.dropped += 1,
+                NetFaultKind::Offline { .. } => self.offline += 1,
+            },
+            SessionEvent::RunEnd { .. } => {
+                if self.dropped + self.offline > 0 {
+                    println!(
+                        "  [observer] saw {} dropped deltas, {} offline client-rounds",
+                        self.dropped, self.offline
+                    );
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    let data = SynthConfig::tiny(42).generate();
+    let base = ExperimentSpec::builder("tiny", Loss::Logit, AlgoConfig::cidertf(4))
+        .rank(4)
+        .fiber_samples(16)
+        .k(8)
+        .gamma(Ctx::gamma_for("tiny", Loss::Logit))
+        .eval_batch(64)
+        .epochs(4)
+        .iters_per_epoch(150)
+        .driver(DriverKind::Sim)
+        .build()?;
+
+    let data = base.dataset_data()?;
     println!(
         "tensor {:?}, {} nonzeros — 8 hospitals on a ring, CiderTF tau=4\n",
         data.tensor.dims,
         data.tensor.nnz()
     );
 
-    let mut cfg = TrainConfig::new("tiny", Loss::Logit, AlgoConfig::cidertf(4));
-    cfg.rank = 4;
-    cfg.fiber_samples = 16;
-    cfg.k = 8;
-    cfg.gamma = Ctx::gamma_for("tiny", Loss::Logit);
-    cfg.eval_batch = 64;
-    cfg.epochs = 4;
-    cfg.iters_per_epoch = 150;
-
-    let scenarios: Vec<(&str, &str, Box<dyn NetworkModel>)> = vec![
-        ("sim", "ideal", sim::ideal()),
-        ("sim", "20% loss", FaultConfig::lossy(0.2).with_seed(cfg.seed).boxed()),
+    let seed = base.seed;
+    let scenarios: Vec<(&str, DriverKind, Option<FaultConfig>)> = vec![
+        ("ideal", DriverKind::Sim, None),
+        ("20% loss", DriverKind::Sim, Some(FaultConfig::lossy(0.2).with_seed(seed))),
         (
-            "async",
             "1 straggler 4x",
-            FaultConfig { straggler_ids: vec![0], straggler_slow: 4.0, ..Default::default() }
-                .boxed(),
+            DriverKind::Async,
+            Some(FaultConfig {
+                straggler_ids: vec![0],
+                straggler_slow: 4.0,
+                ..Default::default()
+            }),
         ),
-        ("async", "hostile", FaultConfig::hostile().with_seed(cfg.seed).boxed()),
+        ("hostile", DriverKind::Async, Some(FaultConfig::hostile().with_seed(seed))),
     ];
 
     let table = Table::new(&[
         "driver", "network", "final_loss", "delivered", "dropped", "stale", "offline", "uplink",
         "sim_s",
     ]);
-    for (driver, label, mut net) in scenarios {
+    for (label, driver, fault) in scenarios {
+        let mut spec = base.clone();
+        spec.driver = driver;
+        spec.fault = fault;
+        let mut session = Session::new(spec).observe(Box::<FaultCounter>::default());
         let mut backend = NativeBackend::new();
-        let out = match driver {
-            "sim" => train_sim(&cfg, &data, &mut backend, net.as_mut(), None)?,
-            _ => train_async(&cfg, &data, &mut backend, net.as_mut(), None)?,
-        };
+        let out = session.run_on(&data, &mut backend, None)?;
         table.row(&[
-            driver.to_string(),
+            driver.name().to_string(),
             label.to_string(),
             format!("{:.4e}", out.record.final_loss()),
             out.record.net.delivered.to_string(),
@@ -79,7 +125,9 @@ fn main() -> anyhow::Result<()> {
         "\nReading the table: drops leave peer estimates stale instead of\n\
          corrupting them (CHOCO-style difference encoding), so loss degrades\n\
          gracefully; the async driver hides stragglers in wall-clock terms\n\
-         at the price of stale mixing, which the consensus step absorbs."
+         at the price of stale mixing, which the consensus step absorbs.\n\
+         Each row is one ExperimentSpec — print it with `cidertf spec` or\n\
+         persist it as JSON and rerun with `cidertf train --spec`."
     );
     Ok(())
 }

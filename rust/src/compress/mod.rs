@@ -132,6 +132,22 @@ impl Compressor {
         }
     }
 
+    /// Look up a compressor by CLI/spec name (`topk:16` selects the keep
+    /// ratio). Thin wrapper over [`crate::registry::compressors`].
+    pub fn by_name(spec: &str) -> anyhow::Result<Self> {
+        crate::registry::compressors().resolve(spec)
+    }
+
+    /// The spec string this compressor round-trips through
+    /// [`Compressor::by_name`] — `"none"`, `"sign"`, or `"topk:<ratio>"`.
+    pub fn spec_string(self) -> String {
+        match self {
+            Compressor::None => "none".to_string(),
+            Compressor::Sign => "sign".to_string(),
+            Compressor::TopK { ratio } => format!("topk:{ratio}"),
+        }
+    }
+
     /// Compress a delta matrix.
     pub fn compress(self, m: &Mat) -> Payload {
         let n = m.data.len();

@@ -1,0 +1,384 @@
+//! Bit-exact checkpoint/resume for [`crate::engine::session::Session`].
+//!
+//! A checkpoint is one JSON file (schema [`CHECKPOINT_SCHEMA`]) holding
+//! the full [`crate::engine::spec::ExperimentSpec`] plus every piece of
+//! mutable run state:
+//!
+//! * per-client factors, momentum velocities, peer estimates `Â`,
+//!   error-feedback residuals/shadows, the fiber-sampler RNG stream, and
+//!   the comm/delivery ledgers,
+//! * the shared block-sampler RNG stream and draw counter,
+//! * the network model's per-link fault machines
+//!   ([`crate::net::sim::NetworkModel::state_json`]),
+//! * the virtual/wall clock and the metric points recorded so far.
+//!
+//! Everything derived deterministically from the spec (shards, graph,
+//! eval samples, trigger schedule, static link traits) is rebuilt on
+//! resume rather than stored. Matrices are serialized as IEEE-754 bit
+//! patterns ([`crate::util::mat::Mat::encode_bits`]) and RNG words as
+//! decimal strings, so a resumed run continues **bit-identically** —
+//! asserted by `tests/session_api.rs` under both ideal and faulty
+//! networks.
+
+use std::path::Path;
+
+use crate::engine::client::ClientState;
+use crate::engine::metrics::MetricPoint;
+use crate::engine::spec::ExperimentSpec;
+use crate::util::json::Json;
+use crate::util::mat::Mat;
+
+/// Schema tag written into every checkpoint file.
+pub const CHECKPOINT_SCHEMA: &str = "cidertf-checkpoint-v1";
+
+/// Mid-run mutable state, as restored by a resume. Produced/consumed by
+/// the session loop; opaque JSON blobs keep the client and network
+/// layouts private to their owners.
+#[derive(Debug, Clone)]
+pub struct SessionState {
+    /// next iteration index to execute
+    pub t: usize,
+    /// clock at the checkpoint (virtual seconds, or elapsed wall seconds)
+    pub time_s: f64,
+    /// shared block-sampler RNG stream
+    pub sampler_rng: ([u64; 4], Option<f64>),
+    /// shared block-sampler draw counter
+    pub sampler_t: usize,
+    /// network-model internal state (`Json::Null` for stateless models)
+    pub net_model: Json,
+    /// metric points recorded so far
+    pub points: Vec<MetricPoint>,
+    /// per-client state blobs, in client-id order
+    pub clients: Vec<Json>,
+}
+
+// ---- primitive encoders ----
+
+use crate::util::rng::{state_from_json as rng_from_json, state_to_json as rng_json};
+
+fn mat_json(m: &Mat) -> Json {
+    Json::obj(vec![
+        ("r", Json::Num(m.rows as f64)),
+        ("c", Json::Num(m.cols as f64)),
+        ("b", Json::Str(m.encode_bits())),
+    ])
+}
+
+fn mat_from_json(j: &Json) -> anyhow::Result<Mat> {
+    Mat::decode_bits(j.req_usize("r")?, j.req_usize("c")?, j.req_str("b")?)
+}
+
+fn opt_mat_json(m: Option<&Mat>) -> Json {
+    m.map(mat_json).unwrap_or(Json::Null)
+}
+
+fn opt_mat_from_json(j: &Json) -> anyhow::Result<Option<Mat>> {
+    match j {
+        Json::Null => Ok(None),
+        other => Ok(Some(mat_from_json(other)?)),
+    }
+}
+
+fn assign_mat(slot: &mut Mat, new: Mat, what: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        new.rows == slot.rows && new.cols == slot.cols,
+        "{what}: checkpoint shape {}x{} != expected {}x{}",
+        new.rows,
+        new.cols,
+        slot.rows,
+        slot.cols
+    );
+    *slot = new;
+    Ok(())
+}
+
+fn point_json(p: &MetricPoint) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::Num(p.epoch as f64)),
+        ("iter", Json::Num(p.iter as f64)),
+        ("time_s", Json::Num(p.time_s)),
+        ("loss", Json::Num(p.loss)),
+        ("bytes", Json::u64(p.bytes)),
+        ("fms", p.fms.map(Json::Num).unwrap_or(Json::Null)),
+    ])
+}
+
+fn point_from_json(j: &Json) -> anyhow::Result<MetricPoint> {
+    Ok(MetricPoint {
+        epoch: j.req_usize("epoch")?,
+        iter: j.req_usize("iter")?,
+        time_s: j.req_f64("time_s")?,
+        loss: j.req_f64("loss")?,
+        bytes: j.req_u64("bytes")?,
+        fms: j.get("fms").and_then(Json::as_f64),
+    })
+}
+
+// ---- client state ----
+
+/// Serialize one client's mutable state.
+pub(crate) fn snapshot_client(c: &ClientState) -> Json {
+    let factors: Vec<Json> = c.factors.mats.iter().map(mat_json).collect();
+    let momentum: Vec<Json> =
+        c.momentum_mats().iter().map(|m| opt_mat_json(m.as_ref())).collect();
+    let estimates = match &c.estimates {
+        None => Json::Null,
+        Some(est) => Json::Arr(
+            est.snapshot_mats()
+                .iter()
+                .map(|slot| Json::Arr(slot.iter().map(|m| opt_mat_json(m.as_ref())).collect()))
+                .collect(),
+        ),
+    };
+    let ef: Vec<Json> =
+        c.ef.iter().map(|e| opt_mat_json(e.as_ref().map(|e| &e.residual))).collect();
+    let ef_shadow = match &c.ef_shadow {
+        None => Json::Null,
+        Some(mats) => Json::Arr(mats.iter().map(mat_json).collect()),
+    };
+    Json::obj(vec![
+        ("factors", Json::Arr(factors)),
+        ("momentum", Json::Arr(momentum)),
+        ("estimates", estimates),
+        ("ef", Json::Arr(ef)),
+        ("ef_shadow", ef_shadow),
+        ("fiber_rng", rng_json(c.fiber_sampler.rng_state())),
+        (
+            "ledger",
+            Json::obj(vec![
+                ("bytes", Json::u64(c.ledger.bytes)),
+                ("messages", Json::u64(c.ledger.messages)),
+                ("triggered", Json::u64(c.ledger.triggered)),
+                ("suppressed", Json::u64(c.ledger.suppressed)),
+            ]),
+        ),
+        (
+            "net",
+            Json::obj(vec![
+                ("delivered", Json::u64(c.net.delivered)),
+                ("dropped", Json::u64(c.net.dropped)),
+                ("stale", Json::u64(c.net.stale)),
+                ("offline_rounds", Json::u64(c.net.offline_rounds)),
+            ]),
+        ),
+    ])
+}
+
+/// Restore a [`snapshot_client`] blob into a freshly-built client
+/// (shapes validated against the deterministic construction).
+pub(crate) fn restore_client(c: &mut ClientState, j: &Json) -> anyhow::Result<()> {
+    // factors
+    let fj = j.req_array("factors")?;
+    anyhow::ensure!(
+        fj.len() == c.factors.mats.len(),
+        "checkpoint has {} factor modes, expected {}",
+        fj.len(),
+        c.factors.mats.len()
+    );
+    for (m, (slot, mj)) in c.factors.mats.iter_mut().zip(fj.iter()).enumerate() {
+        assign_mat(slot, mat_from_json(mj)?, &format!("factor mode {m}"))?;
+    }
+
+    // momentum velocities
+    let mj = j.req_array("momentum")?;
+    let moms = c.momentum_mats_mut();
+    anyhow::ensure!(mj.len() == moms.len(), "momentum mode count mismatch");
+    for (m, (slot, v)) in moms.iter_mut().zip(mj.iter()).enumerate() {
+        match (slot, opt_mat_from_json(v)?) {
+            (None, None) => {}
+            (Some(slot), Some(new)) => assign_mat(slot, new, &format!("momentum mode {m}"))?,
+            _ => anyhow::bail!("momentum enablement mismatch at mode {m}"),
+        }
+    }
+
+    // peer estimates
+    match (c.estimates.as_mut(), j.get("estimates")) {
+        (None, None | Some(Json::Null)) => {}
+        (Some(est), Some(Json::Arr(slots))) => {
+            let mut mats: Vec<Vec<Option<Mat>>> = Vec::with_capacity(slots.len());
+            for slot in slots {
+                let modes = slot
+                    .as_array()
+                    .ok_or_else(|| anyhow::anyhow!("bad estimates slot"))?;
+                mats.push(
+                    modes.iter().map(opt_mat_from_json).collect::<anyhow::Result<Vec<_>>>()?,
+                );
+            }
+            est.restore_mats(mats)?;
+        }
+        _ => anyhow::bail!("estimate presence mismatch between checkpoint and spec"),
+    }
+
+    // error feedback residuals
+    let efj = j.req_array("ef")?;
+    anyhow::ensure!(efj.len() == c.ef.len(), "error-feedback mode count mismatch");
+    for (m, (slot, v)) in c.ef.iter_mut().zip(efj.iter()).enumerate() {
+        match (slot, opt_mat_from_json(v)?) {
+            (None, None) => {}
+            (Some(ef), Some(new)) => {
+                assign_mat(&mut ef.residual, new, &format!("ef residual mode {m}"))?
+            }
+            _ => anyhow::bail!("error-feedback enablement mismatch at mode {m}"),
+        }
+    }
+
+    // error feedback shadow factors
+    match j.get("ef_shadow") {
+        None | Some(Json::Null) => c.ef_shadow = None,
+        Some(Json::Arr(mats)) => {
+            c.ef_shadow =
+                Some(mats.iter().map(mat_from_json).collect::<anyhow::Result<Vec<_>>>()?);
+        }
+        Some(_) => anyhow::bail!("bad 'ef_shadow'"),
+    }
+
+    // fiber sampler stream
+    c.fiber_sampler.restore_rng(rng_from_json(
+        j.get("fiber_rng").ok_or_else(|| anyhow::anyhow!("missing 'fiber_rng'"))?,
+    )?);
+
+    // ledgers
+    let lj = j.get("ledger").ok_or_else(|| anyhow::anyhow!("missing 'ledger'"))?;
+    c.ledger.bytes = lj.req_u64("bytes")?;
+    c.ledger.messages = lj.req_u64("messages")?;
+    c.ledger.triggered = lj.req_u64("triggered")?;
+    c.ledger.suppressed = lj.req_u64("suppressed")?;
+    let nj = j.get("net").ok_or_else(|| anyhow::anyhow!("missing 'net'"))?;
+    c.net.delivered = nj.req_u64("delivered")?;
+    c.net.dropped = nj.req_u64("dropped")?;
+    c.net.stale = nj.req_u64("stale")?;
+    c.net.offline_rounds = nj.req_u64("offline_rounds")?;
+    Ok(())
+}
+
+// ---- whole-file layer ----
+
+fn state_to_json(st: &SessionState) -> Json {
+    Json::obj(vec![
+        ("t", Json::Num(st.t as f64)),
+        ("time_s", Json::Num(st.time_s)),
+        ("sampler_rng", rng_json(st.sampler_rng)),
+        ("sampler_t", Json::Num(st.sampler_t as f64)),
+        ("net_model", st.net_model.clone()),
+        ("points", Json::Arr(st.points.iter().map(point_json).collect())),
+        ("clients", Json::Arr(st.clients.clone())),
+    ])
+}
+
+fn state_from_json(j: &Json) -> anyhow::Result<SessionState> {
+    Ok(SessionState {
+        t: j.req_usize("t")?,
+        time_s: j.req_f64("time_s")?,
+        sampler_rng: rng_from_json(
+            j.get("sampler_rng").ok_or_else(|| anyhow::anyhow!("missing 'sampler_rng'"))?,
+        )?,
+        sampler_t: j.req_usize("sampler_t")?,
+        net_model: j.get("net_model").cloned().unwrap_or(Json::Null),
+        points: j
+            .req_array("points")?
+            .iter()
+            .map(point_from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        clients: j.req_array("clients")?.to_vec(),
+    })
+}
+
+/// Atomically write a checkpoint (temp file + rename, like BENCH.json):
+/// an interrupted writer can never leave a truncated checkpoint behind.
+pub fn write_checkpoint(
+    path: &Path,
+    spec: &ExperimentSpec,
+    state: &SessionState,
+) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let top = Json::obj(vec![
+        ("schema", Json::Str(CHECKPOINT_SCHEMA.to_string())),
+        ("spec", spec.to_json()),
+        ("state", state_to_json(state)),
+    ]);
+    let tmp = path.with_extension("ckpt.tmp");
+    std::fs::write(&tmp, top.to_string())
+        .map_err(|e| anyhow::anyhow!("cannot write checkpoint {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot move checkpoint into place at {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Read a checkpoint back into its spec + mutable state.
+pub fn read_checkpoint(path: &Path) -> anyhow::Result<(ExperimentSpec, SessionState)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read checkpoint {}: {e}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))?;
+    let schema = j.req_str("schema")?;
+    anyhow::ensure!(
+        schema == CHECKPOINT_SCHEMA,
+        "unsupported checkpoint schema '{schema}' (want {CHECKPOINT_SCHEMA})"
+    );
+    let spec = ExperimentSpec::from_json(
+        j.get("spec").ok_or_else(|| anyhow::anyhow!("missing 'spec'"))?,
+    )?;
+    let state = state_from_json(
+        j.get("state").ok_or_else(|| anyhow::anyhow!("missing 'state'"))?,
+    )?;
+    Ok((spec, state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mat_bits_round_trip_exactly() {
+        let mut rng = Rng::new(3);
+        let mut m = Mat::rand_normal(7, 5, 3.0, &mut rng);
+        m.data[0] = -0.0;
+        m.data[1] = f32::MIN_POSITIVE / 2.0; // subnormal
+        let j = mat_json(&m);
+        let back = mat_from_json(&j).unwrap();
+        assert_eq!(back.rows, 7);
+        for (a, b) in m.data.iter().zip(back.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rng_state_round_trips_and_continues() {
+        let mut r = Rng::new(42);
+        for _ in 0..17 {
+            r.next_u64();
+        }
+        let _ = r.normal(); // populate the Box-Muller spare
+        let snap = r.state();
+        let j = rng_json(snap);
+        let (words, spare) = rng_from_json(&j).unwrap();
+        let mut restored = Rng::from_state(words, spare);
+        for _ in 0..32 {
+            assert_eq!(r.next_u64(), restored.next_u64());
+        }
+        assert_eq!(r.normal(), restored.normal());
+    }
+
+    #[test]
+    fn point_round_trip() {
+        let p = MetricPoint {
+            epoch: 3,
+            iter: 450,
+            time_s: 12.125,
+            loss: 1.0625e-3,
+            bytes: 123_456_789,
+            fms: Some(0.875),
+        };
+        let q = point_from_json(&point_json(&p)).unwrap();
+        assert_eq!(q.epoch, p.epoch);
+        assert_eq!(q.time_s, p.time_s);
+        assert_eq!(q.loss, p.loss);
+        assert_eq!(q.bytes, p.bytes);
+        assert_eq!(q.fms, p.fms);
+    }
+}

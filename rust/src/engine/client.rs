@@ -175,6 +175,18 @@ impl ClientState {
         }
     }
 
+    /// Checkpoint view of the per-mode momentum velocities (`None` when
+    /// momentum is disabled).
+    pub(crate) fn momentum_mats(&self) -> &[Option<Mat>] {
+        &self.momentum
+    }
+
+    /// Mutable counterpart of [`ClientState::momentum_mats`] for
+    /// checkpoint restore.
+    pub(crate) fn momentum_mats_mut(&mut self) -> &mut [Option<Mat>] {
+        &mut self.momentum
+    }
+
     /// Wire up gossip estimates (decentralized runs only): feature modes
     /// start from the shared init.
     pub fn init_estimates(&mut self, neighbors: &[usize]) {

@@ -14,11 +14,12 @@
 //! Gradient and loss evaluation execute through a [`ComputeBackend`] —
 //! the PJRT artifacts in production, the native mirror in tests.
 
+pub mod checkpoint;
 pub mod client;
 pub mod metrics;
 pub mod presets;
-
-use std::time::Instant;
+pub mod session;
+pub mod spec;
 
 use crate::compress::{Compressor, Payload};
 use crate::factor::{fms::fms, FactorSet};
@@ -26,7 +27,7 @@ use crate::gossip::Message;
 use crate::losses::Loss;
 use crate::net::sim::NetStats;
 use crate::runtime::ComputeBackend;
-use crate::sched::{BlockSampler, TriggerSchedule};
+use crate::sched::TriggerSchedule;
 use crate::tensor::partition::partition_mode0;
 use crate::tensor::synth::SynthData;
 use crate::topology::{Graph, Topology};
@@ -35,7 +36,7 @@ use client::ClientState;
 use metrics::{MetricPoint, RunRecord};
 
 /// Algorithm configuration (the Table II feature matrix).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AlgoConfig {
     pub name: String,
     pub compressor: Compressor,
@@ -130,75 +131,31 @@ pub struct TrainOutcome {
 }
 
 /// Run one training configuration to completion.
+///
+/// **Deprecated shim.** This is the legacy entry point, kept so existing
+/// callers and tests compile unchanged; it now delegates to the unified
+/// session loop in [`session`] with the ideal network and a wall clock,
+/// performing exactly the float operations of the original engine loop
+/// (bit-identical factors, asserted in `tests/network_sim.rs`). New code
+/// should build an [`spec::ExperimentSpec`] and run a
+/// [`session::Session`] — that path adds observers, eval cadence,
+/// stopping rules, and checkpoint/resume.
 pub fn train(
     cfg: &TrainConfig,
     data: &SynthData,
     backend: &mut dyn ComputeBackend,
     fms_reference: Option<&FactorSet>,
 ) -> anyhow::Result<TrainOutcome> {
-    let d_order = data.tensor.dims.len();
-    anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
-    backend.set_threads(cfg.compute_threads);
-    let graph = Graph::build(cfg.topology, cfg.k)?;
-    let decentralized = cfg.k > 1;
-    let mut clients = build_clients(cfg, data, &graph);
-
-    let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
-    let trigger = cfg.trigger_schedule();
-    let all_modes: Vec<usize> = (0..d_order).collect();
-
-    let t0 = Instant::now();
-    let mut points: Vec<MetricPoint> = Vec::with_capacity(cfg.epochs + 1);
-    record_point(&mut clients, cfg, backend, fms_reference, 0, 0, 0.0, &mut points)?;
-
-    let total_iters = cfg.epochs * cfg.iters_per_epoch;
-    for t in 0..total_iters {
-        // ---- block level: the shared mode sequence d_ξ[t] ----
-        // (drawn every round so baselines consume the same randomness)
-        let sampled_mode = block_sampler.next_mode();
-        let modes: &[usize] =
-            if cfg.algo.block_random { std::slice::from_ref(&sampled_mode) } else { &all_modes };
-
-        // ---- local gradient steps (Alg. 1 lines 4-5) ----
-        for c in clients.iter_mut() {
-            for &m in modes {
-                c.local_step(m, cfg.loss, cfg.fiber_samples, cfg.gamma, cfg.algo.momentum, backend)?;
-                // Centralized CiderTF: re-apply the step through the
-                // error-feedback compressor (paper baseline iii).
-                if cfg.algo.error_feedback {
-                    apply_error_feedback(c, m, cfg.algo.compressor);
-                }
-            }
-        }
-
-        // ---- round level: communicate only when t ≡ 0 (mod τ) ----
-        if decentralized && t % cfg.algo.tau == 0 {
-            for &m in modes {
-                if m == 0 {
-                    continue; // patient mode never travels (privacy)
-                }
-                gossip_round(&mut clients, &graph, cfg, &trigger, t, m);
-            }
-        }
-
-        // ---- metrics per epoch ----
-        if (t + 1) % cfg.iters_per_epoch == 0 {
-            let epoch = (t + 1) / cfg.iters_per_epoch;
-            let now = t0.elapsed().as_secs_f64();
-            record_point(&mut clients, cfg, backend, fms_reference, epoch, t + 1, now, &mut points)?;
-            if !points.last().map(|p| p.loss.is_finite()).unwrap_or(true) {
-                eprintln!(
-                    "[{}] diverged at epoch {epoch} (gamma {} too large) — stopping early",
-                    cfg.algo.name, cfg.gamma
-                );
-                break;
-            }
-        }
-    }
-
-    let factors = assemble_global(&clients);
-    let record = finalize_record(cfg, &graph, &clients, points, t0.elapsed().as_secs_f64());
-    Ok(TrainOutcome { record, factors })
+    let mut net = crate::net::sim::IdealNetwork;
+    session::run_loop(
+        cfg,
+        data,
+        backend,
+        &mut net,
+        true,
+        fms_reference,
+        &mut session::Hooks::none(),
+    )
 }
 
 /// Shard the tensor and build one [`ClientState`] per institution,
@@ -263,39 +220,6 @@ pub(crate) fn finalize_record(
         net,
         wall_s,
     }
-}
-
-/// One synchronous gossip exchange on mode `m` (Alg. 1 lines 9-18),
-/// composed from the shared phases below over an implicit ideal network.
-fn gossip_round(
-    clients: &mut [ClientState],
-    graph: &Graph,
-    cfg: &TrainConfig,
-    trigger: &TriggerSchedule,
-    t: usize,
-    m: usize,
-) {
-    let payloads = publish_phase(clients, graph, cfg, trigger, t, m, None);
-
-    // deliver: every client updates Â^j for j ∈ N_k ∪ {k} (line 16)
-    for k in 0..clients.len() {
-        let mut delivered = 0;
-        {
-            let est = clients[k].estimates.as_mut().expect("estimates");
-            if let Some(p) = &payloads[k] {
-                est.apply_delta(k, m, p);
-            }
-            for &j in &graph.neighbors[k] {
-                if let Some(p) = &payloads[j] {
-                    est.apply_delta(j, m, p);
-                    delivered += 1;
-                }
-            }
-        }
-        clients[k].net.delivered += delivered;
-    }
-
-    consensus_phase(clients, graph, cfg.algo.rho, m, None);
 }
 
 /// Publish phase (Alg. 1 lines 10-14): event-trigger check, delta

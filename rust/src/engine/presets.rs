@@ -116,25 +116,10 @@ impl AlgoConfig {
         }
     }
 
-    /// Look up a preset by CLI name (`cidertf:4` selects τ = 4).
+    /// Look up a preset by CLI name (`cidertf:4` selects τ = 4). Thin
+    /// wrapper over [`crate::registry::algos`].
     pub fn by_name(spec: &str) -> anyhow::Result<Self> {
-        let (name, arg) = match spec.split_once(':') {
-            Some((n, a)) => (n, Some(a.parse::<usize>().map_err(|_| anyhow::anyhow!("bad tau in '{spec}'"))?)),
-            None => (spec, None),
-        };
-        Ok(match name {
-            "cidertf" => Self::cidertf(arg.unwrap_or(4)),
-            "cidertf_m" => Self::cidertf_m(arg.unwrap_or(4)),
-            "dpsgd" => Self::dpsgd(),
-            "dpsgd_bras" => Self::dpsgd_bras(),
-            "dpsgd_sign" => Self::dpsgd_sign(),
-            "dpsgd_bras_sign" => Self::dpsgd_bras_sign(),
-            "sparq_sgd" => Self::sparq_sgd(arg.unwrap_or(4)),
-            "gcp" => Self::gcp(),
-            "bras_cpd" => Self::bras_cpd(),
-            "centralized_cidertf" => Self::centralized_cidertf(),
-            other => anyhow::bail!("unknown algorithm '{other}'"),
-        })
+        crate::registry::algos().resolve(spec)
     }
 
     /// Table II "Compression Ratio" column (analytical, per communicating

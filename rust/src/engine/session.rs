@@ -1,0 +1,857 @@
+//! The one experiment pipeline: spec → [`Session`] → observers.
+//!
+//! A [`Session`] consumes a declarative
+//! [`ExperimentSpec`](crate::engine::spec::ExperimentSpec), resolves
+//! every named axis through the [`crate::registry`] tables, runs the
+//! selected [`DriverKind`] execution path, and streams typed
+//! [`SessionEvent`]s to any number of [`Observer`]s. What used to be
+//! engine-internal bookkeeping — CSV dumps, console progress, BENCH.json
+//! appending, a JSONL progress stream — are now independent observers
+//! ([`CsvObserver`], [`ConsoleObserver`], [`BenchJsonObserver`],
+//! [`JsonlObserver`]).
+//!
+//! Long runs survive restarts: [`Session::checkpoint_every`] writes a
+//! bit-exact state file at epoch boundaries
+//! (see [`crate::engine::checkpoint`]) and [`Session::resume_from`]
+//! continues a run with bit-identical results, under both ideal and
+//! faulty networks (test-asserted).
+//!
+//! The unified round loop here subsumes the old `engine::train` and
+//! `net::driver::train_sim` bodies — with the ideal network and a wall
+//! clock it performs exactly the float operations of the former, with a
+//! `NetworkModel` and the virtual clock exactly those of the latter —
+//! and both remain as thin deprecated shims over this module.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::engine::checkpoint::{self, SessionState};
+use crate::engine::metrics::{MetricPoint, RunRecord};
+use crate::engine::spec::ExperimentSpec;
+use crate::engine::{
+    apply_error_feedback, assemble_global, build_clients, consensus_phase, finalize_record,
+    publish_phase, record_point, TrainConfig, TrainOutcome,
+};
+use crate::factor::FactorSet;
+use crate::gossip::Message;
+use crate::net::driver::DriverKind;
+use crate::net::sim::{self, NetworkModel, VirtualClock};
+use crate::runtime::{ComputeBackend, NativeOrPjrt};
+use crate::sched::BlockSampler;
+use crate::tensor::synth::SynthData;
+use crate::topology::Graph;
+use crate::util::benchkit::{append_bench_json, fmt_bytes, BenchRun, Stats};
+use crate::util::json::Json;
+
+/// What kind of network misbehaviour a [`SessionEvent::NetFault`]
+/// reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFaultKind {
+    /// a published delta was lost on the directed link `from -> to`
+    Dropped {
+        /// sending client id
+        from: usize,
+        /// receiving client id
+        to: usize,
+    },
+    /// `client` was churned out for this round (no compute, no traffic)
+    Offline {
+        /// the offline client id
+        client: usize,
+    },
+}
+
+/// Typed events a running [`Session`] emits to its [`Observer`]s, in
+/// order: one `RunStart`, then per-iteration `RoundEnd` (with
+/// `CommBytes`/`NetFault` interleaved on communicating rounds),
+/// `EvalPoint` at each eval cadence, `Checkpoint` after each state file
+/// is written, and exactly one `RunEnd`. An iteration's `RoundEnd`
+/// precedes any `EvalPoint`/`Checkpoint` it triggers, so interval
+/// counters keyed off `RoundEnd` include the evaluating iteration
+/// itself.
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    /// the run is configured and about to start
+    RunStart {
+        /// the resolved spec as JSON (a config summary for legacy-shim
+        /// runs that have no full spec)
+        spec: Json,
+    },
+    /// one training iteration finished
+    RoundEnd {
+        /// iteration index
+        t: usize,
+        /// clock at the end of the iteration (wall or virtual seconds)
+        time_s: f64,
+    },
+    /// uplink traffic happened on a communicating iteration
+    CommBytes {
+        /// iteration index
+        t: usize,
+        /// bytes put on the wire this iteration (all clients)
+        round_bytes: u64,
+        /// cumulative uplink bytes so far
+        total_bytes: u64,
+    },
+    /// the network model dropped a delta or took a client offline
+    NetFault {
+        /// iteration index
+        t: usize,
+        /// what happened
+        kind: NetFaultKind,
+    },
+    /// a metric point was recorded
+    EvalPoint {
+        /// the point (epoch, iter, time, loss, bytes, fms)
+        point: MetricPoint,
+    },
+    /// a checkpoint file was written
+    Checkpoint {
+        /// next iteration index stored in the checkpoint
+        t: usize,
+        /// where it was written
+        path: PathBuf,
+    },
+    /// the run finished (completed, stopped early, or diverged)
+    RunEnd {
+        /// the final run record (points, ledgers, delivery stats)
+        record: RunRecord,
+    },
+}
+
+/// Receives [`SessionEvent`]s from a running [`Session`]. Observers
+/// cannot perturb the *results* — any combination of them leaves the
+/// factors bit-identical — but a failing observer (e.g. an unwritable
+/// CSV destination) aborts the run with its error rather than silently
+/// losing output.
+pub trait Observer {
+    /// Handle one event. Called synchronously from the training loop —
+    /// keep it cheap on `RoundEnd`. Returning an error aborts the run.
+    fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()>;
+}
+
+/// When and where [`Session`] writes checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// checkpoint file (atomically replaced on each write)
+    pub path: PathBuf,
+    /// write every this-many epochs (also at early stops and run end)
+    pub every_epochs: usize,
+}
+
+// ---------------------------------------------------------------------
+// Observers
+// ---------------------------------------------------------------------
+
+/// Prints eval points and a final summary to stdout (the `cidertf train`
+/// progress output).
+#[derive(Debug, Clone, Default)]
+pub struct ConsoleObserver;
+
+impl Observer for ConsoleObserver {
+    fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()> {
+        match event {
+            SessionEvent::EvalPoint { point: p } => {
+                println!(
+                    "epoch {:>3}  t={:>7.1}s  loss={:.6e}  uplink={}",
+                    p.epoch,
+                    p.time_s,
+                    p.loss,
+                    fmt_bytes(p.bytes as f64)
+                );
+            }
+            SessionEvent::Checkpoint { t, path } => {
+                println!("checkpoint @ iter {t} -> {}", path.display());
+            }
+            SessionEvent::RunEnd { record } => {
+                println!(
+                    "done: final loss {:.6e}, wall {:.1}s, uplink {}, msgs {} (triggered {}, suppressed {})",
+                    record.final_loss(),
+                    record.wall_s,
+                    fmt_bytes(record.total.bytes as f64),
+                    record.total.messages,
+                    record.total.triggered,
+                    record.total.suppressed
+                );
+                let n = &record.net;
+                if n.dropped + n.stale + n.offline_rounds > 0 || n.delivered > 0 {
+                    println!(
+                        "network: delivered {}, dropped {} ({:.1}% loss), stale {}, offline rounds {}",
+                        n.delivered,
+                        n.dropped,
+                        100.0 * n.drop_fraction(),
+                        n.stale,
+                        n.offline_rounds
+                    );
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+/// Writes the final [`RunRecord`] as a CSV curve on `RunEnd` (what the
+/// harness used to do inline). A write failure aborts the run with an
+/// error — figure regeneration must not "succeed" with no artifacts.
+#[derive(Debug, Clone)]
+pub struct CsvObserver {
+    path: PathBuf,
+}
+
+impl CsvObserver {
+    /// CSV destination (parent directories are created).
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        CsvObserver { path: path.into() }
+    }
+}
+
+impl Observer for CsvObserver {
+    fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()> {
+        if let SessionEvent::RunEnd { record } = event {
+            record
+                .write_csv(&self.path)
+                .map_err(|e| anyhow::anyhow!("cannot write {}: {e:#}", self.path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Streams run progress as JSON lines: one `run_start` line with the
+/// full spec, one `eval` line per metric point (carrying round/fault
+/// counters for the interval since the previous point), `checkpoint`
+/// lines, and a final `run_end` line. Each line is flushed, so the file
+/// tails cleanly while a long faulty-network run is in flight. The file
+/// is opened in **append** mode — a resumed run continues the same
+/// stream after its own `run_start` marker instead of erasing the
+/// pre-crash history. I/O failures abort the run.
+#[derive(Debug)]
+pub struct JsonlObserver {
+    path: PathBuf,
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    /// per-interval counters, reset after every `eval` line
+    rounds: u64,
+    dropped: u64,
+    offline: u64,
+}
+
+impl JsonlObserver {
+    /// JSONL destination (parent directories are created, lines appended
+    /// starting at `RunStart`).
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        JsonlObserver { path: path.into(), out: None, rounds: 0, dropped: 0, offline: 0 }
+    }
+
+    fn write_line(&mut self, line: Json) -> anyhow::Result<()> {
+        if self.out.is_none() {
+            if let Some(dir) = self.path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&self.path)
+                .map_err(|e| {
+                    anyhow::anyhow!("jsonl observer: cannot open {}: {e}", self.path.display())
+                })?;
+            self.out = Some(std::io::BufWriter::new(f));
+        }
+        let w = self.out.as_mut().expect("jsonl writer just opened");
+        writeln!(w, "{line}")
+            .and_then(|_| w.flush())
+            .map_err(|e| anyhow::anyhow!("jsonl observer: write to {} failed: {e}", self.path.display()))
+    }
+}
+
+impl Observer for JsonlObserver {
+    fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()> {
+        match event {
+            SessionEvent::RunStart { spec } => {
+                self.write_line(Json::obj(vec![
+                    ("event", Json::Str("run_start".into())),
+                    ("spec", spec.clone()),
+                ]))?;
+            }
+            SessionEvent::RoundEnd { .. } => self.rounds += 1,
+            SessionEvent::NetFault { kind, .. } => match kind {
+                NetFaultKind::Dropped { .. } => self.dropped += 1,
+                NetFaultKind::Offline { .. } => self.offline += 1,
+            },
+            SessionEvent::CommBytes { .. } => {}
+            SessionEvent::EvalPoint { point: p } => {
+                let line = Json::obj(vec![
+                    ("event", Json::Str("eval".into())),
+                    ("epoch", Json::Num(p.epoch as f64)),
+                    ("iter", Json::Num(p.iter as f64)),
+                    ("time_s", Json::Num(p.time_s)),
+                    ("loss", Json::Num(p.loss)),
+                    ("bytes", Json::u64(p.bytes)),
+                    ("fms", p.fms.map(Json::Num).unwrap_or(Json::Null)),
+                    ("rounds", Json::u64(self.rounds)),
+                    ("dropped", Json::u64(self.dropped)),
+                    ("offline", Json::u64(self.offline)),
+                ]);
+                self.rounds = 0;
+                self.dropped = 0;
+                self.offline = 0;
+                self.write_line(line)?;
+            }
+            SessionEvent::Checkpoint { t, path } => {
+                self.write_line(Json::obj(vec![
+                    ("event", Json::Str("checkpoint".into())),
+                    ("t", Json::Num(*t as f64)),
+                    ("path", Json::Str(path.display().to_string())),
+                ]))?;
+            }
+            SessionEvent::RunEnd { record } => {
+                self.write_line(Json::obj(vec![
+                    ("event", Json::Str("run_end".into())),
+                    ("final_loss", Json::Num(record.final_loss())),
+                    ("wall_s", Json::Num(record.wall_s)),
+                    ("bytes", Json::u64(record.total.bytes)),
+                    ("delivered", Json::u64(record.net.delivered)),
+                    ("dropped", Json::u64(record.net.dropped)),
+                ]))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Appends the finished run to BENCH.json (schema
+/// [`crate::util::benchkit::BENCH_SCHEMA`]), so experiment runs land in
+/// the same perf ledger as the micro benchmarks. Wall-clock drivers
+/// (seq/par) record a real end-to-end timing entry; the simulated
+/// drivers (sim/async) report *virtual* seconds, which must not pose as
+/// machine timings — those runs record a `virtual_s` derived scalar and
+/// no timing entry.
+#[derive(Debug, Clone)]
+pub struct BenchJsonObserver {
+    path: PathBuf,
+    name: String,
+    /// driver name captured from `RunStart` (decides wall vs virtual)
+    driver: Option<String>,
+}
+
+impl BenchJsonObserver {
+    /// Append to `path` under benchmark name `name` (typically the
+    /// spec's [`ExperimentSpec::label`]).
+    pub fn new(path: impl Into<PathBuf>, name: impl Into<String>) -> Self {
+        BenchJsonObserver { path: path.into(), name: name.into(), driver: None }
+    }
+}
+
+impl Observer for BenchJsonObserver {
+    fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()> {
+        match event {
+            SessionEvent::RunStart { spec } => {
+                self.driver = spec.get("driver").and_then(Json::as_str).map(str::to_string);
+            }
+            SessionEvent::RunEnd { record } => {
+                let virtual_time =
+                    matches!(self.driver.as_deref(), Some("sim") | Some("async"));
+                let mut derived = vec![
+                    ("final_loss".to_string(), record.final_loss()),
+                    ("uplink_bytes".to_string(), record.total.bytes as f64),
+                ];
+                let benches = if virtual_time {
+                    derived.push(("virtual_s".to_string(), record.wall_s));
+                    Vec::new()
+                } else {
+                    let ns = record.wall_s * 1e9;
+                    vec![Stats {
+                        name: format!("session_e2e_{}", self.name),
+                        iters: 1,
+                        mean_ns: ns,
+                        p50_ns: ns,
+                        p95_ns: ns,
+                        min_ns: ns,
+                    }]
+                };
+                let run = BenchRun { mode: "session".to_string(), benches, derived };
+                append_bench_json(&self.path, &run)?;
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The session
+// ---------------------------------------------------------------------
+
+/// Runs one [`ExperimentSpec`] end to end. Build with [`Session::new`]
+/// (or [`Session::resume_from`] a checkpoint), attach observers and a
+/// checkpoint policy builder-style, then call [`Session::run`] — or
+/// [`Session::run_on`] to supply the dataset/backend yourself (what the
+/// harness does to share datasets across a sweep).
+pub struct Session {
+    spec: ExperimentSpec,
+    observers: Vec<Box<dyn Observer>>,
+    checkpoint: Option<CheckpointPolicy>,
+    resume_state: Option<SessionState>,
+}
+
+impl Session {
+    /// A session for `spec` with no observers attached.
+    pub fn new(spec: ExperimentSpec) -> Self {
+        Session { spec, observers: Vec::new(), checkpoint: None, resume_state: None }
+    }
+
+    /// Load the spec from a `--spec` JSON file.
+    pub fn from_spec_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        Ok(Self::new(ExperimentSpec::load(path)?))
+    }
+
+    /// Continue a checkpointed run: restores the spec and the full
+    /// mutable state, producing results bit-identical to the
+    /// uninterrupted run (seq/sim drivers only).
+    pub fn resume_from(path: &std::path::Path) -> anyhow::Result<Self> {
+        let (spec, state) = checkpoint::read_checkpoint(path)?;
+        Ok(Session { spec, observers: Vec::new(), checkpoint: None, resume_state: Some(state) })
+    }
+
+    /// Attach an observer (builder-style; any number may be attached).
+    pub fn observe(mut self, observer: Box<dyn Observer>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Write a checkpoint to `path` every `every_epochs` epochs (and at
+    /// early stops / run end). Requires the seq or sim driver.
+    pub fn checkpoint_every(mut self, path: impl Into<PathBuf>, every_epochs: usize) -> Self {
+        self.checkpoint = Some(CheckpointPolicy { path: path.into(), every_epochs });
+        self
+    }
+
+    /// The spec this session will run.
+    pub fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    /// Mutable spec access — the supported way to extend a resumed run
+    /// (e.g. raise `epochs` after loading a finished checkpoint).
+    pub fn spec_mut(&mut self) -> &mut ExperimentSpec {
+        &mut self.spec
+    }
+
+    /// Generate the spec's dataset, construct its backend, and run.
+    pub fn run(&mut self) -> anyhow::Result<TrainOutcome> {
+        let data = self.spec.dataset_data()?;
+        let mut backend = NativeOrPjrt::from_flag(&self.spec.backend)?;
+        self.run_on(&data, backend.as_mut(), None)
+    }
+
+    /// Run on a caller-provided dataset and backend (the backend is
+    /// ignored by the `par` driver, which builds one per thread from the
+    /// spec's backend flag).
+    pub fn run_on(
+        &mut self,
+        data: &SynthData,
+        backend: &mut dyn ComputeBackend,
+        fms_reference: Option<&FactorSet>,
+    ) -> anyhow::Result<TrainOutcome> {
+        self.spec.validate()?;
+        match self.spec.driver {
+            DriverKind::Sequential | DriverKind::Sim => {
+                let wall = self.spec.driver == DriverKind::Sequential;
+                let cfg = self.spec.to_train_config();
+                let mut net =
+                    if wall { sim::ideal() } else { self.spec.network_model() };
+                let mut hooks = Hooks {
+                    observers: &mut self.observers,
+                    eval_every: self.spec.eval_every,
+                    target_loss: self.spec.stop.target_loss,
+                    max_bytes: self.spec.stop.max_bytes,
+                    checkpoint: self.checkpoint.as_ref(),
+                    spec: Some(&self.spec),
+                    resume: self.resume_state.as_ref(),
+                };
+                run_loop(&cfg, data, backend, net.as_mut(), wall, fms_reference, &mut hooks)
+            }
+            DriverKind::Parallel => {
+                self.reject_unsupported_on_delegated()?;
+                let cfg = self.spec.to_train_config();
+                let flag = self.spec.backend.clone();
+                let out = crate::net::parallel::train_parallel(
+                    &cfg,
+                    data,
+                    |_| NativeOrPjrt::from_flag(&flag),
+                    fms_reference,
+                )?;
+                self.emit_outcome(&out)?;
+                Ok(out)
+            }
+            DriverKind::Async => {
+                self.reject_unsupported_on_delegated()?;
+                let cfg = self.spec.to_train_config();
+                let mut net = self.spec.network_model();
+                let out = crate::net::async_gossip::train_async(
+                    &cfg,
+                    data,
+                    backend,
+                    net.as_mut(),
+                    fms_reference,
+                )?;
+                self.emit_outcome(&out)?;
+                Ok(out)
+            }
+        }
+    }
+
+    /// Coarse event stream for the delegated drivers (par/async), which
+    /// run to completion internally: start, one `EvalPoint` per recorded
+    /// point, end.
+    fn emit_outcome(&mut self, out: &TrainOutcome) -> anyhow::Result<()> {
+        let spec_json = self.spec.to_json();
+        let obs = &mut self.observers;
+        let mut send = |ev: SessionEvent| -> anyhow::Result<()> {
+            for o in obs.iter_mut() {
+                o.on_event(&ev)?;
+            }
+            Ok(())
+        };
+        send(SessionEvent::RunStart { spec: spec_json })?;
+        for p in &out.record.points {
+            send(SessionEvent::EvalPoint { point: p.clone() })?;
+        }
+        send(SessionEvent::RunEnd { record: out.record.clone() })
+    }
+
+    /// The delegated drivers (par/async) run their loops internally and
+    /// cannot honor mid-run session features — reject rather than
+    /// silently ignore them.
+    fn reject_unsupported_on_delegated(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.checkpoint.is_none() && self.resume_state.is_none(),
+            "checkpoint/resume requires the seq or sim driver"
+        );
+        anyhow::ensure!(
+            self.spec.stop == crate::engine::spec::StopRule::default(),
+            "stopping rules (target_loss/max_bytes) require the seq or sim driver"
+        );
+        anyhow::ensure!(
+            self.spec.eval_every == 1,
+            "eval_every > 1 requires the seq or sim driver"
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The unified round loop
+// ---------------------------------------------------------------------
+
+/// Loop wiring beyond the bare `TrainConfig`: observers, eval cadence,
+/// stop rules, checkpoint policy, resume state.
+pub(crate) struct Hooks<'a> {
+    pub observers: &'a mut [Box<dyn Observer>],
+    pub eval_every: usize,
+    pub target_loss: Option<f64>,
+    pub max_bytes: Option<u64>,
+    pub checkpoint: Option<&'a CheckpointPolicy>,
+    pub spec: Option<&'a ExperimentSpec>,
+    pub resume: Option<&'a SessionState>,
+}
+
+impl Hooks<'_> {
+    /// No observers, default cadence, no stop rules — the legacy-shim
+    /// configuration.
+    pub(crate) fn none() -> Hooks<'static> {
+        Hooks {
+            observers: &mut [],
+            eval_every: 1,
+            target_loss: None,
+            max_bytes: None,
+            checkpoint: None,
+            spec: None,
+            resume: None,
+        }
+    }
+
+    fn emit(&mut self, ev: SessionEvent) -> anyhow::Result<()> {
+        for o in self.observers.iter_mut() {
+            o.on_event(&ev)?;
+        }
+        Ok(())
+    }
+}
+
+/// One lock-step training loop for both in-process execution (ideal
+/// network + wall clock — the old `engine::train`) and the synchronous
+/// network simulator (arbitrary `NetworkModel` + virtual clock — the
+/// old `train_sim`). Per iteration `t`:
+///
+/// 1. an online mask is drawn — churned-out clients skip the round,
+/// 2. online clients take their local SGD/momentum step(s),
+/// 3. on communication rounds, payloads from online clients go through
+///    the shared publish phase (same trigger, compressor, and uplink
+///    ledger on every path), then each neighbor message is subjected to
+///    `net.delivers`; survivors update `Â` and their latency is charged
+///    to the barrier,
+/// 4. online clients run the consensus step,
+/// 5. the clock advances (virtual mode) by the slowest online client's
+///    compute time plus the slowest surviving message.
+///
+/// With [`crate::net::sim::IdealNetwork`] every mask is all-true and
+/// every message survives instantly, so the float operations reduce
+/// exactly to the classic engine loop — bit-identical factors (asserted
+/// in `tests/network_sim.rs`).
+pub(crate) fn run_loop(
+    cfg: &TrainConfig,
+    data: &SynthData,
+    backend: &mut dyn ComputeBackend,
+    net: &mut dyn NetworkModel,
+    wall_time: bool,
+    fms_reference: Option<&FactorSet>,
+    hooks: &mut Hooks<'_>,
+) -> anyhow::Result<TrainOutcome> {
+    let d_order = data.tensor.dims.len();
+    anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
+    backend.set_threads(cfg.compute_threads);
+    let graph = Graph::build(cfg.topology, cfg.k)?;
+    let decentralized = cfg.k > 1;
+    let mut clients = build_clients(cfg, data, &graph);
+
+    let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
+    let trigger = cfg.trigger_schedule();
+    let all_modes: Vec<usize> = (0..d_order).collect();
+    let mut clock = VirtualClock::default();
+    let start = Instant::now();
+    let mut wall_offset = 0.0f64;
+
+    let mut points: Vec<MetricPoint> = Vec::with_capacity(cfg.epochs + 1);
+    let mut start_t = 0usize;
+
+    if let Some(st) = hooks.resume {
+        anyhow::ensure!(
+            st.clients.len() == clients.len(),
+            "checkpoint has {} clients, this spec builds {}",
+            st.clients.len(),
+            clients.len()
+        );
+        for (c, cj) in clients.iter_mut().zip(st.clients.iter()) {
+            checkpoint::restore_client(c, cj)?;
+        }
+        block_sampler.restore(st.sampler_rng, st.sampler_t);
+        net.restore_state(&st.net_model)?;
+        clock.advance_to(st.time_s);
+        wall_offset = st.time_s;
+        points = st.points.clone();
+        start_t = st.t;
+    } else if hooks.checkpoint.is_some() && hooks.spec.is_none() {
+        anyhow::bail!("checkpointing requires a full ExperimentSpec (use Session)");
+    }
+
+    let spec_json = match hooks.spec {
+        Some(s) => s.to_json(),
+        None => Json::obj(vec![
+            ("algo", Json::Str(cfg.algo.name.clone())),
+            ("dataset", Json::Str(cfg.dataset.clone())),
+            ("k", Json::Num(cfg.k as f64)),
+        ]),
+    };
+    hooks.emit(SessionEvent::RunStart { spec: spec_json })?;
+
+    if start_t == 0 {
+        let now = if wall_time { start.elapsed().as_secs_f64() } else { clock.now() };
+        record_point(&mut clients, cfg, backend, fms_reference, 0, 0, now, &mut points)?;
+        if let Some(p) = points.last() {
+            let point = p.clone();
+            hooks.emit(SessionEvent::EvalPoint { point })?;
+        }
+    }
+
+    let total_iters = cfg.epochs * cfg.iters_per_epoch;
+    let eval_period = cfg.iters_per_epoch * hooks.eval_every.max(1);
+    // with no observers attached (the legacy shims), skip all event
+    // bookkeeping so the reference loop stays as lean as it always was
+    let has_observers = !hooks.observers.is_empty();
+    let mut online: Vec<bool> = vec![false; cfg.k];
+    let mut drops: Vec<(usize, usize)> = Vec::new();
+
+    for t in start_t..total_iters {
+        for (k, slot) in online.iter_mut().enumerate() {
+            *slot = net.online(k, t);
+        }
+        // block level: the shared mode sequence d_ξ[t], drawn every round
+        // so baselines consume the same randomness
+        let sampled_mode = block_sampler.next_mode();
+        let modes: &[usize] =
+            if cfg.algo.block_random { std::slice::from_ref(&sampled_mode) } else { &all_modes };
+
+        // ---- local gradient steps (Alg. 1 lines 4-5) ----
+        let mut round_compute = 0.0f64;
+        for c in clients.iter_mut() {
+            if !online[c.id] {
+                c.net.offline_rounds += 1;
+                continue;
+            }
+            for &m in modes {
+                c.local_step(m, cfg.loss, cfg.fiber_samples, cfg.gamma, cfg.algo.momentum, backend)?;
+                if cfg.algo.error_feedback {
+                    apply_error_feedback(c, m, cfg.algo.compressor);
+                }
+            }
+            let cost = cfg.sim_iter_s * net.compute_multiplier(c.id);
+            if cost > round_compute {
+                round_compute = cost;
+            }
+        }
+        clock.advance(round_compute);
+        if has_observers {
+            for (k, &up) in online.iter().enumerate() {
+                if !up {
+                    hooks.emit(SessionEvent::NetFault {
+                        t,
+                        kind: NetFaultKind::Offline { client: k },
+                    })?;
+                }
+            }
+        }
+
+        // ---- round level: gossip through the network model ----
+        if decentralized && t % cfg.algo.tau == 0 {
+            let bytes_before: u64 =
+                if has_observers { clients.iter().map(|c| c.ledger.bytes).sum() } else { 0 };
+            for &m in modes {
+                if m == 0 {
+                    continue; // patient mode never travels (privacy)
+                }
+                let payloads =
+                    publish_phase(&mut clients, &graph, cfg, &trigger, t, m, Some(&online[..]));
+
+                drops.clear();
+                for k in 0..clients.len() {
+                    if !online[k] {
+                        // receiver is down: everything addressed to it is lost
+                        for &j in &graph.neighbors[k] {
+                            if payloads[j].is_some() {
+                                clients[k].net.dropped += 1;
+                                if has_observers {
+                                    drops.push((j, k));
+                                }
+                            }
+                        }
+                        continue;
+                    }
+                    // own delta applies locally, never on the wire
+                    if let Some(p) = &payloads[k] {
+                        clients[k].estimates.as_mut().expect("estimates").apply_delta(k, m, p);
+                    }
+                    for &j in &graph.neighbors[k] {
+                        let Some(p) = &payloads[j] else { continue };
+                        if net.delivers(j, k, t) {
+                            clients[k].estimates.as_mut().expect("estimates").apply_delta(j, m, p);
+                            clients[k].net.delivered += 1;
+                            let wire = p.wire_bytes() + Message::HEADER_BYTES;
+                            clock.note_latency(net.latency_s(j, k, wire));
+                        } else {
+                            clients[k].net.dropped += 1;
+                            if has_observers {
+                                drops.push((j, k));
+                            }
+                        }
+                    }
+                }
+                clock.flush_latency();
+
+                consensus_phase(&mut clients, &graph, cfg.algo.rho, m, Some(&online[..]));
+
+                for (from, to) in drops.drain(..) {
+                    hooks.emit(SessionEvent::NetFault {
+                        t,
+                        kind: NetFaultKind::Dropped { from, to },
+                    })?;
+                }
+            }
+            if has_observers {
+                let bytes_after: u64 = clients.iter().map(|c| c.ledger.bytes).sum();
+                if bytes_after > bytes_before {
+                    hooks.emit(SessionEvent::CommBytes {
+                        t,
+                        round_bytes: bytes_after - bytes_before,
+                        total_bytes: bytes_after,
+                    })?;
+                }
+            }
+        }
+
+        if has_observers {
+            let time_s = if wall_time {
+                wall_offset + start.elapsed().as_secs_f64()
+            } else {
+                clock.now()
+            };
+            hooks.emit(SessionEvent::RoundEnd { t, time_s })?;
+        }
+
+        // ---- eval cadence: metrics and stop rules ----
+        let mut stopping = false;
+        let mut diverged = false;
+        if (t + 1) % eval_period == 0 || t + 1 == total_iters {
+            let epoch = (t + 1) / cfg.iters_per_epoch;
+            let now = if wall_time {
+                wall_offset + start.elapsed().as_secs_f64()
+            } else {
+                clock.now()
+            };
+            record_point(&mut clients, cfg, backend, fms_reference, epoch, t + 1, now, &mut points)?;
+            let last = points.last().expect("point just recorded").clone();
+            hooks.emit(SessionEvent::EvalPoint { point: last.clone() })?;
+            if !last.loss.is_finite() {
+                eprintln!(
+                    "[{}] diverged at epoch {epoch} (gamma {} too large) — stopping early",
+                    cfg.algo.name, cfg.gamma
+                );
+                diverged = true;
+            } else {
+                let target_hit =
+                    hooks.target_loss.map(|target| last.loss <= target).unwrap_or(false);
+                let budget_hit = hooks.max_bytes.map(|b| last.bytes >= b).unwrap_or(false);
+                stopping = target_hit || budget_hit;
+            }
+        }
+
+        // ---- checkpoint cadence: every epoch boundary, independent of
+        // the eval cadence (a diverged state is never persisted) ----
+        if !diverged && (t + 1) % cfg.iters_per_epoch == 0 {
+            if let (Some(ck), Some(spec)) = (hooks.checkpoint, hooks.spec) {
+                let epoch = (t + 1) / cfg.iters_per_epoch;
+                if epoch % ck.every_epochs.max(1) == 0 || stopping || t + 1 == total_iters {
+                    let now = if wall_time {
+                        wall_offset + start.elapsed().as_secs_f64()
+                    } else {
+                        clock.now()
+                    };
+                    let state = SessionState {
+                        t: t + 1,
+                        time_s: now,
+                        sampler_rng: block_sampler.state().0,
+                        sampler_t: block_sampler.state().1,
+                        net_model: net.state_json(),
+                        points: points.clone(),
+                        clients: clients.iter().map(checkpoint::snapshot_client).collect(),
+                    };
+                    checkpoint::write_checkpoint(&ck.path, spec, &state)?;
+                    let path = ck.path.clone();
+                    hooks.emit(SessionEvent::Checkpoint { t: t + 1, path })?;
+                }
+            }
+        }
+        if diverged || stopping {
+            break;
+        }
+    }
+
+    let factors = assemble_global(&clients);
+    let wall_s =
+        if wall_time { wall_offset + start.elapsed().as_secs_f64() } else { clock.now() };
+    let record = finalize_record(cfg, &graph, &clients, points, wall_s);
+    hooks.emit(SessionEvent::RunEnd { record: record.clone() })?;
+    Ok(TrainOutcome { record, factors })
+}

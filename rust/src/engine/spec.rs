@@ -1,0 +1,638 @@
+//! The declarative experiment surface: [`ExperimentSpec`].
+//!
+//! One serializable value names **every** axis of a CiderTF run —
+//! dataset, loss, algorithm (Table II row), compressor, topology, fault
+//! envelope, round driver, seeds, budget/stopping rule, and eval cadence
+//! — and is buildable three ways:
+//!
+//! 1. **typed builder** — `ExperimentSpec::builder("tiny", Loss::Logit,
+//!    AlgoConfig::cidertf(4)).k(8).driver(DriverKind::Sim).build()?`,
+//! 2. **scenario string** — `ExperimentSpec::from_scenario_str(
+//!    "cidertf:4@lossy:0.2@async", "synthetic", Loss::Logit)?`
+//!    ([`crate::engine::presets::Scenario`] is the thin front-end),
+//! 3. **JSON file** — `ExperimentSpec::load(path)?` / `--spec file.json`
+//!    (schema [`SPEC_SCHEMA`]); `cidertf spec` prints the fully-resolved
+//!    default JSON for any scenario string.
+//!
+//! A spec is *consumed* by [`crate::engine::session::Session`], which
+//! resolves each named axis through the [`crate::registry`] tables and
+//! drives the run while streaming typed events to observers.
+
+use std::path::Path;
+
+use crate::engine::{AlgoConfig, TrainConfig};
+use crate::losses::Loss;
+use crate::net::driver::DriverKind;
+use crate::net::sim::{self, FaultConfig, NetworkModel};
+use crate::runtime::NativeOrPjrt;
+use crate::tensor::synth::{SynthConfig, SynthData, ValueKind};
+use crate::topology::Topology;
+use crate::util::json::Json;
+
+/// Schema tag written into every serialized spec.
+pub const SPEC_SCHEMA: &str = "cidertf-spec-v1";
+
+/// Budget/stopping rule: the run ends at `epochs` regardless, but may
+/// stop earlier once a loss target is reached or a communication budget
+/// is exhausted (both checked at eval points).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StopRule {
+    /// stop once the estimated global loss is ≤ this value
+    pub target_loss: Option<f64>,
+    /// stop once cumulative uplink bytes reach this budget
+    pub max_bytes: Option<u64>,
+}
+
+impl StopRule {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "target_loss",
+                self.target_loss.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "max_bytes",
+                self.max_bytes.map(Json::u64).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        j.ensure_known_keys("stop rule", &["target_loss", "max_bytes"])?;
+        let target_loss = match j.get("target_loss") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("invalid 'target_loss' (number expected)"))?,
+            ),
+        };
+        let max_bytes = match j.get("max_bytes") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("invalid 'max_bytes' (integer expected)"))?,
+            ),
+        };
+        Ok(StopRule { target_loss, max_bytes })
+    }
+}
+
+/// A fully-specified, serializable experiment: every pluggable axis by
+/// name plus every numeric knob. See the module docs for the three ways
+/// to build one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSpec {
+    /// dataset name (see `cidertf info` → datasets)
+    pub dataset: String,
+    /// GCP elementwise loss
+    pub loss: Loss,
+    /// algorithm configuration (Table II row), including the compressor
+    /// and error-feedback flags
+    pub algo: AlgoConfig,
+    /// communication graph
+    pub topology: Topology,
+    /// number of clients (institutions) K
+    pub k: usize,
+    /// CP rank R
+    pub rank: usize,
+    /// fiber sample size |S| per local step
+    pub fiber_samples: usize,
+    /// learning rate γ
+    pub gamma: f64,
+    /// epochs to run
+    pub epochs: usize,
+    /// iterations per epoch
+    pub iters_per_epoch: usize,
+    /// master seed for every derived stream (init, sampling, faults)
+    pub seed: u64,
+    /// stratified loss-estimator batch size
+    pub eval_batch: usize,
+    /// factor init scale
+    pub init_scale: f32,
+    /// scale on the event-trigger threshold λ₀ = scale/γ
+    pub trigger_lambda0_scale: f64,
+    /// event-trigger growth factor α
+    pub trigger_alpha: f64,
+    /// nominal per-iteration compute cost in simulated seconds
+    pub sim_iter_s: f64,
+    /// compute threads per gradient call (1 = fully deterministic)
+    pub compute_threads: usize,
+    /// network fault envelope (`None` = ideal network)
+    pub fault: Option<FaultConfig>,
+    /// execution path
+    pub driver: DriverKind,
+    /// compute backend flag (`native` or `pjrt`)
+    pub backend: String,
+    /// epochs between eval points (1 = every epoch)
+    pub eval_every: usize,
+    /// early-stopping rule
+    pub stop: StopRule,
+}
+
+impl ExperimentSpec {
+    /// Spec with the engine's stock defaults (mirrors
+    /// [`TrainConfig::new`]): sequential driver, ideal network, default
+    /// backend, eval every epoch, no early stopping.
+    pub fn new(dataset: &str, loss: Loss, algo: AlgoConfig) -> Self {
+        let cfg = TrainConfig::new(dataset, loss, algo);
+        Self::from_train_config(&cfg, DriverKind::Sequential, None, NativeOrPjrt::default_flag())
+    }
+
+    /// Start a fluent builder from the stock defaults.
+    pub fn builder(dataset: &str, loss: Loss, algo: AlgoConfig) -> ExperimentSpecBuilder {
+        ExperimentSpecBuilder { spec: Self::new(dataset, loss, algo) }
+    }
+
+    /// Lift an imperative [`TrainConfig`] (the legacy surface) into a
+    /// spec, naming the execution path and fault envelope explicitly.
+    pub fn from_train_config(
+        cfg: &TrainConfig,
+        driver: DriverKind,
+        fault: Option<FaultConfig>,
+        backend: &str,
+    ) -> Self {
+        ExperimentSpec {
+            dataset: cfg.dataset.clone(),
+            loss: cfg.loss,
+            algo: cfg.algo.clone(),
+            topology: cfg.topology,
+            k: cfg.k,
+            rank: cfg.rank,
+            fiber_samples: cfg.fiber_samples,
+            gamma: cfg.gamma,
+            epochs: cfg.epochs,
+            iters_per_epoch: cfg.iters_per_epoch,
+            seed: cfg.seed,
+            eval_batch: cfg.eval_batch,
+            init_scale: cfg.init_scale,
+            trigger_lambda0_scale: cfg.trigger_lambda0_scale,
+            trigger_alpha: cfg.trigger_alpha,
+            sim_iter_s: cfg.sim_iter_s,
+            compute_threads: cfg.compute_threads,
+            fault,
+            driver,
+            backend: backend.to_string(),
+            eval_every: 1,
+            stop: StopRule::default(),
+        }
+    }
+
+    /// Resolve a scenario string `<algo>[@<network>[@<driver>]]` (the
+    /// [`crate::engine::presets::Scenario`] front-end) into a spec. The
+    /// fault envelope inherits the spec's master seed at run time unless
+    /// its own seed was set explicitly.
+    pub fn from_scenario_str(scenario: &str, dataset: &str, loss: Loss) -> anyhow::Result<Self> {
+        let s = crate::engine::presets::Scenario::parse(scenario)?;
+        let mut spec = Self::new(dataset, loss, s.algo);
+        spec.fault = s.fault;
+        spec.driver = s.driver;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The imperative config this spec resolves to (the engine's input).
+    pub fn to_train_config(&self) -> TrainConfig {
+        TrainConfig {
+            dataset: self.dataset.clone(),
+            loss: self.loss,
+            rank: self.rank,
+            fiber_samples: self.fiber_samples,
+            k: self.k,
+            topology: self.topology,
+            gamma: self.gamma,
+            iters_per_epoch: self.iters_per_epoch,
+            epochs: self.epochs,
+            seed: self.seed,
+            eval_batch: self.eval_batch,
+            init_scale: self.init_scale,
+            trigger_lambda0_scale: self.trigger_lambda0_scale,
+            trigger_alpha: self.trigger_alpha,
+            sim_iter_s: self.sim_iter_s,
+            compute_threads: self.compute_threads,
+            algo: self.algo.clone(),
+        }
+    }
+
+    /// Cross-axis invariants (cheap, pure): fault envelopes need a
+    /// network-mediated driver, and every count must be positive.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.k >= 1, "k must be >= 1");
+        anyhow::ensure!(self.rank >= 1, "rank must be >= 1");
+        anyhow::ensure!(self.algo.tau >= 1, "tau must be >= 1");
+        anyhow::ensure!(self.epochs >= 1, "epochs must be >= 1");
+        anyhow::ensure!(self.iters_per_epoch >= 1, "iters_per_epoch must be >= 1");
+        anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
+        anyhow::ensure!(self.fiber_samples >= 1, "fiber_samples must be >= 1");
+        anyhow::ensure!(self.eval_batch >= 1, "eval_batch must be >= 1");
+        anyhow::ensure!(
+            !(self.fault.is_some()
+                && matches!(self.driver, DriverKind::Sequential | DriverKind::Parallel)),
+            "driver '{}' cannot inject network faults — use sim or async",
+            self.driver.name()
+        );
+        Ok(())
+    }
+
+    /// Generate the dataset this spec names (value kind follows the
+    /// loss, as in the paper: Gaussian for ls, binary for logit).
+    pub fn dataset_data(&self) -> anyhow::Result<SynthData> {
+        let vk = if self.loss == Loss::Ls { ValueKind::Gaussian } else { ValueKind::Binary };
+        Ok(SynthConfig::by_name(&self.dataset)?.with_values(vk).generate())
+    }
+
+    /// Materialize the network model. A fault envelope still carrying the
+    /// stock [`FaultConfig::default`] seed inherits the spec's master
+    /// seed, so one `--seed` reseeds the whole run; an explicit fault
+    /// seed is respected.
+    pub fn network_model(&self) -> Box<dyn NetworkModel> {
+        match &self.fault {
+            None => sim::ideal(),
+            Some(f) => {
+                let mut f = f.clone();
+                if f.seed == FaultConfig::default().seed {
+                    f.seed = self.seed;
+                }
+                f.boxed()
+            }
+        }
+    }
+
+    /// Filename-friendly label:
+    /// `dataset_loss_algo_driver_topology_kK`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}_{}_{}_{}_{}_k{}",
+            self.dataset,
+            self.loss.name(),
+            self.algo.name,
+            self.driver.name(),
+            self.topology.name(),
+            self.k
+        )
+    }
+
+    // ---- JSON layer ----
+
+    /// Serialize (schema [`SPEC_SCHEMA`]). Exact round-trip: floats use
+    /// shortest-round-trip decimal, u64 seeds ride as strings.
+    pub fn to_json(&self) -> Json {
+        let algo = Json::obj(vec![
+            ("name", Json::Str(self.algo.name.clone())),
+            ("compressor", Json::Str(self.algo.compressor.spec_string())),
+            ("block_random", Json::Bool(self.algo.block_random)),
+            ("tau", Json::Num(self.algo.tau as f64)),
+            ("event_triggered", Json::Bool(self.algo.event_triggered)),
+            (
+                "momentum",
+                self.algo.momentum.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("error_feedback", Json::Bool(self.algo.error_feedback)),
+            ("rho", Json::Num(self.algo.rho)),
+        ]);
+        Json::obj(vec![
+            ("schema", Json::Str(SPEC_SCHEMA.to_string())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("loss", Json::Str(self.loss.name().to_string())),
+            ("algo", algo),
+            ("topology", Json::Str(self.topology.name().to_string())),
+            ("k", Json::Num(self.k as f64)),
+            ("rank", Json::Num(self.rank as f64)),
+            ("fiber_samples", Json::Num(self.fiber_samples as f64)),
+            ("gamma", Json::Num(self.gamma)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("iters_per_epoch", Json::Num(self.iters_per_epoch as f64)),
+            ("seed", Json::u64(self.seed)),
+            ("eval_batch", Json::Num(self.eval_batch as f64)),
+            ("init_scale", Json::Num(self.init_scale as f64)),
+            ("trigger_lambda0_scale", Json::Num(self.trigger_lambda0_scale)),
+            ("trigger_alpha", Json::Num(self.trigger_alpha)),
+            ("sim_iter_s", Json::Num(self.sim_iter_s)),
+            ("compute_threads", Json::Num(self.compute_threads as f64)),
+            (
+                "network",
+                self.fault.as_ref().map(FaultConfig::to_json).unwrap_or(Json::Null),
+            ),
+            ("driver", Json::Str(self.driver.name().to_string())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("stop", self.stop.to_json()),
+        ])
+    }
+
+    /// Deserialize the [`ExperimentSpec::to_json`] layout. Strict:
+    /// unknown/typo'd keys are errors (with a did-you-mean hint), so a
+    /// hand-written `--spec` file can never silently run a different
+    /// experiment than written; the result is validated.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        j.ensure_known_keys(
+            "spec",
+            &[
+                "schema",
+                "dataset",
+                "loss",
+                "algo",
+                "topology",
+                "k",
+                "rank",
+                "fiber_samples",
+                "gamma",
+                "epochs",
+                "iters_per_epoch",
+                "seed",
+                "eval_batch",
+                "init_scale",
+                "trigger_lambda0_scale",
+                "trigger_alpha",
+                "sim_iter_s",
+                "compute_threads",
+                "network",
+                "driver",
+                "backend",
+                "eval_every",
+                "stop",
+            ],
+        )?;
+        if let Some(s) = j.get("schema").and_then(Json::as_str) {
+            anyhow::ensure!(s == SPEC_SCHEMA, "unsupported spec schema '{s}' (want {SPEC_SCHEMA})");
+        }
+        let aj = j
+            .get("algo")
+            .ok_or_else(|| anyhow::anyhow!("missing 'algo' object"))?;
+        aj.ensure_known_keys(
+            "algo",
+            &[
+                "name",
+                "compressor",
+                "block_random",
+                "tau",
+                "event_triggered",
+                "momentum",
+                "error_feedback",
+                "rho",
+            ],
+        )?;
+        let algo = AlgoConfig {
+            name: aj.req_str("name")?.to_string(),
+            compressor: crate::compress::Compressor::by_name(aj.req_str("compressor")?)?,
+            block_random: aj
+                .get("block_random")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.block_random'"))?,
+            tau: aj.req_usize("tau")?,
+            event_triggered: aj
+                .get("event_triggered")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.event_triggered'"))?,
+            momentum: match aj.get("momentum") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("invalid 'algo.momentum' (number or null expected)")
+                })?),
+            },
+            error_feedback: aj
+                .get("error_feedback")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.error_feedback'"))?,
+            rho: aj.req_f64("rho")?,
+        };
+        let fault = match j.get("network") {
+            None | Some(Json::Null) => None,
+            Some(fj) => Some(FaultConfig::from_json(fj)?),
+        };
+        let spec = ExperimentSpec {
+            dataset: j.req_str("dataset")?.to_string(),
+            loss: Loss::from_name(j.req_str("loss")?)?,
+            algo,
+            topology: Topology::from_name(j.req_str("topology")?)?,
+            k: j.req_usize("k")?,
+            rank: j.req_usize("rank")?,
+            fiber_samples: j.req_usize("fiber_samples")?,
+            gamma: j.req_f64("gamma")?,
+            epochs: j.req_usize("epochs")?,
+            iters_per_epoch: j.req_usize("iters_per_epoch")?,
+            seed: j.req_u64("seed")?,
+            eval_batch: j.req_usize("eval_batch")?,
+            init_scale: j.req_f64("init_scale")? as f32,
+            trigger_lambda0_scale: j.req_f64("trigger_lambda0_scale")?,
+            trigger_alpha: j.req_f64("trigger_alpha")?,
+            sim_iter_s: j.req_f64("sim_iter_s")?,
+            compute_threads: j.req_usize("compute_threads")?,
+            fault,
+            driver: DriverKind::from_name(j.req_str("driver")?)?,
+            backend: j.req_str("backend")?.to_string(),
+            eval_every: match j.get("eval_every") {
+                None => 1,
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("invalid 'eval_every' (integer expected)"))?,
+            },
+            stop: match j.get("stop") {
+                None | Some(Json::Null) => StopRule::default(),
+                Some(sj) => StopRule::from_json(sj)?,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn from_json_str(s: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("spec: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Load a spec from a `--spec file.json`.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read spec {}: {e}", path.display()))?;
+        Self::from_json_str(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Write the spec as pretty JSON.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_pretty_string())
+            .map_err(|e| anyhow::anyhow!("cannot write spec {}: {e}", path.display()))
+    }
+}
+
+/// Fluent builder over [`ExperimentSpec`] (start with
+/// [`ExperimentSpec::builder`]).
+#[derive(Debug, Clone)]
+pub struct ExperimentSpecBuilder {
+    spec: ExperimentSpec,
+}
+
+macro_rules! setter {
+    ($(#[$doc:meta])* $name:ident: $ty:ty) => {
+        $(#[$doc])*
+        pub fn $name(mut self, v: $ty) -> Self {
+            self.spec.$name = v;
+            self
+        }
+    };
+}
+
+impl ExperimentSpecBuilder {
+    setter!(/// number of clients K
+        k: usize);
+    setter!(/// CP rank R
+        rank: usize);
+    setter!(/// fiber sample size |S|
+        fiber_samples: usize);
+    setter!(/// communication graph
+        topology: Topology);
+    setter!(/// learning rate γ
+        gamma: f64);
+    setter!(/// epochs to run
+        epochs: usize);
+    setter!(/// iterations per epoch
+        iters_per_epoch: usize);
+    setter!(/// master seed
+        seed: u64);
+    setter!(/// loss-estimator batch size
+        eval_batch: usize);
+    setter!(/// factor init scale
+        init_scale: f32);
+    setter!(/// simulated seconds per iteration
+        sim_iter_s: f64);
+    setter!(/// compute threads per gradient call
+        compute_threads: usize);
+    setter!(/// execution path
+        driver: DriverKind);
+    setter!(/// network fault envelope (`None` = ideal)
+        fault: Option<FaultConfig>);
+    setter!(/// epochs between eval points
+        eval_every: usize);
+
+    /// Compute backend flag (`native`/`pjrt`).
+    pub fn backend(mut self, b: &str) -> Self {
+        self.spec.backend = b.to_string();
+        self
+    }
+
+    /// Stop early once the loss reaches this target.
+    pub fn target_loss(mut self, l: f64) -> Self {
+        self.spec.stop.target_loss = Some(l);
+        self
+    }
+
+    /// Stop early once cumulative uplink bytes reach this budget.
+    pub fn max_bytes(mut self, b: u64) -> Self {
+        self.spec.stop.max_bytes = Some(b);
+        self
+    }
+
+    /// Validate and produce the spec.
+    pub fn build(self) -> anyhow::Result<ExperimentSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compressor;
+
+    #[test]
+    fn builder_round_trips_through_json() {
+        let spec = ExperimentSpec::builder("tiny", Loss::Logit, AlgoConfig::cidertf(4))
+            .k(8)
+            .rank(4)
+            .gamma(0.125)
+            .seed(0xDEAD_BEEF_1234_5678)
+            .driver(DriverKind::Sim)
+            .fault(Some(FaultConfig::lossy(0.2)))
+            .eval_every(2)
+            .target_loss(1e-3)
+            .max_bytes(1 << 30)
+            .build()
+            .unwrap();
+        let text = spec.to_json().to_pretty_string();
+        let back = ExperimentSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn scenario_string_front_end() {
+        let spec =
+            ExperimentSpec::from_scenario_str("cidertf:8@lossy:0.3@async", "synthetic", Loss::Ls)
+                .unwrap();
+        assert_eq!(spec.algo.tau, 8);
+        assert_eq!(spec.driver, DriverKind::Async);
+        assert!((spec.fault.as_ref().unwrap().drop_rate - 0.3).abs() < 1e-12);
+        assert!(ExperimentSpec::from_scenario_str("nope", "synthetic", Loss::Ls).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_fault_on_lockstep_drivers() {
+        let mut spec = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        spec.fault = Some(FaultConfig::lossy(0.1));
+        assert!(spec.validate().is_err());
+        spec.driver = DriverKind::Sim;
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn wrongly_typed_optional_fields_error() {
+        // optional fields must not silently fall back to defaults when
+        // present with the wrong type (e.g. quoted numbers)
+        let base = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("eval_every".into(), Json::Str("5".into()));
+        }
+        assert!(ExperimentSpec::from_json(&j).is_err(), "quoted eval_every must error");
+
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("stop".into(), Json::obj(vec![("target_loss", Json::Str("1e-3".into()))]));
+        }
+        assert!(ExperimentSpec::from_json(&j).is_err(), "quoted target_loss must error");
+
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(a)) = m.get_mut("algo") {
+                a.insert("momentum".into(), Json::Str("0.9".into()));
+            }
+        }
+        assert!(ExperimentSpec::from_json(&j).is_err(), "quoted momentum must error");
+    }
+
+    #[test]
+    fn topk_compressor_round_trips() {
+        let mut spec = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        spec.algo.compressor = Compressor::TopK { ratio: 16 };
+        let back = ExperimentSpec::from_json_str(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.algo.compressor, Compressor::TopK { ratio: 16 });
+    }
+
+    #[test]
+    fn fault_seed_inheritance() {
+        let mut spec = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        spec.driver = DriverKind::Sim;
+        spec.seed = 99;
+        spec.fault = Some(FaultConfig::lossy(0.5)); // default fault seed
+        let net = spec.network_model();
+        assert_eq!(net.name(), "faulty");
+        spec.fault = Some(FaultConfig::lossy(0.5).with_seed(7));
+        let _ = spec.network_model(); // explicit seed path also builds
+    }
+
+    #[test]
+    fn train_config_lift_is_lossless() {
+        let mut cfg = TrainConfig::new("synthetic", Loss::Ls, AlgoConfig::dpsgd());
+        cfg.k = 5;
+        cfg.gamma = 0.75;
+        let spec = ExperimentSpec::from_train_config(&cfg, DriverKind::Sequential, None, "native");
+        let back = spec.to_train_config();
+        assert_eq!(back.k, 5);
+        assert_eq!(back.gamma, 0.75);
+        assert_eq!(back.algo, cfg.algo);
+        assert_eq!(back.dataset, cfg.dataset);
+    }
+}

@@ -125,6 +125,43 @@ impl EstimateState {
         self.mats[self.self_slot][mode].as_ref().expect("untracked mode")
     }
 
+    /// Checkpoint view of the estimate matrices, indexed
+    /// `[peer slot][mode]` in [`EstimateState::peers`] order (`None` for
+    /// modes that never travel).
+    pub fn snapshot_mats(&self) -> &[Vec<Option<Mat>>] {
+        &self.mats
+    }
+
+    /// Restore a [`EstimateState::snapshot_mats`] checkpoint. The slot
+    /// layout (peers + self) is rebuilt deterministically from the graph,
+    /// so only the matrices travel through the checkpoint; shapes are
+    /// validated against the current layout.
+    pub fn restore_mats(&mut self, mats: Vec<Vec<Option<Mat>>>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            mats.len() == self.mats.len(),
+            "estimate checkpoint has {} peer slots, expected {}",
+            mats.len(),
+            self.mats.len()
+        );
+        for (slot, (new, old)) in mats.iter().zip(self.mats.iter()).enumerate() {
+            anyhow::ensure!(
+                new.len() == old.len(),
+                "estimate checkpoint slot {slot} has {} modes, expected {}",
+                new.len(),
+                old.len()
+            );
+            for (m, (n, o)) in new.iter().zip(old.iter()).enumerate() {
+                match (n, o) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) if a.rows == b.rows && a.cols == b.cols => {}
+                    _ => anyhow::bail!("estimate checkpoint shape mismatch at slot {slot} mode {m}"),
+                }
+            }
+        }
+        self.mats = mats;
+        Ok(())
+    }
+
     /// Consensus step (Alg. 1 line 18):
     /// `a += ϱ Σ_{j∈N_k} w_kj (Â^j - Â^k)`, in place on `a = A[t+½]`.
     pub fn consensus_into(

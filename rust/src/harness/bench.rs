@@ -16,8 +16,11 @@ use std::path::PathBuf;
 
 use crate::compress::Compressor;
 use crate::engine::client::gather_rows;
-use crate::engine::{train, AlgoConfig, TrainConfig};
+use crate::engine::session::Session;
+use crate::engine::spec::ExperimentSpec;
+use crate::engine::{AlgoConfig, TrainConfig};
 use crate::factor::FactorSet;
+use crate::net::driver::DriverKind;
 use crate::losses::Loss;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::ComputeBackend;
@@ -32,8 +35,8 @@ use crate::util::rng::Rng;
 /// Entry point for the `bench` subcommand.
 pub fn run(args: &Args) -> anyhow::Result<()> {
     let smoke = args.flag("smoke");
-    let out_path = PathBuf::from(args.get_str("out-json", "BENCH.json"));
-    let threads = args.get_usize("threads", 1);
+    let out_path = PathBuf::from(args.get_str("out-json", "BENCH.json")?);
+    let threads = args.get_usize("threads", 1)?;
     // acceptance shape for the grad comparison; smoke shrinks everything
     let (i_dim, s_dim, r_dim, ms) =
         if smoke { (64, 32, 8, 25u64) } else { (512, 128, 32, 400u64) };
@@ -139,7 +142,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         gather_rows(&gfactors, 0, &gdims, &fibers, &mut gather_bufs)
     }));
 
-    // --- end-to-end: one full (tiny) decentralized training run ---
+    // --- end-to-end: one full (tiny) decentralized training run,
+    // driven through the Session pipeline like every experiment ---
     let mut cfg = TrainConfig::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
     cfg.k = 4;
     cfg.rank = 4;
@@ -149,9 +153,11 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     cfg.epochs = 1;
     cfg.iters_per_epoch = if smoke { 10 } else { 60 };
     cfg.compute_threads = threads;
+    let spec = ExperimentSpec::from_train_config(&cfg, DriverKind::Sequential, None, "native");
+    let mut session = Session::new(spec);
     let e2e = bench(&format!("train_e2e_tiny_k4_iters{}", cfg.iters_per_epoch), ms, || {
         let mut b = NativeBackend::new();
-        train(&cfg, &data, &mut b, None).unwrap()
+        session.run_on(&data, &mut b, None).unwrap()
     });
 
     let mut all = vec![naive.clone(), blocked.clone()];

@@ -17,10 +17,11 @@
 use super::Ctx;
 use crate::compress::Compressor;
 use crate::engine::metrics::RunRecord;
-use crate::engine::AlgoConfig;
-use crate::net::async_gossip::train_async;
-use crate::net::driver::train_sim;
-use crate::net::sim::{self, FaultConfig};
+use crate::engine::session::Session;
+use crate::engine::spec::ExperimentSpec;
+use crate::engine::{AlgoConfig, TrainConfig};
+use crate::net::driver::DriverKind;
+use crate::net::sim::FaultConfig;
 use crate::topology::Topology;
 use crate::util::benchkit::{fmt_bytes, Table};
 use crate::util::csv::CsvWriter;
@@ -61,13 +62,9 @@ pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>
                         let mut cfg = ctx.base_config(dataset, loss, algo);
                         cfg.k = k;
                         cfg.topology = topo;
-                        let mut net: Box<dyn sim::NetworkModel> = if drop == 0.0 {
-                            sim::ideal()
-                        } else {
-                            FaultConfig::lossy(drop).with_seed(cfg.seed).boxed()
-                        };
-                        let out =
-                            train_sim(&cfg, &data, ctx.backend.as_mut(), net.as_mut(), None)?;
+                        let fault = (drop > 0.0)
+                            .then(|| FaultConfig::lossy(drop).with_seed(cfg.seed));
+                        let out = run_session(ctx, &cfg, DriverKind::Sim, fault, &data)?;
                         if drop == 0.0 {
                             ideal_loss = out.record.final_loss();
                         }
@@ -87,11 +84,8 @@ pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>
                 let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
                 cfg.k = k;
                 let drop = fault.as_ref().map(|f| f.drop_rate).unwrap_or(0.0);
-                let mut net: Box<dyn sim::NetworkModel> = match fault {
-                    None => sim::ideal(),
-                    Some(f) => f.with_seed(cfg.seed).boxed(),
-                };
-                let out = train_async(&cfg, &data, ctx.backend.as_mut(), net.as_mut(), None)?;
+                let fault = fault.map(|f| f.with_seed(cfg.seed));
+                let out = run_session(ctx, &cfg, DriverKind::Async, fault, &data)?;
                 if label == "ideal" {
                     ideal_loss = out.record.final_loss();
                 }
@@ -104,6 +98,19 @@ pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>
         }
     }
     Ok(records)
+}
+
+/// One sweep cell through the [`Session`] pipeline (the sweep names the
+/// driver and fault envelope explicitly; the spec carries both).
+fn run_session(
+    ctx: &mut Ctx,
+    cfg: &TrainConfig,
+    driver: DriverKind,
+    fault: Option<FaultConfig>,
+    data: &crate::tensor::synth::SynthData,
+) -> anyhow::Result<crate::engine::TrainOutcome> {
+    let spec = ExperimentSpec::from_train_config(cfg, driver, fault, ctx.backend.name());
+    Session::new(spec).run_on(data, ctx.backend.as_mut(), None)
 }
 
 /// CiderTF with the compressor swapped (the sweep's compressor axis).

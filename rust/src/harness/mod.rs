@@ -20,9 +20,12 @@ pub mod tables;
 
 use std::path::PathBuf;
 
-use crate::engine::{train, metrics::RunRecord, AlgoConfig, TrainConfig, TrainOutcome};
+use crate::engine::session::{CsvObserver, Session};
+use crate::engine::spec::ExperimentSpec;
+use crate::engine::{metrics::RunRecord, AlgoConfig, TrainConfig, TrainOutcome};
 use crate::factor::FactorSet;
 use crate::losses::Loss;
+use crate::net::driver::DriverKind;
 use crate::runtime::{default_artifact_dir, ComputeBackend, PjrtBackend};
 use crate::tensor::synth::{SynthConfig, SynthData, ValueKind};
 
@@ -122,7 +125,10 @@ impl Ctx {
         cfg
     }
 
-    /// Run + persist one config; returns the outcome.
+    /// Run + persist one config; returns the outcome. Every harness
+    /// figure/table goes through here, so they all ride the
+    /// [`Session`] pipeline: the CSV curve is written by a
+    /// [`CsvObserver`] instead of inline engine bookkeeping.
     pub fn run(
         &mut self,
         exp: &str,
@@ -130,13 +136,15 @@ impl Ctx {
         data: &SynthData,
         fms_reference: Option<&FactorSet>,
     ) -> anyhow::Result<TrainOutcome> {
-        let out = train(cfg, data, self.backend.as_mut(), fms_reference)?;
         let fname = format!(
             "{exp}/{}_{}_{}_{}_k{}.csv",
             cfg.dataset, cfg.loss.name(), cfg.algo.name, cfg.topology.name(), cfg.k
         );
-        out.record.write_csv(&self.out_dir.join(fname))?;
-        Ok(out)
+        let spec =
+            ExperimentSpec::from_train_config(cfg, DriverKind::Sequential, None, self.backend.name());
+        let mut session = Session::new(spec)
+            .observe(Box::new(CsvObserver::new(self.out_dir.join(fname))));
+        session.run_on(data, self.backend.as_mut(), fms_reference)
     }
 }
 

@@ -22,6 +22,7 @@ pub mod gossip;
 pub mod harness;
 pub mod losses;
 pub mod net;
+pub mod registry;
 pub mod runtime;
 pub mod sched;
 pub mod tensor;

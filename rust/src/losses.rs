@@ -22,12 +22,10 @@ impl Loss {
         }
     }
 
+    /// Look up a loss by CLI name (thin wrapper over
+    /// [`crate::registry::losses`]).
     pub fn from_name(s: &str) -> anyhow::Result<Self> {
-        match s {
-            "ls" | "least_squares" | "gaussian" => Ok(Loss::Ls),
-            "logit" | "bernoulli" | "bernoulli_logit" => Ok(Loss::Logit),
-            other => anyhow::bail!("unknown loss '{other}' (ls|logit)"),
-        }
+        crate::registry::losses().resolve(s)
     }
 
     /// f(m, x)

@@ -1,24 +1,40 @@
 //! `cidertf` — CLI entry point for the CiderTF reproduction.
 //!
+//! Every run flows through one pipeline: an
+//! [`ExperimentSpec`](cidertf::engine::spec::ExperimentSpec) (built from
+//! flags, a scenario string, or `--spec file.json`) consumed by a
+//! [`Session`](cidertf::engine::session::Session) that emits typed
+//! events to observers (console progress, CSV curves, JSONL streams,
+//! BENCH.json appends).
+//!
 //! Subcommands map 1:1 onto the paper's experiments (DESIGN.md index):
 //!
 //! ```text
 //! cidertf train  --algo cidertf:4 --dataset mimic_like --loss logit ...
-//! cidertf fig3 | fig4 | fig5 | fig6 | fig7         # regenerate figures
-//! cidertf table2 | table3 | table4 | theorems      # regenerate tables
-//! cidertf tune   --dataset synthetic --loss logit  # γ grid search
-//! cidertf info                                      # artifact/manifest info
+//! cidertf train  --spec experiment.json                # declarative run
+//! cidertf spec   --algo cidertf:4@lossy:0.2@async      # print resolved spec
+//! cidertf fig3 | fig4 | fig5 | fig6 | fig7             # regenerate figures
+//! cidertf table2 | table3 | table4 | theorems          # regenerate tables
+//! cidertf tune   --dataset synthetic --loss logit      # γ grid search
+//! cidertf info                                         # axes + artifacts
 //! ```
 //!
 //! Common flags: `--profile quick|paper`, `--k N`, `--tau T`,
 //! `--epochs E`, `--backend pjrt|native`, `--out results/`.
 
+use std::path::{Path, PathBuf};
+
 use cidertf::engine::presets::Scenario;
-use cidertf::engine::{train, AlgoConfig, TrainConfig};
+use cidertf::engine::session::{
+    BenchJsonObserver, ConsoleObserver, CsvObserver, JsonlObserver, Session,
+};
+use cidertf::engine::spec::ExperimentSpec;
+use cidertf::engine::{AlgoConfig, TrainConfig};
 use cidertf::harness::{self, Ctx, Profile};
 use cidertf::losses::Loss;
-use cidertf::net::driver::{driver_from_flags, DriverKind};
-use cidertf::net::sim::{self, FaultConfig, NetworkModel};
+use cidertf::net::driver::DriverKind;
+use cidertf::net::sim::FaultConfig;
+use cidertf::registry;
 use cidertf::runtime::{default_artifact_dir, ComputeBackend, Manifest, NativeOrPjrt};
 use cidertf::topology::Topology;
 use cidertf::util::cli::Args;
@@ -30,59 +46,55 @@ fn main() {
     }
 }
 
-/// Default `--backend`: PJRT when this binary was built with the `pjrt`
-/// feature, otherwise the artifact-free native mirror (so the
-/// out-of-the-box commands in README.md work on a plain build).
-fn default_backend() -> &'static str {
-    if cfg!(feature = "pjrt") {
-        "pjrt"
-    } else {
-        "native"
-    }
-}
-
 fn make_backend(args: &Args) -> anyhow::Result<Box<dyn ComputeBackend>> {
-    NativeOrPjrt::from_flag(&args.get_str("backend", default_backend()))
+    NativeOrPjrt::from_flag(&args.get_str("backend", NativeOrPjrt::default_flag())?)
 }
 
 fn ctx_from(args: &Args) -> anyhow::Result<Ctx> {
-    let profile = Profile::from_name(&args.get_str("profile", "quick"))?;
+    let profile = Profile::from_name(&args.get_str("profile", "quick")?)?;
     let mut ctx = Ctx::with_backend(make_backend(args)?, profile);
-    ctx.out_dir = args.get_str("out", "results").into();
+    ctx.out_dir = args.get_str("out", "results")?.into();
     Ok(ctx)
 }
+
+/// Every subcommand, for the did-you-mean hint on typos.
+const COMMANDS: &[&str] = &[
+    "train", "spec", "fig3", "fig4", "fig5", "fig6", "fig7", "table2", "table3", "table4",
+    "faults", "ablate", "theorems", "bench", "tune", "info", "help",
+];
 
 fn run() -> anyhow::Result<()> {
     let args = Args::from_env();
     let command = args.command.clone().unwrap_or_else(|| "help".to_string());
     match command.as_str() {
         "train" => cmd_train(&args)?,
+        "spec" => cmd_spec(&args)?,
         "fig3" => {
             let mut ctx = ctx_from(&args)?;
-            let k = args.get_usize("k", 8);
-            let taus = args.get_usize_list("taus", &[2, 4, 6, 8]);
+            let k = args.get_usize("k", 8)?;
+            let taus = args.get_usize_list("taus", &[2, 4, 6, 8])?;
             harness::fig3::run(&mut ctx, k, &taus)?;
         }
         "fig4" => {
             let mut ctx = ctx_from(&args)?;
-            harness::fig4::run(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+            harness::fig4::run(&mut ctx, args.get_usize("k", 8)?, args.get_usize("tau", 4)?)?;
         }
         "fig5" => {
             let mut ctx = ctx_from(&args)?;
-            let ks = args.get_usize_list("ks", &[8, 16, 32]);
-            let taus = args.get_usize_list("taus", &[4, 8]);
+            let ks = args.get_usize_list("ks", &[8, 16, 32])?;
+            let taus = args.get_usize_list("taus", &[4, 8])?;
             harness::fig5::run(&mut ctx, &ks, &taus)?;
         }
         "fig6" => {
             let mut ctx = ctx_from(&args)?;
-            harness::fig6::run(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+            harness::fig6::run(&mut ctx, args.get_usize("k", 8)?, args.get_usize("tau", 4)?)?;
         }
         "fig7" => {
             let mut ctx = ctx_from(&args)?;
-            harness::fig7::run(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+            harness::fig7::run(&mut ctx, args.get_usize("k", 8)?, args.get_usize("tau", 4)?)?;
         }
         "table2" => {
-            harness::tables::table2(args.get_usize("d", 3), args.get_usize("tau", 4));
+            harness::tables::table2(args.get_usize("d", 3)?, args.get_usize("tau", 4)?);
             args.finish()?;
             return Ok(());
         }
@@ -90,29 +102,29 @@ fn run() -> anyhow::Result<()> {
             let mut ctx = ctx_from(&args)?;
             harness::tables::table3(
                 &mut ctx,
-                args.get_usize("k", 8),
-                args.get_usize("tau", 8),
-                args.get_usize("max-patients", 1000),
+                args.get_usize("k", 8)?,
+                args.get_usize("tau", 8)?,
+                args.get_usize("max-patients", 1000)?,
             )?;
         }
         "table4" => {
             let mut ctx = ctx_from(&args)?;
             harness::tables::table4(
                 &mut ctx,
-                args.get_usize("k", 8),
-                args.get_usize("tau", 8),
-                args.get_usize("features", 8),
+                args.get_usize("k", 8)?,
+                args.get_usize("tau", 8)?,
+                args.get_usize("features", 8)?,
             )?;
         }
         "faults" => {
             let mut ctx = ctx_from(&args)?;
-            harness::faults::run(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+            harness::faults::run(&mut ctx, args.get_usize("k", 8)?, args.get_usize("tau", 4)?)?;
         }
         "ablate" => {
             let mut ctx = ctx_from(&args)?;
-            let k = args.get_usize("k", 8);
-            let tau = args.get_usize("tau", 4);
-            match args.get_str("sweep", "all").as_str() {
+            let k = args.get_usize("k", 8)?;
+            let tau = args.get_usize("tau", 4)?;
+            match args.get_str("sweep", "all")?.as_str() {
                 "rho" => harness::ablate::rho_sweep(&mut ctx, k, tau)?,
                 "tau" => harness::ablate::tau_sweep(&mut ctx, k)?,
                 "trigger" => harness::ablate::trigger_sweep(&mut ctx, k, tau)?,
@@ -125,24 +137,37 @@ fn run() -> anyhow::Result<()> {
         }
         "theorems" => {
             let mut ctx = ctx_from(&args)?;
-            harness::tables::theorems(&mut ctx, args.get_usize("k", 8), args.get_usize("tau", 4))?;
+            harness::tables::theorems(&mut ctx, args.get_usize("k", 8)?, args.get_usize("tau", 4)?)?;
         }
         "bench" => harness::bench::run(&args)?,
         "tune" => cmd_tune(&args)?,
         "info" => cmd_info(&args)?,
-        "help" | _ => {
+        "help" => {
             print_help();
             return Ok(());
+        }
+        other => {
+            let hint = registry::did_you_mean(other, COMMANDS.iter().copied())
+                .map(|s| format!(" — did you mean '{s}'?"))
+                .unwrap_or_default();
+            anyhow::bail!("unknown command '{other}'{hint} (run 'cidertf help')");
         }
     }
     args.finish()
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
+/// Resolve the experiment spec from `--spec file.json` (authoritative —
+/// no other axis flags allowed) or from the scenario flags, applying the
+/// profile-scaled defaults and explicit overrides exactly like the
+/// harness does.
+fn spec_from_args(args: &Args) -> anyhow::Result<ExperimentSpec> {
+    if let Some(path) = args.opt_str("spec")? {
+        return ExperimentSpec::load(Path::new(&path));
+    }
     // scenario: `--algo cidertf:4@lossy:0.2@async`, with `--network` and
     // `--driver` as explicit overrides for the last two segments
-    let mut scenario = Scenario::parse(&args.get_str("algo", "cidertf:4"))?;
-    if let Some(net) = args.opt_str("network") {
+    let mut scenario = Scenario::parse(&args.get_str("algo", "cidertf:4")?)?;
+    if let Some(net) = args.opt_str("network")? {
         scenario.fault = FaultConfig::by_name(&net)?;
         if scenario.fault.is_some()
             && matches!(scenario.driver, DriverKind::Sequential | DriverKind::Parallel)
@@ -150,98 +175,114 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             scenario.driver = DriverKind::Sim;
         }
     }
-    if let Some(d) = args.opt_str("driver") {
+    if let Some(d) = args.opt_str("driver")? {
         scenario.driver = DriverKind::from_name(&d)?;
     }
-    // same invariant Scenario::parse enforces, re-checked because the
-    // --driver override above can undo the auto-upgrade to sim
-    anyhow::ensure!(
-        !(scenario.fault.is_some()
-            && matches!(scenario.driver, DriverKind::Sequential | DriverKind::Parallel)),
-        "driver '{}' cannot inject network faults — use --driver sim or --driver async",
-        scenario.driver.name()
+    let dataset = args.get_str("dataset", "synthetic")?;
+    let loss = Loss::from_name(&args.get_str("loss", "logit")?)?;
+    let profile = Profile::from_name(&args.get_str("profile", "quick")?)?;
+
+    // profile-scaled defaults come from the same Ctx::base_config the
+    // fig/table harness uses (grid-searched γ, momentum rescale, profile
+    // iteration counts) — `train` and the harness can never diverge.
+    // This Ctx only supplies defaults; its backend is never exercised.
+    let ctx = Ctx::with_backend(
+        Box::new(cidertf::runtime::native::NativeBackend::new()),
+        profile,
     );
-    let dataset = args.get_str("dataset", "synthetic");
-    let loss = Loss::from_name(&args.get_str("loss", "logit"))?;
-    let profile = Profile::from_name(&args.get_str("profile", "quick"))?;
-    let out_dir: std::path::PathBuf = args.get_str("out", "results").into();
-    // This Ctx only generates the dataset and profile-scaled defaults —
-    // its backend is never exercised. The run's actual compute backend is
-    // resolved from --backend by driver_from_flags below.
-    let ctx = Ctx::with_backend(Box::new(cidertf::runtime::native::NativeBackend::new()), profile);
-    let data = ctx.dataset(&dataset, loss)?;
-    let mut cfg = ctx.base_config(&dataset, loss, scenario.algo.clone());
-    cfg.k = args.get_usize("k", 8);
-    cfg.topology = Topology::from_name(&args.get_str("topology", "ring"))?;
-    cfg.epochs = args.get_usize("epochs", cfg.epochs);
-    cfg.iters_per_epoch = args.get_usize("iters-per-epoch", cfg.iters_per_epoch);
-    cfg.gamma = args.get_f64("gamma", cfg.gamma);
-    cfg.rank = args.get_usize("rank", cfg.rank);
-    cfg.seed = args.get_u64("seed", cfg.seed);
-    cfg.compute_threads = args.get_usize("threads", cfg.compute_threads);
-    println!(
-        "training {} on {dataset}/{} K={} topology={} gamma={} driver={} ({} epochs x {} iters)",
-        cfg.algo.name,
-        cfg.loss.name(),
-        cfg.k,
-        cfg.topology.name(),
-        cfg.gamma,
-        scenario.driver.name(),
-        cfg.epochs,
-        cfg.iters_per_epoch
+    let cfg = ctx.base_config(&dataset, loss, scenario.algo);
+    let mut spec = ExperimentSpec::from_train_config(
+        &cfg,
+        scenario.driver,
+        scenario.fault,
+        NativeOrPjrt::default_flag(),
     );
-    let net: Box<dyn NetworkModel> = match scenario.fault.clone() {
-        None => sim::ideal(),
-        Some(f) => f.with_seed(cfg.seed).boxed(),
+    // explicit flag overrides
+    spec.k = args.get_usize("k", spec.k)?;
+    spec.topology = Topology::from_name(&args.get_str("topology", spec.topology.name())?)?;
+    spec.epochs = args.get_usize("epochs", spec.epochs)?;
+    spec.iters_per_epoch = args.get_usize("iters-per-epoch", spec.iters_per_epoch)?;
+    spec.gamma = args.get_f64("gamma", spec.gamma)?;
+    spec.rank = args.get_usize("rank", spec.rank)?;
+    spec.seed = args.get_u64("seed", spec.seed)?;
+    spec.compute_threads = args.get_usize("threads", spec.compute_threads)?;
+    spec.eval_every = args.get_usize("eval-every", spec.eval_every)?;
+    if let Some(t) = args.opt_str("target-loss")? {
+        spec.stop.target_loss = Some(
+            t.parse()
+                .map_err(|_| anyhow::anyhow!("--target-loss expects a number, got '{t}'"))?,
+        );
+    }
+    if let Some(b) = args.opt_str("max-bytes")? {
+        spec.stop.max_bytes = Some(
+            b.parse()
+                .map_err(|_| anyhow::anyhow!("--max-bytes expects an integer, got '{b}'"))?,
+        );
+    }
+    spec.backend = args.get_str("backend", NativeOrPjrt::default_flag())?;
+    spec.validate()?;
+    Ok(spec)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let out_dir: PathBuf = args.get_str("out", "results")?.into();
+    let resume_path = args.opt_str("resume")?;
+    let mut session = if let Some(ckpt) = &resume_path {
+        println!("resuming from {ckpt}");
+        Session::resume_from(Path::new(ckpt))?
+    } else {
+        Session::new(spec_from_args(args)?)
     };
-    let mut driver =
-        driver_from_flags(scenario.driver, &args.get_str("backend", default_backend()), net)?;
-    let out = driver.run(&cfg, &data, None)?;
-    let fname = format!(
-        "train/{}_{}_{}_{}_{}_k{}.csv",
-        cfg.dataset,
-        cfg.loss.name(),
-        cfg.algo.name,
-        driver.name(),
-        cfg.topology.name(),
-        cfg.k
-    );
-    out.record.write_csv(&out_dir.join(fname))?;
-    for p in &out.record.points {
+
+    {
+        let spec = session.spec();
         println!(
-            "epoch {:>3}  t={:>7.1}s  loss={:.6e}  uplink={}",
-            p.epoch,
-            p.time_s,
-            p.loss,
-            cidertf::util::benchkit::fmt_bytes(p.bytes as f64)
+            "training {} on {}/{} K={} topology={} gamma={} driver={} ({} epochs x {} iters)",
+            spec.algo.name,
+            spec.dataset,
+            spec.loss.name(),
+            spec.k,
+            spec.topology.name(),
+            spec.gamma,
+            spec.driver.name(),
+            spec.epochs,
+            spec.iters_per_epoch
         );
     }
-    println!(
-        "done: final loss {:.6e}, wall {:.1}s, uplink {}, msgs {} (triggered {}, suppressed {})",
-        out.record.final_loss(),
-        out.record.wall_s,
-        cidertf::util::benchkit::fmt_bytes(out.record.total.bytes as f64),
-        out.record.total.messages,
-        out.record.total.triggered,
-        out.record.total.suppressed
-    );
-    let net_stats = &out.record.net;
-    if matches!(scenario.driver, DriverKind::Sim | DriverKind::Async) {
-        println!(
-            "network: delivered {}, dropped {} ({:.1}% loss), stale {}, offline rounds {}",
-            net_stats.delivered,
-            net_stats.dropped,
-            100.0 * net_stats.drop_fraction(),
-            net_stats.stale,
-            net_stats.offline_rounds
-        );
+
+    let csv_path = out_dir.join(format!("train/{}.csv", session.spec().label()));
+    session = session
+        .observe(Box::new(ConsoleObserver))
+        .observe(Box::new(CsvObserver::new(csv_path)));
+    if let Some(jsonl) = args.opt_str("jsonl")? {
+        session = session.observe(Box::new(JsonlObserver::new(jsonl)));
     }
+    if let Some(bench_json) = args.opt_str("bench-json")? {
+        let label = session.spec().label();
+        session = session.observe(Box::new(BenchJsonObserver::new(bench_json, label)));
+    }
+    // a resumed run keeps writing to its own checkpoint file unless an
+    // explicit --checkpoint overrides it — crash protection survives
+    // the restart
+    let ckpt_path = args.opt_str("checkpoint")?.or(resume_path);
+    let ckpt_every = args.get_usize("checkpoint-every", 1)?;
+    if let Some(p) = ckpt_path {
+        session = session.checkpoint_every(p, ckpt_every);
+    }
+
+    session.run()?;
+    Ok(())
+}
+
+fn cmd_spec(args: &Args) -> anyhow::Result<()> {
+    let spec = spec_from_args(args)?;
+    println!("{}", spec.to_json().to_pretty_string());
     Ok(())
 }
 
 fn cmd_tune(args: &Args) -> anyhow::Result<()> {
-    let dataset = args.get_str("dataset", "synthetic");
-    let loss = Loss::from_name(&args.get_str("loss", "logit"))?;
+    let dataset = args.get_str("dataset", "synthetic")?;
+    let loss = Loss::from_name(&args.get_str("loss", "logit")?)?;
     let mut backend = make_backend(args)?;
     let data = {
         let ctx = Ctx::with_backend(NativeOrPjrt::from_flag("native")?, Profile::Quick);
@@ -252,9 +293,11 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         let gamma = 2f64.powi(exp);
         let mut cfg = TrainConfig::new(&dataset, loss, AlgoConfig::cidertf(4));
         cfg.gamma = gamma;
-        cfg.epochs = args.get_usize("epochs", 2);
-        cfg.iters_per_epoch = args.get_usize("iters-per-epoch", 150);
-        let out = train(&cfg, &data, backend.as_mut(), None)?;
+        cfg.epochs = args.get_usize("epochs", 2)?;
+        cfg.iters_per_epoch = args.get_usize("iters-per-epoch", 150)?;
+        let spec =
+            ExperimentSpec::from_train_config(&cfg, DriverKind::Sequential, None, "native");
+        let out = Session::new(spec).run_on(&data, backend.as_mut(), None)?;
         let l = out.record.final_loss();
         println!("gamma = {gamma:>8}: final loss {l:.6e}");
         if l.is_finite() && l < best.0 {
@@ -266,15 +309,28 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    println!("experiment axes (scenario strings, --spec files, and flags):\n");
+    for (kind, lines) in registry::axis_help() {
+        println!("{kind}:");
+        for line in lines {
+            println!("{line}");
+        }
+        println!();
+    }
+
     let dir = default_artifact_dir();
     println!("artifact dir: {}", dir.display());
-    let m = Manifest::load(&dir)?;
-    let mut names: Vec<&String> = m.artifacts.keys().collect();
-    names.sort();
-    println!("{} artifacts:", names.len());
-    for n in names {
-        let a = &m.artifacts[n];
-        println!("  {:<28} op={:<5} loss={:<5} inputs={:?}", a.name, a.op, a.loss, a.inputs);
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            let mut names: Vec<&String> = m.artifacts.keys().collect();
+            names.sort();
+            println!("{} artifacts:", names.len());
+            for n in names {
+                let a = &m.artifacts[n];
+                println!("  {:<28} op={:<5} loss={:<5} inputs={:?}", a.name, a.op, a.loss, a.inputs);
+            }
+        }
+        Err(_) => println!("no AOT artifacts found (native backend needs none)"),
     }
     args.finish()
 }
@@ -286,15 +342,24 @@ fn print_help() {
 USAGE: cidertf <command> [flags]
 
 COMMANDS
-  train      run one algorithm        --algo cidertf:4|cidertf_m:4|dpsgd|dpsgd_bras|
-                                       dpsgd_sign|dpsgd_bras_sign|sparq_sgd:4|gcp|
-                                       bras_cpd|centralized_cidertf
-             --dataset synthetic|mimic_like|cms_like|mimic_full|tiny --loss logit|ls
-             --k 8 --topology ring|star|complete|chain|torus --epochs N --gamma G
+  train      run one experiment spec
+             --algo <algo>[@<network>[@<driver>]]   scenario string, e.g.
+                                                    cidertf:4@lossy:0.2@async
+             --spec file.json     load a full ExperimentSpec (authoritative)
+             --dataset synthetic|mimic_like|cms_like|mimic_full|tiny
+             --loss logit|ls  --k 8  --topology ring|star|complete|chain|torus
+             --epochs N --iters-per-epoch N --gamma G --rank R --seed S
              --driver seq|par|sim|async   execution path (default seq)
-             --threads N   native-backend compute threads (default 1 = deterministic)
              --network ideal|lossy[:p]|bursty|wan|stragglers|churning|hostile
-             (or one spec: --algo cidertf:4@lossy:0.2@async)
+             --threads N          native-backend compute threads (default 1)
+             --eval-every N       epochs between eval points
+             --target-loss L --max-bytes B          early-stopping rules
+             --checkpoint ckpt.json [--checkpoint-every N]
+             --resume ckpt.json   continue bit-identically from a checkpoint
+             --jsonl run.jsonl    stream progress as JSON lines
+             --bench-json BENCH.json                append e2e timing
+  spec       print the fully-resolved ExperimentSpec JSON for any scenario
+             string / flag set (same flags as train)
   fig3       convergence vs baselines (paper Fig. 3)   [--k --taus 2,4,6,8]
   fig4       ring vs star topology    (paper Fig. 4)   [--k --tau]
   fig5       scalability K=8,16,32    (paper Fig. 5)   [--ks --taus]
@@ -309,12 +374,15 @@ COMMANDS
   bench      hot-path micro + e2e benchmarks; appends to BENCH.json
              [--smoke] [--out-json BENCH.json] [--threads N]
   tune       learning-rate grid search                 [--dataset --loss]
-  info       list AOT artifacts
+  info       list every pluggable axis + AOT artifacts
 
 COMMON FLAGS
   --profile quick|paper   effort level (default quick)
   --backend pjrt|native   compute backend (default: pjrt when built with the
                           `pjrt` feature, else native — the pure-Rust mirror)
-  --out results/          output directory for CSVs"
+  --out results/          output directory for CSVs
+
+Unknown commands and flags error with a did-you-mean hint; malformed
+numeric flags are errors, never silent defaults."
     );
 }

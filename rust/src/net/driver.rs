@@ -7,23 +7,17 @@
 //! algorithms. [`train_sim`] is the tentpole path: the engine's lock-step
 //! protocol (Alg. 1) with every message routed through a
 //! [`NetworkModel`] — per-link latency/bandwidth, i.i.d. and bursty drops,
-//! straggler compute, and churn — on a [`VirtualClock`].
+//! straggler compute, and churn — on a [`crate::net::sim::VirtualClock`].
 //!
 //! Invariant (asserted in `tests/network_sim.rs`): with
 //! [`crate::net::sim::IdealNetwork`] the simulator performs exactly the
 //! float operations of `engine::train`, so the factors are bit-identical.
 
-use crate::engine::{
-    apply_error_feedback, assemble_global, build_clients, consensus_phase, finalize_record,
-    publish_phase, record_point, TrainConfig, TrainOutcome,
-};
+use crate::engine::{TrainConfig, TrainOutcome};
 use crate::factor::FactorSet;
-use crate::gossip::Message;
-use crate::net::sim::{NetworkModel, VirtualClock};
+use crate::net::sim::NetworkModel;
 use crate::runtime::ComputeBackend;
-use crate::sched::BlockSampler;
 use crate::tensor::synth::SynthData;
-use crate::topology::Graph;
 
 /// Which execution path drives the rounds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,15 +43,10 @@ impl DriverKind {
         }
     }
 
-    /// Parse a CLI `--driver` flag.
+    /// Parse a CLI `--driver` flag (thin wrapper over
+    /// [`crate::registry::drivers`]).
     pub fn from_name(s: &str) -> anyhow::Result<Self> {
-        Ok(match s {
-            "seq" | "sequential" => DriverKind::Sequential,
-            "par" | "parallel" => DriverKind::Parallel,
-            "sim" => DriverKind::Sim,
-            "async" => DriverKind::Async,
-            other => anyhow::bail!("unknown driver '{other}' (seq|par|sim|async)"),
-        })
+        crate::registry::drivers().resolve(s)
     }
 }
 
@@ -176,6 +165,11 @@ impl RoundDriver for AsyncGossipDriver {
 /// per [`crate::runtime::NativeOrPjrt`]; `net` is consumed by the
 /// simulator paths and ignored by the lock-step in-process paths (their
 /// network is ideal by construction).
+///
+/// **Deprecated.** Kept for API compatibility; the CLI and harness now
+/// resolve drivers through [`crate::engine::session::Session`], which
+/// consumes a declarative [`crate::engine::spec::ExperimentSpec`]
+/// instead of loose flags.
 pub fn driver_from_flags(
     kind: DriverKind,
     backend_flag: &str,
@@ -203,22 +197,15 @@ pub fn driver_from_flags(
 
 /// Lock-step training over a [`NetworkModel`] (the sync simulator).
 ///
-/// Per iteration `t` (mirroring `engine::train` exactly):
-/// 1. an online mask is drawn — churned-out clients skip the round,
-/// 2. online clients take their local SGD/momentum step(s),
-/// 3. on communication rounds, payloads from online clients go through
-///    [`crate::engine::publish_phase`] (same trigger, compressor, and
-///    uplink ledger as the engine), then each neighbor message is
-///    subjected to `net.delivers`; survivors update `Â` and their latency
-///    is charged to the barrier,
-/// 4. online clients run the consensus step,
-/// 5. the [`VirtualClock`] advances by the slowest online client's
-///    compute time (stragglers stretch the round) plus the slowest
-///    surviving message.
-///
-/// With `IdealNetwork` every mask is all-true, every message survives with
-/// zero latency, and steps 1–4 reduce to the engine's loop — bit-identical
-/// factors.
+/// **Deprecated shim.** The loop body now lives in the unified session
+/// loop (`engine::session`), which this delegates to with the caller's
+/// network model and the virtual clock — exactly the float operations of
+/// the original simulator, so with `IdealNetwork` the factors stay
+/// bit-identical to [`crate::engine::train`] (asserted in
+/// `tests/network_sim.rs`). New code should build an
+/// [`crate::engine::spec::ExperimentSpec`] with the `sim` driver and run
+/// a [`crate::engine::session::Session`] — that path adds observers,
+/// eval cadence, stopping rules, and checkpoint/resume.
 pub fn train_sim(
     cfg: &TrainConfig,
     data: &SynthData,
@@ -226,107 +213,13 @@ pub fn train_sim(
     net: &mut dyn NetworkModel,
     fms_reference: Option<&FactorSet>,
 ) -> anyhow::Result<TrainOutcome> {
-    let d_order = data.tensor.dims.len();
-    anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
-    backend.set_threads(cfg.compute_threads);
-    let graph = Graph::build(cfg.topology, cfg.k)?;
-    let decentralized = cfg.k > 1;
-    let mut clients = build_clients(cfg, data, &graph);
-
-    let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
-    let trigger = cfg.trigger_schedule();
-    let all_modes: Vec<usize> = (0..d_order).collect();
-    let mut clock = VirtualClock::default();
-
-    let mut points = Vec::with_capacity(cfg.epochs + 1);
-    record_point(&mut clients, cfg, backend, fms_reference, 0, 0, clock.now(), &mut points)?;
-
-    let total_iters = cfg.epochs * cfg.iters_per_epoch;
-    for t in 0..total_iters {
-        let online: Vec<bool> = (0..cfg.k).map(|k| net.online(k, t)).collect();
-        let sampled_mode = block_sampler.next_mode();
-        let modes: &[usize] =
-            if cfg.algo.block_random { std::slice::from_ref(&sampled_mode) } else { &all_modes };
-
-        // ---- local steps (skipped while churned out) ----
-        let mut round_compute = 0.0f64;
-        for c in clients.iter_mut() {
-            if !online[c.id] {
-                c.net.offline_rounds += 1;
-                continue;
-            }
-            for &m in modes {
-                let beta = cfg.algo.momentum;
-                c.local_step(m, cfg.loss, cfg.fiber_samples, cfg.gamma, beta, backend)?;
-                if cfg.algo.error_feedback {
-                    apply_error_feedback(c, m, cfg.algo.compressor);
-                }
-            }
-            let cost = cfg.sim_iter_s * net.compute_multiplier(c.id);
-            if cost > round_compute {
-                round_compute = cost;
-            }
-        }
-        clock.advance(round_compute);
-
-        // ---- gossip through the network model ----
-        if decentralized && t % cfg.algo.tau == 0 {
-            for &m in modes {
-                if m == 0 {
-                    continue; // patient mode never travels
-                }
-                let payloads =
-                    publish_phase(&mut clients, &graph, cfg, &trigger, t, m, Some(&online[..]));
-
-                for k in 0..clients.len() {
-                    if !online[k] {
-                        // receiver is down: everything addressed to it is lost
-                        for &j in &graph.neighbors[k] {
-                            if payloads[j].is_some() {
-                                clients[k].net.dropped += 1;
-                            }
-                        }
-                        continue;
-                    }
-                    // own delta applies locally, never on the wire
-                    if let Some(p) = &payloads[k] {
-                        clients[k].estimates.as_mut().expect("estimates").apply_delta(k, m, p);
-                    }
-                    for &j in &graph.neighbors[k] {
-                        let Some(p) = &payloads[j] else { continue };
-                        if net.delivers(j, k, t) {
-                            clients[k].estimates.as_mut().expect("estimates").apply_delta(j, m, p);
-                            clients[k].net.delivered += 1;
-                            let wire = p.wire_bytes() + Message::HEADER_BYTES;
-                            clock.note_latency(net.latency_s(j, k, wire));
-                        } else {
-                            clients[k].net.dropped += 1;
-                        }
-                    }
-                }
-                clock.flush_latency();
-
-                consensus_phase(&mut clients, &graph, cfg.algo.rho, m, Some(&online[..]));
-            }
-        }
-
-        // ---- metrics per epoch ----
-        if (t + 1) % cfg.iters_per_epoch == 0 {
-            let epoch = (t + 1) / cfg.iters_per_epoch;
-            let now = clock.now();
-            let iter = t + 1;
-            record_point(&mut clients, cfg, backend, fms_reference, epoch, iter, now, &mut points)?;
-            if !points.last().map(|p| p.loss.is_finite()).unwrap_or(true) {
-                eprintln!(
-                    "[{}] diverged at epoch {epoch} (gamma {} too large) — stopping early",
-                    cfg.algo.name, cfg.gamma
-                );
-                break;
-            }
-        }
-    }
-
-    let factors = assemble_global(&clients);
-    let record = finalize_record(cfg, &graph, &clients, points, clock.now());
-    Ok(TrainOutcome { record, factors })
+    crate::engine::session::run_loop(
+        cfg,
+        data,
+        backend,
+        net,
+        false,
+        fms_reference,
+        &mut crate::engine::session::Hooks::none(),
+    )
 }

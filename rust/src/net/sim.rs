@@ -31,6 +31,7 @@ use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use crate::gossip::Message;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Per-run network delivery statistics (reported in
@@ -93,6 +94,19 @@ pub trait NetworkModel {
     /// Is `client` participating at `round`? Offline clients neither
     /// compute nor send, and anything addressed to them is lost.
     fn online(&mut self, client: usize, round: usize) -> bool;
+
+    /// Internal mutable state for checkpointing (per-link RNG streams,
+    /// burst flags). Stateless models return `Json::Null` — the default.
+    fn state_json(&self) -> Json {
+        Json::Null
+    }
+
+    /// Restore a [`NetworkModel::state_json`] snapshot so fault streams
+    /// continue bit-identically across a checkpoint/resume boundary.
+    /// Stateless models accept anything — the default is a no-op.
+    fn restore_state(&mut self, _state: &Json) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 /// The lossless, zero-latency, homogeneous network (the engine's implicit
@@ -139,7 +153,7 @@ pub fn ideal() -> Box<dyn NetworkModel> {
 ///
 /// Every knob defaults to "off", so `FaultConfig::default()` behaves like
 /// [`IdealNetwork`] up to latency bookkeeping.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FaultConfig {
     /// seed for every stochastic decision in the model
     pub seed: u64,
@@ -239,42 +253,95 @@ impl FaultConfig {
     }
 
     /// Look up a scenario by CLI name; `lossy:<p>` selects the drop rate.
+    /// Thin wrapper over [`crate::registry::networks`] (`None` = ideal).
     pub fn by_name(spec: &str) -> anyhow::Result<Option<Self>> {
-        let (name, arg) = match spec.split_once(':') {
-            Some((n, a)) => {
-                let v = a
-                    .parse::<f64>()
-                    .map_err(|_| anyhow::anyhow!("bad numeric argument in '{spec}'"))?;
-                (n, Some(v))
-            }
-            None => (spec, None),
-        };
-        Ok(match name {
-            "ideal" => None,
-            "lossy" => {
-                let p = arg.unwrap_or(0.2);
-                anyhow::ensure!(
-                    (0.0..=1.0).contains(&p),
-                    "drop probability {p} out of range [0, 1] in '{spec}'"
-                );
-                Some(Self::lossy(p))
-            }
-            "bursty" => Some(Self::bursty()),
-            "wan" => Some(Self::wan()),
-            "stragglers" => Some(Self::stragglers()),
-            "churning" => Some(Self::churning()),
-            "hostile" => Some(Self::hostile()),
-            other => anyhow::bail!(
-                "unknown network scenario '{other}' \
-                 (ideal|lossy[:p]|bursty|wan|stragglers|churning|hostile)"
-            ),
-        })
+        crate::registry::networks().resolve(spec)
     }
 
     /// Override the scenario seed (builder style).
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
+    }
+
+    /// Serialize for the experiment-spec JSON layer.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::u64(self.seed)),
+            ("drop_rate", Json::Num(self.drop_rate)),
+            ("burst_rate", Json::Num(self.burst_rate)),
+            ("burst_len", Json::Num(self.burst_len)),
+            ("burst_drop", Json::Num(self.burst_drop)),
+            ("latency_base_s", Json::Num(self.latency_base_s)),
+            ("latency_jitter", Json::Num(self.latency_jitter)),
+            ("bandwidth_bps", Json::Num(self.bandwidth_bps)),
+            ("straggler_frac", Json::Num(self.straggler_frac)),
+            (
+                "straggler_ids",
+                Json::arr_usize(&self.straggler_ids),
+            ),
+            ("straggler_slow", Json::Num(self.straggler_slow)),
+            ("churn_rate", Json::Num(self.churn_rate)),
+            ("churn_period", Json::Num(self.churn_period as f64)),
+        ])
+    }
+
+    /// Deserialize the [`FaultConfig::to_json`] layout. Missing keys keep
+    /// their defaults, so hand-written spec files only need the knobs
+    /// they turn — but unknown/typo'd keys are errors (with a
+    /// did-you-mean hint), so `"drop_rte"` can never silently mean an
+    /// ideal link.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        j.ensure_known_keys(
+            "network",
+            &[
+                "seed",
+                "drop_rate",
+                "burst_rate",
+                "burst_len",
+                "burst_drop",
+                "latency_base_s",
+                "latency_jitter",
+                "bandwidth_bps",
+                "straggler_frac",
+                "straggler_ids",
+                "straggler_slow",
+                "churn_rate",
+                "churn_period",
+            ],
+        )?;
+        let mut f = FaultConfig::default();
+        if let Some(v) = j.get("seed") {
+            f.seed = v.as_u64().ok_or_else(|| anyhow::anyhow!("bad fault 'seed'"))?;
+        }
+        let num = |key: &str, slot: &mut f64| -> anyhow::Result<()> {
+            if let Some(v) = j.get(key) {
+                *slot = v.as_f64().ok_or_else(|| anyhow::anyhow!("bad fault '{key}'"))?;
+            }
+            Ok(())
+        };
+        num("drop_rate", &mut f.drop_rate)?;
+        num("burst_rate", &mut f.burst_rate)?;
+        num("burst_len", &mut f.burst_len)?;
+        num("burst_drop", &mut f.burst_drop)?;
+        num("latency_base_s", &mut f.latency_base_s)?;
+        num("latency_jitter", &mut f.latency_jitter)?;
+        num("bandwidth_bps", &mut f.bandwidth_bps)?;
+        num("straggler_frac", &mut f.straggler_frac)?;
+        num("straggler_slow", &mut f.straggler_slow)?;
+        num("churn_rate", &mut f.churn_rate)?;
+        if let Some(v) = j.get("straggler_ids") {
+            let arr = v.as_array().ok_or_else(|| anyhow::anyhow!("bad fault 'straggler_ids'"))?;
+            f.straggler_ids = arr
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("bad straggler id")))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = j.get("churn_period") {
+            f.churn_period =
+                v.as_usize().ok_or_else(|| anyhow::anyhow!("bad fault 'churn_period'"))?;
+        }
+        Ok(f)
     }
 
     /// Materialize the model.
@@ -388,6 +455,51 @@ impl NetworkModel for FaultyNetwork {
         }
         let period = (round / self.cfg.churn_period.max(1)) as u64;
         unit_hash(self.cfg.seed, client as u64, period, 29) >= self.cfg.churn_rate
+    }
+
+    fn state_json(&self) -> Json {
+        // static traits (latency spread, stragglers, churn windows) are
+        // pure hashes of the config — only the per-link fault machines
+        // carry mutable state. Sorted for a deterministic file.
+        let mut keys: Vec<(usize, usize)> = self.links.keys().copied().collect();
+        keys.sort_unstable();
+        let links: Vec<Json> = keys
+            .into_iter()
+            .map(|k| {
+                let st = &self.links[&k];
+                Json::obj(vec![
+                    ("from", Json::Num(k.0 as f64)),
+                    ("to", Json::Num(k.1 as f64)),
+                    ("in_burst", Json::Bool(st.in_burst)),
+                    ("rng", crate::util::rng::state_to_json(st.rng.state())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("links", Json::Arr(links))])
+    }
+
+    fn restore_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        if matches!(state, Json::Null) {
+            return Ok(());
+        }
+        let links = state.req_array("links")?;
+        self.links.clear();
+        for l in links {
+            let from = l.req_usize("from")?;
+            let to = l.req_usize("to")?;
+            let in_burst = l
+                .get("in_burst")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow::anyhow!("bad link 'in_burst'"))?;
+            let (words, spare) = crate::util::rng::state_from_json(
+                l.get("rng").ok_or_else(|| anyhow::anyhow!("missing link 'rng'"))?,
+            )?;
+            self.links.insert(
+                (from, to),
+                LinkState { in_burst, rng: Rng::from_state(words, spare) },
+            );
+        }
+        Ok(())
     }
 }
 

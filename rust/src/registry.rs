@@ -1,0 +1,643 @@
+//! Name → constructor registries for every pluggable axis.
+//!
+//! Historically each axis of the experiment space grew its own ad-hoc
+//! lookup (`AlgoConfig::by_name`, `Loss::from_name`,
+//! `Topology::from_name`, `FaultConfig::by_name`,
+//! `DriverKind::from_name`, `SynthConfig::by_name`) with its own error
+//! wording and no common way to enumerate the choices. This module
+//! collapses them onto one [`Registry`] type:
+//!
+//! * every entry has a canonical name, aliases, a one-line help string,
+//!   and a constructor taking the optional `:arg` suffix
+//!   (`cidertf:8`, `lossy:0.2`, `topk:16`),
+//! * unknown names fail with the full known-name list *and* a
+//!   did-you-mean suggestion,
+//! * `cidertf info` prints every registry, so the scenario vocabulary is
+//!   discoverable from the CLI instead of from source code.
+//!
+//! The legacy `by_name`/`from_name` constructors remain as thin wrappers
+//! over [`algos`], [`losses`], [`topologies`], [`compressors`],
+//! [`networks`], [`drivers`], and [`datasets`].
+
+use crate::compress::Compressor;
+use crate::engine::AlgoConfig;
+use crate::losses::Loss;
+use crate::net::driver::DriverKind;
+use crate::net::sim::FaultConfig;
+use crate::tensor::synth::SynthConfig;
+use crate::topology::Topology;
+
+/// One named constructor in a [`Registry`].
+pub struct RegEntry<T: 'static> {
+    /// canonical CLI name
+    pub name: &'static str,
+    /// accepted alternative spellings
+    pub aliases: &'static [&'static str],
+    /// one-line description (shown by `cidertf info`); include the `:arg`
+    /// syntax here when the entry takes one
+    pub help: &'static str,
+    /// constructor; receives the text after `:` in the spec, if any
+    pub make: fn(Option<&str>) -> anyhow::Result<T>,
+}
+
+/// A name → constructor table for one pluggable axis.
+pub struct Registry<T: 'static> {
+    kind: &'static str,
+    entries: &'static [RegEntry<T>],
+}
+
+impl<T: 'static> Registry<T> {
+    /// Build a registry over a static entry table.
+    pub const fn new(kind: &'static str, entries: &'static [RegEntry<T>]) -> Self {
+        Registry { kind, entries }
+    }
+
+    /// What this registry constructs (for error messages), e.g.
+    /// `"algorithm"`.
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    /// The entry table (for `cidertf info`).
+    pub fn entries(&self) -> &'static [RegEntry<T>] {
+        self.entries
+    }
+
+    /// Canonical names, in table order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// Formatted `name  help (aliases: ...)` lines — the type-erased
+    /// view `cidertf info` prints, so adding a registry automatically
+    /// surfaces it in the CLI.
+    pub fn help_lines(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .map(|e| {
+                let aliases = if e.aliases.is_empty() {
+                    String::new()
+                } else {
+                    format!(" (aliases: {})", e.aliases.join(", "))
+                };
+                format!("  {:<22} {}{}", e.name, e.help, aliases)
+            })
+            .collect()
+    }
+
+    /// Resolve `name[:arg]` to a constructed value.
+    pub fn resolve(&self, spec: &str) -> anyhow::Result<T> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (spec, None),
+        };
+        for e in self.entries {
+            if e.name == name || e.aliases.contains(&name) {
+                return (e.make)(arg)
+                    .map_err(|err| anyhow::anyhow!("{} '{spec}': {err}", self.kind));
+            }
+        }
+        let known = self.names().join("|");
+        match did_you_mean(name, self.entries.iter().map(|e| e.name)) {
+            Some(s) => anyhow::bail!(
+                "unknown {} '{name}' — did you mean '{s}'? (known: {known})",
+                self.kind
+            ),
+            None => anyhow::bail!("unknown {} '{name}' (known: {known})", self.kind),
+        }
+    }
+}
+
+/// Levenshtein edit distance (iterative two-row DP) — small inputs only.
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest known name, if it is close enough to be a plausible typo
+/// (edit distance ≤ 2, or ≤ a third of the name's length for long names,
+/// or a unique prefix/superstring match).
+pub fn did_you_mean<'a>(
+    unknown: &str,
+    known: impl Iterator<Item = &'a str>,
+) -> Option<&'a str> {
+    let mut best: Option<(&str, usize)> = None;
+    for k in known {
+        if k.starts_with(unknown) || unknown.starts_with(k) {
+            return Some(k);
+        }
+        let d = edit_distance(unknown, k);
+        if best.map(|(_, bd)| d < bd).unwrap_or(true) {
+            best = Some((k, d));
+        }
+    }
+    let (k, d) = best?;
+    let budget = 2.max(k.len() / 3);
+    (d <= budget).then_some(k)
+}
+
+// ---- shared argument parsers ----
+
+fn no_arg(kind: &'static str, arg: Option<&str>) -> anyhow::Result<()> {
+    match arg {
+        None => Ok(()),
+        Some(a) => anyhow::bail!("{kind} takes no ':' argument (got ':{a}')"),
+    }
+}
+
+fn usize_arg(arg: Option<&str>, what: &str, default: usize) -> anyhow::Result<usize> {
+    match arg {
+        None => Ok(default),
+        Some(a) => a.parse().map_err(|_| anyhow::anyhow!("bad {what} '{a}' (expected an integer)")),
+    }
+}
+
+fn f64_arg(arg: Option<&str>, what: &str, default: f64) -> anyhow::Result<f64> {
+    match arg {
+        None => Ok(default),
+        Some(a) => a.parse().map_err(|_| anyhow::anyhow!("bad {what} '{a}' (expected a number)")),
+    }
+}
+
+// ---- algorithms (paper Table II + centralized baselines) ----
+
+/// Algorithm presets: the Table II feature matrix plus the centralized
+/// baselines, each one configuration of the same engine.
+pub fn algos() -> &'static Registry<AlgoConfig> {
+    static ENTRIES: &[RegEntry<AlgoConfig>] = &[
+        RegEntry {
+            name: "cidertf",
+            aliases: &[],
+            help: "cidertf[:tau] — sign + block random + periodic(τ) + event-triggered",
+            make: |a| Ok(AlgoConfig::cidertf(usize_arg(a, "tau", 4)?)),
+        },
+        RegEntry {
+            name: "cidertf_m",
+            aliases: &[],
+            help: "cidertf_m[:tau] — CiderTF + Nesterov momentum (β = 0.9)",
+            make: |a| Ok(AlgoConfig::cidertf_m(usize_arg(a, "tau", 4)?)),
+        },
+        RegEntry {
+            name: "dpsgd",
+            aliases: &[],
+            help: "D-PSGD: full precision, all modes, every round",
+            make: |a| {
+                no_arg("dpsgd", a)?;
+                Ok(AlgoConfig::dpsgd())
+            },
+        },
+        RegEntry {
+            name: "dpsgd_bras",
+            aliases: &[],
+            help: "D-PSGD + block randomization",
+            make: |a| {
+                no_arg("dpsgd_bras", a)?;
+                Ok(AlgoConfig::dpsgd_bras())
+            },
+        },
+        RegEntry {
+            name: "dpsgd_sign",
+            aliases: &[],
+            help: "D-PSGD + sign compression",
+            make: |a| {
+                no_arg("dpsgd_sign", a)?;
+                Ok(AlgoConfig::dpsgd_sign())
+            },
+        },
+        RegEntry {
+            name: "dpsgd_bras_sign",
+            aliases: &[],
+            help: "D-PSGD + block randomization + sign compression",
+            make: |a| {
+                no_arg("dpsgd_bras_sign", a)?;
+                Ok(AlgoConfig::dpsgd_bras_sign())
+            },
+        },
+        RegEntry {
+            name: "sparq_sgd",
+            aliases: &[],
+            help: "sparq_sgd[:tau] — compression + periodic + event-triggered, all modes",
+            make: |a| Ok(AlgoConfig::sparq_sgd(usize_arg(a, "tau", 4)?)),
+        },
+        RegEntry {
+            name: "gcp",
+            aliases: &[],
+            help: "centralized stochastic generalized CP (run with K = 1)",
+            make: |a| {
+                no_arg("gcp", a)?;
+                Ok(AlgoConfig::gcp())
+            },
+        },
+        RegEntry {
+            name: "bras_cpd",
+            aliases: &[],
+            help: "centralized block-randomized stochastic CPD (K = 1)",
+            make: |a| {
+                no_arg("bras_cpd", a)?;
+                Ok(AlgoConfig::bras_cpd())
+            },
+        },
+        RegEntry {
+            name: "centralized_cidertf",
+            aliases: &[],
+            help: "K = 1, sign-compressed updates with error feedback",
+            make: |a| {
+                no_arg("centralized_cidertf", a)?;
+                Ok(AlgoConfig::centralized_cidertf())
+            },
+        },
+    ];
+    static REG: Registry<AlgoConfig> = Registry::new("algorithm", ENTRIES);
+    &REG
+}
+
+// ---- losses ----
+
+/// GCP elementwise losses.
+pub fn losses() -> &'static Registry<Loss> {
+    static ENTRIES: &[RegEntry<Loss>] = &[
+        RegEntry {
+            name: "logit",
+            aliases: &["bernoulli", "bernoulli_logit"],
+            help: "Bernoulli-logit loss — binary data",
+            make: |a| {
+                no_arg("logit", a)?;
+                Ok(Loss::Logit)
+            },
+        },
+        RegEntry {
+            name: "ls",
+            aliases: &["least_squares", "gaussian"],
+            help: "least squares — Gaussian data, classic CP",
+            make: |a| {
+                no_arg("ls", a)?;
+                Ok(Loss::Ls)
+            },
+        },
+    ];
+    static REG: Registry<Loss> = Registry::new("loss", ENTRIES);
+    &REG
+}
+
+// ---- topologies ----
+
+/// Communication graph topologies.
+pub fn topologies() -> &'static Registry<Topology> {
+    static ENTRIES: &[RegEntry<Topology>] = &[
+        RegEntry {
+            name: "ring",
+            aliases: &[],
+            help: "cycle over K clients (paper default)",
+            make: |a| {
+                no_arg("ring", a)?;
+                Ok(Topology::Ring)
+            },
+        },
+        RegEntry {
+            name: "star",
+            aliases: &[],
+            help: "hub-and-spoke around client 0",
+            make: |a| {
+                no_arg("star", a)?;
+                Ok(Topology::Star)
+            },
+        },
+        RegEntry {
+            name: "complete",
+            aliases: &["full"],
+            help: "all-to-all",
+            make: |a| {
+                no_arg("complete", a)?;
+                Ok(Topology::Complete)
+            },
+        },
+        RegEntry {
+            name: "chain",
+            aliases: &["line"],
+            help: "open path",
+            make: |a| {
+                no_arg("chain", a)?;
+                Ok(Topology::Chain)
+            },
+        },
+        RegEntry {
+            name: "torus",
+            aliases: &["grid"],
+            help: "2-D torus (K must be a perfect square)",
+            make: |a| {
+                no_arg("torus", a)?;
+                Ok(Topology::Torus)
+            },
+        },
+    ];
+    static REG: Registry<Topology> = Registry::new("topology", ENTRIES);
+    &REG
+}
+
+// ---- compressors ----
+
+/// Element-level compressors (Table II "Element-level" column).
+pub fn compressors() -> &'static Registry<Compressor> {
+    static ENTRIES: &[RegEntry<Compressor>] = &[
+        RegEntry {
+            name: "sign",
+            aliases: &[],
+            help: "Def. III.1 sign compressor — 1 bit/entry + scale",
+            make: |a| {
+                no_arg("sign", a)?;
+                Ok(Compressor::Sign)
+            },
+        },
+        RegEntry {
+            name: "none",
+            aliases: &["dense"],
+            help: "identity — full-precision f32",
+            make: |a| {
+                no_arg("none", a)?;
+                Ok(Compressor::None)
+            },
+        },
+        RegEntry {
+            name: "topk",
+            aliases: &[],
+            help: "topk[:ratio] — keep the n/ratio largest-magnitude entries (default 4)",
+            make: |a| {
+                let ratio = usize_arg(a, "topk ratio", 4)?;
+                anyhow::ensure!(ratio >= 1 && ratio <= u32::MAX as usize, "ratio {ratio} out of range");
+                Ok(Compressor::TopK { ratio: ratio as u32 })
+            },
+        },
+    ];
+    static REG: Registry<Compressor> = Registry::new("compressor", ENTRIES);
+    &REG
+}
+
+// ---- network fault envelopes ----
+
+/// Network scenarios; `None` is the ideal (fault-free) network.
+pub fn networks() -> &'static Registry<Option<FaultConfig>> {
+    static ENTRIES: &[RegEntry<Option<FaultConfig>>] = &[
+        RegEntry {
+            name: "ideal",
+            aliases: &[],
+            help: "lossless, zero latency, everyone online",
+            make: |a| {
+                no_arg("ideal", a)?;
+                Ok(None)
+            },
+        },
+        RegEntry {
+            name: "lossy",
+            aliases: &[],
+            help: "lossy[:p] — i.i.d. message drops at probability p (default 0.2)",
+            make: |a| {
+                let p = f64_arg(a, "drop probability", 0.2)?;
+                anyhow::ensure!((0.0..=1.0).contains(&p), "drop probability {p} out of range [0, 1]");
+                Ok(Some(FaultConfig::lossy(p)))
+            },
+        },
+        RegEntry {
+            name: "bursty",
+            aliases: &[],
+            help: "Gilbert–Elliott loss bursts on mostly-clean links",
+            make: |a| {
+                no_arg("bursty", a)?;
+                Ok(Some(FaultConfig::bursty()))
+            },
+        },
+        RegEntry {
+            name: "wan",
+            aliases: &[],
+            help: "heterogeneous WAN latency/bandwidth, no loss",
+            make: |a| {
+                no_arg("wan", a)?;
+                Ok(Some(FaultConfig::wan()))
+            },
+        },
+        RegEntry {
+            name: "stragglers",
+            aliases: &[],
+            help: "a quarter of the clients compute 4x slower",
+            make: |a| {
+                no_arg("stragglers", a)?;
+                Ok(Some(FaultConfig::stragglers()))
+            },
+        },
+        RegEntry {
+            name: "churning",
+            aliases: &[],
+            help: "clients leave and rejoin (10% downtime, 50-round blocks)",
+            make: |a| {
+                no_arg("churning", a)?;
+                Ok(Some(FaultConfig::churning()))
+            },
+        },
+        RegEntry {
+            name: "hostile",
+            aliases: &[],
+            help: "drops + bursts + WAN + stragglers + churn at once",
+            make: |a| {
+                no_arg("hostile", a)?;
+                Ok(Some(FaultConfig::hostile()))
+            },
+        },
+    ];
+    static REG: Registry<Option<FaultConfig>> = Registry::new("network scenario", ENTRIES);
+    &REG
+}
+
+// ---- round drivers ----
+
+/// Execution paths (how rounds are driven).
+pub fn drivers() -> &'static Registry<DriverKind> {
+    static ENTRIES: &[RegEntry<DriverKind>] = &[
+        RegEntry {
+            name: "seq",
+            aliases: &["sequential"],
+            help: "in-process lock-step (the reference path)",
+            make: |a| {
+                no_arg("seq", a)?;
+                Ok(DriverKind::Sequential)
+            },
+        },
+        RegEntry {
+            name: "par",
+            aliases: &["parallel"],
+            help: "one OS thread per client, barrier-synchronized",
+            make: |a| {
+                no_arg("par", a)?;
+                Ok(DriverKind::Parallel)
+            },
+        },
+        RegEntry {
+            name: "sim",
+            aliases: &[],
+            help: "lock-step rounds through a NetworkModel on a virtual clock",
+            make: |a| {
+                no_arg("sim", a)?;
+                Ok(DriverKind::Sim)
+            },
+        },
+        RegEntry {
+            name: "async",
+            aliases: &[],
+            help: "event-driven asynchronous gossip (no barriers)",
+            make: |a| {
+                no_arg("async", a)?;
+                Ok(DriverKind::Async)
+            },
+        },
+    ];
+    static REG: Registry<DriverKind> = Registry::new("driver", ENTRIES);
+    &REG
+}
+
+// ---- datasets ----
+
+/// Synthetic dataset generators.
+pub fn datasets() -> &'static Registry<SynthConfig> {
+    static ENTRIES: &[RegEntry<SynthConfig>] = &[
+        RegEntry {
+            name: "synthetic",
+            aliases: &[],
+            help: "mid-size synthetic EHR tensor (quick-profile default)",
+            make: |a| {
+                no_arg("synthetic", a)?;
+                Ok(SynthConfig::synthetic())
+            },
+        },
+        RegEntry {
+            name: "mimic_like",
+            aliases: &["mimic"],
+            help: "MIMIC-III-shaped tensor",
+            make: |a| {
+                no_arg("mimic_like", a)?;
+                Ok(SynthConfig::mimic_like())
+            },
+        },
+        RegEntry {
+            name: "cms_like",
+            aliases: &["cms"],
+            help: "CMS-shaped tensor",
+            make: |a| {
+                no_arg("cms_like", a)?;
+                Ok(SynthConfig::cms_like())
+            },
+        },
+        RegEntry {
+            name: "mimic_full",
+            aliases: &[],
+            help: "full-scale MIMIC-III-shaped tensor",
+            make: |a| {
+                no_arg("mimic_full", a)?;
+                Ok(SynthConfig::mimic_full())
+            },
+        },
+        RegEntry {
+            name: "tiny",
+            aliases: &[],
+            help: "tiny[:seed] — 64x32x32 test tensor (default seed 7)",
+            make: |a| Ok(SynthConfig::tiny(usize_arg(a, "seed", 7)? as u64)),
+        },
+    ];
+    static REG: Registry<SynthConfig> = Registry::new("dataset", ENTRIES);
+    &REG
+}
+
+/// Every registry's `(kind-plural, names)` pair.
+pub fn axis_names() -> Vec<(&'static str, Vec<&'static str>)> {
+    vec![
+        ("algorithms", algos().names()),
+        ("losses", losses().names()),
+        ("compressors", compressors().names()),
+        ("topologies", topologies().names()),
+        ("networks", networks().names()),
+        ("drivers", drivers().names()),
+        ("datasets", datasets().names()),
+    ]
+}
+
+/// Every registry's `(kind-plural, formatted help lines)` pair — the
+/// single `cidertf info` vocabulary dump. New registries added here show
+/// up in the CLI with no further wiring.
+pub fn axis_help() -> Vec<(&'static str, Vec<String>)> {
+    vec![
+        ("algorithms", algos().help_lines()),
+        ("losses", losses().help_lines()),
+        ("compressors", compressors().help_lines()),
+        ("topologies", topologies().help_lines()),
+        ("networks", networks().help_lines()),
+        ("drivers", drivers().help_lines()),
+        ("datasets", datasets().help_lines()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_with_and_without_args() {
+        assert_eq!(algos().resolve("cidertf:8").unwrap().tau, 8);
+        assert_eq!(algos().resolve("cidertf").unwrap().tau, 4);
+        assert_eq!(losses().resolve("gaussian").unwrap(), Loss::Ls);
+        assert_eq!(topologies().resolve("full").unwrap(), Topology::Complete);
+        assert_eq!(drivers().resolve("sequential").unwrap(), DriverKind::Sequential);
+        assert_eq!(compressors().resolve("topk:16").unwrap(), Compressor::TopK { ratio: 16 });
+        assert!(networks().resolve("ideal").unwrap().is_none());
+        let lossy = networks().resolve("lossy:0.3").unwrap().unwrap();
+        assert!((lossy.drop_rate - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_names_suggest_and_enumerate() {
+        let err = format!("{:#}", algos().resolve("cidrtf").unwrap_err());
+        assert!(err.contains("did you mean 'cidertf'"), "{err}");
+        assert!(err.contains("dpsgd"), "known list missing: {err}");
+        let err = format!("{:#}", networks().resolve("lozzy:0.2").unwrap_err());
+        assert!(err.contains("lossy"), "{err}");
+        // nothing close: no suggestion, but still the known list
+        let err = format!("{:#}", losses().resolve("zzz").unwrap_err());
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("logit"), "{err}");
+    }
+
+    #[test]
+    fn bad_args_are_errors() {
+        assert!(algos().resolve("cidertf:x").is_err());
+        assert!(algos().resolve("dpsgd:3").is_err(), "no-arg entry must reject ':3'");
+        assert!(networks().resolve("lossy:1.5").is_err());
+        assert!(networks().resolve("lossy:abc").is_err());
+        assert!(compressors().resolve("topk:0").is_err());
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("cidrtf", "cidertf"), 1);
+        assert_eq!(edit_distance("ring", "star"), 4);
+    }
+
+    #[test]
+    fn did_you_mean_thresholds() {
+        let names = ["ring", "star", "complete", "chain", "torus"];
+        assert_eq!(did_you_mean("rign", names.iter().copied()), Some("ring"));
+        assert_eq!(did_you_mean("comp", names.iter().copied()), Some("complete"));
+        assert_eq!(did_you_mean("xyzzy", names.iter().copied()), None);
+    }
+}

@@ -333,6 +333,16 @@ impl NativeOrPjrt {
             other => anyhow::bail!("unknown backend '{other}' (pjrt|native)"),
         }
     }
+
+    /// Default `--backend`/spec value: PJRT when built with the `pjrt`
+    /// feature, otherwise the artifact-free native mirror.
+    pub fn default_flag() -> &'static str {
+        if cfg!(feature = "pjrt") {
+            "pjrt"
+        } else {
+            "native"
+        }
+    }
 }
 
 /// Locate the artifact directory: `$CIDERTF_ARTIFACTS`, else `artifacts/`

@@ -32,6 +32,19 @@ impl BlockSampler {
         self.t += 1;
         m
     }
+
+    /// Snapshot the sampler stream (RNG state + draw counter) for
+    /// checkpointing; `d_order`/`randomized` are rebuilt from the config.
+    pub fn state(&self) -> (([u64; 4], Option<f64>), usize) {
+        (self.rng.state(), self.t)
+    }
+
+    /// Restore a [`BlockSampler::state`] snapshot so the mode sequence
+    /// continues bit-identically.
+    pub fn restore(&mut self, rng: ([u64; 4], Option<f64>), t: usize) {
+        self.rng = Rng::from_state(rng.0, rng.1);
+        self.t = t;
+    }
 }
 
 /// Per-client fiber sampler: `|S|` distinct mode-d fibers per iteration.
@@ -79,6 +92,19 @@ impl FiberSampler {
         );
         out.clear();
         out.extend(self.idx.iter().map(|&i| i as u64));
+    }
+
+    /// Snapshot the sampling stream for checkpointing. The scratch
+    /// buffers are cleared on every draw, so the RNG state alone
+    /// determines all future samples.
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Restore a [`FiberSampler::rng_state`] snapshot so the fiber
+    /// sequence continues bit-identically.
+    pub fn restore_rng(&mut self, state: ([u64; 4], Option<f64>)) {
+        self.rng = Rng::from_state(state.0, state.1);
     }
 }
 

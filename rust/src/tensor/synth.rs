@@ -114,15 +114,10 @@ impl SynthConfig {
         }
     }
 
+    /// Look up a dataset by CLI name (thin wrapper over
+    /// [`crate::registry::datasets`]).
     pub fn by_name(name: &str) -> anyhow::Result<Self> {
-        Ok(match name {
-            "synthetic" => Self::synthetic(),
-            "mimic_like" | "mimic" => Self::mimic_like(),
-            "cms_like" | "cms" => Self::cms_like(),
-            "mimic_full" => Self::mimic_full(),
-            "tiny" => Self::tiny(7),
-            other => anyhow::bail!("unknown dataset '{other}' (synthetic|mimic_like|cms_like|mimic_full|tiny)"),
-        })
+        crate::registry::datasets().resolve(name)
     }
 
     pub fn with_values(mut self, v: ValueKind) -> Self {

@@ -29,15 +29,10 @@ impl Topology {
         }
     }
 
+    /// Look up a topology by CLI name (thin wrapper over
+    /// [`crate::registry::topologies`]).
     pub fn from_name(s: &str) -> anyhow::Result<Self> {
-        Ok(match s {
-            "ring" => Topology::Ring,
-            "star" => Topology::Star,
-            "complete" | "full" => Topology::Complete,
-            "chain" | "line" => Topology::Chain,
-            "torus" | "grid" => Topology::Torus,
-            other => anyhow::bail!("unknown topology '{other}' (ring|star|complete|chain|torus)"),
-        })
+        crate::registry::topologies().resolve(s)
     }
 }
 

@@ -1,7 +1,9 @@
 //! Tiny CLI argument parser substrate (no `clap` available offline).
 //!
 //! Model: `prog <subcommand> [--key value]... [--flag]...`. Typed getters
-//! with defaults; unknown-argument detection via `finish()`.
+//! with defaults that **error** (never panic, never silently default) on
+//! malformed or valueless options; unknown-argument detection with
+//! did-you-mean hints via [`Args::finish`].
 
 use std::collections::BTreeMap;
 
@@ -45,68 +47,97 @@ impl Args {
         self.consumed.borrow_mut().push(key.to_string());
     }
 
+    /// Error when `--key` was passed bare (no value) but a value is
+    /// required — the old behaviour silently fell back to the default,
+    /// so `--tau` followed by another flag quietly trained with τ = 4.
+    fn reject_bare_flag(&self, key: &str) -> anyhow::Result<()> {
+        if self.flags.iter().any(|f| f == key) {
+            anyhow::bail!("--{key} expects a value, but none was given");
+        }
+        Ok(())
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
         self.flags.iter().any(|f| f == key)
     }
 
-    pub fn get_str(&self, key: &str, default: &str) -> String {
+    pub fn get_str(&self, key: &str, default: &str) -> anyhow::Result<String> {
         self.mark(key);
-        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+        self.reject_bare_flag(key)?;
+        Ok(self.opts.get(key).cloned().unwrap_or_else(|| default.to_string()))
     }
 
-    pub fn opt_str(&self, key: &str) -> Option<String> {
+    pub fn opt_str(&self, key: &str) -> anyhow::Result<Option<String>> {
         self.mark(key);
-        self.opts.get(key).cloned()
+        self.reject_bare_flag(key)?;
+        Ok(self.opts.get(key).cloned())
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
         self.mark(key);
-        self.opts
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.reject_bare_flag(key)?;
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         self.mark(key);
-        self.opts
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
-            .unwrap_or(default)
+        self.reject_bare_flag(key)?;
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'"))
+            }
+        }
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
         self.mark(key);
-        self.opts
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.reject_bare_flag(key)?;
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
     }
 
     /// Comma-separated list of integers, e.g. `--taus 2,4,6,8`.
-    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
         self.mark(key);
+        self.reject_bare_flag(key)?;
         match self.opts.get(key) {
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
             Some(v) => v
                 .split(',')
                 .filter(|s| !s.is_empty())
-                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad integer {s:?}")))
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer '{}'", s.trim()))
+                })
                 .collect(),
         }
     }
 
     /// Comma-separated list of strings.
-    pub fn get_str_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+    pub fn get_str_list(&self, key: &str, default: &[&str]) -> anyhow::Result<Vec<String>> {
         self.mark(key);
-        match self.opts.get(key) {
+        self.reject_bare_flag(key)?;
+        Ok(match self.opts.get(key) {
             None => default.iter().map(|s| s.to_string()).collect(),
             Some(v) => v.split(',').filter(|s| !s.is_empty()).map(|s| s.trim().to_string()).collect(),
-        }
+        })
     }
 
-    /// Error on any option/flag that was never queried (catches typos).
+    /// Error on any option/flag that was never queried (catches typos),
+    /// with a did-you-mean hint against the flags this command actually
+    /// consulted.
     pub fn finish(&self) -> anyhow::Result<()> {
         let seen = self.consumed.borrow();
         let unknown: Vec<&String> = self
@@ -116,10 +147,24 @@ impl Args {
             .filter(|k| !seen.contains(k))
             .collect();
         if unknown.is_empty() {
-            Ok(())
-        } else {
-            anyhow::bail!("unknown arguments: {unknown:?}")
+            return Ok(());
         }
+        let mut msgs: Vec<String> = Vec::with_capacity(unknown.len());
+        for u in &unknown {
+            match crate::registry::did_you_mean(u, seen.iter().map(String::as_str)) {
+                Some(s) => msgs.push(format!("--{u} (did you mean --{s}?)")),
+                None => msgs.push(format!("--{u}")),
+            }
+        }
+        let mut known: Vec<&str> = seen.iter().map(String::as_str).collect();
+        known.sort_unstable();
+        known.dedup();
+        anyhow::bail!(
+            "unknown argument{}: {}\nthis command accepts: {}",
+            if msgs.len() == 1 { "" } else { "s" },
+            msgs.join(", "),
+            known.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(" ")
+        )
     }
 }
 
@@ -135,9 +180,9 @@ mod tests {
     fn subcommand_and_options() {
         let a = parse("fig3 --dataset mimic_like --workers 16 --lr 0.125 --verbose");
         assert_eq!(a.command.as_deref(), Some("fig3"));
-        assert_eq!(a.get_str("dataset", "synthetic"), "mimic_like");
-        assert_eq!(a.get_usize("workers", 8), 16);
-        assert!((a.get_f64("lr", 1.0) - 0.125).abs() < 1e-12);
+        assert_eq!(a.get_str("dataset", "synthetic").unwrap(), "mimic_like");
+        assert_eq!(a.get_usize("workers", 8).unwrap(), 16);
+        assert!((a.get_f64("lr", 1.0).unwrap() - 0.125).abs() < 1e-12);
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
         assert!(a.finish().is_ok());
@@ -146,29 +191,52 @@ mod tests {
     #[test]
     fn equals_syntax_and_lists() {
         let a = parse("train --taus=2,4,6,8 --algos cidertf,dpsgd");
-        assert_eq!(a.get_usize_list("taus", &[1]), vec![2, 4, 6, 8]);
-        assert_eq!(a.get_str_list("algos", &[]), vec!["cidertf", "dpsgd"]);
+        assert_eq!(a.get_usize_list("taus", &[1]).unwrap(), vec![2, 4, 6, 8]);
+        assert_eq!(a.get_str_list("algos", &[]).unwrap(), vec!["cidertf", "dpsgd"]);
+        assert!(parse("train --taus 2,x,8").get_usize_list("taus", &[1]).is_err());
     }
 
     #[test]
     fn defaults_apply() {
         let a = parse("run");
-        assert_eq!(a.get_usize("k", 8), 8);
-        assert_eq!(a.get_str("loss", "logit"), "logit");
-        assert_eq!(a.opt_str("out"), None);
+        assert_eq!(a.get_usize("k", 8).unwrap(), 8);
+        assert_eq!(a.get_str("loss", "logit").unwrap(), "logit");
+        assert_eq!(a.opt_str("out").unwrap(), None);
     }
 
     #[test]
-    fn unknown_args_detected() {
-        let a = parse("run --oops 3");
-        a.get_usize("k", 8);
-        assert!(a.finish().is_err());
+    fn unknown_args_detected_with_suggestion() {
+        let a = parse("run --epoch 3");
+        a.get_usize("epochs", 8).unwrap();
+        let err = format!("{:#}", a.finish().unwrap_err());
+        assert!(err.contains("--epoch"), "{err}");
+        assert!(err.contains("did you mean --epochs?"), "{err}");
     }
 
     #[test]
-    #[should_panic(expected = "expects an integer")]
-    fn type_error_panics() {
+    fn unknown_args_without_suggestion_list_known() {
+        let a = parse("run --zzqq 3");
+        a.get_usize("k", 8).unwrap();
+        let err = format!("{:#}", a.finish().unwrap_err());
+        assert!(err.contains("--zzqq"), "{err}");
+        assert!(err.contains("--k"), "{err}");
+    }
+
+    #[test]
+    fn type_errors_are_errors_not_panics() {
         let a = parse("run --k abc");
-        a.get_usize("k", 8);
+        let err = format!("{:#}", a.get_usize("k", 8).unwrap_err());
+        assert!(err.contains("--k") && err.contains("abc"), "{err}");
+        let a = parse("run --gamma 1.5.2");
+        assert!(a.get_f64("gamma", 1.0).is_err());
+    }
+
+    #[test]
+    fn bare_flag_where_value_expected_is_an_error() {
+        // `--tau --epochs 5` used to silently train with the default tau
+        let a = parse("train --tau --epochs 5");
+        let err = format!("{:#}", a.get_usize("tau", 4).unwrap_err());
+        assert!(err.contains("--tau") && err.contains("expects a value"), "{err}");
+        assert_eq!(a.get_usize("epochs", 1).unwrap(), 5);
     }
 }

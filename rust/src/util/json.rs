@@ -110,6 +110,52 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing/invalid array field '{key}'"))
     }
 
+    /// Encode a `u64` losslessly. JSON numbers ride on `f64` (exact only
+    /// below 2^53), so full-range values — RNG seeds, state words — are
+    /// written as decimal strings instead.
+    pub fn u64(v: u64) -> Json {
+        Json::Str(v.to_string())
+    }
+
+    /// Decode a `u64` written by [`Json::u64`], also accepting a plain
+    /// in-range number (hand-written spec files).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Str(s) => s.parse().ok(),
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9e15 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    /// Typed `u64` field lookup (string or in-range number).
+    pub fn req_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.get(key)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid u64 field '{key}'"))
+    }
+
+    /// Reject objects carrying keys outside `allowed`, with a
+    /// did-you-mean hint — so a typo'd field in a hand-written config
+    /// file is an error instead of a silently-ignored default.
+    /// Non-objects pass (their shape errors surface elsewhere).
+    pub fn ensure_known_keys(&self, what: &str, allowed: &[&str]) -> anyhow::Result<()> {
+        let Json::Obj(m) = self else { return Ok(()) };
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                match crate::registry::did_you_mean(k, allowed.iter().copied()) {
+                    Some(s) => {
+                        anyhow::bail!("unknown {what} field '{k}' — did you mean '{s}'?")
+                    }
+                    None => anyhow::bail!(
+                        "unknown {what} field '{k}' (allowed: {})",
+                        allowed.join(", ")
+                    ),
+                }
+            }
+        }
+        Ok(())
+    }
+
     // ---- builders ----
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())

@@ -183,6 +183,41 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Encode the entries as a hex string of their IEEE-754 bit patterns
+    /// (8 lowercase hex digits per `f32`, row-major). Used by the
+    /// checkpoint layer: unlike decimal formatting this is exact for
+    /// *every* value, including NaN payloads and signed zeros, so a
+    /// decode round-trip is bit-identical by construction.
+    pub fn encode_bits(&self) -> String {
+        let mut s = String::with_capacity(self.data.len() * 8);
+        for &v in &self.data {
+            use std::fmt::Write;
+            let _ = write!(s, "{:08x}", v.to_bits());
+        }
+        s
+    }
+
+    /// Inverse of [`Mat::encode_bits`].
+    pub fn decode_bits(rows: usize, cols: usize, s: &str) -> anyhow::Result<Self> {
+        let n = rows * cols;
+        anyhow::ensure!(
+            s.len() == n * 8,
+            "matrix bit string has {} hex digits, expected {} for {rows}x{cols}",
+            s.len(),
+            n * 8
+        );
+        let b = s.as_bytes();
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let chunk = std::str::from_utf8(&b[i * 8..i * 8 + 8])
+                .map_err(|_| anyhow::anyhow!("non-ascii matrix bit string"))?;
+            let bits = u32::from_str_radix(chunk, 16)
+                .map_err(|_| anyhow::anyhow!("bad hex in matrix bit string: '{chunk}'"))?;
+            data.push(f32::from_bits(bits));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
     /// i.i.d. uniform entries in `[0, scale)` — the standard non-negative
     /// init for EHR tensor factorization.
     pub fn rand_uniform(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {

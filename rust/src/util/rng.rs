@@ -178,6 +178,41 @@ impl Rng {
     pub fn sample_with_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
         (0..k).map(|_| self.below(n)).collect()
     }
+
+    /// Snapshot the full generator state (xoshiro words + the cached
+    /// Box-Muller spare) for checkpointing. Restoring with
+    /// [`Rng::from_state`] continues the stream bit-identically.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Rng { s, gauss_spare }
+    }
+}
+
+/// Serialize an [`Rng::state`] snapshot (`{"s": [4 x u64-string],
+/// "spare": f64|null}`) — the one encoding shared by every checkpoint
+/// layer (client samplers, the block sampler, per-link fault machines).
+pub fn state_to_json(state: ([u64; 4], Option<f64>)) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("s", Json::Arr(state.0.iter().map(|&w| Json::u64(w)).collect())),
+        ("spare", state.1.map(Json::Num).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Inverse of [`state_to_json`].
+pub fn state_from_json(j: &crate::util::json::Json) -> anyhow::Result<([u64; 4], Option<f64>)> {
+    use crate::util::json::Json;
+    let words_json = j.req_array("s")?;
+    anyhow::ensure!(words_json.len() == 4, "rng state needs 4 words");
+    let mut words = [0u64; 4];
+    for (w, v) in words.iter_mut().zip(words_json.iter()) {
+        *w = v.as_u64().ok_or_else(|| anyhow::anyhow!("bad rng state word"))?;
+    }
+    Ok((words, j.get("spare").and_then(Json::as_f64)))
 }
 
 #[cfg(test)]

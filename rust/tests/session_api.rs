@@ -1,0 +1,472 @@
+//! Experiment-API integration tests: ExperimentSpec JSON round-trip
+//! (property), Scenario error paths with did-you-mean hints, the
+//! observer event stream, stopping rules, and — the acceptance
+//! criterion — bit-identical checkpoint/resume under both the Ideal and
+//! a Faulty network.
+
+use std::path::PathBuf;
+
+use cidertf::compress::Compressor;
+use cidertf::engine::presets::Scenario;
+use cidertf::engine::session::{Observer, Session, SessionEvent};
+use cidertf::engine::spec::{ExperimentSpec, StopRule};
+use cidertf::engine::{train, AlgoConfig, TrainOutcome};
+use cidertf::losses::Loss;
+use cidertf::net::driver::DriverKind;
+use cidertf::net::sim::FaultConfig;
+use cidertf::registry;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::tensor::synth::SynthData;
+use cidertf::topology::Topology;
+use cidertf::util::propcheck::forall;
+use cidertf::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// spec JSON round-trip (property)
+// ---------------------------------------------------------------------
+
+fn gen_spec(rng: &mut Rng) -> ExperimentSpec {
+    let algo_names = registry::algos().names();
+    let name = algo_names[rng.below(algo_names.len())];
+    let algo_spec = if matches!(name, "cidertf" | "cidertf_m" | "sparq_sgd") && rng.bernoulli(0.5)
+    {
+        format!("{}:{}", name, 1 + rng.below(8))
+    } else {
+        name.to_string()
+    };
+    let mut algo = AlgoConfig::by_name(&algo_spec).unwrap();
+    if rng.bernoulli(0.3) {
+        algo.compressor = Compressor::TopK { ratio: 2 + rng.below(62) as u32 };
+    }
+    let loss = if rng.bernoulli(0.5) { Loss::Logit } else { Loss::Ls };
+    let datasets = ["synthetic", "tiny", "mimic_like"];
+    let topologies =
+        [Topology::Ring, Topology::Star, Topology::Complete, Topology::Chain, Topology::Torus];
+    let fault = rng.bernoulli(0.5).then(|| FaultConfig {
+        seed: rng.next_u64(),
+        drop_rate: rng.uniform() * 0.5,
+        burst_rate: rng.uniform() * 0.1,
+        latency_base_s: rng.uniform() * 0.1,
+        bandwidth_bps: if rng.bernoulli(0.5) { 1e6 } else { 0.0 },
+        churn_rate: rng.uniform() * 0.3,
+        churn_period: 1 + rng.below(100),
+        straggler_ids: vec![rng.below(8)],
+        ..Default::default()
+    });
+    let driver = if fault.is_some() {
+        if rng.bernoulli(0.5) {
+            DriverKind::Sim
+        } else {
+            DriverKind::Async
+        }
+    } else {
+        [DriverKind::Sequential, DriverKind::Parallel, DriverKind::Sim, DriverKind::Async]
+            [rng.below(4)]
+    };
+    ExperimentSpec {
+        dataset: datasets[rng.below(3)].to_string(),
+        loss,
+        algo,
+        topology: topologies[rng.below(5)],
+        k: 1 + rng.below(12),
+        rank: 1 + rng.below(32),
+        fiber_samples: 1 + rng.below(512),
+        gamma: rng.uniform() * 8.0 + 1e-3,
+        epochs: 1 + rng.below(20),
+        iters_per_epoch: 1 + rng.below(500),
+        seed: rng.next_u64(),
+        eval_batch: 1 + rng.below(1024),
+        init_scale: rng.uniform_f32(),
+        trigger_lambda0_scale: rng.uniform() * 2.0,
+        trigger_alpha: 1.0 + rng.uniform(),
+        sim_iter_s: rng.uniform(),
+        compute_threads: 1 + rng.below(8),
+        fault,
+        driver,
+        backend: if rng.bernoulli(0.8) { "native" } else { "pjrt" }.to_string(),
+        eval_every: 1 + rng.below(3),
+        stop: StopRule {
+            target_loss: rng.bernoulli(0.5).then(|| rng.uniform()),
+            max_bytes: rng.bernoulli(0.5).then(|| rng.next_u64()),
+        },
+    }
+}
+
+#[test]
+fn spec_json_roundtrip_property() {
+    forall(
+        "experiment spec JSON round-trip",
+        60,
+        gen_spec,
+        |spec, _| {
+            let pretty = spec.to_json().to_pretty_string();
+            let back = ExperimentSpec::from_json_str(&pretty)
+                .map_err(|e| format!("parse failed: {e:#}\n{pretty}"))?;
+            if &back != spec {
+                return Err(format!("round-trip mismatch:\n{back:?}\nvs\n{spec:?}"));
+            }
+            // compact form too
+            let compact = spec.to_json().to_string();
+            let back2 = ExperimentSpec::from_json_str(&compact)
+                .map_err(|e| format!("compact parse failed: {e:#}"))?;
+            if &back2 != spec {
+                return Err("compact round-trip mismatch".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// scenario / registry error paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn scenario_parse_error_paths() {
+    // typo'd algorithm: did-you-mean from the registry
+    let err = format!("{:#}", Scenario::parse("cidrtf:4").unwrap_err());
+    assert!(err.contains("cidertf"), "no suggestion in: {err}");
+
+    // typo'd network scenario
+    let err = format!("{:#}", Scenario::parse("cidertf:4@lozzy:0.2").unwrap_err());
+    assert!(err.contains("lossy"), "no suggestion in: {err}");
+
+    // bad numeric arguments
+    assert!(Scenario::parse("cidertf:x").is_err());
+    assert!(Scenario::parse("cidertf:4@lossy:abc").is_err());
+    assert!(Scenario::parse("cidertf:4@lossy:1.5").is_err(), "drop rate out of range");
+
+    // structural errors
+    assert!(Scenario::parse("").is_err());
+    assert!(Scenario::parse("cidertf@ideal@seq@extra").is_err());
+    assert!(Scenario::parse("cidertf:4@lossy:0.2@seq").is_err(), "faults need sim/async");
+    assert!(Scenario::parse("cidertf:4@lossy:0.2@par").is_err(), "faults need sim/async");
+
+    // driver typo
+    let err = format!("{:#}", Scenario::parse("cidertf@ideal@asyncc").unwrap_err());
+    assert!(err.contains("async"), "no driver suggestion in: {err}");
+}
+
+#[test]
+fn every_registry_name_resolves() {
+    for name in registry::algos().names() {
+        assert!(AlgoConfig::by_name(name).is_ok(), "algo {name}");
+    }
+    for name in registry::networks().names() {
+        assert!(FaultConfig::by_name(name).is_ok(), "network {name}");
+    }
+    for name in registry::drivers().names() {
+        assert!(DriverKind::from_name(name).is_ok(), "driver {name}");
+    }
+    for name in registry::losses().names() {
+        assert!(Loss::from_name(name).is_ok(), "loss {name}");
+    }
+    for name in registry::topologies().names() {
+        assert!(Topology::from_name(name).is_ok(), "topology {name}");
+    }
+    for name in registry::compressors().names() {
+        assert!(Compressor::by_name(name).is_ok(), "compressor {name}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// session runs, observers, stop rules
+// ---------------------------------------------------------------------
+
+fn tiny_spec(algo: AlgoConfig, k: usize, driver: DriverKind) -> ExperimentSpec {
+    ExperimentSpec::builder("tiny", Loss::Logit, algo)
+        .rank(4)
+        .fiber_samples(16)
+        .k(k)
+        .gamma(0.5)
+        .iters_per_epoch(50)
+        .epochs(4)
+        .eval_batch(64)
+        .init_scale(0.3)
+        .driver(driver)
+        .build()
+        .unwrap()
+}
+
+fn run_spec(spec: &ExperimentSpec, data: &SynthData) -> TrainOutcome {
+    let mut backend = NativeBackend::new();
+    Session::new(spec.clone()).run_on(data, &mut backend, None).unwrap()
+}
+
+#[derive(Default)]
+struct CountingObserver {
+    run_start: usize,
+    run_end: usize,
+    rounds: usize,
+    evals: usize,
+    comm_events: usize,
+    comm_bytes_last: u64,
+}
+
+impl Observer for CountingObserver {
+    fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()> {
+        match event {
+            SessionEvent::RunStart { spec } => {
+                assert!(spec.get("algo").is_some(), "RunStart carries the spec");
+                self.run_start += 1;
+            }
+            SessionEvent::RoundEnd { .. } => self.rounds += 1,
+            SessionEvent::EvalPoint { .. } => self.evals += 1,
+            SessionEvent::CommBytes { total_bytes, .. } => {
+                assert!(*total_bytes >= self.comm_bytes_last, "comm bytes must be cumulative");
+                self.comm_bytes_last = *total_bytes;
+                self.comm_events += 1;
+            }
+            SessionEvent::RunEnd { .. } => self.run_end += 1,
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn observers_see_the_typed_event_stream() {
+    let spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    let data = spec.dataset_data().unwrap();
+    let mut backend = NativeBackend::new();
+    // run once with a counting observer wired in via a channel-free trick:
+    // assertions live inside the observer, counts are checked on RunEnd
+    struct Final(CountingObserver, usize);
+    impl Observer for Final {
+        fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()> {
+            self.0.on_event(event)?;
+            if let SessionEvent::RunEnd { .. } = event {
+                assert_eq!(self.0.run_start, 1);
+                assert_eq!(self.0.evals, 4 + 1, "one initial + one per epoch");
+                assert_eq!(self.0.rounds, self.1, "one RoundEnd per iteration");
+                assert!(self.0.comm_events > 0, "no CommBytes events");
+                assert!(self.0.comm_bytes_last > 0);
+            }
+            Ok(())
+        }
+    }
+    let total_iters = spec.epochs * spec.iters_per_epoch;
+    let out = Session::new(spec)
+        .observe(Box::new(Final(CountingObserver::default(), total_iters)))
+        .run_on(&data, &mut backend, None)
+        .unwrap();
+    assert!(out.record.final_loss().is_finite());
+}
+
+#[test]
+fn session_seq_matches_legacy_train_shim() {
+    let spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sequential);
+    let data = spec.dataset_data().unwrap();
+    let cfg = spec.to_train_config();
+    let mut b1 = NativeBackend::new();
+    let legacy = train(&cfg, &data, &mut b1, None).unwrap();
+    let session = run_spec(&spec, &data);
+    for (a, b) in legacy.factors.mats.iter().zip(session.factors.mats.iter()) {
+        assert_eq!(a.data, b.data, "Session seq diverged from engine::train");
+    }
+    assert_eq!(legacy.record.total.bytes, session.record.total.bytes);
+    assert_eq!(legacy.record.net.delivered, session.record.net.delivered);
+}
+
+#[test]
+fn stop_rules_halt_early() {
+    // an unreachably generous loss target stops at the first eval point
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    spec.stop.target_loss = Some(f64::MAX);
+    let data = spec.dataset_data().unwrap();
+    let out = run_spec(&spec, &data);
+    assert_eq!(out.record.points.len(), 2, "initial point + the stopping epoch");
+
+    // a one-byte budget stops at the first eval point after any traffic
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    spec.stop.max_bytes = Some(1);
+    let out = run_spec(&spec, &data);
+    assert!(out.record.points.len() < 5, "budget rule never fired");
+    assert!(out.record.total.bytes >= 1);
+}
+
+#[test]
+fn eval_every_thins_the_curve_but_keeps_the_final_point() {
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    spec.eval_every = 2;
+    let data = spec.dataset_data().unwrap();
+    let out = run_spec(&spec, &data);
+    let epochs: Vec<usize> = out.record.points.iter().map(|p| p.epoch).collect();
+    assert_eq!(epochs, vec![0, 2, 4]);
+
+    // a cadence that does not divide the epoch count still records the end
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    spec.epochs = 3;
+    spec.eval_every = 2;
+    let out = run_spec(&spec, &data);
+    let epochs: Vec<usize> = out.record.points.iter().map(|p| p.epoch).collect();
+    assert_eq!(epochs, vec![0, 2, 3]);
+}
+
+// ---------------------------------------------------------------------
+// checkpoint / resume — the bit-identity acceptance criterion
+// ---------------------------------------------------------------------
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("cidertf_session_api_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}_{}.ckpt.json", std::process::id()))
+}
+
+/// Run `spec` truncated to `cut` epochs with checkpointing, then resume
+/// from the checkpoint extended back to the full epoch count; return the
+/// resumed outcome.
+fn interrupted_run(spec: &ExperimentSpec, cut: usize, data: &SynthData, tag: &str) -> TrainOutcome {
+    let path = ckpt_path(tag);
+    let mut truncated = spec.clone();
+    truncated.epochs = cut;
+    let mut backend = NativeBackend::new();
+    Session::new(truncated)
+        .checkpoint_every(&path, 1)
+        .run_on(data, &mut backend, None)
+        .unwrap();
+
+    let mut resumed = Session::resume_from(&path).unwrap();
+    assert_eq!(resumed.spec().epochs, cut, "checkpoint preserves the truncated spec");
+    resumed.spec_mut().epochs = spec.epochs;
+    let mut backend = NativeBackend::new();
+    let out = resumed.run_on(data, &mut backend, None).unwrap();
+    std::fs::remove_file(&path).ok();
+    out
+}
+
+fn assert_bit_identical(full: &TrainOutcome, resumed: &TrainOutcome, virtual_time: bool) {
+    for (m, (a, b)) in full.factors.mats.iter().zip(resumed.factors.mats.iter()).enumerate() {
+        assert_eq!(a.data, b.data, "factors diverged after resume (mode {m})");
+    }
+    assert_eq!(full.record.points.len(), resumed.record.points.len());
+    for (p, q) in full.record.points.iter().zip(resumed.record.points.iter()) {
+        assert_eq!(p.epoch, q.epoch);
+        assert_eq!(p.iter, q.iter);
+        assert_eq!(p.loss, q.loss, "loss diverged at epoch {}", p.epoch);
+        assert_eq!(p.bytes, q.bytes, "comm bytes diverged at epoch {}", p.epoch);
+        if virtual_time {
+            assert_eq!(p.time_s, q.time_s, "virtual clock diverged at epoch {}", p.epoch);
+        }
+    }
+    assert_eq!(full.record.total.bytes, resumed.record.total.bytes);
+    assert_eq!(full.record.total.messages, resumed.record.total.messages);
+    assert_eq!(full.record.total.triggered, resumed.record.total.triggered);
+    assert_eq!(full.record.total.suppressed, resumed.record.total.suppressed);
+    assert_eq!(full.record.net.delivered, resumed.record.net.delivered);
+    assert_eq!(full.record.net.dropped, resumed.record.net.dropped);
+    assert_eq!(full.record.net.offline_rounds, resumed.record.net.offline_rounds);
+}
+
+#[test]
+fn checkpoint_resume_bit_identical_ideal_network() {
+    let spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    let data = spec.dataset_data().unwrap();
+    let full = run_spec(&spec, &data);
+    let resumed = interrupted_run(&spec, 2, &data, "ideal");
+    assert_bit_identical(&full, &resumed, true);
+}
+
+#[test]
+fn checkpoint_resume_bit_identical_faulty_network() {
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    spec.fault = Some(FaultConfig {
+        seed: 1234,
+        drop_rate: 0.3,
+        burst_rate: 0.05,
+        churn_rate: 0.2,
+        churn_period: 20,
+        straggler_ids: vec![1],
+        latency_base_s: 0.01,
+        bandwidth_bps: 1e6,
+        ..Default::default()
+    });
+    let data = spec.dataset_data().unwrap();
+    let full = run_spec(&spec, &data);
+    assert!(full.record.net.dropped > 0, "fault envelope not exercised");
+    assert!(full.record.net.offline_rounds > 0, "churn not exercised");
+    let resumed = interrupted_run(&spec, 2, &data, "faulty");
+    assert_bit_identical(&full, &resumed, true);
+}
+
+#[test]
+fn checkpoint_resume_bit_identical_momentum_and_ef() {
+    // momentum velocities and error-feedback residuals/shadows must also
+    // ride through the checkpoint (centralized CiderTF exercises EF)
+    let spec = tiny_spec(AlgoConfig::centralized_cidertf(), 1, DriverKind::Sim);
+    let data = spec.dataset_data().unwrap();
+    let full = run_spec(&spec, &data);
+    let resumed = interrupted_run(&spec, 2, &data, "ef");
+    assert_bit_identical(&full, &resumed, true);
+
+    let spec = tiny_spec(AlgoConfig::cidertf_m(2), 4, DriverKind::Sim);
+    let full = run_spec(&spec, &data);
+    let resumed = interrupted_run(&spec, 2, &data, "momentum");
+    assert_bit_identical(&full, &resumed, true);
+}
+
+#[test]
+fn checkpoint_resume_sequential_wall_clock_factors_match() {
+    // wall-clock timestamps legitimately differ across process restarts;
+    // factors and losses must not
+    let spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sequential);
+    let data = spec.dataset_data().unwrap();
+    let full = run_spec(&spec, &data);
+    let resumed = interrupted_run(&spec, 2, &data, "seq");
+    for (a, b) in full.factors.mats.iter().zip(resumed.factors.mats.iter()) {
+        assert_eq!(a.data, b.data, "sequential resume diverged");
+    }
+    for (p, q) in full.record.points.iter().zip(resumed.record.points.iter()) {
+        assert_eq!(p.loss, q.loss);
+        assert_eq!(p.bytes, q.bytes);
+    }
+}
+
+#[test]
+fn async_driver_rejects_checkpointing() {
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Async);
+    spec.fault = Some(FaultConfig::lossy(0.1));
+    let data = spec.dataset_data().unwrap();
+    let mut backend = NativeBackend::new();
+    let err = Session::new(spec)
+        .checkpoint_every(ckpt_path("async_reject"), 1)
+        .run_on(&data, &mut backend, None);
+    assert!(err.is_err(), "async driver must reject checkpointing");
+}
+
+#[test]
+fn delegated_drivers_reject_unsupported_session_features() {
+    // stop rules and eval cadence are loop-level features; the async/par
+    // drivers run their loops internally, so silently ignoring them
+    // would run a different experiment than specified
+    let data = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim).dataset_data().unwrap();
+
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Async);
+    spec.stop.target_loss = Some(1.0);
+    let mut backend = NativeBackend::new();
+    let err = Session::new(spec).run_on(&data, &mut backend, None);
+    assert!(err.is_err(), "async driver must reject stop rules");
+
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Parallel);
+    spec.eval_every = 2;
+    let err = Session::new(spec).run_on(&data, &mut backend, None);
+    assert!(err.is_err(), "par driver must reject eval_every > 1");
+}
+
+#[test]
+fn spec_json_rejects_unknown_keys_with_hint() {
+    let spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    let good = spec.to_json().to_string();
+
+    // top-level typo
+    let bad = good.replace("\"epochs\"", "\"epochz\"");
+    let err = format!("{:#}", ExperimentSpec::from_json_str(&bad).unwrap_err());
+    assert!(err.contains("epochz") && err.contains("epochs"), "{err}");
+
+    // fault-envelope typo must not silently mean an ideal link
+    let mut spec = tiny_spec(AlgoConfig::cidertf(2), 4, DriverKind::Sim);
+    spec.fault = Some(FaultConfig::lossy(0.5));
+    let bad = spec.to_json().to_string().replace("\"drop_rate\"", "\"drop_rte\"");
+    let err = format!("{:#}", ExperimentSpec::from_json_str(&bad).unwrap_err());
+    assert!(err.contains("drop_rte") && err.contains("drop_rate"), "{err}");
+}
