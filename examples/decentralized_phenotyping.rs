@@ -31,13 +31,14 @@ fn main() -> anyhow::Result<()> {
     let mut backend = PjrtBackend::new(&default_artifact_dir())?;
 
     // ---------- part 1: decentralized logit training (headline) ----------
-    let data = SynthConfig::mimic_like().generate();
+    let synth_cfg = SynthConfig::mimic_like();
+    let data = synth_cfg.generate();
     println!(
         "MIMIC-like tensor {:?}: {} nnz, density {:.2e}, {} planted phenotypes",
         data.tensor.dims,
         data.tensor.nnz(),
         data.tensor.density(),
-        data.config.rank
+        synth_cfg.rank
     );
     let mut cfg = TrainConfig::new("mimic_like", Loss::Logit, AlgoConfig::cidertf_m(8));
     // Nesterov momentum amplifies the steady-state step by 1/(1-beta).

@@ -67,8 +67,10 @@ pub fn assign_subgroups(patient_factor: &Mat, top: &[usize]) -> Vec<usize> {
 /// Support-recovery score vs planted truth: for each extracted phenotype,
 /// the best Jaccard overlap between its top features and any planted
 /// component's support, averaged over feature modes. 1.0 = exact recovery.
+/// Returns 0.0 when there is no oracle — datasets loaded from disk carry
+/// an empty `truth` ([`crate::data::Dataset`]).
 pub fn support_recovery(phenos: &[Phenotype], truth: &[Mat]) -> f64 {
-    if phenos.is_empty() {
+    if phenos.is_empty() || truth.is_empty() {
         return 0.0;
     }
     let mut total = 0.0f64;
@@ -76,6 +78,9 @@ pub fn support_recovery(phenos: &[Phenotype], truth: &[Mat]) -> f64 {
     for ph in phenos {
         for (fm, feats) in ph.top_features.iter().enumerate() {
             let mode = fm + 1;
+            if mode >= truth.len() {
+                continue;
+            }
             let got: std::collections::HashSet<usize> = feats.iter().map(|&(i, _)| i).collect();
             let mut best = 0.0f64;
             for r in 0..truth[mode].cols {
@@ -92,6 +97,9 @@ pub fn support_recovery(phenos: &[Phenotype], truth: &[Mat]) -> f64 {
             total += best;
             count += 1;
         }
+    }
+    if count == 0 {
+        return 0.0;
     }
     total / count as f64
 }

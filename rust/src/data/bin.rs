@@ -1,0 +1,210 @@
+//! Compact binary tensor format (`.bin`/`.ctf`).
+//!
+//! Fixed little-endian layout, written/read in one pass:
+//!
+//! ```text
+//! magic    8 bytes   b"CTFBIN01"
+//! order    u32       number of modes D (>= 2)
+//! dims     D x u64   mode sizes
+//! nnz      u64       entry count
+//! idx      nnz*D u32 per-entry mode indices (entry-major, 0-based)
+//! vals     nnz  u32  IEEE-754 f32 bit patterns
+//! ```
+//!
+//! Values travel as raw bit patterns, so a write → load round trip is
+//! bit-exact (including -0.0, subnormals, and NaN payloads).
+
+use std::path::Path;
+
+use crate::tensor::SparseTensor;
+
+const MAGIC: [u8; 8] = *b"CTFBIN01";
+
+fn take<'a>(bytes: &'a [u8], off: &mut usize, n: usize, path: &Path) -> anyhow::Result<&'a [u8]> {
+    let end = off.checked_add(n).filter(|&e| e <= bytes.len()).ok_or_else(|| {
+        anyhow::anyhow!("{}: truncated binary tensor (need {n} bytes at {off})", path.display())
+    })?;
+    let s = &bytes[*off..end];
+    *off = end;
+    Ok(s)
+}
+
+fn rd_u32(bytes: &[u8], off: &mut usize, path: &Path) -> anyhow::Result<u32> {
+    let s = take(bytes, off, 4, path)?;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+fn rd_u64(bytes: &[u8], off: &mut usize, path: &Path) -> anyhow::Result<u64> {
+    let s = take(bytes, off, 8, path)?;
+    Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+}
+
+/// Load a binary tensor file (entry order preserved, values bit-exact).
+pub fn load_bin(path: &Path) -> anyhow::Result<SparseTensor> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    let mut off = 0usize;
+    let magic = take(&bytes, &mut off, 8, path)?;
+    anyhow::ensure!(
+        magic == MAGIC,
+        "{}: not a cidertf binary tensor (bad magic)",
+        path.display()
+    );
+    let order = rd_u32(&bytes, &mut off, path)? as usize;
+    anyhow::ensure!(
+        (2..=64).contains(&order),
+        "{}: implausible order {order}",
+        path.display()
+    );
+    let mut dims = Vec::with_capacity(order);
+    for _ in 0..order {
+        let d = rd_u64(&bytes, &mut off, path)?;
+        anyhow::ensure!(
+            d > 0 && d < u32::MAX as u64,
+            "{}: dim {d} out of range",
+            path.display()
+        );
+        dims.push(d as usize);
+    }
+    super::validate_dims(&dims, path)?;
+    let nnz = rd_u64(&bytes, &mut off, path)? as usize;
+    let total = nnz
+        .checked_mul(order + 1)
+        .and_then(|words| words.checked_mul(4))
+        .and_then(|body| off.checked_add(body))
+        .ok_or_else(|| anyhow::anyhow!("{}: nnz overflow", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() == total,
+        "{}: body is {} bytes, header promises {}",
+        path.display(),
+        bytes.len() - off,
+        total - off
+    );
+
+    let mut t = SparseTensor::new(dims);
+    let mut idx = vec![0u32; order];
+    // see load_tns: duplicate coordinates are rejected, not merged
+    let mut seen = std::collections::HashSet::with_capacity(nnz);
+    for e in 0..nnz {
+        for slot in idx.iter_mut() {
+            *slot = rd_u32(&bytes, &mut off, path)?;
+        }
+        for (m, &i) in idx.iter().enumerate() {
+            anyhow::ensure!(
+                (i as usize) < t.dims[m],
+                "{}: entry {e} mode-{m} index {i} >= dim {}",
+                path.display(),
+                t.dims[m]
+            );
+        }
+        anyhow::ensure!(
+            seen.insert(t.linearize(&idx)),
+            "{}: duplicate entry {e} at coordinate {idx:?}",
+            path.display()
+        );
+        t.idx.extend_from_slice(&idx);
+    }
+    for _ in 0..nnz {
+        t.vals.push(f32::from_bits(rd_u32(&bytes, &mut off, path)?));
+    }
+    Ok(t)
+}
+
+/// Write `t` in the binary format (atomic: temp file + rename).
+pub fn write_bin(path: &Path, t: &SparseTensor) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut buf =
+        Vec::with_capacity(8 + 4 + t.dims.len() * 8 + 8 + t.idx.len() * 4 + t.vals.len() * 4);
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&(t.order() as u32).to_le_bytes());
+    for &d in &t.dims {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    buf.extend_from_slice(&(t.nnz() as u64).to_le_bytes());
+    for &i in &t.idx {
+        buf.extend_from_slice(&i.to_le_bytes());
+    }
+    for &v in &t.vals {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let tmp = path.with_extension("bin.tmp");
+    std::fs::write(&tmp, &buf)
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot move {} into place: {e}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("cidertf_bin_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip_bit_exact() {
+        let mut t = SparseTensor::new(vec![7, 3, 9, 2]);
+        t.push(&[0, 0, 0, 0], -0.0);
+        t.push(&[6, 2, 8, 1], f32::MIN_POSITIVE / 2.0); // subnormal
+        t.push(&[3, 1, 4, 0], 1.5e-7);
+        let path = tmp("rt.bin");
+        write_bin(&path, &t).unwrap();
+        let back = load_bin(&path).unwrap();
+        assert_eq!(back.dims, t.dims);
+        assert_eq!(back.idx, t.idx);
+        let bits: Vec<u32> = back.vals.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = t.vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn corrupt_files_error_cleanly() {
+        let path = tmp("short.bin");
+        std::fs::write(&path, b"CTFBIN01\x03").unwrap();
+        assert!(load_bin(&path).is_err(), "truncated header");
+
+        let path = tmp("magic.bin");
+        std::fs::write(&path, b"NOTATNSR________________").unwrap();
+        let err = format!("{:#}", load_bin(&path).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+
+        // body length mismatch
+        let mut t = SparseTensor::new(vec![2, 2]);
+        t.push(&[0, 0], 1.0);
+        let path = tmp("chop.bin");
+        write_bin(&path, &t).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.pop();
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_bin(&path).is_err(), "chopped body");
+
+        // out-of-range index
+        let path = tmp("oob.bin");
+        let mut t2 = SparseTensor::new(vec![2, 2]);
+        t2.push(&[1, 1], 1.0);
+        write_bin(&path, &t2).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // idx block starts after magic(8) + order(4) + dims(16) + nnz(8)
+        bytes[36] = 9;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load_bin(&path).unwrap_err());
+        assert!(err.contains(">= dim"), "{err}");
+
+        // duplicate coordinates rejected
+        let path = tmp("dup.bin");
+        let mut t3 = SparseTensor::new(vec![3, 3]);
+        t3.push(&[1, 2], 1.0);
+        t3.push(&[1, 2], 2.0);
+        write_bin(&path, &t3).unwrap();
+        let err = format!("{:#}", load_bin(&path).unwrap_err());
+        assert!(err.contains("duplicate"), "{err}");
+    }
+}

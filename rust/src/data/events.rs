@@ -1,0 +1,194 @@
+//! Event-log CSV → (patient × code × time) tensor builder.
+//!
+//! The shape real EHR extracts arrive in (MIMIC-III / CMS-style): one
+//! event per row, `patient,code,time[,...]` with a header line. Each of
+//! the three key columns is mapped through a vocabulary (ids assigned in
+//! first-appearance order — deterministic for a given file), repeated
+//! events accumulate as counts, and the result is a 3-mode
+//! [`SparseTensor`] whose dims are the vocabulary sizes. Extra columns
+//! are ignored; values beyond counts (e.g. doses) belong in a `.tns`
+//! file instead. Parsing is plain comma splitting (offline substrate):
+//! quoted fields are rejected with an error rather than silently
+//! miskeyed.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::tensor::SparseTensor;
+
+/// One column's value ↔ id mapping.
+#[derive(Debug, Clone, Default)]
+pub struct Vocab {
+    map: HashMap<String, u32>,
+    /// names in id order (first appearance in the file)
+    pub names: Vec<String>,
+}
+
+impl Vocab {
+    fn intern(&mut self, s: &str) -> u32 {
+        if let Some(&i) = self.map.get(s) {
+            return i;
+        }
+        let i = self.names.len() as u32;
+        self.map.insert(s.to_string(), i);
+        self.names.push(s.to_string());
+        i
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+/// The three vocabularies behind a loaded event tensor, in mode order.
+#[derive(Debug, Clone)]
+pub struct EventVocabs {
+    pub patients: Vocab,
+    pub codes: Vocab,
+    pub times: Vocab,
+}
+
+/// Load an event-log CSV into a count tensor plus its vocabularies.
+///
+/// Entries are materialized in linearized-index order, so the tensor is
+/// identical however the HashMap iterates.
+pub fn load_events_csv(path: &Path) -> anyhow::Result<(SparseTensor, EventVocabs)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{}: empty event log", path.display()))?;
+    let n_cols = header.split(',').count();
+    anyhow::ensure!(
+        n_cols >= 3,
+        "{}: event logs need at least 3 columns (patient,code,time), header has {n_cols}",
+        path.display()
+    );
+
+    let mut vocabs: [Vocab; 3] = Default::default();
+    let mut counts: HashMap<(u32, u32, u32), f32> = HashMap::new();
+    for (lineno, line) in lines {
+        // naive comma splitting by design (offline substrate, no csv
+        // crate) — quoted fields would be silently miskeyed, so reject
+        // them loudly instead
+        anyhow::ensure!(
+            !line.contains('"'),
+            "{}:{}: quoted CSV fields are not supported — export plain comma-separated values",
+            path.display(),
+            lineno + 1
+        );
+        let mut fields = line.split(',');
+        let mut key = [0u32; 3];
+        for (vocab, slot) in vocabs.iter_mut().zip(key.iter_mut()) {
+            let field = fields
+                .next()
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "{}:{}: row has fewer than 3 fields",
+                        path.display(),
+                        lineno + 1
+                    )
+                })?
+                .trim();
+            anyhow::ensure!(
+                !field.is_empty(),
+                "{}:{}: empty key field",
+                path.display(),
+                lineno + 1
+            );
+            *slot = vocab.intern(field);
+        }
+        *counts.entry((key[0], key[1], key[2])).or_insert(0.0) += 1.0;
+    }
+    anyhow::ensure!(!counts.is_empty(), "{}: no event rows", path.display());
+
+    let dims = vec![vocabs[0].len(), vocabs[1].len(), vocabs[2].len()];
+    let mut entries: Vec<((u32, u32, u32), f32)> = counts.into_iter().collect();
+    entries.sort_unstable_by_key(|&(k, _)| k);
+    let mut t = SparseTensor::new(dims);
+    for ((p, c, tm), v) in entries {
+        t.push(&[p, c, tm], v);
+    }
+    let [patients, codes, times] = vocabs;
+    Ok((t, EventVocabs { patients, codes, times }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("cidertf_events_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn builds_count_tensor_with_vocab() {
+        let path = tmp("ev.csv");
+        std::fs::write(
+            &path,
+            "patient,code,time\n\
+             p1,dx_flu,w1\n\
+             p1,dx_flu,w1\n\
+             p2,dx_flu,w2\n\
+             p1,rx_abx,w1\n\
+             p3,dx_cold,w3\n",
+        )
+        .unwrap();
+        let (t, vocabs) = load_events_csv(&path).unwrap();
+        assert_eq!(t.dims, vec![3, 3, 3]);
+        assert_eq!(t.nnz(), 4, "repeat events aggregate");
+        assert_eq!(vocabs.patients.names, vec!["p1", "p2", "p3"]);
+        assert_eq!(vocabs.codes.names, vec!["dx_flu", "rx_abx", "dx_cold"]);
+        assert_eq!(vocabs.times.names, vec!["w1", "w2", "w3"]);
+        // (p1, dx_flu, w1) fired twice
+        let e = (0..t.nnz()).find(|&e| t.entry(e) == [0, 0, 0]).unwrap();
+        assert_eq!(t.vals[e], 2.0);
+    }
+
+    #[test]
+    fn extra_columns_ignored_and_whitespace_trimmed() {
+        let path = tmp("extra.csv");
+        std::fs::write(
+            &path,
+            "patient,code,time,note\n p1 , dx , w1 , something\np2,dx,w1,else\n",
+        )
+        .unwrap();
+        let (t, vocabs) = load_events_csv(&path).unwrap();
+        assert_eq!(t.dims, vec![2, 1, 1]);
+        assert_eq!(vocabs.patients.names, vec!["p1", "p2"]);
+        assert!(!vocabs.codes.is_empty());
+    }
+
+    #[test]
+    fn error_paths() {
+        let path = tmp("empty.csv");
+        std::fs::write(&path, "\n\n").unwrap();
+        assert!(load_events_csv(&path).is_err());
+
+        let path = tmp("narrow.csv");
+        std::fs::write(&path, "a,b\n1,2\n").unwrap();
+        let err = format!("{:#}", load_events_csv(&path).unwrap_err());
+        assert!(err.contains("3 columns"), "{err}");
+
+        let path = tmp("short_row.csv");
+        std::fs::write(&path, "a,b,c\np1,dx\n").unwrap();
+        assert!(load_events_csv(&path).is_err());
+
+        let path = tmp("only_header.csv");
+        std::fs::write(&path, "a,b,c\n").unwrap();
+        assert!(load_events_csv(&path).is_err(), "no data rows");
+
+        // quoted fields would be miskeyed by naive splitting — rejected
+        let path = tmp("quoted.csv");
+        std::fs::write(&path, "a,b,c\np1,\"401.9, unspecified\",w1\n").unwrap();
+        let err = format!("{:#}", load_events_csv(&path).unwrap_err());
+        assert!(err.contains("quoted"), "{err}");
+    }
+}

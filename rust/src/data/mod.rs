@@ -1,0 +1,207 @@
+//! Dataset ingestion: the run currency ([`Dataset`]), the pluggable
+//! [`DatasetSource`] trait, and loaders for real tensors on disk.
+//!
+//! Every execution path consumes a [`Dataset`] — a sparse tensor plus
+//! (for generated data) the planted ground-truth factors. Where the
+//! tensor comes from is a registry axis
+//! ([`crate::registry::datasets`]), so `--dataset` accepts either a
+//! synthetic generator name (`synthetic`, `mimic_like`, ...) or a
+//! loader spec:
+//!
+//! * `file:<path>` — a FROSTT-style `.tns` COO text file ([`tns`]) or
+//!   the compact binary format ([`bin`]), selected by extension,
+//! * `csv:<path>` — an event-log CSV (`patient,code,time` rows) built
+//!   into a (patient × code × time) count tensor with vocabulary
+//!   mapping ([`events`]).
+//!
+//! Loaded datasets ride the whole pipeline: spec JSON, `Session`,
+//! checkpoint/resume (the checkpointed spec stores the loader string and
+//! re-loads the file on resume), `cidertf info`, and the harness.
+
+pub mod bin;
+pub mod events;
+pub mod tns;
+
+use std::path::{Path, PathBuf};
+
+use crate::tensor::synth::{SynthConfig, ValueKind};
+use crate::tensor::SparseTensor;
+use crate::util::mat::Mat;
+
+/// One experiment's data: the sparse tensor plus, for synthetic data,
+/// the planted ground-truth factors (used for FMS and the phenotype
+/// recovery study). Loaded real datasets have no oracle — `truth` is
+/// empty.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub tensor: SparseTensor,
+    /// planted factors, one `I_m x R` matrix per mode; empty when the
+    /// tensor was loaded from disk
+    pub truth: Vec<Mat>,
+}
+
+impl Dataset {
+    /// Order-sensitive FNV-1a fingerprint over dims, entry indices, and
+    /// value bit patterns — the cheap identity check checkpoints use to
+    /// fail loudly when a `file:`/`csv:` source changed between
+    /// checkpoint and resume.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &d in &self.tensor.dims {
+            h ^= d as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        for &i in &self.tensor.idx {
+            h ^= i as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        for &v in &self.tensor.vals {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h
+    }
+}
+
+/// One way to materialize a [`Dataset`]. Implementations are registered
+/// in [`crate::registry::datasets`] and resolved by name from specs,
+/// the CLI, and the harness.
+pub trait DatasetSource {
+    /// Where the data comes from (for logs and error messages).
+    fn describe(&self) -> String;
+
+    /// Materialize the dataset. `vk` selects the value model for
+    /// *generated* sources (Gaussian for ls, binary for logit, as in the
+    /// paper); loaders keep whatever values are stored on disk.
+    fn load(&self, vk: ValueKind) -> anyhow::Result<Dataset>;
+}
+
+/// Resolve `name` through the dataset registry and load it.
+pub fn load_dataset(name: &str, vk: ValueKind) -> anyhow::Result<Dataset> {
+    crate::registry::datasets().resolve(name)?.load(vk)
+}
+
+/// A synthetic generator as a [`DatasetSource`].
+pub struct SynthSource(pub SynthConfig);
+
+impl DatasetSource for SynthSource {
+    fn describe(&self) -> String {
+        format!("synthetic generator {:?} rank {}", self.0.dims, self.0.rank)
+    }
+
+    fn load(&self, vk: ValueKind) -> anyhow::Result<Dataset> {
+        Ok(self.0.clone().with_values(vk).generate())
+    }
+}
+
+/// A sparse tensor file (`.tns` text or `.bin`/`.ctf` binary) as a
+/// [`DatasetSource`]. Values are taken as stored; under the Bernoulli
+/// value model (logit loss) a file carrying values outside {0, 1} gets
+/// a one-line warning — the Bernoulli NLL is only meaningful on binary
+/// data, and silent misuse is worse than noise on stderr.
+pub struct FileSource(pub PathBuf);
+
+impl DatasetSource for FileSource {
+    fn describe(&self) -> String {
+        format!("tensor file {}", self.0.display())
+    }
+
+    fn load(&self, vk: ValueKind) -> anyhow::Result<Dataset> {
+        let tensor = load_tensor_file(&self.0)?;
+        if vk == ValueKind::Binary && tensor.vals.iter().any(|&v| v != 0.0 && v != 1.0) {
+            eprintln!(
+                "warning: {} has non-binary values but the run uses the Bernoulli-logit \
+                 loss; binarize the file or pass --loss ls",
+                self.0.display()
+            );
+        }
+        Ok(Dataset { tensor, truth: Vec::new() })
+    }
+}
+
+/// An event-log CSV as a [`DatasetSource`] (vocabularies are rebuilt on
+/// every load, deterministically from the file contents). Under the
+/// Bernoulli value model (logit loss) repeated events are **binarized**
+/// to 1.0 event indicators — the Bernoulli NLL diverges on counts ≥ 2;
+/// the Gaussian model (ls loss) keeps the raw counts.
+pub struct CsvSource(pub PathBuf);
+
+impl DatasetSource for CsvSource {
+    fn describe(&self) -> String {
+        format!("event-log csv {}", self.0.display())
+    }
+
+    fn load(&self, vk: ValueKind) -> anyhow::Result<Dataset> {
+        let (mut tensor, _vocabs) = events::load_events_csv(&self.0)?;
+        if vk == ValueKind::Binary {
+            for v in tensor.vals.iter_mut() {
+                *v = 1.0;
+            }
+        }
+        Ok(Dataset { tensor, truth: Vec::new() })
+    }
+}
+
+/// Reject dim vectors whose cell space overflows u64 — `linearize`,
+/// `fiber_of_entry`, and the fiber-index sizing all multiply dims and
+/// would silently wrap in release builds on crafted headers.
+pub(crate) fn validate_dims(dims: &[usize], what: &std::path::Path) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        dims.iter().all(|&d| d > 0 && d < u32::MAX as usize),
+        "{}: dims {dims:?} out of per-mode range",
+        what.display()
+    );
+    anyhow::ensure!(
+        dims.iter().try_fold(1u64, |acc, &d| acc.checked_mul(d as u64)).is_some(),
+        "{}: dims {dims:?} overflow the u64 cell space",
+        what.display()
+    );
+    Ok(())
+}
+
+/// Load a tensor file by extension: `.tns` → FROSTT-style text,
+/// `.bin`/`.ctf` → the compact binary format.
+pub fn load_tensor_file(path: &Path) -> anyhow::Result<SparseTensor> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("tns") => tns::load_tns(path),
+        Some("bin") | Some("ctf") => bin::load_bin(path),
+        other => anyhow::bail!(
+            "{}: unsupported tensor extension {:?} (known: .tns, .bin, .ctf)",
+            path.display(),
+            other.unwrap_or("<none>")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_source_respects_value_kind() {
+        let src = SynthSource(SynthConfig::tiny(5));
+        let bin = src.load(ValueKind::Binary).unwrap();
+        assert!(bin.tensor.vals.iter().all(|&v| v == 1.0));
+        assert!(!bin.truth.is_empty());
+        let gauss = src.load(ValueKind::Gaussian).unwrap();
+        assert!(gauss.tensor.vals.iter().any(|&v| v != 1.0));
+        assert!(!src.describe().is_empty());
+    }
+
+    #[test]
+    fn unknown_extension_is_an_error() {
+        let err = load_tensor_file(Path::new("/tmp/whatever.xyz")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("xyz") && msg.contains(".tns"), "{msg}");
+    }
+
+    #[test]
+    fn dims_cell_space_overflow_rejected() {
+        // each dim passes the per-mode range check; the product wraps u64
+        let dims = vec![1usize << 31, 1 << 31, 1 << 31];
+        let err = validate_dims(&dims, Path::new("crafted.bin")).unwrap_err();
+        assert!(format!("{err:#}").contains("overflow"));
+        assert!(validate_dims(&[4096, 256, 256], Path::new("ok")).is_ok());
+    }
+}

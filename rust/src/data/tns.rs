@@ -1,0 +1,224 @@
+//! FROSTT-style `.tns` COO text format.
+//!
+//! One entry per line: `i_1 i_2 ... i_D value`, indices **1-based**
+//! (the FROSTT convention), whitespace-separated. Lines starting with
+//! `#` are comments; blank lines are ignored. The writer additionally
+//! emits a `# dims: I_1 ... I_D` comment header so trailing-empty slices
+//! survive a round trip; the loader honors it when present and falls
+//! back to inferring each dim as the max observed index (plain FROSTT
+//! files load fine). Duplicate coordinates are rejected — the engine
+//! assumes one entry per cell.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::tensor::SparseTensor;
+
+/// Load a `.tns` file into a [`SparseTensor`] (entry order preserved).
+pub fn load_tns(path: &Path) -> anyhow::Result<SparseTensor> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    let mut declared_dims: Option<Vec<usize>> = None;
+    let mut order: Option<usize> = None;
+    // one flat index buffer (stride = order) — no per-entry allocations,
+    // moved into the tensor wholesale once dims are known
+    let mut idx_flat: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    let mut max_idx: Vec<u32> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            if let Some(dims_str) = comment.trim().strip_prefix("dims:") {
+                let dims: Vec<usize> = dims_str
+                    .split_whitespace()
+                    .map(|t| t.parse::<usize>())
+                    .collect::<Result<_, _>>()
+                    .map_err(|_| {
+                        anyhow::anyhow!(
+                            "{}:{}: malformed '# dims:' header",
+                            path.display(),
+                            lineno + 1
+                        )
+                    })?;
+                declared_dims = Some(dims);
+            }
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        anyhow::ensure!(
+            toks.len() >= 3,
+            "{}:{}: entry needs at least 2 indices and a value, got {} token(s)",
+            path.display(),
+            lineno + 1,
+            toks.len()
+        );
+        let d = toks.len() - 1;
+        match order {
+            None => {
+                order = Some(d);
+                max_idx = vec![0u32; d];
+            }
+            Some(o) => anyhow::ensure!(
+                o == d,
+                "{}:{}: entry has {d} indices, earlier entries had {o}",
+                path.display(),
+                lineno + 1
+            ),
+        }
+        for (m, tok) in toks[..d].iter().enumerate() {
+            let i: u64 = tok.parse().map_err(|_| {
+                anyhow::anyhow!("{}:{}: bad index '{tok}'", path.display(), lineno + 1)
+            })?;
+            anyhow::ensure!(
+                i >= 1 && i <= u32::MAX as u64,
+                "{}:{}: index {i} out of range (.tns indices are 1-based)",
+                path.display(),
+                lineno + 1
+            );
+            let zero_based = (i - 1) as u32;
+            if zero_based > max_idx[m] {
+                max_idx[m] = zero_based;
+            }
+            idx_flat.push(zero_based);
+        }
+        let val: f32 = toks[d].parse().map_err(|_| {
+            anyhow::anyhow!("{}:{}: bad value '{}'", path.display(), lineno + 1, toks[d])
+        })?;
+        vals.push(val);
+    }
+
+    let order = order
+        .ok_or_else(|| anyhow::anyhow!("{}: no tensor entries found", path.display()))?;
+    anyhow::ensure!(order >= 2, "{}: tensors need at least 2 modes, got {order}", path.display());
+    let dims: Vec<usize> = match declared_dims {
+        Some(dims) => {
+            anyhow::ensure!(
+                dims.len() == order,
+                "{}: '# dims:' header names {} modes, entries have {order}",
+                path.display(),
+                dims.len()
+            );
+            for (m, (&dim, &mx)) in dims.iter().zip(max_idx.iter()).enumerate() {
+                anyhow::ensure!(
+                    (mx as usize) < dim,
+                    "{}: mode-{m} index {} exceeds declared dim {dim}",
+                    path.display(),
+                    mx as usize + 1
+                );
+            }
+            dims
+        }
+        None => max_idx.iter().map(|&m| m as usize + 1).collect(),
+    };
+    super::validate_dims(&dims, path)?;
+    let mut t = SparseTensor::new(dims);
+    t.idx = idx_flat;
+    t.vals = vals;
+    // Duplicate coordinates would make the gather (last write wins) and
+    // the loss estimator (counts every entry) silently disagree — reject.
+    let mut seen = std::collections::HashSet::with_capacity(t.nnz());
+    for e in 0..t.nnz() {
+        anyhow::ensure!(
+            seen.insert(t.linearize(t.entry(e))),
+            "{}: duplicate entry at coordinate {:?} (1-based) — merge values first",
+            path.display(),
+            t.entry(e).iter().map(|&i| i + 1).collect::<Vec<u32>>()
+        );
+    }
+    Ok(t)
+}
+
+/// Write `t` as a `.tns` file (with the `# dims:` header; values use
+/// Rust's shortest round-trip float formatting, so load-back is exact).
+pub fn write_tns(path: &Path, t: &SparseTensor) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let dims: Vec<String> = t.dims.iter().map(|d| d.to_string()).collect();
+    writeln!(w, "# dims: {}", dims.join(" "))?;
+    for e in 0..t.nnz() {
+        for &i in t.entry(e) {
+            write!(w, "{} ", i + 1)?;
+        }
+        writeln!(w, "{}", t.vals[e])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("cidertf_tns_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn write_load_round_trip_exact() {
+        let mut t = SparseTensor::new(vec![5, 4, 3]);
+        t.push(&[0, 0, 0], 1.0);
+        t.push(&[4, 3, 2], -0.62511176);
+        t.push(&[2, 1, 0], 3.25e-8);
+        let path = tmp("rt.tns");
+        write_tns(&path, &t).unwrap();
+        let back = load_tns(&path).unwrap();
+        assert_eq!(back.dims, t.dims, "dims header honored");
+        assert_eq!(back.idx, t.idx);
+        let bits: Vec<u32> = back.vals.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = t.vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want, "values must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn plain_frostt_without_header_infers_dims() {
+        let path = tmp("plain.tns");
+        std::fs::write(&path, "1 1 1 2.5\n3 2 4 1\n").unwrap();
+        let t = load_tns(&path).unwrap();
+        assert_eq!(t.dims, vec![3, 2, 4]);
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.entry(1), &[2, 1, 3]);
+    }
+
+    #[test]
+    fn error_paths() {
+        let path = tmp("bad0.tns");
+        std::fs::write(&path, "0 1 1.0\n").unwrap();
+        assert!(load_tns(&path).is_err(), "0 index must error (1-based format)");
+
+        let path = tmp("badmix.tns");
+        std::fs::write(&path, "1 1 1 1.0\n1 1 1.0\n").unwrap();
+        let err = format!("{:#}", load_tns(&path).unwrap_err());
+        assert!(err.contains("indices"), "{err}");
+
+        let path = tmp("badval.tns");
+        std::fs::write(&path, "1 1 x\n").unwrap();
+        assert!(load_tns(&path).is_err());
+
+        let path = tmp("empty.tns");
+        std::fs::write(&path, "# nothing here\n").unwrap();
+        assert!(load_tns(&path).is_err());
+
+        let path = tmp("overflow.tns");
+        std::fs::write(&path, "# dims: 2 2\n3 1 1.0\n").unwrap();
+        let err = format!("{:#}", load_tns(&path).unwrap_err());
+        assert!(err.contains("exceeds"), "{err}");
+
+        // duplicate coordinates would make gather and loss disagree
+        let path = tmp("dup.tns");
+        std::fs::write(&path, "1 1 2.0\n2 2 1.0\n1 1 3.0\n").unwrap();
+        let err = format!("{:#}", load_tns(&path).unwrap_err());
+        assert!(err.contains("duplicate"), "{err}");
+    }
+}

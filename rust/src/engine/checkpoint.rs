@@ -46,6 +46,15 @@ pub struct SessionState {
     pub sampler_t: usize,
     /// network-model internal state (`Json::Null` for stateless models)
     pub net_model: Json,
+    /// nnz of the dataset the run was training on — re-checked on
+    /// resume so a changed/regenerated `file:`/`csv:` source fails
+    /// loudly instead of silently voiding the bit-exact-resume
+    /// guarantee (`None` in pre-v1.1 checkpoints)
+    pub data_nnz: Option<u64>,
+    /// content fingerprint of the dataset
+    /// ([`crate::data::Dataset::fingerprint`]) — catches same-nnz edits
+    /// the count alone would miss (`None` in pre-v1.1 checkpoints)
+    pub data_fp: Option<u64>,
     /// metric points recorded so far
     pub points: Vec<MetricPoint>,
     /// per-client state blobs, in client-id order
@@ -260,6 +269,8 @@ fn state_to_json(st: &SessionState) -> Json {
         ("sampler_rng", rng_json(st.sampler_rng)),
         ("sampler_t", Json::Num(st.sampler_t as f64)),
         ("net_model", st.net_model.clone()),
+        ("data_nnz", st.data_nnz.map(Json::u64).unwrap_or(Json::Null)),
+        ("data_fp", st.data_fp.map(Json::u64).unwrap_or(Json::Null)),
         ("points", Json::Arr(st.points.iter().map(point_json).collect())),
         ("clients", Json::Arr(st.clients.clone())),
     ])
@@ -274,6 +285,8 @@ fn state_from_json(j: &Json) -> anyhow::Result<SessionState> {
         )?,
         sampler_t: j.req_usize("sampler_t")?,
         net_model: j.get("net_model").cloned().unwrap_or(Json::Null),
+        data_nnz: j.get("data_nnz").and_then(Json::as_u64),
+        data_fp: j.get("data_fp").and_then(Json::as_u64),
         points: j
             .req_array("points")?
             .iter()

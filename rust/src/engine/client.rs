@@ -1,5 +1,13 @@
 //! Per-client (institution) state and the local update step — the inner
 //! loop of Alg. 1 as seen by one node.
+//!
+//! A client's shard (tensor + fiber indices) is an immutable
+//! `Arc<ShardData>` built once by the partitioner and shared across
+//! every execution path — constructing a client never copies tensor
+//! data, and the thread-per-client driver's clients all read the same
+//! allocations.
+
+use std::sync::Arc;
 
 use crate::compress::ErrorFeedback;
 use crate::factor::FactorSet;
@@ -8,8 +16,8 @@ use crate::losses::Loss;
 use crate::net::sim::NetStats;
 use crate::runtime::ComputeBackend;
 use crate::sched::FiberSampler;
-use crate::tensor::fiber::ModeIndices;
-use crate::tensor::partition::Shard;
+use crate::tensor::partition::ShardData;
+use crate::tensor::SparseTensor;
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
@@ -29,8 +37,7 @@ pub struct EvalSample {
 }
 
 impl EvalSample {
-    pub fn build(shard: &Shard, batch: usize, rng: &mut Rng) -> Self {
-        let t = &shard.tensor;
+    pub fn build(t: &SparseTensor, batch: usize, rng: &mut Rng) -> Self {
         let d = t.order();
         let nnz = t.nnz();
         let cells = t.n_cells();
@@ -88,11 +95,13 @@ impl EvalSample {
     }
 }
 
-/// One decentralized client: local shard, factors, momentum, estimates.
+/// One decentralized client: local shard view, factors, momentum,
+/// estimates.
 pub struct ClientState {
     pub id: usize,
-    pub shard: Shard,
-    pub indices: ModeIndices,
+    /// shared immutable data plane (tensor + per-mode fiber indices) —
+    /// a view, never a copy
+    pub shard: Arc<ShardData>,
     /// local factors: `mats[0]` holds only this client's patient rows
     pub factors: FactorSet,
     /// Nesterov momentum velocity per mode (allocated when enabled)
@@ -125,7 +134,7 @@ pub struct ClientState {
 impl ClientState {
     pub fn new(
         id: usize,
-        shard: Shard,
+        shard: Arc<ShardData>,
         rank: usize,
         init_scale: f32,
         seed: u64,
@@ -134,7 +143,6 @@ impl ClientState {
         momentum_enabled: bool,
         error_feedback: bool,
     ) -> Self {
-        let indices = ModeIndices::build(&shard.tensor);
         let dims = shard.tensor.dims.clone();
         // Feature-mode factors use the *shared* seed so all clients start
         // identical (Alg. 1: A^k[0] = A[0]); the patient mode is seeded per
@@ -149,7 +157,7 @@ impl ClientState {
             .map(|m| error_feedback.then(|| ErrorFeedback::new(dims[m], rank)))
             .collect();
         let mut eval_rng = Rng::new(seed ^ 0xE7A1).split(id as u64);
-        let eval = EvalSample::build(&shard, eval_batch, &mut eval_rng);
+        let eval = EvalSample::build(&shard.tensor, eval_batch, &mut eval_rng);
         let max_i = *dims.iter().max().unwrap();
         let u_bufs = (0..d.saturating_sub(1)).map(|_| Mat::zeros(fiber_samples, rank)).collect();
         let eval_u_bufs = (0..d).map(|_| Mat::zeros(eval_batch, rank)).collect();
@@ -157,7 +165,6 @@ impl ClientState {
         ClientState {
             id,
             shard,
-            indices,
             factors,
             momentum,
             estimates: None,
@@ -224,7 +231,7 @@ impl ClientState {
         if self.xs_buf.len() < i_dim * s_dim {
             self.xs_buf.resize(i_dim * s_dim, 0.0);
         }
-        self.indices.mode(mode).gather_slice(
+        self.shard.indices.mode(mode).gather_slice(
             &self.fiber_buf,
             i_dim,
             &mut self.xs_buf[..i_dim * s_dim],
@@ -297,7 +304,7 @@ impl ClientState {
 
 /// Draw the shared global init and slice out this shard's patient rows.
 fn init_factors_for_shard(
-    shard: &Shard,
+    shard: &ShardData,
     dims: &[usize],
     rank: usize,
     init_scale: f32,
@@ -357,7 +364,7 @@ pub fn gather_rows(
         }
     }
     for (row, &fid) in fibers.iter().enumerate() {
-        crate::factor::decode_into(dims, mode, fid, idx_buf);
+        crate::tensor::decode_fiber_into(dims, mode, fid, idx_buf);
         let mut slot = 0;
         for m in 0..d {
             if m == mode {
@@ -385,12 +392,12 @@ pub fn gather_rows_by_index(a: &Mat, rows: &[u32], out: &mut Mat) {
 mod tests {
     use super::*;
     use crate::runtime::native::NativeBackend;
-    use crate::tensor::partition::partition_mode0;
+    use crate::tensor::partition::partition_shared;
     use crate::tensor::synth::SynthConfig;
 
     fn mk_client(id: usize, k: usize, momentum: bool) -> ClientState {
         let data = SynthConfig::tiny(11).generate();
-        let shards = partition_mode0(&data.tensor, k);
+        let shards = partition_shared(&data.tensor, k);
         ClientState::new(id, shards[id].clone(), 4, 0.2, 123, 16, 32, momentum, false)
     }
 
@@ -456,7 +463,7 @@ mod tests {
         // For the all-zero factor set, ls loss estimate must equal ‖X‖_F²
         // exactly: nnz batch contributes w_nnz * Σ x², zero batch 0.
         let data = SynthConfig::tiny(12).generate();
-        let shards = partition_mode0(&data.tensor, 1);
+        let shards = partition_shared(&data.tensor, 1);
         let mut c = ClientState::new(0, shards[0].clone(), 4, 0.2, 5, 16, 64, false, false);
         for m in c.factors.mats.iter_mut() {
             m.fill(0.0);
@@ -483,9 +490,9 @@ mod tests {
                 }
             }
         }
-        let shard = Shard { tensor: t, row_offset: 0 };
+        let shard = Arc::new(ShardData::new(t, 0));
         let mut rng = Rng::new(77);
-        let es = EvalSample::build(&shard, 16, &mut rng);
+        let es = EvalSample::build(&shard.tensor, 16, &mut rng);
         assert_eq!(es.w_zero, 0.0, "dense shard has an empty zero stratum");
         assert_eq!(es.zero_rows[0].len(), 0, "no fake zero cells");
         // the loss estimate is still exact for the all-zero factor set
@@ -504,7 +511,7 @@ mod tests {
         // construction-time fiber_samples = 4; stepping with 64 must grow
         // xs_buf instead of slicing out of bounds (previous panic)
         let data = SynthConfig::tiny(15).generate();
-        let shards = partition_mode0(&data.tensor, 1);
+        let shards = partition_shared(&data.tensor, 1);
         let mut c = ClientState::new(0, shards[0].clone(), 4, 0.2, 123, 4, 32, false, false);
         let mut backend = NativeBackend::new();
         for t in 0..6 {
@@ -512,6 +519,19 @@ mod tests {
             assert!(l.is_finite());
         }
         assert!(c.factors.mats[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn client_holds_a_view_of_the_shared_shard() {
+        // constructing a client must not copy the data plane: the client's
+        // shard is the same allocation the partitioner produced
+        let data = SynthConfig::tiny(11).generate();
+        let shards = partition_shared(&data.tensor, 2);
+        let c0 = ClientState::new(0, shards[0].clone(), 4, 0.2, 123, 16, 32, false, false);
+        let c1 = ClientState::new(1, shards[1].clone(), 4, 0.2, 123, 16, 32, false, false);
+        assert!(Arc::ptr_eq(&c0.shard, &shards[0]));
+        assert!(Arc::ptr_eq(&c1.shard, &shards[1]));
+        assert!(!Arc::ptr_eq(&c0.shard, &c1.shard));
     }
 
     #[test]
@@ -525,7 +545,7 @@ mod tests {
     #[test]
     fn gather_rows_skips_target_mode_and_matches_krp() {
         let data = SynthConfig::tiny(13).generate();
-        let shards = partition_mode0(&data.tensor, 1);
+        let shards = partition_shared(&data.tensor, 1);
         let c = ClientState::new(0, shards[0].clone(), 4, 0.2, 9, 8, 16, false, false);
         let dims = c.shard.tensor.dims.clone();
         let fibers: Vec<u64> = vec![0, 5, 17];

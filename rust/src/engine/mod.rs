@@ -22,14 +22,14 @@ pub mod session;
 pub mod spec;
 
 use crate::compress::{Compressor, Payload};
+use crate::data::Dataset;
 use crate::factor::{fms::fms, FactorSet};
 use crate::gossip::Message;
 use crate::losses::Loss;
 use crate::net::sim::NetStats;
 use crate::runtime::ComputeBackend;
 use crate::sched::TriggerSchedule;
-use crate::tensor::partition::partition_mode0;
-use crate::tensor::synth::SynthData;
+use crate::tensor::partition::partition_shared;
 use crate::topology::{Graph, Topology};
 use crate::util::mat::Mat;
 use client::ClientState;
@@ -142,7 +142,7 @@ pub struct TrainOutcome {
 /// stopping rules, and checkpoint/resume.
 pub fn train(
     cfg: &TrainConfig,
-    data: &SynthData,
+    data: &Dataset,
     backend: &mut dyn ComputeBackend,
     fms_reference: Option<&FactorSet>,
 ) -> anyhow::Result<TrainOutcome> {
@@ -158,15 +158,17 @@ pub fn train(
     )
 }
 
-/// Shard the tensor and build one [`ClientState`] per institution,
-/// wiring gossip estimates when the run is decentralized. Shared by every
-/// execution path so they all start from bit-identical state.
+/// Shard the tensor into `Arc<ShardData>` data planes (tensor + fiber
+/// indices built once, immutably shared) and build one [`ClientState`]
+/// view per institution, wiring gossip estimates when the run is
+/// decentralized. Shared by every execution path so they all start from
+/// bit-identical state without ever copying tensor data.
 pub(crate) fn build_clients(
     cfg: &TrainConfig,
-    data: &SynthData,
+    data: &Dataset,
     graph: &Graph,
 ) -> Vec<ClientState> {
-    let shards = partition_mode0(&data.tensor, cfg.k);
+    let shards = partition_shared(&data.tensor, cfg.k);
     let mut clients: Vec<ClientState> = shards
         .into_iter()
         .enumerate()

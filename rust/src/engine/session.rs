@@ -39,7 +39,7 @@ use crate::net::driver::DriverKind;
 use crate::net::sim::{self, NetworkModel, VirtualClock};
 use crate::runtime::{ComputeBackend, NativeOrPjrt};
 use crate::sched::BlockSampler;
-use crate::tensor::synth::SynthData;
+use crate::data::Dataset;
 use crate::topology::Graph;
 use crate::util::benchkit::{append_bench_json, fmt_bytes, BenchRun, Stats};
 use crate::util::json::Json;
@@ -451,7 +451,7 @@ impl Session {
     /// spec's backend flag).
     pub fn run_on(
         &mut self,
-        data: &SynthData,
+        data: &Dataset,
         backend: &mut dyn ComputeBackend,
         fms_reference: Option<&FactorSet>,
     ) -> anyhow::Result<TrainOutcome> {
@@ -603,7 +603,7 @@ impl Hooks<'_> {
 /// in `tests/network_sim.rs`).
 pub(crate) fn run_loop(
     cfg: &TrainConfig,
-    data: &SynthData,
+    data: &Dataset,
     backend: &mut dyn ComputeBackend,
     net: &mut dyn NetworkModel,
     wall_time: bool,
@@ -634,6 +634,24 @@ pub(crate) fn run_loop(
             st.clients.len(),
             clients.len()
         );
+        // a regenerated/edited file: or csv: source would silently void
+        // the bit-exact-resume guarantee — fail loudly instead
+        if let Some(nnz) = st.data_nnz {
+            anyhow::ensure!(
+                nnz == data.tensor.nnz() as u64,
+                "checkpoint was taken on a dataset with {nnz} nonzeros, \
+                 the current one has {} — the data source changed since \
+                 the checkpoint was written",
+                data.tensor.nnz()
+            );
+        }
+        if let Some(fp) = st.data_fp {
+            anyhow::ensure!(
+                fp == data.fingerprint(),
+                "dataset content fingerprint mismatch — the data source \
+                 changed since the checkpoint was written"
+            );
+        }
         for (c, cj) in clients.iter_mut().zip(st.clients.iter()) {
             checkpoint::restore_client(c, cj)?;
         }
@@ -668,6 +686,9 @@ pub(crate) fn run_loop(
 
     let total_iters = cfg.epochs * cfg.iters_per_epoch;
     let eval_period = cfg.iters_per_epoch * hooks.eval_every.max(1);
+    // dataset identity stamped into every checkpoint — the data is
+    // immutable for the run, so hash it once, not per epoch
+    let data_fp = hooks.checkpoint.is_some().then(|| data.fingerprint());
     // with no observers attached (the legacy shims), skip all event
     // bookkeeping so the reference loop stays as lean as it always was
     let has_observers = !hooks.observers.is_empty();
@@ -834,6 +855,8 @@ pub(crate) fn run_loop(
                         sampler_rng: block_sampler.state().0,
                         sampler_t: block_sampler.state().1,
                         net_model: net.state_json(),
+                        data_nnz: Some(data.tensor.nnz() as u64),
+                        data_fp,
                         points: points.clone(),
                         clients: clients.iter().map(checkpoint::snapshot_client).collect(),
                     };

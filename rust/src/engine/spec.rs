@@ -20,12 +20,13 @@
 
 use std::path::Path;
 
+use crate::data::Dataset;
 use crate::engine::{AlgoConfig, TrainConfig};
 use crate::losses::Loss;
 use crate::net::driver::DriverKind;
 use crate::net::sim::{self, FaultConfig, NetworkModel};
 use crate::runtime::NativeOrPjrt;
-use crate::tensor::synth::{SynthConfig, SynthData, ValueKind};
+use crate::tensor::synth::ValueKind;
 use crate::topology::Topology;
 use crate::util::json::Json;
 
@@ -233,11 +234,14 @@ impl ExperimentSpec {
         Ok(())
     }
 
-    /// Generate the dataset this spec names (value kind follows the
-    /// loss, as in the paper: Gaussian for ls, binary for logit).
-    pub fn dataset_data(&self) -> anyhow::Result<SynthData> {
+    /// Materialize the dataset this spec names through the
+    /// [`crate::registry::datasets`] sources — a synthetic generator
+    /// (value kind follows the loss, as in the paper: Gaussian for ls,
+    /// binary for logit) or an on-disk loader (`file:<path>`,
+    /// `csv:<path>`, values taken as stored).
+    pub fn dataset_data(&self) -> anyhow::Result<Dataset> {
         let vk = if self.loss == Loss::Ls { ValueKind::Gaussian } else { ValueKind::Binary };
-        Ok(SynthConfig::by_name(&self.dataset)?.with_values(vk).generate())
+        crate::data::load_dataset(&self.dataset, vk)
     }
 
     /// Materialize the network model. A fault envelope still carrying the
@@ -258,11 +262,13 @@ impl ExperimentSpec {
     }
 
     /// Filename-friendly label:
-    /// `dataset_loss_algo_driver_topology_kK`.
+    /// `dataset_loss_algo_driver_topology_kK`. Loader dataset specs
+    /// (`file:dir/t.tns`) are sanitized so the label never introduces
+    /// path separators.
     pub fn label(&self) -> String {
         format!(
             "{}_{}_{}_{}_{}_k{}",
-            self.dataset,
+            fs_component(&self.dataset),
             self.loss.name(),
             self.algo.name,
             self.driver.name(),
@@ -457,6 +463,15 @@ impl ExperimentSpec {
         std::fs::write(path, self.to_json().to_pretty_string())
             .map_err(|e| anyhow::anyhow!("cannot write spec {}: {e}", path.display()))
     }
+}
+
+/// Make one filename component out of an arbitrary axis value (loader
+/// dataset specs like `file:dir/t.tns` carry separators) — used by
+/// [`ExperimentSpec::label`] and the harness CSV paths.
+pub(crate) fn fs_component(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '-' { c } else { '_' })
+        .collect()
 }
 
 /// Fluent builder over [`ExperimentSpec`] (start with

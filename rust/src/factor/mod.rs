@@ -93,18 +93,12 @@ impl FactorSet {
 }
 
 /// `decode_fiber` into a reusable buffer (hot path, avoids allocation).
+/// Thin alias over the canonical
+/// [`crate::tensor::decode_fiber_into`], kept for callers that think in
+/// factor terms.
 #[inline]
 pub fn decode_into(dims: &[usize], mode: usize, fid: u64, out: &mut [u32]) {
-    let mut rest = fid;
-    for m in 0..dims.len() {
-        if m == mode {
-            out[m] = 0;
-            continue;
-        }
-        out[m] = (rest % dims[m] as u64) as u32;
-        rest /= dims[m] as u64;
-    }
-    debug_assert_eq!(rest, 0);
+    crate::tensor::decode_fiber_into(dims, mode, fid, out);
 }
 
 #[cfg(test)]

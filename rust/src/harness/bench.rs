@@ -2,17 +2,20 @@
 //!
 //! Runs the L3 hot-path micro-benchmarks (slice gather, Khatri-Rao row
 //! gather, sign codec, consensus AXPY), the gradient kernel in **both**
-//! its pre-blocked naive form and the blocked allocation-free form (so
-//! each run measures the speedup on the same machine in the same
-//! process), plus one end-to-end training-round benchmark, then appends
-//! the results to `BENCH.json` at the repo root
+//! its pre-blocked naive form and the blocked allocation-free form, and
+//! the sparse slice gather in **both** its CSF form and the historical
+//! HashMap-COO form (so each run measures both speedups on the same
+//! machine in the same process), plus one end-to-end training-round
+//! benchmark, then appends the results to `BENCH.json` at the repo root
 //! (schema [`crate::util::benchkit::BENCH_SCHEMA`]).
 //!
-//! `--smoke` shrinks sizes and durations to CI scale; `--out-json PATH`
-//! redirects the report. The gradient comparison defaults to the
-//! acceptance shape `(i=512, s=128, r=32)`.
+//! `--smoke` shrinks sizes and durations to CI scale (tiny tensor); the
+//! full mode gathers over the `synthetic` and `mimic_like` tensors.
+//! `--out-json PATH` redirects the report. The gradient comparison
+//! defaults to the acceptance shape `(i=512, s=128, r=32)`.
 
-use std::path::PathBuf;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 use crate::compress::Compressor;
 use crate::engine::client::gather_rows;
@@ -20,17 +23,90 @@ use crate::engine::session::Session;
 use crate::engine::spec::ExperimentSpec;
 use crate::engine::{AlgoConfig, TrainConfig};
 use crate::factor::FactorSet;
-use crate::net::driver::DriverKind;
 use crate::losses::Loss;
+use crate::net::driver::DriverKind;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::ComputeBackend;
 use crate::sched::FiberSampler;
 use crate::tensor::fiber::FiberIndex;
 use crate::tensor::synth::SynthConfig;
-use crate::util::benchkit::{append_bench_json, bench, BenchRun};
+use crate::tensor::SparseTensor;
+use crate::util::benchkit::{append_bench_json, bench, BenchRun, BENCH_SCHEMA};
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
+
+/// The pre-CSF fiber lookup (HashMap over COO groups), preserved here as
+/// the gather reference so every bench run records the CSF speedup
+/// same-machine, same-process — exactly like `grad_naive` does for the
+/// blocked gradient.
+struct HashGatherRef {
+    rows: Vec<u32>,
+    vals: Vec<f32>,
+    ranges: HashMap<u64, (u32, u32)>,
+}
+
+impl HashGatherRef {
+    fn build(t: &SparseTensor, mode: usize) -> Self {
+        let nnz = t.nnz();
+        let mut keyed: Vec<(u64, u32)> =
+            (0..nnz).map(|e| (t.fiber_of_entry(e, mode), e as u32)).collect();
+        keyed.sort_unstable();
+        let mut rows = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        let mut ranges = HashMap::new();
+        let mut i = 0usize;
+        while i < keyed.len() {
+            let fid = keyed[i].0;
+            let start = i;
+            while i < keyed.len() && keyed[i].0 == fid {
+                let e = keyed[i].1 as usize;
+                rows.push(t.entry_index(e, mode));
+                vals.push(t.vals[e]);
+                i += 1;
+            }
+            ranges.insert(fid, (start as u32, i as u32));
+        }
+        HashGatherRef { rows, vals, ranges }
+    }
+
+    fn gather_slice(&self, fibers: &[u64], i_dim: usize, out: &mut [f32]) {
+        let s = fibers.len();
+        assert_eq!(out.len(), i_dim * s);
+        out.fill(0.0);
+        for (col, &fid) in fibers.iter().enumerate() {
+            if let Some(&(a, b)) = self.ranges.get(&fid) {
+                for k in a as usize..b as usize {
+                    out[self.rows[k] as usize * s + col] = self.vals[k];
+                }
+            }
+        }
+    }
+}
+
+/// Mean ns of the most recent bench with **exactly** this name in an
+/// existing BENCH.json (for cross-run derived speedups). Exact matching
+/// matters: the e2e bench name encodes its workload size
+/// (`train_e2e_tiny_k4_iters10` vs `...iters60`), so smoke and full runs
+/// never get compared to each other.
+fn prev_bench_mean(path: &Path, name: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get("schema").and_then(Json::as_str) != Some(BENCH_SCHEMA) {
+        return None;
+    }
+    let Some(Json::Arr(runs)) = j.get("runs") else { return None };
+    for run in runs.iter().rev() {
+        let Some(Json::Arr(bs)) = run.get("benches") else { continue };
+        for b in bs {
+            if b.get("name").and_then(Json::as_str) == Some(name) {
+                return b.get("mean_ns").and_then(Json::as_f64);
+            }
+        }
+    }
+    None
+}
 
 /// Entry point for the `bench` subcommand.
 pub fn run(args: &Args) -> anyhow::Result<()> {
@@ -125,22 +201,49 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         ));
     }
 
-    // --- L3 gather hot paths: sparse slice gather + Khatri-Rao rows ---
+    // --- L3 gather hot paths: the CSF slice gather vs the historical
+    // HashMap-COO lookup (the second perf-gate pair), + Khatri-Rao rows.
+    // Smoke gathers over the tiny tensor (shared with the e2e run below);
+    // full mode over `synthetic`. ---
     let data = SynthConfig::tiny(5).generate();
-    let gdims = data.tensor.dims.clone();
-    let fi = FiberIndex::build(&data.tensor, 0);
+    let gather_data = if smoke { data.clone() } else { SynthConfig::synthetic().generate() };
+    let gdims = gather_data.tensor.dims.clone();
+    let fi = FiberIndex::build(&gather_data.tensor, 0);
+    let hg = HashGatherRef::build(&gather_data.tensor, 0);
     let mut fib_sampler = FiberSampler::new(7, 0);
-    let fibers = fib_sampler.sample(data.tensor.n_fibers(0), s_dim);
+    let fibers = fib_sampler.sample(gather_data.tensor.n_fibers(0), s_dim);
     let gs = fibers.len();
     let mut xs_gather = vec![0.0f32; gdims[0] * gs];
-    benches.push(bench(&format!("gather_slice_{}x{gs}", gdims[0]), ms / 2, || {
+    let gather_csf = bench(&format!("gather_csf_{}x{gs}", gdims[0]), ms / 2, || {
         fi.gather_slice(&fibers, gdims[0], &mut xs_gather)
-    }));
+    });
+    let gather_hash = bench(&format!("gather_hashmap_{}x{gs}", gdims[0]), ms / 2, || {
+        hg.gather_slice(&fibers, gdims[0], &mut xs_gather)
+    });
+    let gather_speedup = gather_hash.mean_ns / gather_csf.mean_ns.max(1.0);
+    benches.push(gather_csf.clone());
+    benches.push(gather_hash);
     let gfactors = FactorSet::init_uniform(&gdims, r_dim, 0.3, 3);
     let mut gather_bufs = vec![Mat::zeros(gs, r_dim), Mat::zeros(gs, r_dim)];
     benches.push(bench(&format!("gather_krp_rows_{gs}x{r_dim}"), ms / 2, || {
         gather_rows(&gfactors, 0, &gdims, &fibers, &mut gather_bufs)
     }));
+    if !smoke {
+        // second dataset shape for the committed baseline trajectory
+        let md = SynthConfig::mimic_like().generate();
+        let mi = md.tensor.dims[0];
+        let mfi = FiberIndex::build(&md.tensor, 0);
+        let mhg = HashGatherRef::build(&md.tensor, 0);
+        let mfibers = fib_sampler.sample(md.tensor.n_fibers(0), s_dim);
+        let mgs = mfibers.len();
+        let mut mxs = vec![0.0f32; mi * mgs];
+        benches.push(bench(&format!("gather_csf_mimic_like_{mi}x{mgs}"), ms / 2, || {
+            mfi.gather_slice(&mfibers, mi, &mut mxs)
+        }));
+        benches.push(bench(&format!("gather_hashmap_mimic_like_{mi}x{mgs}"), ms / 2, || {
+            mhg.gather_slice(&mfibers, mi, &mut mxs)
+        }));
+    }
 
     // --- end-to-end: one full (tiny) decentralized training run,
     // driven through the Session pipeline like every experiment ---
@@ -155,23 +258,40 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     cfg.compute_threads = threads;
     let spec = ExperimentSpec::from_train_config(&cfg, DriverKind::Sequential, None, "native");
     let mut session = Session::new(spec);
-    let e2e = bench(&format!("train_e2e_tiny_k4_iters{}", cfg.iters_per_epoch), ms, || {
+    let e2e_name = format!("train_e2e_tiny_k4_iters{}", cfg.iters_per_epoch);
+    let e2e = bench(&e2e_name, ms, || {
         let mut b = NativeBackend::new();
         session.run_on(&data, &mut b, None).unwrap()
     });
 
+    // end-to-end speedup vs the most recent recorded run of the *same*
+    // bench (committed BENCH.json history), when one exists
+    let prev_e2e = prev_bench_mean(&out_path, &e2e_name);
+
     let mut all = vec![naive.clone(), blocked.clone()];
     all.append(&mut benches);
-    all.push(e2e);
-    let run = BenchRun {
-        mode: mode.to_string(),
-        benches: all,
-        derived: vec![("grad_speedup_blocked_vs_naive".to_string(), speedup)],
-    };
+    let mut derived = vec![
+        ("grad_speedup_blocked_vs_naive".to_string(), speedup),
+        ("gather_speedup_csf_vs_hashmap".to_string(), gather_speedup),
+    ];
+    if let Some(prev) = prev_e2e {
+        derived.push(("e2e_speedup_vs_prev_run".to_string(), prev / e2e.mean_ns.max(1.0)));
+    }
+    all.push(e2e.clone());
+    let run = BenchRun { mode: mode.to_string(), benches: all, derived };
     append_bench_json(&out_path, &run)?;
     println!("\ngrad blocked vs naive: {speedup:.2}x ({} -> {})",
         crate::util::benchkit::fmt_ns(naive.mean_ns),
         crate::util::benchkit::fmt_ns(blocked.mean_ns));
+    println!("gather CSF vs hashmap: {gather_speedup:.2}x (dense layout: {})", fi.is_dense());
+    if let Some(prev) = prev_e2e {
+        println!(
+            "e2e round vs previous recorded run: {:.2}x ({} -> {})",
+            prev / e2e.mean_ns.max(1.0),
+            crate::util::benchkit::fmt_ns(prev),
+            crate::util::benchkit::fmt_ns(e2e.mean_ns)
+        );
+    }
     println!("appended run to {}", out_path.display());
     Ok(())
 }

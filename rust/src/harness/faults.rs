@@ -107,7 +107,7 @@ fn run_session(
     cfg: &TrainConfig,
     driver: DriverKind,
     fault: Option<FaultConfig>,
-    data: &crate::tensor::synth::SynthData,
+    data: &crate::data::Dataset,
 ) -> anyhow::Result<crate::engine::TrainOutcome> {
     let spec = ExperimentSpec::from_train_config(cfg, driver, fault, ctx.backend.name());
     Session::new(spec).run_on(data, ctx.backend.as_mut(), None)

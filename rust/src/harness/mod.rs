@@ -20,6 +20,7 @@ pub mod tables;
 
 use std::path::PathBuf;
 
+use crate::data::Dataset;
 use crate::engine::session::{CsvObserver, Session};
 use crate::engine::spec::ExperimentSpec;
 use crate::engine::{metrics::RunRecord, AlgoConfig, TrainConfig, TrainOutcome};
@@ -27,7 +28,7 @@ use crate::factor::FactorSet;
 use crate::losses::Loss;
 use crate::net::driver::DriverKind;
 use crate::runtime::{default_artifact_dir, ComputeBackend, PjrtBackend};
-use crate::tensor::synth::{SynthConfig, SynthData, ValueKind};
+use crate::tensor::synth::ValueKind;
 
 /// Effort profile.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,10 +92,12 @@ impl Ctx {
         Ctx { backend, out_dir: PathBuf::from("results"), profile }
     }
 
-    /// Generate (deterministically) the dataset for a config name + loss.
-    pub fn dataset(&self, name: &str, loss: Loss) -> anyhow::Result<SynthData> {
+    /// Materialize (deterministically) the dataset for a source name +
+    /// loss — synthetic generators and the `file:`/`csv:` loaders alike
+    /// resolve through [`crate::registry::datasets`].
+    pub fn dataset(&self, name: &str, loss: Loss) -> anyhow::Result<Dataset> {
         let vk = if loss == Loss::Ls { ValueKind::Gaussian } else { ValueKind::Binary };
-        Ok(SynthConfig::by_name(name)?.with_values(vk).generate())
+        crate::data::load_dataset(name, vk)
     }
 
     /// Grid-searched learning rate per (dataset, loss) — powers of two, as
@@ -133,12 +136,16 @@ impl Ctx {
         &mut self,
         exp: &str,
         cfg: &TrainConfig,
-        data: &SynthData,
+        data: &Dataset,
         fms_reference: Option<&FactorSet>,
     ) -> anyhow::Result<TrainOutcome> {
         let fname = format!(
             "{exp}/{}_{}_{}_{}_k{}.csv",
-            cfg.dataset, cfg.loss.name(), cfg.algo.name, cfg.topology.name(), cfg.k
+            crate::engine::spec::fs_component(&cfg.dataset),
+            cfg.loss.name(),
+            cfg.algo.name,
+            cfg.topology.name(),
+            cfg.k
         );
         let spec =
             ExperimentSpec::from_train_config(cfg, DriverKind::Sequential, None, self.backend.name());

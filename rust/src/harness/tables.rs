@@ -74,7 +74,11 @@ pub fn table3(ctx: &mut Ctx, k: usize, tau: usize, max_patients: usize) -> anyho
         let embedding = tsne(&patients, &TsneConfig::default());
         let sil3 = silhouette(&embedding, &groups3);
         let sil_all = silhouette(&embedding, &groups_all);
-        let csv = format!("table3/tsne_{}_{}.csv", cfg.dataset, cfg.algo.name);
+        let csv = format!(
+            "table3/tsne_{}_{}.csv",
+            crate::engine::spec::fs_component(&cfg.dataset),
+            cfg.algo.name
+        );
         let mut w =
             CsvWriter::create(ctx.out_dir.join(&csv), &["x", "y", "group_top3", "group_all"])?;
         for i in 0..embedding.rows {

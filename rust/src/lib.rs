@@ -16,6 +16,7 @@
 
 pub mod analysis;
 pub mod compress;
+pub mod data;
 pub mod engine;
 pub mod factor;
 pub mod gossip;

@@ -347,6 +347,7 @@ COMMANDS
                                                     cidertf:4@lossy:0.2@async
              --spec file.json     load a full ExperimentSpec (authoritative)
              --dataset synthetic|mimic_like|cms_like|mimic_full|tiny
+                       |file:<path.tns|.bin|.ctf>|csv:<events.csv>  (real data)
              --loss logit|ls  --k 8  --topology ring|star|complete|chain|torus
              --epochs N --iters-per-epoch N --gamma G --rank R --seed S
              --driver seq|par|sim|async   execution path (default seq)

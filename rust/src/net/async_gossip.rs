@@ -36,7 +36,7 @@ use crate::gossip::Message;
 use crate::net::sim::{EventKind, EventQueue, NetworkModel};
 use crate::runtime::ComputeBackend;
 use crate::sched::BlockSampler;
-use crate::tensor::synth::SynthData;
+use crate::data::Dataset;
 use crate::topology::Graph;
 
 /// One client's simulation wrapper.
@@ -57,7 +57,7 @@ struct Node {
 /// epoch slot), and `net` counts delivered/dropped/stale messages.
 pub fn train_async(
     cfg: &TrainConfig,
-    data: &SynthData,
+    data: &Dataset,
     backend: &mut dyn ComputeBackend,
     net: &mut dyn NetworkModel,
     fms_reference: Option<&FactorSet>,

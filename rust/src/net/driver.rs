@@ -17,7 +17,7 @@ use crate::engine::{TrainConfig, TrainOutcome};
 use crate::factor::FactorSet;
 use crate::net::sim::NetworkModel;
 use crate::runtime::ComputeBackend;
-use crate::tensor::synth::SynthData;
+use crate::data::Dataset;
 
 /// Which execution path drives the rounds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,7 +62,7 @@ pub trait RoundDriver {
     fn run(
         &mut self,
         cfg: &TrainConfig,
-        data: &SynthData,
+        data: &Dataset,
         fms_reference: Option<&FactorSet>,
     ) -> anyhow::Result<TrainOutcome>;
 }
@@ -81,7 +81,7 @@ impl RoundDriver for SequentialDriver {
     fn run(
         &mut self,
         cfg: &TrainConfig,
-        data: &SynthData,
+        data: &Dataset,
         fms_reference: Option<&FactorSet>,
     ) -> anyhow::Result<TrainOutcome> {
         crate::engine::train(cfg, data, self.backend.as_mut(), fms_reference)
@@ -102,7 +102,7 @@ impl RoundDriver for ParallelDriver {
     fn run(
         &mut self,
         cfg: &TrainConfig,
-        data: &SynthData,
+        data: &Dataset,
         fms_reference: Option<&FactorSet>,
     ) -> anyhow::Result<TrainOutcome> {
         crate::net::parallel::train_parallel(cfg, data, |k| (self.make_backend)(k), fms_reference)
@@ -125,7 +125,7 @@ impl RoundDriver for SimDriver {
     fn run(
         &mut self,
         cfg: &TrainConfig,
-        data: &SynthData,
+        data: &Dataset,
         fms_reference: Option<&FactorSet>,
     ) -> anyhow::Result<TrainOutcome> {
         train_sim(cfg, data, self.backend.as_mut(), self.net.as_mut(), fms_reference)
@@ -148,7 +148,7 @@ impl RoundDriver for AsyncGossipDriver {
     fn run(
         &mut self,
         cfg: &TrainConfig,
-        data: &SynthData,
+        data: &Dataset,
         fms_reference: Option<&FactorSet>,
     ) -> anyhow::Result<TrainOutcome> {
         crate::net::async_gossip::train_async(
@@ -208,7 +208,7 @@ pub fn driver_from_flags(
 /// eval cadence, stopping rules, and checkpoint/resume.
 pub fn train_sim(
     cfg: &TrainConfig,
-    data: &SynthData,
+    data: &Dataset,
     backend: &mut dyn ComputeBackend,
     net: &mut dyn NetworkModel,
     fms_reference: Option<&FactorSet>,

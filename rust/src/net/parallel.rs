@@ -6,6 +6,14 @@
 //! barriers, and payload exchange through shared mailboxes: the deployment
 //! shape of the coordinator (one process per hospital, lock-step gossip).
 //!
+//! Clients are built once on the main thread by the shared
+//! `engine::build_clients` helper and **step over the shared data
+//! plane**: each holds an `Arc<ShardData>` view (tensor + fiber indices
+//! built once), so moving a client into its thread moves a pointer, not
+//! a tensor copy, and all threads gather from the same read-only
+//! allocations. Results are merged back in deterministic client-id
+//! order.
+//!
 //! Determinism is preserved: every client draws from its own seeded
 //! stream and the shared block sequence, so `train_parallel` produces
 //! **bit-identical factors** to `engine::train` (asserted in tests) —
@@ -27,7 +35,7 @@ use crate::engine::{
 use crate::factor::{fms::fms, FactorSet};
 use crate::runtime::ComputeBackend;
 use crate::sched::BlockSampler;
-use crate::tensor::synth::SynthData;
+use crate::data::Dataset;
 use crate::topology::Graph;
 
 /// Per-round mailbox: slot `k` holds client k's broadcast payload for the
@@ -40,7 +48,7 @@ type Mailbox = Arc<Vec<RwLock<Option<Payload>>>>;
 /// thread* (PJRT clients are per-thread; the native mirror is cheap).
 pub fn train_parallel<F>(
     cfg: &TrainConfig,
-    data: &SynthData,
+    data: &Dataset,
     make_backend: F,
     fms_reference: Option<&FactorSet>,
 ) -> anyhow::Result<TrainOutcome>

@@ -3,9 +3,9 @@
 //! Historically each axis of the experiment space grew its own ad-hoc
 //! lookup (`AlgoConfig::by_name`, `Loss::from_name`,
 //! `Topology::from_name`, `FaultConfig::by_name`,
-//! `DriverKind::from_name`, `SynthConfig::by_name`) with its own error
-//! wording and no common way to enumerate the choices. This module
-//! collapses them onto one [`Registry`] type:
+//! `DriverKind::from_name`) with its own error wording and no common way
+//! to enumerate the choices. This module collapses them onto one
+//! [`Registry`] type:
 //!
 //! * every entry has a canonical name, aliases, a one-line help string,
 //!   and a constructor taking the optional `:arg` suffix
@@ -17,9 +17,13 @@
 //!
 //! The legacy `by_name`/`from_name` constructors remain as thin wrappers
 //! over [`algos`], [`losses`], [`topologies`], [`compressors`],
-//! [`networks`], [`drivers`], and [`datasets`].
+//! [`networks`], and [`drivers`]; datasets resolve through
+//! [`crate::data::load_dataset`].
+
+use std::path::PathBuf;
 
 use crate::compress::Compressor;
+use crate::data::{CsvSource, DatasetSource, FileSource, SynthSource};
 use crate::engine::AlgoConfig;
 use crate::losses::Loss;
 use crate::net::driver::DriverKind;
@@ -508,16 +512,17 @@ pub fn drivers() -> &'static Registry<DriverKind> {
 
 // ---- datasets ----
 
-/// Synthetic dataset generators.
-pub fn datasets() -> &'static Registry<SynthConfig> {
-    static ENTRIES: &[RegEntry<SynthConfig>] = &[
+/// Dataset sources: synthetic generators plus the on-disk loaders
+/// (`file:<path>`, `csv:<path>`) from [`crate::data`].
+pub fn datasets() -> &'static Registry<Box<dyn DatasetSource>> {
+    static ENTRIES: &[RegEntry<Box<dyn DatasetSource>>] = &[
         RegEntry {
             name: "synthetic",
             aliases: &[],
             help: "mid-size synthetic EHR tensor (quick-profile default)",
             make: |a| {
                 no_arg("synthetic", a)?;
-                Ok(SynthConfig::synthetic())
+                Ok(Box::new(SynthSource(SynthConfig::synthetic())) as Box<dyn DatasetSource>)
             },
         },
         RegEntry {
@@ -526,7 +531,7 @@ pub fn datasets() -> &'static Registry<SynthConfig> {
             help: "MIMIC-III-shaped tensor",
             make: |a| {
                 no_arg("mimic_like", a)?;
-                Ok(SynthConfig::mimic_like())
+                Ok(Box::new(SynthSource(SynthConfig::mimic_like())) as Box<dyn DatasetSource>)
             },
         },
         RegEntry {
@@ -535,7 +540,7 @@ pub fn datasets() -> &'static Registry<SynthConfig> {
             help: "CMS-shaped tensor",
             make: |a| {
                 no_arg("cms_like", a)?;
-                Ok(SynthConfig::cms_like())
+                Ok(Box::new(SynthSource(SynthConfig::cms_like())) as Box<dyn DatasetSource>)
             },
         },
         RegEntry {
@@ -544,17 +549,38 @@ pub fn datasets() -> &'static Registry<SynthConfig> {
             help: "full-scale MIMIC-III-shaped tensor",
             make: |a| {
                 no_arg("mimic_full", a)?;
-                Ok(SynthConfig::mimic_full())
+                Ok(Box::new(SynthSource(SynthConfig::mimic_full())) as Box<dyn DatasetSource>)
             },
         },
         RegEntry {
             name: "tiny",
             aliases: &[],
             help: "tiny[:seed] — 64x32x32 test tensor (default seed 7)",
-            make: |a| Ok(SynthConfig::tiny(usize_arg(a, "seed", 7)? as u64)),
+            make: |a| {
+                Ok(Box::new(SynthSource(SynthConfig::tiny(usize_arg(a, "seed", 7)? as u64)))
+                    as Box<dyn DatasetSource>)
+            },
+        },
+        RegEntry {
+            name: "file",
+            aliases: &[],
+            help: "file:<path> — load a FROSTT-style .tns or binary .bin/.ctf tensor",
+            make: |a| {
+                let p = a.ok_or_else(|| anyhow::anyhow!("file:<path> requires a path"))?;
+                Ok(Box::new(FileSource(PathBuf::from(p))) as Box<dyn DatasetSource>)
+            },
+        },
+        RegEntry {
+            name: "csv",
+            aliases: &[],
+            help: "csv:<path> — event-log CSV (patient,code,time) -> count tensor",
+            make: |a| {
+                let p = a.ok_or_else(|| anyhow::anyhow!("csv:<path> requires a path"))?;
+                Ok(Box::new(CsvSource(PathBuf::from(p))) as Box<dyn DatasetSource>)
+            },
         },
     ];
-    static REG: Registry<SynthConfig> = Registry::new("dataset", ENTRIES);
+    static REG: Registry<Box<dyn DatasetSource>> = Registry::new("dataset", ENTRIES);
     &REG
 }
 
@@ -623,6 +649,18 @@ mod tests {
         assert!(networks().resolve("lossy:1.5").is_err());
         assert!(networks().resolve("lossy:abc").is_err());
         assert!(compressors().resolve("topk:0").is_err());
+    }
+
+    #[test]
+    fn dataset_sources_resolve() {
+        assert!(datasets().resolve("tiny:9").is_ok());
+        assert!(datasets().resolve("mimic").is_ok(), "alias");
+        let src = datasets().resolve("file:examples/data/tiny.tns").unwrap();
+        assert!(src.describe().contains("tiny.tns"));
+        let err = format!("{:#}", datasets().resolve("file").unwrap_err());
+        assert!(err.contains("requires a path"), "{err}");
+        assert!(datasets().resolve("csv").is_err());
+        assert!(datasets().resolve("tiny:x").is_err());
     }
 
     #[test]

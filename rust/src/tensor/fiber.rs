@@ -2,15 +2,47 @@
 //! MTTKRP (paper §III-B2, eq. 10).
 //!
 //! For a sampled fiber set `S_d` the engine needs the dense slice
-//! `Y_<d>(:, S_d)` as an `I_d x |S|` row-major buffer for the PJRT gradient
-//! artifact. Building it per iteration from raw COO would be O(nnz); the
+//! `Y_<d>(:, S_d)` as an `I_d x |S|` row-major buffer for the gradient
+//! call. Building it per iteration from raw COO would be O(nnz); the
 //! `FiberIndex` groups entries of each mode by fiber id once (O(nnz log
 //! nnz) at load), making each gather O(sum of nnz in the sampled fibers).
 //! This is an L3 hot path — see EXPERIMENTS.md §Perf.
-
-use std::collections::HashMap;
+//!
+//! # Storage layout (CSF-style)
+//!
+//! Entries are stored sorted by `(fiber id, entry id)` in two parallel
+//! arrays (`rows`, `vals`) — one contiguous segment per non-empty fiber,
+//! so a fiber's entries are a cache-friendly linear scan. Fiber-id →
+//! segment resolution is one of two compact offset tables, chosen at
+//! build time:
+//!
+//! * **dense** — when the fiber-id space is small, a CSR-style `starts`
+//!   array of length `n_fibers + 1`: fiber `f` owns
+//!   `rows[starts[f]..starts[f+1]]`. O(1) lookup, no hashing, no search.
+//! * **sorted** — otherwise, the sorted non-empty fiber ids plus their
+//!   segment offsets, resolved by binary search. O(log n_nonempty)
+//!   lookup with O(n_nonempty) memory, independent of the id space.
+//!
+//! Both layouts scatter exactly the same `(row, value)` pairs, so the
+//! gather is bit-identical to the historical HashMap-COO index (asserted
+//! by the `prop_fiber_gather_matches_bruteforce` property test and the
+//! dense-vs-sorted test below); only the lookup cost changes.
 
 use super::SparseTensor;
+
+/// Above this many fiber ids the dense `starts` table is never built
+/// (`(1 << 22) + 1` u32 ≈ 16 MB per mode at the cap).
+const DENSE_MAX_FIBERS: usize = 1 << 22;
+
+/// Fiber-id → entry-segment resolution (see the module docs).
+#[derive(Debug, Clone)]
+enum FiberLookup {
+    /// CSR-style cumulative starts, length `n_fibers + 1`.
+    Dense(Vec<u32>),
+    /// Sorted non-empty fiber ids + segment offsets
+    /// (`offsets.len() == fids.len() + 1`).
+    Sorted { fids: Vec<u64>, offsets: Vec<u32> },
+}
 
 /// Entries of one mode grouped by fiber id.
 #[derive(Debug, Clone)]
@@ -20,8 +52,8 @@ pub struct FiberIndex {
     rows: Vec<u32>,
     /// value per grouped entry (parallel to `rows`)
     vals: Vec<f32>,
-    /// fiber id -> (start, end) range into rows/vals
-    ranges: HashMap<u64, (u32, u32)>,
+    /// fiber id -> segment into rows/vals
+    lookup: FiberLookup,
     /// number of fibers with at least one nonzero
     pub n_nonempty: usize,
 }
@@ -30,39 +62,85 @@ impl FiberIndex {
     /// Group all entries of `t` by their mode-`mode` fiber.
     pub fn build(t: &SparseTensor, mode: usize) -> Self {
         let nnz = t.nnz();
-        // (fiber id, entry id) pairs sorted by fiber id.
+        // (fiber id, entry id) pairs in total (fid, e) order: segments are
+        // contiguous and within-fiber entry order is deterministic.
         let mut keyed: Vec<(u64, u32)> =
             (0..nnz).map(|e| (t.fiber_of_entry(e, mode), e as u32)).collect();
-        keyed.sort_unstable_by_key(|&(f, _)| f);
+        keyed.sort_unstable();
 
         let mut rows = Vec::with_capacity(nnz);
         let mut vals = Vec::with_capacity(nnz);
-        let mut ranges = HashMap::new();
+        let mut fids: Vec<u64> = Vec::new();
+        let mut offsets: Vec<u32> = vec![0];
         let mut i = 0usize;
         while i < keyed.len() {
             let fid = keyed[i].0;
-            let start = i;
+            fids.push(fid);
             while i < keyed.len() && keyed[i].0 == fid {
                 let e = keyed[i].1 as usize;
                 rows.push(t.entry_index(e, mode));
                 vals.push(t.vals[e]);
                 i += 1;
             }
-            ranges.insert(fid, (start as u32, i as u32));
+            offsets.push(rows.len() as u32);
         }
-        let n_nonempty = ranges.len();
-        FiberIndex { mode, rows, vals, ranges, n_nonempty }
+        let n_nonempty = fids.len();
+
+        // Dense starts pay O(n_fibers) memory for O(1) lookup — worth it
+        // only when the id space is within a constant factor of the data.
+        let n_fibers = t.n_fibers(mode);
+        let lookup = if n_fibers <= DENSE_MAX_FIBERS && n_fibers <= 4 * nnz.max(1024) {
+            let mut starts = vec![0u32; n_fibers + 1];
+            let mut slot = 0usize; // index of the first fid >= f
+            for (f, start) in starts.iter_mut().enumerate() {
+                while slot < fids.len() && fids[slot] < f as u64 {
+                    slot += 1;
+                }
+                *start = offsets[slot];
+            }
+            FiberLookup::Dense(starts)
+        } else {
+            FiberLookup::Sorted { fids, offsets }
+        };
+        FiberIndex { mode, rows, vals, lookup, n_nonempty }
+    }
+
+    /// Entry segment of fiber `fid` (empty range for empty/out-of-range
+    /// ids).
+    #[inline]
+    fn range(&self, fid: u64) -> (usize, usize) {
+        match &self.lookup {
+            FiberLookup::Dense(starts) => {
+                let f = fid as usize;
+                if fid < (starts.len() - 1) as u64 {
+                    (starts[f] as usize, starts[f + 1] as usize)
+                } else {
+                    (0, 0)
+                }
+            }
+            FiberLookup::Sorted { fids, offsets } => match fids.binary_search(&fid) {
+                Ok(s) => (offsets[s] as usize, offsets[s + 1] as usize),
+                Err(_) => (0, 0),
+            },
+        }
+    }
+
+    /// Whether this index resolved to the dense (CSR-starts) layout.
+    pub fn is_dense(&self) -> bool {
+        matches!(self.lookup, FiberLookup::Dense(_))
     }
 
     /// Number of nonzeros in fiber `fid`.
     pub fn fiber_nnz(&self, fid: u64) -> usize {
-        self.ranges.get(&fid).map(|&(s, e)| (e - s) as usize).unwrap_or(0)
+        let (s, e) = self.range(fid);
+        e - s
     }
 
-    /// Iterate `(row, value)` pairs of fiber `fid`.
+    /// Iterate `(row, value)` pairs of fiber `fid`, in deterministic
+    /// (original entry) order.
     pub fn fiber_entries(&self, fid: u64) -> impl Iterator<Item = (u32, f32)> + '_ {
-        let (s, e) = self.ranges.get(&fid).copied().unwrap_or((0, 0));
-        (s as usize..e as usize).map(move |k| (self.rows[k], self.vals[k]))
+        let (s, e) = self.range(fid);
+        (s..e).map(move |k| (self.rows[k], self.vals[k]))
     }
 
     /// Scatter the sampled fibers into a dense row-major `I x |S|` buffer.
@@ -74,12 +152,11 @@ impl FiberIndex {
         assert_eq!(out.len(), i_dim * s);
         out.fill(0.0);
         for (col, &fid) in fibers.iter().enumerate() {
-            if let Some(&(a, b)) = self.ranges.get(&fid) {
-                for k in a as usize..b as usize {
-                    let row = self.rows[k] as usize;
-                    debug_assert!(row < i_dim);
-                    out[row * s + col] = self.vals[k];
-                }
+            let (a, b) = self.range(fid);
+            for k in a..b {
+                let row = self.rows[k] as usize;
+                debug_assert!(row < i_dim);
+                out[row * s + col] = self.vals[k];
             }
         }
     }
@@ -94,7 +171,9 @@ impl FiberIndex {
     }
 }
 
-/// All per-mode fiber indices of a local tensor (built once at load).
+/// All per-mode fiber indices of a local tensor (built once at load,
+/// immutably shared across clients via
+/// [`crate::tensor::partition::ShardData`]).
 #[derive(Debug, Clone)]
 pub struct ModeIndices {
     pub per_mode: Vec<FiberIndex>,
@@ -192,6 +271,47 @@ mod tests {
         assert_eq!(fi.fiber_nnz(999), 0);
         assert_eq!(fi.n_nonempty, 2);
         assert_eq!(fi.len(), 3);
+        assert!(fi.is_dense(), "tiny fiber space must take the dense path");
+    }
+
+    #[test]
+    fn sorted_path_engages_on_huge_fiber_spaces() {
+        // mode-0 fiber space is 3000*3000 = 9M ids > DENSE_MAX_FIBERS, so
+        // the index must fall back to the binary-searched layout and still
+        // resolve every fiber exactly.
+        let mut t = SparseTensor::new(vec![4, 3000, 3000]);
+        t.push(&[1, 7, 2999], 1.5);
+        t.push(&[3, 7, 2999], 2.5);
+        t.push(&[0, 0, 0], 3.5);
+        let fi = FiberIndex::build(&t, 0);
+        assert!(!fi.is_dense(), "9M-id space must take the sorted path");
+        let fid = encode_fiber(&t.dims, 0, &[0, 7, 2999]);
+        assert_eq!(fi.fiber_nnz(fid), 2);
+        let got: Vec<(u32, f32)> = fi.fiber_entries(fid).collect();
+        assert_eq!(got, vec![(1, 1.5), (3, 2.5)]);
+        assert_eq!(fi.fiber_nnz(fid + 1), 0);
+        let mut out = vec![9.0f32; 4 * 2];
+        fi.gather_slice(&[fid, 0], 4, &mut out);
+        assert_eq!(out, vec![0.0, 3.5, 1.5, 0.0, 0.0, 0.0, 2.5, 0.0]);
+    }
+
+    #[test]
+    fn dense_and_sorted_layouts_agree() {
+        // Same tensor, different modes hit different layouts: mode 0's
+        // 6400-id space exceeds 4x nnz (sorted), the feature modes stay
+        // dense — both must agree with the brute-force oracle (and hence
+        // with each other).
+        let t = random_tensor(&[6, 80, 80], 120, 17);
+        for mode in 0..3 {
+            let fi = FiberIndex::build(&t, mode);
+            assert_eq!(fi.is_dense(), mode != 0, "mode {mode} layout");
+            let dense = dense_unfold(&t, mode);
+            let nf = t.n_fibers(mode);
+            let fibers: Vec<u64> = (0..nf as u64).collect();
+            let mut out = vec![f32::NAN; t.dims[mode] * nf];
+            fi.gather_slice(&fibers, t.dims[mode], &mut out);
+            assert_eq!(out, dense, "mode {mode}");
+        }
     }
 
     #[test]

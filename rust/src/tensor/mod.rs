@@ -121,18 +121,32 @@ impl SparseTensor {
 }
 
 /// Decode a mode-`mode` fiber id into a full multi-index with 0 at `mode`.
+///
+/// Allocates the output; hot paths use [`decode_fiber_into`] instead.
 pub fn decode_fiber(dims: &[usize], mode: usize, fid: u64) -> Vec<u32> {
     let mut out = vec![0u32; dims.len()];
+    decode_fiber_into(dims, mode, fid, &mut out);
+    out
+}
+
+/// Allocation-free form of [`decode_fiber`]: decode into a caller-owned
+/// buffer of length `dims.len()` (the entry at `mode` is set to 0). This
+/// is the canonical implementation — the client step path and the
+/// Khatri-Rao row gather both route through it, so fiber decoding never
+/// allocates inside the training loop.
+#[inline]
+pub fn decode_fiber_into(dims: &[usize], mode: usize, fid: u64, out: &mut [u32]) {
+    debug_assert_eq!(out.len(), dims.len());
     let mut rest = fid;
-    for m in 0..dims.len() {
+    for (m, &dim) in dims.iter().enumerate() {
         if m == mode {
+            out[m] = 0;
             continue;
         }
-        out[m] = (rest % dims[m] as u64) as u32;
-        rest /= dims[m] as u64;
+        out[m] = (rest % dim as u64) as u32;
+        rest /= dim as u64;
     }
     debug_assert_eq!(rest, 0, "fiber id out of range");
-    out
 }
 
 /// Encode the mode-`mode` fiber id of a full multi-index.

@@ -3,15 +3,57 @@
 //! The global tensor is split along mode 0 into K contiguous row blocks,
 //! one per client/institution. Mode-0 indices are re-based so each local
 //! tensor is self-contained; `row_offset` maps back to global patient ids.
+//!
+//! [`partition_shared`] wraps each shard in an `Arc<ShardData>` — the
+//! tensor plus all per-mode fiber indices, built **once** and immutably
+//! shared. Clients hold a view of this data plane instead of a deep copy,
+//! so the thread-per-client driver shares one read-only shard per site
+//! across threads.
 
+use std::sync::Arc;
+
+use super::fiber::ModeIndices;
 use super::SparseTensor;
 
-/// One client's shard.
+/// One client's shard (raw partition output: tensor + global offset).
 #[derive(Debug, Clone)]
 pub struct Shard {
     pub tensor: SparseTensor,
     /// global patient-row offset of local row 0
     pub row_offset: usize,
+}
+
+/// The immutable per-site data plane: one shard's tensor with every
+/// per-mode [`FiberIndex`](super::fiber::FiberIndex) pre-built. Shared
+/// across execution paths via `Arc` — `ClientState` holds a reference,
+/// never a copy, and the parallel driver's threads all read the same
+/// allocation.
+#[derive(Debug)]
+pub struct ShardData {
+    pub tensor: SparseTensor,
+    /// per-mode fiber indices, built once at load
+    pub indices: ModeIndices,
+    /// global patient-row offset of local row 0
+    pub row_offset: usize,
+}
+
+impl ShardData {
+    /// Build the data plane for one shard (tensor + all fiber indices).
+    pub fn new(tensor: SparseTensor, row_offset: usize) -> Self {
+        let indices = ModeIndices::build(&tensor);
+        ShardData { tensor, indices, row_offset }
+    }
+
+    /// Lift a raw [`Shard`] into the shared data plane.
+    pub fn from_shard(shard: Shard) -> Self {
+        Self::new(shard.tensor, shard.row_offset)
+    }
+}
+
+/// [`partition_mode0`] + fiber-index construction, each shard wrapped in
+/// an `Arc` for zero-copy sharing across clients and threads.
+pub fn partition_shared(t: &SparseTensor, k: usize) -> Vec<Arc<ShardData>> {
+    partition_mode0(t, k).into_iter().map(|s| Arc::new(ShardData::from_shard(s))).collect()
 }
 
 /// Split `t` into `k` shards of (near-)equal patient rows.
@@ -123,6 +165,22 @@ mod tests {
         assert_eq!(shards[0].tensor.nnz(), data.tensor.nnz());
         assert_eq!(shards[0].tensor.idx, data.tensor.idx);
         assert_eq!(shards[0].row_offset, 0);
+    }
+
+    #[test]
+    fn partition_shared_builds_indices_once_per_shard() {
+        let data = SynthConfig::tiny(9).generate();
+        let shards = partition_shared(&data.tensor, 3);
+        assert_eq!(shards.len(), 3);
+        for sh in &shards {
+            assert_eq!(sh.indices.per_mode.len(), sh.tensor.order());
+            assert_eq!(sh.indices.mode(0).len(), sh.tensor.nnz());
+            // Arc clones share the same allocation — the whole point
+            let view = sh.clone();
+            assert!(std::sync::Arc::ptr_eq(sh, &view));
+        }
+        let total: usize = shards.iter().map(|s| s.tensor.nnz()).sum();
+        assert_eq!(total, data.tensor.nnz());
     }
 
     #[test]

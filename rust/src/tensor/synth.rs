@@ -12,6 +12,7 @@
 //! the phenotype-recovery analogue of the paper's Table IV case study.
 
 use super::SparseTensor;
+use crate::data::Dataset;
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
@@ -42,15 +43,10 @@ pub struct SynthConfig {
     pub seed: u64,
 }
 
-/// A generated dataset: the tensor plus planted ground-truth factors.
-#[derive(Debug, Clone)]
-pub struct SynthData {
-    pub tensor: SparseTensor,
-    /// planted factors, one `I_m x R` matrix per mode (support indicators,
-    /// column-normalized)
-    pub truth: Vec<Mat>,
-    pub config: SynthConfig,
-}
+/// Legacy name for the run currency, which now lives in
+/// [`crate::data`]: generated datasets carry the planted ground-truth
+/// factors in `truth`, loaded datasets leave it empty.
+pub type SynthData = Dataset;
 
 impl SynthConfig {
     /// Paper's "Synthetic" dataset analogue (scaled: 4096 x 256 x 256).
@@ -114,12 +110,6 @@ impl SynthConfig {
         }
     }
 
-    /// Look up a dataset by CLI name (thin wrapper over
-    /// [`crate::registry::datasets`]).
-    pub fn by_name(name: &str) -> anyhow::Result<Self> {
-        crate::registry::datasets().resolve(name)
-    }
-
     pub fn with_values(mut self, v: ValueKind) -> Self {
         self.value_kind = v;
         self
@@ -131,7 +121,7 @@ impl SynthConfig {
     }
 
     /// Generate the dataset.
-    pub fn generate(&self) -> SynthData {
+    pub fn generate(&self) -> Dataset {
         let d_order = self.dims.len();
         let rng = Rng::new(self.seed);
 
@@ -235,7 +225,7 @@ impl SynthConfig {
             })
             .collect();
 
-        SynthData { tensor: t, truth, config: self.clone() }
+        Dataset { tensor: t, truth }
     }
 }
 
@@ -293,10 +283,11 @@ mod tests {
 
     #[test]
     fn truth_factors_are_column_normalized_supports() {
-        let d = SynthConfig::tiny(4).generate();
+        let cfg = SynthConfig::tiny(4);
+        let d = cfg.generate();
         for (m, a) in d.truth.iter().enumerate() {
-            assert_eq!(a.rows, d.config.dims[m]);
-            assert_eq!(a.cols, d.config.rank);
+            assert_eq!(a.rows, cfg.dims[m]);
+            assert_eq!(a.cols, cfg.rank);
             for r in 0..a.cols {
                 let n: f32 = (0..a.rows).map(|i| a.at(i, r) * a.at(i, r)).sum();
                 assert!((n - 1.0).abs() < 1e-4, "col {r} norm {n}");
@@ -320,7 +311,7 @@ mod tests {
         assert_eq!(SynthConfig::mimic_like().dims, vec![4352, 320, 320]);
         assert_eq!(SynthConfig::cms_like().dims, vec![8192, 384, 384]);
         assert_eq!(SynthConfig::mimic_full().dims[0], 34_272);
-        assert!(SynthConfig::by_name("nope").is_err());
+        assert!(crate::registry::datasets().resolve("nope").is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use cidertf::engine::client::ClientState;
 use cidertf::losses::Loss;
 use cidertf::runtime::native::NativeBackend;
-use cidertf::tensor::partition::partition_mode0;
+use cidertf::tensor::partition::partition_shared;
 use cidertf::tensor::synth::SynthConfig;
 
 struct CountingAlloc;
@@ -45,7 +45,7 @@ static COUNTER: CountingAlloc = CountingAlloc;
 #[test]
 fn local_step_steady_state_is_allocation_free() {
     let data = SynthConfig::tiny(11).generate();
-    let shards = partition_mode0(&data.tensor, 1);
+    let shards = partition_shared(&data.tensor, 1);
     // momentum on: the momentum path must also be in place
     let mut c = ClientState::new(0, shards[0].clone(), 4, 0.2, 123, 16, 32, true, false);
     let mut backend = NativeBackend::new();

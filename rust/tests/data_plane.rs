@@ -1,0 +1,210 @@
+//! Data-plane integration tests: loader round-trips (.tns / .bin / CSV),
+//! the `file:`/`csv:` dataset sources through the registry, and — the
+//! acceptance criterion — a file-backed dataset riding the full
+//! spec → Session → checkpoint → resume pipeline bit-identically.
+
+use std::path::PathBuf;
+
+use cidertf::data::{bin, events, tns, DatasetSource};
+use cidertf::engine::session::Session;
+use cidertf::engine::spec::ExperimentSpec;
+use cidertf::engine::{AlgoConfig, TrainOutcome};
+use cidertf::losses::Loss;
+use cidertf::net::driver::DriverKind;
+use cidertf::registry;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::tensor::synth::{SynthConfig, ValueKind};
+use cidertf::tensor::SparseTensor;
+
+fn tmp_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cidertf_data_plane_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bits(t: &SparseTensor) -> Vec<u32> {
+    t.vals.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn tns_and_bin_round_trip_a_generated_tensor_exactly() {
+    let t = SynthConfig::tiny(33).with_values(ValueKind::Gaussian).generate().tensor;
+    let dir = tmp_dir();
+
+    let tns_path = dir.join("roundtrip.tns");
+    tns::write_tns(&tns_path, &t).unwrap();
+    let back = tns::load_tns(&tns_path).unwrap();
+    assert_eq!(back.dims, t.dims);
+    assert_eq!(back.nnz(), t.nnz());
+    assert_eq!(back.idx, t.idx);
+    assert_eq!(bits(&back), bits(&t), ".tns values must round-trip exactly");
+
+    let bin_path = dir.join("roundtrip.bin");
+    bin::write_bin(&bin_path, &t).unwrap();
+    let back = bin::load_bin(&bin_path).unwrap();
+    assert_eq!(back.dims, t.dims);
+    assert_eq!(back.idx, t.idx);
+    assert_eq!(bits(&back), bits(&t), ".bin values must round-trip exactly");
+}
+
+#[test]
+fn file_source_loads_through_the_registry() {
+    let t = SynthConfig::tiny(34).generate().tensor;
+    let dir = tmp_dir();
+    let path = dir.join("registry.tns");
+    tns::write_tns(&path, &t).unwrap();
+    let src = registry::datasets().resolve(&format!("file:{}", path.display())).unwrap();
+    let data = src.load(ValueKind::Binary).unwrap();
+    assert_eq!(data.tensor.dims, t.dims);
+    assert_eq!(data.tensor.nnz(), t.nnz());
+    assert!(data.truth.is_empty(), "loaded datasets have no planted truth");
+}
+
+#[test]
+fn checked_in_example_tns_loads() {
+    // the README example must actually work from a repo checkout
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/data/tiny.tns");
+    let t = tns::load_tns(&path).unwrap();
+    assert_eq!(t.dims, vec![4, 3, 2]);
+    assert!(t.nnz() >= 4);
+}
+
+fn file_spec(dataset: &str, epochs: usize) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::builder(dataset, Loss::Logit, AlgoConfig::cidertf(2))
+        .k(2)
+        .rank(4)
+        .fiber_samples(16)
+        .gamma(0.5)
+        .iters_per_epoch(30)
+        .epochs(epochs)
+        .eval_batch(32)
+        .driver(DriverKind::Sim)
+        .build()
+        .unwrap();
+    spec.backend = "native".to_string();
+    spec
+}
+
+#[test]
+fn file_dataset_rides_spec_session_checkpoint_resume_bit_identically() {
+    let dir = tmp_dir();
+    let tns_path = dir.join("e2e.tns");
+    let t = SynthConfig::tiny(21).generate().tensor;
+    tns::write_tns(&tns_path, &t).unwrap();
+    let dataset = format!("file:{}", tns_path.display());
+
+    // spec JSON round-trips the loader string
+    let spec = file_spec(&dataset, 4);
+    let back = ExperimentSpec::from_json_str(&spec.to_json().to_pretty_string()).unwrap();
+    assert_eq!(back, spec);
+
+    // the spec materializes the file, not a generator
+    let data = spec.dataset_data().unwrap();
+    assert_eq!(data.tensor.dims, t.dims);
+    assert_eq!(data.tensor.nnz(), t.nnz());
+
+    // uninterrupted reference run
+    let mut backend = NativeBackend::new();
+    let full: TrainOutcome =
+        Session::new(spec.clone()).run_on(&data, &mut backend, None).unwrap();
+
+    // truncated run with checkpointing...
+    let ckpt = dir.join("e2e.ckpt.json");
+    let mut backend = NativeBackend::new();
+    Session::new(file_spec(&dataset, 2))
+        .checkpoint_every(&ckpt, 1)
+        .run_on(&data, &mut backend, None)
+        .unwrap();
+
+    // ...resumed via Session::run(), which re-loads the file from the
+    // checkpointed spec through the dataset registry
+    let mut resumed = Session::resume_from(&ckpt).unwrap();
+    assert_eq!(resumed.spec().dataset, dataset, "loader spec survives the checkpoint");
+    resumed.spec_mut().epochs = 4;
+    let out = resumed.run().unwrap();
+
+    for (m, (a, b)) in full.factors.mats.iter().zip(out.factors.mats.iter()).enumerate() {
+        assert_eq!(a.data, b.data, "file-dataset resume diverged (mode {m})");
+    }
+    assert_eq!(full.record.points.len(), out.record.points.len());
+    for (p, q) in full.record.points.iter().zip(out.record.points.iter()) {
+        assert_eq!(p.loss, q.loss);
+        assert_eq!(p.bytes, q.bytes);
+        assert_eq!(p.time_s, q.time_s, "virtual clock diverged");
+    }
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn resume_rejects_a_changed_data_file() {
+    // regenerating the file: source after checkpointing must fail loudly,
+    // not silently continue on different data
+    let dir = tmp_dir();
+    let tns_path = dir.join("mutates.tns");
+    tns::write_tns(&tns_path, &SynthConfig::tiny(40).generate().tensor).unwrap();
+    let dataset = format!("file:{}", tns_path.display());
+    let ckpt = dir.join("mutates.ckpt.json");
+    let mut backend = NativeBackend::new();
+    let data = file_spec(&dataset, 1).dataset_data().unwrap();
+    Session::new(file_spec(&dataset, 1))
+        .checkpoint_every(&ckpt, 1)
+        .run_on(&data, &mut backend, None)
+        .unwrap();
+
+    // swap the file for a tensor with one extra entry (nnz guaranteed
+    // to differ)
+    let mut changed = SynthConfig::tiny(40).generate().tensor;
+    let occupied = changed.cell_set();
+    let free = (0..changed.n_cells() as u64)
+        .find(|&lin| !occupied.contains(&lin))
+        .expect("tiny tensor is sparse");
+    let idx = cidertf::tensor::synth::delinearize(&changed.dims, free);
+    changed.push(&idx, 1.0);
+    tns::write_tns(&tns_path, &changed).unwrap();
+    let mut resumed = Session::resume_from(&ckpt).unwrap();
+    resumed.spec_mut().epochs = 2;
+    let err = resumed.run();
+    assert!(err.is_err(), "resume on a changed data file must error");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("data source changed"), "{msg}");
+
+    // same nnz, one value edited: caught by the content fingerprint
+    let mut same_nnz = SynthConfig::tiny(40).generate().tensor;
+    same_nnz.vals[0] = 2.0;
+    tns::write_tns(&tns_path, &same_nnz).unwrap();
+    let mut resumed = Session::resume_from(&ckpt).unwrap();
+    resumed.spec_mut().epochs = 2;
+    let err = resumed.run();
+    assert!(err.is_err(), "resume on a same-nnz edit must error");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("fingerprint"), "{msg}");
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn csv_dataset_trains_through_the_session_pipeline() {
+    let dir = tmp_dir();
+    let csv_path = dir.join("events.csv");
+    // 6 patients x 3 codes x 2 weeks of events, some repeated
+    let mut rows = String::from("patient,code,time\n");
+    for p in 0..6 {
+        for (c, tm) in [(0, 0), (1, 0), (p % 3, 1)] {
+            rows.push_str(&format!("p{p},dx{c},w{tm}\n"));
+        }
+    }
+    std::fs::write(&csv_path, rows).unwrap();
+
+    let (t, vocabs) = events::load_events_csv(&csv_path).unwrap();
+    assert_eq!(t.dims, vec![6, 3, 2]);
+    assert_eq!(vocabs.patients.len(), 6);
+
+    let dataset = format!("csv:{}", csv_path.display());
+    let spec = file_spec(&dataset, 1);
+    let data = spec.dataset_data().unwrap();
+    assert_eq!(data.tensor.dims, vec![6, 3, 2]);
+    // logit runs binarize repeated events to {0,1} indicators
+    assert!(data.tensor.vals.iter().all(|&v| v == 1.0));
+    let mut backend = NativeBackend::new();
+    let out = Session::new(spec).run_on(&data, &mut backend, None).unwrap();
+    assert!(out.record.final_loss().is_finite());
+}

@@ -297,6 +297,9 @@ fn prop_topk_decode_is_subset_and_largest() {
 
 #[test]
 fn prop_fiber_gather_matches_bruteforce() {
+    // The CSF-layout index must be bit-identical to a reference COO scan
+    // for random tensors — dims (order 3-4, per-mode sizes), density
+    // (nnz), and the queried mode are all generated.
     forall(
         "fiber-gather",
         30,
@@ -324,6 +327,75 @@ fn prop_fiber_gather_matches_bruteforce() {
                 if out != want {
                     return Err(format!("mode {mode} gather mismatch"));
                 }
+                // per-fiber accessors agree with the same reference scan
+                for &f in &fibers {
+                    let mut want_pairs: Vec<(u32, u32)> = (0..t.nnz())
+                        .filter(|&e| encode_fiber(&t.dims, mode, t.entry(e)) == f)
+                        .map(|e| (t.entry(e)[mode], t.vals[e].to_bits()))
+                        .collect();
+                    want_pairs.sort_unstable();
+                    let mut got_pairs: Vec<(u32, u32)> =
+                        fi.fiber_entries(f).map(|(r, v)| (r, v.to_bits())).collect();
+                    got_pairs.sort_unstable();
+                    if got_pairs != want_pairs {
+                        return Err(format!("mode {mode} fiber {f} entries mismatch"));
+                    }
+                    if fi.fiber_nnz(f) != want_pairs.len() {
+                        return Err(format!("mode {mode} fiber {f} nnz mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fiber_gather_sorted_layout_matches_bruteforce() {
+    // Same invariant with mode sizes large enough that the fiber-id space
+    // exceeds the dense-offsets cap, forcing the binary-searched layout.
+    forall(
+        "fiber-gather-sorted",
+        10,
+        |g| {
+            let dims = vec![2 + g.below(4), 1500 + g.below(2000), 1500 + g.below(2000)];
+            let mut t = SparseTensor::new(dims.clone());
+            let nnz = 5 + g.below(60);
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..nnz {
+                let idx: Vec<u32> = dims.iter().map(|&dm| g.below(dm) as u32).collect();
+                if seen.insert(t.linearize(&idx)) {
+                    t.push(&idx, g.normal_f32() + 0.01);
+                }
+            }
+            t
+        },
+        |t, check_rng| {
+            let fi = FiberIndex::build(t, 0);
+            if fi.is_dense() {
+                return Err("expected the sorted layout for a huge, sparse fiber-id space".into());
+            }
+            let i_dim = t.dims[0];
+            // query a mix of occupied and empty fibers
+            let mut fibers: Vec<u64> =
+                (0..t.nnz().min(8)).map(|e| encode_fiber(&t.dims, 0, t.entry(e))).collect();
+            for _ in 0..4 {
+                fibers.push(check_rng.below(t.n_fibers(0)) as u64);
+            }
+            let s = fibers.len();
+            let mut out = vec![f32::NAN; i_dim * s];
+            fi.gather_slice(&fibers, i_dim, &mut out);
+            let mut want = vec![0.0f32; i_dim * s];
+            for e in 0..t.nnz() {
+                let fid = encode_fiber(&t.dims, 0, t.entry(e));
+                for (col, &f) in fibers.iter().enumerate() {
+                    if f == fid {
+                        want[t.entry(e)[0] as usize * s + col] = t.vals[e];
+                    }
+                }
+            }
+            if out != want {
+                return Err("sorted-layout gather mismatch".into());
             }
             Ok(())
         },
