@@ -82,6 +82,70 @@ impl RunRecord {
         w.flush()
     }
 
+    /// Parse the [`RunRecord::to_json`] layout back. Used by the sweep
+    /// engine's resumability: a finished run's record file is reloaded
+    /// instead of re-running the experiment, so the parse must be exact
+    /// for every field `to_json` writes (loss values ride f64 shortest
+    /// round-trip decimals; byte counts stay below 2^53). JSON has no
+    /// NaN, so a diverged run's loss serializes as `null` — parse it
+    /// back to NaN rather than rejecting the record (a diverged cell is
+    /// *finished*; resume must not re-run it forever).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let nan_or_f64 = |pj: &Json, key: &str| -> anyhow::Result<f64> {
+            match pj.get(key) {
+                Some(Json::Null) => Ok(f64::NAN),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("invalid point '{key}'")),
+                None => anyhow::bail!("missing point '{key}'"),
+            }
+        };
+        let mut points = Vec::new();
+        for pj in j.req_array("points")? {
+            points.push(MetricPoint {
+                epoch: pj.req_usize("epoch")?,
+                iter: pj.req_usize("iter")?,
+                time_s: pj.req_f64("time_s")?,
+                loss: nan_or_f64(pj, "loss")?,
+                bytes: pj.req_f64("bytes")? as u64,
+                // `fms: None` omits the key; `Some(NaN)` writes null —
+                // keep the distinction so re-serialization is identical
+                fms: match pj.get("fms") {
+                    None => None,
+                    Some(Json::Null) => Some(f64::NAN),
+                    Some(v) => Some(
+                        v.as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("invalid point 'fms'"))?,
+                    ),
+                },
+            });
+        }
+        let total = CommLedger {
+            bytes: j.req_f64("total_bytes")? as u64,
+            messages: j.req_f64("messages")? as u64,
+            triggered: j.req_f64("triggered")? as u64,
+            suppressed: j.req_f64("suppressed")? as u64,
+        };
+        let net = NetStats {
+            delivered: j.req_f64("delivered")? as u64,
+            dropped: j.req_f64("dropped")? as u64,
+            stale: j.req_f64("stale")? as u64,
+            offline_rounds: j.req_f64("offline_rounds")? as u64,
+        };
+        Ok(RunRecord {
+            algo: j.req_str("algo")?.to_string(),
+            dataset: j.req_str("dataset")?.to_string(),
+            loss: j.req_str("loss")?.to_string(),
+            topology: j.req_str("topology")?.to_string(),
+            k: j.req_usize("k")?,
+            tau: j.req_usize("tau")?,
+            points,
+            total,
+            net,
+            wall_s: j.req_f64("wall_s")?,
+        })
+    }
+
     pub fn to_json(&self) -> Json {
         let points: Vec<Json> = self
             .points
@@ -165,5 +229,37 @@ mod tests {
         assert_eq!(j.req_str("algo").unwrap(), "cidertf");
         assert_eq!(j.req_array("points").unwrap().len(), 3);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_json_parse_back_is_exact() {
+        let mut r = rec();
+        r.total.bytes = 123456;
+        r.total.messages = 78;
+        r.total.triggered = 60;
+        r.total.suppressed = 18;
+        r.net.delivered = 99;
+        r.net.dropped = 3;
+        r.points[1].loss = 0.1234567891234567; // exercise shortest-round-trip
+        // a diverged run: NaN serializes as null and must parse back
+        // (resume depends on it), re-serializing identically
+        r.points[2].loss = f64::NAN;
+        let text = r.to_json().to_string();
+        let back = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.algo, r.algo);
+        assert_eq!(back.k, r.k);
+        assert_eq!(back.tau, r.tau);
+        assert_eq!(back.total.bytes, r.total.bytes);
+        assert_eq!(back.total.suppressed, r.total.suppressed);
+        assert_eq!(back.net.delivered, r.net.delivered);
+        assert_eq!(back.points.len(), r.points.len());
+        assert!(back.points[2].loss.is_nan(), "null loss must parse to NaN");
+        for (a, b) in back.points.iter().zip(r.points.iter()).take(2) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.fms, b.fms);
+        }
+        // serializing the parsed record again is byte-identical
+        assert_eq!(back.to_json().to_string(), text);
     }
 }

@@ -282,19 +282,7 @@ impl ExperimentSpec {
     /// Serialize (schema [`SPEC_SCHEMA`]). Exact round-trip: floats use
     /// shortest-round-trip decimal, u64 seeds ride as strings.
     pub fn to_json(&self) -> Json {
-        let algo = Json::obj(vec![
-            ("name", Json::Str(self.algo.name.clone())),
-            ("compressor", Json::Str(self.algo.compressor.spec_string())),
-            ("block_random", Json::Bool(self.algo.block_random)),
-            ("tau", Json::Num(self.algo.tau as f64)),
-            ("event_triggered", Json::Bool(self.algo.event_triggered)),
-            (
-                "momentum",
-                self.algo.momentum.map(Json::Num).unwrap_or(Json::Null),
-            ),
-            ("error_feedback", Json::Bool(self.algo.error_feedback)),
-            ("rho", Json::Num(self.algo.rho)),
-        ]);
+        let algo = algo_to_json(&self.algo);
         Json::obj(vec![
             ("schema", Json::Str(SPEC_SCHEMA.to_string())),
             ("dataset", Json::Str(self.dataset.clone())),
@@ -364,43 +352,7 @@ impl ExperimentSpec {
         let aj = j
             .get("algo")
             .ok_or_else(|| anyhow::anyhow!("missing 'algo' object"))?;
-        aj.ensure_known_keys(
-            "algo",
-            &[
-                "name",
-                "compressor",
-                "block_random",
-                "tau",
-                "event_triggered",
-                "momentum",
-                "error_feedback",
-                "rho",
-            ],
-        )?;
-        let algo = AlgoConfig {
-            name: aj.req_str("name")?.to_string(),
-            compressor: crate::compress::Compressor::by_name(aj.req_str("compressor")?)?,
-            block_random: aj
-                .get("block_random")
-                .and_then(Json::as_bool)
-                .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.block_random'"))?,
-            tau: aj.req_usize("tau")?,
-            event_triggered: aj
-                .get("event_triggered")
-                .and_then(Json::as_bool)
-                .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.event_triggered'"))?,
-            momentum: match aj.get("momentum") {
-                None | Some(Json::Null) => None,
-                Some(v) => Some(v.as_f64().ok_or_else(|| {
-                    anyhow::anyhow!("invalid 'algo.momentum' (number or null expected)")
-                })?),
-            },
-            error_feedback: aj
-                .get("error_feedback")
-                .and_then(Json::as_bool)
-                .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.error_feedback'"))?,
-            rho: aj.req_f64("rho")?,
-        };
+        let algo = algo_from_json(aj)?;
         let fault = match j.get("network") {
             None | Some(Json::Null) => None,
             Some(fj) => Some(FaultConfig::from_json(fj)?),
@@ -472,6 +424,63 @@ pub(crate) fn fs_component(s: &str) -> String {
     s.chars()
         .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '-' { c } else { '_' })
         .collect()
+}
+
+/// Serialize an [`AlgoConfig`] in the spec-JSON layout (shared between
+/// [`ExperimentSpec::to_json`] and the sweep-spec algo axis).
+pub(crate) fn algo_to_json(algo: &crate::engine::AlgoConfig) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(algo.name.clone())),
+        ("compressor", Json::Str(algo.compressor.spec_string())),
+        ("block_random", Json::Bool(algo.block_random)),
+        ("tau", Json::Num(algo.tau as f64)),
+        ("event_triggered", Json::Bool(algo.event_triggered)),
+        ("momentum", algo.momentum.map(Json::Num).unwrap_or(Json::Null)),
+        ("error_feedback", Json::Bool(algo.error_feedback)),
+        ("rho", Json::Num(algo.rho)),
+    ])
+}
+
+/// Parse the [`algo_to_json`] layout back into an [`AlgoConfig`].
+/// Strict: unknown keys error with a did-you-mean hint.
+pub(crate) fn algo_from_json(aj: &Json) -> anyhow::Result<crate::engine::AlgoConfig> {
+    aj.ensure_known_keys(
+        "algo",
+        &[
+            "name",
+            "compressor",
+            "block_random",
+            "tau",
+            "event_triggered",
+            "momentum",
+            "error_feedback",
+            "rho",
+        ],
+    )?;
+    Ok(crate::engine::AlgoConfig {
+        name: aj.req_str("name")?.to_string(),
+        compressor: crate::compress::Compressor::by_name(aj.req_str("compressor")?)?,
+        block_random: aj
+            .get("block_random")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.block_random'"))?,
+        tau: aj.req_usize("tau")?,
+        event_triggered: aj
+            .get("event_triggered")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.event_triggered'"))?,
+        momentum: match aj.get("momentum") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("invalid 'algo.momentum' (number or null expected)")
+            })?),
+        },
+        error_feedback: aj
+            .get("error_feedback")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid 'algo.error_feedback'"))?,
+        rho: aj.req_f64("rho")?,
+    })
 }
 
 /// Fluent builder over [`ExperimentSpec`] (start with

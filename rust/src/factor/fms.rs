@@ -83,7 +83,18 @@ pub fn fms_with_matching(a: &FactorSet, b: &FactorSet) -> (f64, Vec<usize>) {
             pairs.push((r, s));
         }
     }
-    pairs.sort_by(|&(r1, s1), &(r2, s2)| sim[r2][s2].partial_cmp(&sim[r1][s1]).unwrap());
+    // descending by similarity; NaN entries (a degenerate factor poisons
+    // whole rows/columns of `sim`) sort last instead of panicking, so a
+    // diverged run still gets matched on its finite components first
+    pairs.sort_by(|&(r1, s1), &(r2, s2)| {
+        let (x, y) = (sim[r1][s1], sim[r2][s2]);
+        match (x.is_nan(), y.is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => y.total_cmp(&x),
+        }
+    });
     let mut used_r = vec![false; r_dim];
     let mut used_s = vec![false; sim[0].len()];
     let mut matching = vec![usize::MAX; r_dim];
@@ -180,6 +191,29 @@ mod tests {
         }
         let s = fms(&a, &b);
         assert!(s < 0.95 && s > 0.3, "fms {s}");
+    }
+
+    #[test]
+    fn nan_poisoned_factors_do_not_panic() {
+        // regression: a NaN similarity entry used to panic the greedy
+        // pair sort via partial_cmp().unwrap()
+        let a = random_factors(&[10, 8, 6], 3, 11);
+        let mut b = a.clone();
+        for i in 0..b.mats[1].rows {
+            *b.mats[1].at_mut(i, 2) = f32::NAN; // poison one component
+        }
+        let sim = similarity_matrix(&a, &b);
+        assert!(sim.iter().any(|row| row.iter().any(|v| v.is_nan())));
+        let (_, matching) = fms_with_matching(&a, &b);
+        // every component still gets a one-to-one match, and the two
+        // clean components are matched to themselves (finite pairs win
+        // before any NaN pair is considered)
+        assert_eq!(matching.len(), 3);
+        let mut seen = matching.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(matching[0], 0);
+        assert_eq!(matching[1], 1);
     }
 
     #[test]

@@ -44,11 +44,19 @@ impl FactorSet {
             .collect()
     }
 
-    /// Indices of the top-`k` components by λ weight (descending).
+    /// Indices of the top-`k` components by λ weight (descending). A
+    /// degenerate factor (e.g. NaN from an exploded logit run) must not
+    /// panic phenotype extraction at the end of an otherwise-finished
+    /// sweep: NaN weights sort *last*, never first, never abort.
     pub fn top_components(&self, k: usize) -> Vec<usize> {
         let lw = self.lambda_weights();
         let mut order: Vec<usize> = (0..lw.len()).collect();
-        order.sort_by(|&a, &b| lw[b].partial_cmp(&lw[a]).unwrap());
+        order.sort_by(|&a, &b| match (lw[a].is_nan(), lw[b].is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => lw[b].total_cmp(&lw[a]),
+        });
         order.truncate(k);
         order
     }
@@ -146,6 +154,22 @@ mod tests {
         assert_eq!(top[0], 1);
         let lw = f.lambda_weights();
         assert!(lw[top[0]] >= lw[top[1]]);
+    }
+
+    #[test]
+    fn top_components_nan_lambda_sorts_last_not_panics() {
+        // regression: a NaN λ weight used to panic partial_cmp().unwrap()
+        let mut f = small_factors();
+        for i in 0..f.mats[0].rows {
+            *f.mats[0].at_mut(i, 0) = f32::NAN; // poison component 0
+        }
+        let lw = f.lambda_weights();
+        assert!(lw[0].is_nan());
+        let top = f.top_components(3);
+        assert_eq!(top.len(), 3);
+        // the poisoned component ranks last, after every finite weight
+        assert_eq!(top[2], 0, "NaN component must sort last: {top:?}");
+        assert!(top[0] != 0 && top[1] != 0);
     }
 
     #[test]

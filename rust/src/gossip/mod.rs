@@ -92,10 +92,18 @@ impl EstimateState {
     /// Initialize from the shared init `A[0]` (paper: `Â^j[0] = A[0]` —
     /// consistent because every client starts from the same factors).
     /// `init[mode]` is `None` for modes that never travel (patient mode).
+    ///
+    /// `neighbors` may already list `client` (a self-loop topology, or a
+    /// caller that includes the client in its own neighborhood); peers
+    /// are deduplicated so `slot_of` can never misalign with the
+    /// estimate `mats` slots.
     pub fn new(client: usize, neighbors: &[usize], init: &[Option<Mat>]) -> Self {
         let mut peers = neighbors.to_vec();
         peers.push(client);
         peers.sort_unstable();
+        // sort + dedup leaves the slot ids strictly increasing and
+        // unique, so every id maps to exactly one estimate slot
+        peers.dedup();
         let self_slot = peers.iter().position(|&p| p == client).unwrap();
         let mats = peers.iter().map(|_| init.to_vec()).collect();
         EstimateState { peers, mats, self_slot }
@@ -208,6 +216,24 @@ mod tests {
         assert_eq!(st.peers, vec![0, 1, 2]);
         assert_eq!(st.estimate(0, 1).data, mat(3, 2, 1.0).data);
         assert_eq!(st.self_estimate(2).data, mat(4, 2, 1.0).data);
+    }
+
+    #[test]
+    fn self_loop_topology_deduplicates_peer_slots() {
+        // regression: a neighbor list that already contains the client
+        // (self-loop topology) used to leave a duplicate id in `peers`,
+        // misaligning slot_of with the estimate mats slots
+        let mut st = EstimateState::new(1, &[0, 1, 2], &init3());
+        assert_eq!(st.peers, vec![0, 1, 2]);
+        // one slot per peer, and a delta addressed to a peer *after* the
+        // client lands in the right slot
+        let delta = Compressor::None.compress(&mat(3, 2, 0.5));
+        st.apply_delta(2, 1, &delta);
+        assert!(st.estimate(2, 1).data.iter().all(|&v| (v - 1.5).abs() < 1e-6));
+        // the client's own estimate is untouched and consistent
+        assert!(st.self_estimate(1).data.iter().all(|&v| v == 1.0));
+        st.apply_delta(1, 1, &delta);
+        assert!(st.self_estimate(1).data.iter().all(|&v| (v - 1.5).abs() < 1e-6));
     }
 
     #[test]

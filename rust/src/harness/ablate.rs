@@ -2,77 +2,117 @@
 //! "ablation benches for the design choices"): consensus step size ϱ, the
 //! local-round period τ, and the event-trigger schedule (λ₀ multiplier,
 //! growth factor α) — none of which the paper sweeps explicitly.
+//!
+//! Each ablation is one [`SweepSpec`] fed to the parallel sweep executor
+//! (`results/ablate_rho/`, `ablate_tau/`, `ablate_trigger/`).
 
-use super::{summarize, Ctx, SUMMARY_HEADER};
+use super::Ctx;
 use crate::engine::AlgoConfig;
 use crate::losses::Loss;
+use crate::sweep::{SweepSpec, TriggerPoint};
 use crate::util::benchkit::Table;
 
+/// The ϱ grid (CHOCO-style estimates tolerate ϱ <= 1).
+pub const RHOS: [f64; 6] = [0.1, 0.3, 0.5, 0.7, 0.9, 1.0];
+
+/// The τ grid beyond the paper's {2,4,6,8}.
+pub const TAUS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// The (λ₀ scale, α) grid; scale 0 = trigger-disabled baseline.
+pub const TRIGGERS: [(f64, f64); 6] =
+    [(0.0, 1.0), (0.5, 1.3), (1.0, 1.0), (1.0, 1.3), (1.0, 2.0), (4.0, 1.3)];
+
 /// ϱ sweep: too small mixes slowly, too large overshoots the compressed
-/// consensus (CHOCO-style estimates tolerate ϱ <= 1).
-pub fn rho_sweep(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<()> {
+/// consensus — ϱ rides the algo axis (it is an `AlgoConfig` field).
+pub fn rho_sweep_spec(ctx: &Ctx, k: usize, tau: usize) -> SweepSpec {
     let dataset = ctx.profile.datasets()[0];
-    let loss = Loss::Logit;
-    let data = ctx.dataset(dataset, loss)?;
-    println!("\n=== Ablation: consensus step size rho (K={k}, tau={tau}, {dataset}) ===");
-    let table = Table::new(&SUMMARY_HEADER);
-    for rho in [0.1, 0.3, 0.5, 0.7, 0.9, 1.0] {
-        let mut algo = AlgoConfig::cidertf(tau);
-        algo.rho = rho;
-        algo.name = format!("cidertf_rho{rho}");
-        let mut cfg = ctx.base_config(dataset, loss, algo);
-        cfg.k = k;
-        let out = ctx.run("ablate", &cfg, &data, None)?;
-        table.row(&summarize(&out.record));
-    }
+    let mut sweep = SweepSpec::new(ctx.sweep_base(dataset, Loss::Logit, AlgoConfig::cidertf(tau)));
+    sweep.algos = RHOS
+        .iter()
+        .map(|&rho| {
+            let mut algo = AlgoConfig::cidertf(tau);
+            algo.rho = rho;
+            algo.name = format!("cidertf_rho{rho}");
+            algo
+        })
+        .collect();
+    sweep.ks = vec![k];
+    sweep.auto_gamma = true;
+    sweep
+}
+
+/// ϱ sweep: run and print.
+pub fn rho_sweep(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<()> {
+    let sweep = rho_sweep_spec(ctx, k, tau);
+    println!(
+        "\n=== Ablation: consensus step size rho (K={k}, tau={tau}, {}) — {} runs on {} workers ===",
+        sweep.base.dataset,
+        sweep.len(),
+        ctx.workers
+    );
+    ctx.run_sweep(&sweep, "ablate_rho")?;
     Ok(())
 }
 
-/// τ sweep beyond the paper's {2,4,6,8}: the comm/convergence frontier.
-pub fn tau_sweep(ctx: &mut Ctx, k: usize) -> anyhow::Result<()> {
+/// τ sweep: the comm/convergence frontier, τ as a sweep axis.
+pub fn tau_sweep_spec(ctx: &Ctx, k: usize) -> SweepSpec {
     let dataset = ctx.profile.datasets()[0];
-    let loss = Loss::Logit;
-    let data = ctx.dataset(dataset, loss)?;
-    println!("\n=== Ablation: local-round period tau (K={k}, {dataset}) ===");
-    let table = Table::new(&SUMMARY_HEADER);
-    for tau in [1usize, 2, 4, 8, 16, 32] {
-        let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
-        cfg.k = k;
-        let out = ctx.run("ablate", &cfg, &data, None)?;
-        table.row(&summarize(&out.record));
-    }
+    let mut sweep = SweepSpec::new(ctx.sweep_base(dataset, Loss::Logit, AlgoConfig::cidertf(4)));
+    sweep.algos = vec![AlgoConfig::cidertf(4)];
+    sweep.taus = TAUS.to_vec();
+    sweep.ks = vec![k];
+    sweep.auto_gamma = true;
+    sweep
+}
+
+/// τ sweep: run and print.
+pub fn tau_sweep(ctx: &mut Ctx, k: usize) -> anyhow::Result<()> {
+    let sweep = tau_sweep_spec(ctx, k);
+    println!(
+        "\n=== Ablation: local-round period tau (K={k}, {}) — {} runs on {} workers ===",
+        sweep.base.dataset,
+        sweep.len(),
+        ctx.workers
+    );
+    ctx.run_sweep(&sweep, "ablate_tau")?;
     println!("  (expect: bytes fall ~1/tau; convergence degrades gracefully at large tau)");
     Ok(())
 }
 
-/// Event-trigger schedule sweep: λ₀ scale and growth α (paper fixes
-/// λ₀ = 1/γ and grid-searches α in [1,2]).
-pub fn trigger_sweep(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<()> {
+/// Event-trigger schedule sweep: λ₀ scale and growth α on the trigger
+/// axis (paper fixes λ₀ = 1/γ and grid-searches α in [1,2]).
+pub fn trigger_sweep_spec(ctx: &Ctx, k: usize, tau: usize) -> SweepSpec {
     let dataset = ctx.profile.datasets()[0];
-    let loss = Loss::Logit;
-    let data = ctx.dataset(dataset, loss)?;
-    println!("\n=== Ablation: event-trigger schedule (K={k}, tau={tau}, {dataset}) ===");
+    let mut sweep = SweepSpec::new(ctx.sweep_base(dataset, Loss::Logit, AlgoConfig::cidertf(tau)));
+    sweep.ks = vec![k];
+    sweep.auto_gamma = true;
+    sweep.triggers = TRIGGERS
+        .iter()
+        .map(|&(lambda0_scale, alpha)| TriggerPoint { lambda0_scale, alpha })
+        .collect();
+    sweep
+}
+
+/// Trigger sweep: run and print the suppression table.
+pub fn trigger_sweep(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<()> {
+    let sweep = trigger_sweep_spec(ctx, k, tau);
+    println!(
+        "\n=== Ablation: event-trigger schedule (K={k}, tau={tau}, {}) — {} runs on {} workers ===",
+        sweep.base.dataset,
+        sweep.len(),
+        ctx.workers
+    );
+    let outcome = ctx.run_sweep(&sweep, "ablate_trigger")?;
     let table = Table::new(&["lambda0_scale", "alpha", "final_loss", "uplink", "suppressed%"]);
-    for (scale, alpha) in
-        [(0.0f64, 1.0f64), (0.5, 1.3), (1.0, 1.0), (1.0, 1.3), (1.0, 2.0), (4.0, 1.3)]
-    {
-        let mut algo = AlgoConfig::cidertf(tau);
-        algo.name = format!("cidertf_trig_s{scale}_a{alpha}");
-        if scale == 0.0 {
-            algo.event_triggered = false; // trigger disabled baseline
-        }
-        let mut cfg = ctx.base_config(dataset, loss, algo);
-        cfg.k = k;
-        cfg.trigger_lambda0_scale = scale.max(f64::MIN_POSITIVE);
-        cfg.trigger_alpha = alpha;
-        let out = ctx.run("ablate", &cfg, &data, None)?;
-        let sup = out.record.total.suppressed as f64
-            / (out.record.total.suppressed + out.record.total.triggered).max(1) as f64;
+    for ((scale, alpha), res) in TRIGGERS.iter().zip(outcome.results.iter()) {
+        let rec = &res.record;
+        let sup = rec.total.suppressed as f64
+            / (rec.total.suppressed + rec.total.triggered).max(1) as f64;
         table.row(&[
             format!("{scale}"),
             format!("{alpha}"),
-            format!("{:.3e}", out.record.final_loss()),
-            crate::util::benchkit::fmt_bytes(out.record.total.bytes as f64),
+            format!("{:.3e}", rec.final_loss()),
+            crate::util::benchkit::fmt_bytes(rec.total.bytes as f64),
             format!("{:.1}%", 100.0 * sup),
         ]);
     }

@@ -3,10 +3,14 @@
 //!
 //! This is the experiment the paper's decentralization argument implies
 //! but never runs: if gossip removes the single point of failure, how
-//! much network failure does the *protocol* absorb? The sweep grids
-//! drop rate × topology × compressor through the synchronous network
-//! simulator, adds async rows for the headline configuration, and reports
-//! every run relative to its ideal-network twin.
+//! much network failure does the *protocol* absorb? Two
+//! [`crate::sweep::SweepSpec`]s feed the parallel sweep executor: the
+//! synchronous-simulator grid
+//! (dataset × loss × compressor-variant × topology × drop rate,
+//! `results/faults_sim/`) and the async rows for the headline
+//! configuration (ideal / lossy / stragglers, `results/faults_async/`).
+//! Every run is reported relative to its ideal-network twin, grouped
+//! from the deterministic record stream — no per-cell run loop.
 //!
 //! Expected shape of the results (and what the tests assert in
 //! miniature): moderate i.i.d. loss behaves like a smaller effective
@@ -14,12 +18,13 @@
 //! collapsing, because dropped compressed deltas leave peer estimates
 //! stale, an error mode Thm. III.2's analysis already covers.
 
+use std::collections::BTreeMap;
+
 use super::Ctx;
 use crate::compress::Compressor;
 use crate::engine::metrics::RunRecord;
-use crate::engine::session::Session;
 use crate::engine::spec::ExperimentSpec;
-use crate::engine::{AlgoConfig, TrainConfig};
+use crate::engine::AlgoConfig;
 use crate::net::driver::DriverKind;
 use crate::net::sim::FaultConfig;
 use crate::topology::Topology;
@@ -29,22 +34,121 @@ use crate::util::csv::CsvWriter;
 /// Drop rates the sweep grids over (0 = ideal-network baseline).
 pub const DROP_RATES: [f64; 4] = [0.0, 0.1, 0.2, 0.4];
 
-/// Run the sweep. `k` clients, τ = `tau` local rounds.
+/// The synchronous-simulator grid as a sweep: compressor variants ride
+/// the algo axis (keeping their `cidertf_<tag>_t<τ>` names), drop rates
+/// ride the network axis (`None` = the ideal baseline).
+pub fn sim_sweep(ctx: &Ctx, k: usize, tau: usize) -> crate::sweep::SweepSpec {
+    let datasets = ctx.profile.datasets();
+    let losses = ctx.profile.losses();
+    let mut sweep = crate::sweep::SweepSpec::new(ctx.sweep_base(
+        datasets[0],
+        losses[0],
+        AlgoConfig::cidertf(tau),
+    ));
+    sweep.datasets = datasets.iter().map(|s| s.to_string()).collect();
+    sweep.losses = losses;
+    sweep.algos = vec![
+        algo_for(tau, Compressor::Sign, "sign"),
+        algo_for(tau, Compressor::None, "dense"),
+    ];
+    sweep.topologies = vec![Topology::Ring, Topology::Star];
+    sweep.networks = DROP_RATES
+        .iter()
+        .map(|&drop| (drop > 0.0).then(|| FaultConfig::lossy(drop)))
+        .collect();
+    sweep.drivers = vec![DriverKind::Sim];
+    sweep.ks = vec![k];
+    sweep.auto_gamma = true;
+    sweep
+}
+
+/// The async rows as a sweep: the headline configuration under ideal,
+/// lossy, and straggler networks (fault seeds inherit the master seed at
+/// session time, exactly as the hand-rolled loop seeded them).
+pub fn async_sweep(ctx: &Ctx, k: usize, tau: usize) -> crate::sweep::SweepSpec {
+    let datasets = ctx.profile.datasets();
+    let losses = ctx.profile.losses();
+    let mut sweep = crate::sweep::SweepSpec::new(ctx.sweep_base(
+        datasets[0],
+        losses[0],
+        AlgoConfig::cidertf(tau),
+    ));
+    sweep.datasets = datasets.iter().map(|s| s.to_string()).collect();
+    sweep.losses = losses;
+    sweep.networks =
+        vec![None, Some(FaultConfig::lossy(0.2)), Some(FaultConfig::stragglers())];
+    sweep.drivers = vec![DriverKind::Async];
+    sweep.ks = vec![k];
+    sweep.auto_gamma = true;
+    sweep
+}
+
+/// Run both sweeps. `k` clients, τ = `tau` local rounds.
 pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>> {
-    let mut records = Vec::new();
-    let topologies = [Topology::Ring, Topology::Star];
-    let compressors = [(Compressor::Sign, "sign"), (Compressor::None, "dense")];
+    let sim = sim_sweep(ctx, k, tau);
+    println!(
+        "\n=== Faults: sim grid, K={k} tau={tau} — {} runs on {} workers ===",
+        sim.len(),
+        ctx.workers
+    );
+    let sim_out = ctx.run_sweep(&sim, "faults_sim")?;
+
+    let asy = async_sweep(ctx, k, tau);
+    println!(
+        "\n=== Faults: async rows — {} runs on {} workers ===",
+        asy.len(),
+        ctx.workers
+    );
+    let asy_out = ctx.run_sweep(&asy, "faults_async")?;
+
+    report(ctx, k, tau, &sim_out, &asy_out)?;
+
+    let mut records: Vec<RunRecord> = sim_out.into_records();
+    records.extend(asy_out.into_records());
+    Ok(records)
+}
+
+/// Per (dataset, loss): print the comparison table and write the summary
+/// CSV, every run against its ideal-network twin — pure post-processing
+/// over the deterministic record stream.
+fn report(
+    ctx: &Ctx,
+    k: usize,
+    tau: usize,
+    sim_out: &crate::sweep::SweepOutcome,
+    asy_out: &crate::sweep::SweepOutcome,
+) -> anyhow::Result<()> {
+    let mut cells: Vec<(&ExperimentSpec, &RunRecord)> = Vec::new();
+    for (spec, res) in sim_out.runs.iter().zip(sim_out.results.iter()) {
+        cells.push((spec, &res.record));
+    }
+    for (spec, res) in asy_out.runs.iter().zip(asy_out.results.iter()) {
+        cells.push((spec, &res.record));
+    }
+    // ideal twin per (dataset, loss, driver, algo, topology)
+    let mut ideal: BTreeMap<TwinKey, f64> = BTreeMap::new();
+    for (spec, rec) in &cells {
+        if spec.fault.is_none() {
+            ideal.insert(twin_key(spec, rec), rec.final_loss());
+        }
+    }
 
     for dataset in ctx.profile.datasets() {
         for loss in ctx.profile.losses() {
+            let group: Vec<&(&ExperimentSpec, &RunRecord)> = cells
+                .iter()
+                .filter(|(_, r)| r.dataset == dataset && r.loss == loss.name())
+                .collect();
+            if group.is_empty() {
+                continue;
+            }
             println!("\n=== Faults: {dataset} / {} / K={k} tau={tau} ===", loss.name());
-            let data = ctx.dataset(dataset, loss)?;
             let table = Table::new(&[
                 "driver", "topology", "compressor", "drop", "final_loss", "vs_ideal",
                 "delivered", "dropped", "uplink",
             ]);
             let csv_name = format!("faults/{dataset}_{}_summary.csv", loss.name());
-            let csv_path = ctx.out_dir.join(csv_name);
+            let csv_path = ctx.out_dir.join(&csv_name);
             let mut csv = CsvWriter::create(
                 &csv_path,
                 &[
@@ -53,64 +157,30 @@ pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>
                     "uplink_bytes", "virtual_s",
                 ],
             )?;
-
-            for topo in topologies {
-                for (compressor, cname) in compressors {
-                    let mut ideal_loss = f64::NAN;
-                    for drop in DROP_RATES {
-                        let algo = algo_for(tau, compressor, cname);
-                        let mut cfg = ctx.base_config(dataset, loss, algo);
-                        cfg.k = k;
-                        cfg.topology = topo;
-                        let fault = (drop > 0.0)
-                            .then(|| FaultConfig::lossy(drop).with_seed(cfg.seed));
-                        let out = run_session(ctx, &cfg, DriverKind::Sim, fault, &data)?;
-                        if drop == 0.0 {
-                            ideal_loss = out.record.final_loss();
-                        }
-                        emit(&table, &mut csv, "sim", topo, cname, drop, ideal_loss, &out.record)?;
-                        records.push(out.record);
-                    }
-                }
-            }
-
-            // async rows: the headline config, ideal + lossy + stragglers
-            let mut ideal_loss = f64::NAN;
-            for (label, fault) in [
-                ("ideal", None),
-                ("lossy", Some(FaultConfig::lossy(0.2))),
-                ("stragglers", Some(FaultConfig::stragglers())),
-            ] {
-                let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
-                cfg.k = k;
-                let drop = fault.as_ref().map(|f| f.drop_rate).unwrap_or(0.0);
-                let fault = fault.map(|f| f.with_seed(cfg.seed));
-                let out = run_session(ctx, &cfg, DriverKind::Async, fault, &data)?;
-                if label == "ideal" {
-                    ideal_loss = out.record.final_loss();
-                }
-                let rec = &out.record;
-                emit(&table, &mut csv, "async", Topology::Ring, label, drop, ideal_loss, rec)?;
-                records.push(out.record);
+            for (spec, rec) in group {
+                let ideal_loss =
+                    ideal.get(&twin_key(spec, rec)).copied().unwrap_or(f64::NAN);
+                emit(&table, &mut csv, spec, rec, ideal_loss)?;
             }
             csv.flush()?;
             println!("  wrote {}", csv_path.display());
         }
     }
-    Ok(records)
+    Ok(())
 }
 
-/// One sweep cell through the [`Session`] pipeline (the sweep names the
-/// driver and fault envelope explicitly; the spec carries both).
-fn run_session(
-    ctx: &mut Ctx,
-    cfg: &TrainConfig,
-    driver: DriverKind,
-    fault: Option<FaultConfig>,
-    data: &crate::data::Dataset,
-) -> anyhow::Result<crate::engine::TrainOutcome> {
-    let spec = ExperimentSpec::from_train_config(cfg, driver, fault, ctx.backend.name());
-    Session::new(spec).run_on(data, ctx.backend.as_mut(), None)
+/// The grouping key linking a faulty run to its ideal-network twin:
+/// (dataset, loss, driver, algo, topology).
+type TwinKey = (String, String, &'static str, String, String);
+
+fn twin_key(spec: &ExperimentSpec, rec: &RunRecord) -> TwinKey {
+    (
+        rec.dataset.clone(),
+        rec.loss.clone(),
+        spec.driver.name(),
+        rec.algo.clone(),
+        rec.topology.clone(),
+    )
 }
 
 /// CiderTF with the compressor swapped (the sweep's compressor axis).
@@ -121,24 +191,40 @@ fn algo_for(tau: usize, compressor: Compressor, cname: &str) -> AlgoConfig {
     algo
 }
 
+/// Human label for the network column: `ideal`, `lossy`, `stragglers`.
+fn fault_label(spec: &ExperimentSpec) -> &'static str {
+    match &spec.fault {
+        None => "ideal",
+        Some(f) if f.drop_rate > 0.0 => "lossy",
+        Some(f) if f.straggler_frac > 0.0 || !f.straggler_ids.is_empty() => "stragglers",
+        Some(_) => "faulty",
+    }
+}
+
 /// One table row + CSV row for a finished run.
-#[allow(clippy::too_many_arguments)]
 fn emit(
     table: &Table,
     csv: &mut CsvWriter,
-    driver: &str,
-    topo: Topology,
-    compressor: &str,
-    drop: f64,
-    ideal_loss: f64,
+    spec: &ExperimentSpec,
     rec: &RunRecord,
+    ideal_loss: f64,
 ) -> anyhow::Result<()> {
+    let drop = spec.fault.as_ref().map(|f| f.drop_rate).unwrap_or(0.0);
+    // the sim grid names the compressor in the algo; the async rows name
+    // the scenario instead (what the hand-rolled loop printed)
+    let compressor = if spec.driver == DriverKind::Async {
+        fault_label(spec).to_string()
+    } else if rec.algo.contains("_dense_") {
+        "dense".to_string()
+    } else {
+        "sign".to_string()
+    };
     let fl = rec.final_loss();
     let vs = if ideal_loss.is_finite() && ideal_loss != 0.0 { fl / ideal_loss } else { f64::NAN };
     table.row(&[
-        driver.to_string(),
-        topo.name().to_string(),
-        compressor.to_string(),
+        spec.driver.name().to_string(),
+        rec.topology.clone(),
+        compressor.clone(),
         format!("{drop:.0e}"),
         format!("{fl:.3e}"),
         format!("{vs:.2}x"),
@@ -147,9 +233,9 @@ fn emit(
         fmt_bytes(rec.total.bytes as f64),
     ]);
     csv.row(&[
-        driver.to_string(),
-        topo.name().to_string(),
-        compressor.to_string(),
+        spec.driver.name().to_string(),
+        rec.topology.clone(),
+        compressor,
         format!("{drop}"),
         format!("{fl:.6e}"),
         format!("{ideal_loss:.6e}"),

@@ -2,11 +2,14 @@
 //! centralized (GCP, BrasCPD, Centralized CiderTF) and decentralized
 //! (D-PSGD, SPARQ-SGD, D-PSGDbras) baselines, loss vs wall-clock and vs
 //! uplink bytes, ring topology, K = 8 — per dataset and per loss.
+//!
+//! One [`SweepSpec`]: dataset × loss × algorithm roster, executed
+//! concurrently by the sweep engine (`results/fig3/`).
 
-use super::{k_for, summarize, Ctx, SUMMARY_HEADER};
-use crate::engine::AlgoConfig;
+use super::Ctx;
 use crate::engine::metrics::RunRecord;
-use crate::util::benchkit::Table;
+use crate::engine::AlgoConfig;
+use crate::sweep::SweepSpec;
 
 /// The figure's algorithm roster.
 pub fn roster(taus: &[usize]) -> Vec<AlgoConfig> {
@@ -25,22 +28,29 @@ pub fn roster(taus: &[usize]) -> Vec<AlgoConfig> {
     algos
 }
 
+/// The figure as a sweep: the full grid in one declarative spec.
+pub fn sweep(ctx: &Ctx, k: usize, taus: &[usize]) -> SweepSpec {
+    let datasets = ctx.profile.datasets();
+    let losses = ctx.profile.losses();
+    let mut sweep =
+        SweepSpec::new(ctx.sweep_base(datasets[0], losses[0], AlgoConfig::cidertf(4)));
+    sweep.datasets = datasets.iter().map(|s| s.to_string()).collect();
+    sweep.losses = losses;
+    sweep.algos = roster(taus);
+    sweep.ks = vec![k];
+    sweep.centralized_k1 = true;
+    sweep.auto_gamma = true;
+    sweep
+}
+
 pub fn run(ctx: &mut Ctx, k: usize, taus: &[usize]) -> anyhow::Result<Vec<RunRecord>> {
-    let mut records = Vec::new();
-    for dataset in ctx.profile.datasets() {
-        for loss in ctx.profile.losses() {
-            println!("\n=== Fig.3: {dataset} / {} / ring K={k} ===", loss.name());
-            let data = ctx.dataset(dataset, loss)?;
-            let table = Table::new(&SUMMARY_HEADER);
-            for algo in roster(taus) {
-                let mut cfg = ctx.base_config(dataset, loss, algo);
-                cfg.k = k_for(&cfg.algo, k);
-                let out = ctx.run("fig3", &cfg, &data, None)?;
-                table.row(&summarize(&out.record));
-                records.push(out.record);
-            }
-        }
-    }
+    let sweep = sweep(ctx, k, taus);
+    println!(
+        "\n=== Fig.3: convergence vs baselines, ring K={k} — {} runs on {} workers ===",
+        sweep.len(),
+        ctx.workers
+    );
+    let records = ctx.run_sweep(&sweep, "fig3")?.into_records();
     println!("\nFig.3 reproduction notes:");
     if let Some(dpsgd) = records.iter().find(|r| r.algo == "dpsgd") {
         for r in records.iter().filter(|r| r.algo.starts_with("cidertf")) {

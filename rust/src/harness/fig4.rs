@@ -1,41 +1,51 @@
 //! Fig. 4 — topology study: CiderTF on ring vs star, loss vs time and vs
 //! communication, per dataset and loss. The paper's finding: convergence
 //! is topology-insensitive, but star costs fewer total uplink bytes.
+//!
+//! One [`SweepSpec`]: dataset × loss × topology, executed concurrently
+//! by the sweep engine (`results/fig4/`).
 
-use super::{summarize, Ctx};
+use super::Ctx;
 use crate::engine::metrics::RunRecord;
 use crate::engine::AlgoConfig;
+use crate::sweep::SweepSpec;
 use crate::topology::Topology;
-use crate::util::benchkit::Table;
+
+/// The figure as a sweep.
+pub fn sweep(ctx: &Ctx, k: usize, tau: usize) -> SweepSpec {
+    let datasets = ctx.profile.datasets();
+    let losses = ctx.profile.losses();
+    let mut sweep =
+        SweepSpec::new(ctx.sweep_base(datasets[0], losses[0], AlgoConfig::cidertf(tau)));
+    sweep.datasets = datasets.iter().map(|s| s.to_string()).collect();
+    sweep.losses = losses;
+    sweep.ks = vec![k];
+    sweep.topologies = vec![Topology::Ring, Topology::Star];
+    sweep.auto_gamma = true;
+    sweep
+}
 
 pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>> {
-    let mut records = Vec::new();
-    for dataset in ctx.profile.datasets() {
-        for loss in ctx.profile.losses() {
-            println!("\n=== Fig.4: {dataset} / {} / K={k} ring vs star ===", loss.name());
-            let data = ctx.dataset(dataset, loss)?;
-            let table = Table::new(&["topology", "K", "final_loss", "wall_s", "uplink", "msgs"]);
-            let mut pair = Vec::new();
-            for topo in [Topology::Ring, Topology::Star] {
-                let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
-                cfg.k = k;
-                cfg.topology = topo;
-                let out = ctx.run("fig4", &cfg, &data, None)?;
-                let mut row = summarize(&out.record);
-                row[0] = topo.name().to_string();
-                table.row(&row);
-                pair.push(out.record);
-            }
-            let (ring, star) = (&pair[0], &pair[1]);
-            let loss_gap = (ring.final_loss() - star.final_loss()).abs()
-                / ring.final_loss().max(star.final_loss());
-            println!(
-                "  star/ring uplink ratio = {:.3} (paper: star < ring); loss gap = {:.1}%",
-                star.total.bytes as f64 / ring.total.bytes.max(1) as f64,
-                100.0 * loss_gap
-            );
-            records.extend(pair);
-        }
+    let sweep = sweep(ctx, k, tau);
+    println!(
+        "\n=== Fig.4: ring vs star, K={k} tau={tau} — {} runs on {} workers ===",
+        sweep.len(),
+        ctx.workers
+    );
+    let records = ctx.run_sweep(&sweep, "fig4")?.into_records();
+    // topology is the innermost axis: records arrive as (ring, star)
+    // pairs per (dataset, loss)
+    for pair in records.chunks(2) {
+        let (ring, star) = (&pair[0], &pair[1]);
+        let loss_gap = (ring.final_loss() - star.final_loss()).abs()
+            / ring.final_loss().max(star.final_loss());
+        println!(
+            "  {}/{}: star/ring uplink ratio = {:.3} (paper: star < ring); loss gap = {:.1}%",
+            ring.dataset,
+            ring.loss,
+            star.total.bytes as f64 / ring.total.bytes.max(1) as f64,
+            100.0 * loss_gap
+        );
     }
     Ok(records)
 }

@@ -2,29 +2,41 @@
 //! the MIMIC-like dataset (Bernoulli-logit), loss vs time and vs bytes.
 //! Paper finding: computation time scales down with K (each worker holds
 //! 1/K of the patients) while total communication grows with K.
+//!
+//! One [`SweepSpec`]: τ × K on one dataset, executed concurrently by the
+//! sweep engine (`results/fig5/`).
 
-use super::{summarize, Ctx, SUMMARY_HEADER};
+use super::Ctx;
 use crate::engine::metrics::RunRecord;
 use crate::engine::AlgoConfig;
 use crate::losses::Loss;
-use crate::util::benchkit::Table;
+use crate::sweep::SweepSpec;
+
+/// The figure as a sweep (τ rides the algo axis so each cell keeps the
+/// paper's `cidertf_t<τ>` name; K is the inner axis).
+pub fn sweep(ctx: &Ctx, ks: &[usize], taus: &[usize]) -> SweepSpec {
+    let dataset = if ctx.profile.datasets().contains(&"mimic_like") {
+        "mimic_like"
+    } else {
+        ctx.profile.datasets()[0]
+    };
+    let mut sweep =
+        SweepSpec::new(ctx.sweep_base(dataset, Loss::Logit, AlgoConfig::cidertf(4)));
+    sweep.algos = taus.iter().map(|&t| AlgoConfig::cidertf(t)).collect();
+    sweep.ks = ks.to_vec();
+    sweep.auto_gamma = true;
+    sweep
+}
 
 pub fn run(ctx: &mut Ctx, ks: &[usize], taus: &[usize]) -> anyhow::Result<Vec<RunRecord>> {
-    let dataset = if ctx.profile.datasets().contains(&"mimic_like") { "mimic_like" } else { ctx.profile.datasets()[0] };
-    let loss = Loss::Logit;
-    let data = ctx.dataset(dataset, loss)?;
-    println!("\n=== Fig.5: scalability on {dataset} / logit ===");
-    let table = Table::new(&SUMMARY_HEADER);
-    let mut records = Vec::new();
-    for &tau in taus {
-        for &k in ks {
-            let mut cfg = ctx.base_config(dataset, loss, AlgoConfig::cidertf(tau));
-            cfg.k = k;
-            let out = ctx.run("fig5", &cfg, &data, None)?;
-            table.row(&summarize(&out.record));
-            records.push(out.record);
-        }
-    }
+    anyhow::ensure!(!ks.is_empty() && !taus.is_empty(), "fig5 needs --ks and --taus");
+    let sweep = sweep(ctx, ks, taus);
+    println!(
+        "\n=== Fig.5: scalability (logit) — {} runs on {} workers ===",
+        sweep.len(),
+        ctx.workers
+    );
+    let records = ctx.run_sweep(&sweep, "fig5")?.into_records();
     // The in-process network executes clients sequentially; the paper's
     // Fig. 5 time axis is parallel wall-clock, i.e. ~wall/K here.
     for r in &records {
@@ -38,8 +50,7 @@ pub fn run(ctx: &mut Ctx, ks: &[usize], taus: &[usize]) -> anyhow::Result<Vec<Ru
     }
     // paper's trade-off: larger K -> more uplink bytes
     for &tau in taus {
-        let by_k: Vec<&RunRecord> =
-            records.iter().filter(|r| r.tau == tau).collect();
+        let by_k: Vec<&RunRecord> = records.iter().filter(|r| r.tau == tau).collect();
         if by_k.len() >= 2 {
             let first = by_k.first().unwrap();
             let last = by_k.last().unwrap();

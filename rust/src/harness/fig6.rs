@@ -2,11 +2,16 @@
 //! levels: measured uplink bytes per epoch for D-PSGD, D-PSGDbras,
 //! D-PSGD+signSGD, D-PSGDbras+signSGD, SPARQ-SGD, CiderTF, plus each
 //! configuration's analytical compression ratio.
+//!
+//! One [`SweepSpec`] over the ablation roster, executed concurrently by
+//! the sweep engine (`results/fig6/`); the measured-vs-analytic table is
+//! computed from the returned records.
 
-use super::{k_for, Ctx};
+use super::Ctx;
 use crate::engine::metrics::RunRecord;
 use crate::engine::AlgoConfig;
 use crate::losses::Loss;
+use crate::sweep::SweepSpec;
 use crate::util::benchkit::{fmt_bytes, Table};
 
 pub fn roster(tau: usize) -> Vec<AlgoConfig> {
@@ -20,12 +25,36 @@ pub fn roster(tau: usize) -> Vec<AlgoConfig> {
     ]
 }
 
+/// The ablation grid as a sweep.
+pub fn sweep(ctx: &Ctx, k: usize, tau: usize) -> SweepSpec {
+    let dataset = if ctx.profile.datasets().contains(&"mimic_like") {
+        "mimic_like"
+    } else {
+        ctx.profile.datasets()[0]
+    };
+    let mut sweep =
+        SweepSpec::new(ctx.sweep_base(dataset, Loss::Logit, AlgoConfig::cidertf(tau)));
+    sweep.algos = roster(tau);
+    sweep.ks = vec![k];
+    sweep.auto_gamma = true;
+    sweep
+}
+
 pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>> {
-    let dataset = if ctx.profile.datasets().contains(&"mimic_like") { "mimic_like" } else { ctx.profile.datasets()[0] };
-    let loss = Loss::Logit;
-    let data = ctx.dataset(dataset, loss)?;
-    let d_order = data.tensor.dims.len();
-    println!("\n=== Fig.6 / Table II: ablation on {dataset} / logit / K={k} ===");
+    let sweep = sweep(ctx, k, tau);
+    println!(
+        "\n=== Fig.6 / Table II: ablation on {}, K={k} tau={tau} — {} runs on {} workers ===",
+        sweep.base.dataset,
+        sweep.len(),
+        ctx.workers
+    );
+    let epochs = sweep.base.epochs;
+    let outcome = ctx.run_sweep(&sweep, "fig6")?;
+    // the analytic Table II column needs the tensor order; reuse the
+    // executor's Arc-loaded dataset instead of synthesizing it again
+    let d_order = outcome.dataset(&sweep.base.dataset, Loss::Logit)?.tensor.dims.len();
+    let records = outcome.into_records();
+
     let table = Table::new(&[
         "algo",
         "bytes/epoch",
@@ -33,26 +62,21 @@ pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>
         "analytic_ratio",
         "final_loss",
     ]);
-    let mut records = Vec::new();
     let mut dpsgd_bpe = 0.0f64;
-    for algo in roster(tau) {
+    for (algo, rec) in roster(tau).iter().zip(records.iter()) {
         let analytic = algo.table2_ratio(d_order);
-        let mut cfg = ctx.base_config(dataset, loss, algo);
-        cfg.k = k_for(&cfg.algo, k);
-        let out = ctx.run("fig6", &cfg, &data, None)?;
-        let bpe = out.record.total.bytes as f64 / cfg.epochs as f64;
-        if out.record.algo == "dpsgd" {
+        let bpe = rec.total.bytes as f64 / epochs as f64;
+        if rec.algo == "dpsgd" {
             dpsgd_bpe = bpe;
         }
         let measured = if dpsgd_bpe > 0.0 { 1.0 - bpe / dpsgd_bpe } else { 0.0 };
         table.row(&[
-            out.record.algo.clone(),
+            rec.algo.clone(),
             fmt_bytes(bpe),
             format!("{:.4}%", 100.0 * measured),
             format!("{:.4}%", 100.0 * analytic),
-            format!("{:.3e}", out.record.final_loss()),
+            format!("{:.3e}", rec.final_loss()),
         ]);
-        records.push(out.record);
     }
     println!(
         "  (paper Fig.6: compression is the largest lever ~96.9%, block randomization -> ~{:.1}%, \

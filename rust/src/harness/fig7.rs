@@ -2,46 +2,81 @@
 //! decentralized methods' factors approach the centralized BrasCPD
 //! reference factors. Paper finding: CiderTF reaches the highest FMS with
 //! the least time and bytes among the decentralized methods.
+//!
+//! The centralized reference runs once (its *factors* seed the FMS
+//! comparison); the decentralized roster is then one [`SweepSpec`]
+//! executed concurrently with the reference factors shared read-only
+//! across workers (`results/fig7/`).
 
-use super::{k_for, Ctx};
+use std::sync::Arc;
+
+use super::Ctx;
 use crate::engine::metrics::RunRecord;
 use crate::engine::AlgoConfig;
 use crate::losses::Loss;
+use crate::sweep::SweepSpec;
 use crate::util::benchkit::{fmt_bytes, Table};
 
+/// The decentralized FMS roster as a sweep. Block-randomized methods
+/// evaluate 1/D of the gradients per iteration; the paper's FMS curves
+/// are at convergence, so `block_random_epochs_scale = d_order` matches
+/// total gradient work (FMS tracks convergence level).
+pub fn sweep(ctx: &Ctx, k: usize, tau: usize, d_order: usize) -> SweepSpec {
+    let dataset = if ctx.profile.datasets().contains(&"mimic_like") {
+        "mimic_like"
+    } else {
+        ctx.profile.datasets()[0]
+    };
+    // BrasCPD, the FMS comparator, is a least-squares method
+    let mut sweep = SweepSpec::new(ctx.sweep_base(dataset, Loss::Ls, AlgoConfig::cidertf(tau)));
+    sweep.algos = vec![AlgoConfig::cidertf(tau), AlgoConfig::dpsgd(), AlgoConfig::dpsgd_bras()];
+    sweep.ks = vec![k];
+    sweep.centralized_k1 = true;
+    sweep.auto_gamma = true;
+    sweep.block_random_epochs_scale = d_order;
+    sweep
+}
+
 pub fn run(ctx: &mut Ctx, k: usize, tau: usize) -> anyhow::Result<Vec<RunRecord>> {
-    let dataset = if ctx.profile.datasets().contains(&"mimic_like") { "mimic_like" } else { ctx.profile.datasets()[0] };
-    let loss = Loss::Ls; // BrasCPD, the FMS comparator, is a least-squares method
-    let data = ctx.dataset(dataset, loss)?;
+    let dataset = if ctx.profile.datasets().contains(&"mimic_like") {
+        "mimic_like"
+    } else {
+        ctx.profile.datasets()[0]
+    };
+    let loss = Loss::Ls;
+    let data = Arc::new(ctx.dataset(dataset, loss)?);
+    let d_order = data.tensor.dims.len();
     println!("\n=== Fig.7: FMS vs centralized BrasCPD on {dataset} / ls ===");
 
-    // reference factors: centralized BrasCPD run (paper's comparator)
+    // reference factors: centralized BrasCPD run (paper's comparator) —
+    // a single Session, because its *factors* feed the sweep
     let mut ref_cfg = ctx.base_config(dataset, loss, AlgoConfig::bras_cpd());
     ref_cfg.k = 1;
     ref_cfg.epochs = ctx.profile.epochs() * 2; // converge the reference further
     let reference = ctx.run("fig7", &ref_cfg, &data, None)?;
 
+    let sweep = sweep(ctx, k, tau, d_order);
+    println!(
+        "  decentralized roster: {} runs on {} workers",
+        sweep.len(),
+        ctx.workers
+    );
+    // hand the already-loaded dataset to the executor — one tensor in
+    // memory, shared by the reference factors and every worker
+    let mut opts = ctx.sweep_opts("fig7");
+    opts.preload.insert(crate::sweep::dataset_cache_key(dataset, loss), Arc::clone(&data));
+    let outcome = crate::sweep::execute(&sweep, &opts, Some(&reference.factors))?;
+    let records = outcome.into_records();
+
     let table = Table::new(&["algo", "final_FMS", "wall_s", "uplink"]);
-    let mut records = Vec::new();
-    let d_order = data.tensor.dims.len();
-    for algo in [AlgoConfig::cidertf(tau), AlgoConfig::dpsgd(), AlgoConfig::dpsgd_bras()] {
-        let mut cfg = ctx.base_config(dataset, loss, algo);
-        cfg.k = k_for(&cfg.algo, k);
-        // Block-randomized methods evaluate 1/D of the gradients per
-        // iteration; the paper's FMS curves are at convergence, so match
-        // total gradient work (FMS tracks convergence level).
-        if cfg.algo.block_random {
-            cfg.epochs *= d_order;
-        }
-        let out = ctx.run("fig7", &cfg, &data, Some(&reference.factors))?;
-        let final_fms = out.record.points.last().and_then(|p| p.fms).unwrap_or(0.0);
+    for rec in &records {
+        let final_fms = rec.points.last().and_then(|p| p.fms).unwrap_or(0.0);
         table.row(&[
-            out.record.algo.clone(),
+            rec.algo.clone(),
             format!("{final_fms:.4}"),
-            format!("{:.1}", out.record.wall_s),
-            fmt_bytes(out.record.total.bytes as f64),
+            format!("{:.1}", rec.wall_s),
+            fmt_bytes(rec.total.bytes as f64),
         ]);
-        records.push(out.record);
     }
     // paper check: CiderTF reaches its final FMS with far fewer bytes
     if let (Some(cider), Some(dpsgd)) = (

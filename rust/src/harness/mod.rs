@@ -1,6 +1,12 @@
 //! Experiment harness: one driver per paper figure/table (DESIGN.md
-//! per-experiment index). Each driver regenerates the corresponding
-//! rows/series as printed tables + CSV files under `results/`.
+//! per-experiment index). Each figure/sweep driver is a
+//! [`crate::sweep::SweepSpec`] constructor fed to the parallel sweep
+//! executor — runs execute concurrently on `Ctx::workers` threads with
+//! `Arc`-shared datasets, and regenerate the corresponding rows/series
+//! as printed tables + per-run CSV curves + a deterministic
+//! `sweep.jsonl` under `results/<figure>/`. (The phenotype tables keep
+//! single [`Ctx::run`] calls — they consume the run's *factors*, not
+//! just its record.)
 //!
 //! Two effort profiles:
 //! * `quick` — reduced iterations/datasets; minutes, shape-checking runs
@@ -23,11 +29,12 @@ use std::path::PathBuf;
 use crate::data::Dataset;
 use crate::engine::session::{CsvObserver, Session};
 use crate::engine::spec::ExperimentSpec;
-use crate::engine::{metrics::RunRecord, AlgoConfig, TrainConfig, TrainOutcome};
+use crate::engine::{AlgoConfig, TrainConfig, TrainOutcome};
 use crate::factor::FactorSet;
 use crate::losses::Loss;
 use crate::net::driver::DriverKind;
 use crate::runtime::{default_artifact_dir, ComputeBackend, PjrtBackend};
+use crate::sweep::{SweepOptions, SweepOutcome, SweepSpec};
 use crate::tensor::synth::ValueKind;
 
 /// Effort profile.
@@ -75,21 +82,34 @@ impl Profile {
     }
 }
 
-/// Shared harness context: backend, output dir, profile.
+/// Shared harness context: backend, output dir, profile, sweep width.
 pub struct Ctx {
     pub backend: Box<dyn ComputeBackend>,
     pub out_dir: PathBuf,
     pub profile: Profile,
+    /// worker threads for the sweep executor (`--workers`; results are
+    /// bit-identical for any value)
+    pub workers: usize,
 }
 
 impl Ctx {
     pub fn new(profile: Profile) -> anyhow::Result<Self> {
         let backend = Box::new(PjrtBackend::new(&default_artifact_dir())?);
-        Ok(Ctx { backend, out_dir: PathBuf::from("results"), profile })
+        Ok(Ctx {
+            backend,
+            out_dir: PathBuf::from("results"),
+            profile,
+            workers: crate::sweep::default_workers(),
+        })
     }
 
     pub fn with_backend(backend: Box<dyn ComputeBackend>, profile: Profile) -> Self {
-        Ctx { backend, out_dir: PathBuf::from("results"), profile }
+        Ctx {
+            backend,
+            out_dir: PathBuf::from("results"),
+            profile,
+            workers: crate::sweep::default_workers(),
+        }
     }
 
     /// Materialize (deterministically) the dataset for a source name +
@@ -101,16 +121,11 @@ impl Ctx {
     }
 
     /// Grid-searched learning rate per (dataset, loss) — powers of two, as
-    /// the paper prescribes (§IV-A3). Values found by `cidertf tune`.
+    /// the paper prescribes (§IV-A3). Values found by `cidertf tune`;
+    /// the canonical table lives in [`crate::sweep::tuned_gamma`] (sweep
+    /// expansion applies it under `auto_gamma`).
     pub fn gamma_for(dataset: &str, loss: Loss) -> f64 {
-        // grid over powers of two, 2-epoch probes (logit diverges at 32;
-        // 8 is comfortably inside the stable region for both losses)
-        match (dataset, loss) {
-            ("tiny", Loss::Logit) => 0.5,
-            ("tiny", Loss::Ls) => 2.0,
-            (_, Loss::Logit) => 8.0,
-            (_, Loss::Ls) => 8.0,
-        }
+        crate::sweep::tuned_gamma(dataset, loss)
     }
 
     /// Base train config for a figure run.
@@ -128,10 +143,30 @@ impl Ctx {
         cfg
     }
 
-    /// Run + persist one config; returns the outcome. Every harness
-    /// figure/table goes through here, so they all ride the
-    /// [`Session`] pipeline: the CSV curve is written by a
-    /// [`CsvObserver`] instead of inline engine bookkeeping.
+    /// Base [`ExperimentSpec`] for a figure sweep: the same stock
+    /// defaults + profile iteration counts as [`Ctx::base_config`]
+    /// (γ included, so a sweep without `auto_gamma` still runs the
+    /// grid-searched rate of its base cell).
+    pub fn sweep_base(&self, dataset: &str, loss: Loss, algo: AlgoConfig) -> ExperimentSpec {
+        let cfg = self.base_config(dataset, loss, algo);
+        ExperimentSpec::from_train_config(&cfg, DriverKind::Sequential, None, self.backend.name())
+    }
+
+    /// Executor options for one figure/sweep: `results/<exp>/` with this
+    /// context's worker count, resume on, per-run curves on.
+    pub fn sweep_opts(&self, exp: &str) -> SweepOptions {
+        SweepOptions::new(self.out_dir.join(exp), self.workers)
+    }
+
+    /// Expand + execute a figure's [`SweepSpec`] under `results/<exp>/`.
+    pub fn run_sweep(&self, spec: &SweepSpec, exp: &str) -> anyhow::Result<SweepOutcome> {
+        crate::sweep::execute(spec, &self.sweep_opts(exp), None)
+    }
+
+    /// Run + persist one config; returns the outcome (with factors —
+    /// what the phenotype tables need). Grid-shaped experiments should
+    /// go through the sweep executor instead ([`Ctx::run_sweep`]); this
+    /// stays for the single runs whose *factors* feed further analysis.
     pub fn run(
         &mut self,
         exp: &str,
@@ -154,25 +189,3 @@ impl Ctx {
         session.run_on(data, self.backend.as_mut(), fms_reference)
     }
 }
-
-/// Centralized-vs-decentralized K selection: centralized presets run K=1.
-pub fn k_for(algo: &AlgoConfig, default_k: usize) -> usize {
-    match algo.name.as_str() {
-        "gcp" | "bras_cpd" | "centralized_cidertf" => 1,
-        _ => default_k,
-    }
-}
-
-/// Print a one-line summary for a finished run.
-pub fn summarize(rec: &RunRecord) -> Vec<String> {
-    vec![
-        rec.algo.clone(),
-        rec.k.to_string(),
-        format!("{:.3e}", rec.final_loss()),
-        format!("{:.1}", rec.wall_s),
-        crate::util::benchkit::fmt_bytes(rec.total.bytes as f64),
-        rec.total.messages.to_string(),
-    ]
-}
-
-pub const SUMMARY_HEADER: [&str; 6] = ["algo", "K", "final_loss", "wall_s", "uplink", "msgs"];

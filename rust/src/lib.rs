@@ -26,6 +26,7 @@ pub mod net;
 pub mod registry;
 pub mod runtime;
 pub mod sched;
+pub mod sweep;
 pub mod tensor;
 pub mod topology;
 pub mod util;

@@ -13,14 +13,21 @@
 //! cidertf train  --algo cidertf:4 --dataset mimic_like --loss logit ...
 //! cidertf train  --spec experiment.json                # declarative run
 //! cidertf spec   --algo cidertf:4@lossy:0.2@async      # print resolved spec
+//! cidertf sweep  --spec sweep.json --workers 8         # run a whole grid
 //! cidertf fig3 | fig4 | fig5 | fig6 | fig7             # regenerate figures
 //! cidertf table2 | table3 | table4 | theorems          # regenerate tables
 //! cidertf tune   --dataset synthetic --loss logit      # γ grid search
 //! cidertf info                                         # axes + artifacts
 //! ```
 //!
+//! The figure/ablation/fault commands all expand to
+//! [`SweepSpec`](cidertf::sweep::SweepSpec) grids executed concurrently
+//! on `--workers` threads — results are bit-identical for any worker
+//! count, and finished runs are skipped on re-invocation.
+//!
 //! Common flags: `--profile quick|paper`, `--k N`, `--tau T`,
-//! `--epochs E`, `--backend pjrt|native`, `--out results/`.
+//! `--epochs E`, `--backend pjrt|native`, `--out results/`,
+//! `--workers N`.
 
 use std::path::{Path, PathBuf};
 
@@ -36,6 +43,7 @@ use cidertf::net::driver::DriverKind;
 use cidertf::net::sim::FaultConfig;
 use cidertf::registry;
 use cidertf::runtime::{default_artifact_dir, ComputeBackend, Manifest, NativeOrPjrt};
+use cidertf::sweep::SweepSpec;
 use cidertf::topology::Topology;
 use cidertf::util::cli::Args;
 
@@ -54,13 +62,15 @@ fn ctx_from(args: &Args) -> anyhow::Result<Ctx> {
     let profile = Profile::from_name(&args.get_str("profile", "quick")?)?;
     let mut ctx = Ctx::with_backend(make_backend(args)?, profile);
     ctx.out_dir = args.get_str("out", "results")?.into();
+    ctx.workers = args.get_usize("workers", cidertf::sweep::default_workers())?;
+    anyhow::ensure!(ctx.workers >= 1, "--workers must be >= 1");
     Ok(ctx)
 }
 
 /// Every subcommand, for the did-you-mean hint on typos.
 const COMMANDS: &[&str] = &[
-    "train", "spec", "fig3", "fig4", "fig5", "fig6", "fig7", "table2", "table3", "table4",
-    "faults", "ablate", "theorems", "bench", "tune", "info", "help",
+    "train", "spec", "sweep", "fig3", "fig4", "fig5", "fig6", "fig7", "table2", "table3",
+    "table4", "faults", "ablate", "theorems", "bench", "tune", "info", "help",
 ];
 
 fn run() -> anyhow::Result<()> {
@@ -69,6 +79,7 @@ fn run() -> anyhow::Result<()> {
     match command.as_str() {
         "train" => cmd_train(&args)?,
         "spec" => cmd_spec(&args)?,
+        "sweep" => cmd_sweep(&args)?,
         "fig3" => {
             let mut ctx = ctx_from(&args)?;
             let k = args.get_usize("k", 8)?;
@@ -280,6 +291,36 @@ fn cmd_spec(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `cidertf sweep --spec sweep.json --workers N`: expand a declarative
+/// grid and execute it on the worker pool. `--smoke` runs the tiny
+/// built-in 4-run grid (the CI path); `--print` shows the expanded specs
+/// without running; `--fresh` ignores existing run records.
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let sweep_spec = if args.flag("smoke") {
+        SweepSpec::smoke()
+    } else {
+        let path = args.opt_str("spec")?.ok_or_else(|| {
+            anyhow::anyhow!("sweep needs --spec sweep.json (or --smoke for the built-in grid)")
+        })?;
+        SweepSpec::load(Path::new(&path))?
+    };
+    let mut opts = cidertf::sweep::SweepOptions::new(
+        PathBuf::from(args.get_str("out", "results/sweep")?),
+        args.get_usize("workers", cidertf::sweep::default_workers())?,
+    );
+    anyhow::ensure!(opts.workers >= 1, "--workers must be >= 1");
+    opts.resume = !args.flag("fresh");
+    opts.per_run_jsonl = args.flag("per-run-jsonl");
+    if args.flag("print") {
+        for (i, run) in sweep_spec.expand()?.iter().enumerate() {
+            println!("[{i:>3}] {}", run.label());
+        }
+        return Ok(());
+    }
+    cidertf::sweep::execute(&sweep_spec, &opts, None)?;
+    Ok(())
+}
+
 fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     let dataset = args.get_str("dataset", "synthetic")?;
     let loss = Loss::from_name(&args.get_str("loss", "logit")?)?;
@@ -361,6 +402,18 @@ COMMANDS
              --bench-json BENCH.json                append e2e timing
   spec       print the fully-resolved ExperimentSpec JSON for any scenario
              string / flag set (same flags as train)
+  sweep      run a whole experiment grid on a worker pool
+             --spec sweep.json    base ExperimentSpec + axis lists (datasets/
+                                  losses/algos/taus/ks/topologies/compressors/
+                                  networks/drivers/triggers/gammas/seeds)
+             --workers N          concurrent runs (results identical for any N)
+             --out results/sweep  sweep dir: per-run CSV + record JSON +
+                                  deterministic aggregate sweep.jsonl
+             --smoke              built-in tiny 4-run grid (CI exercise)
+             --print              list the expanded runs without executing
+             --fresh              re-run everything (default: skip runs whose
+                                  record file already matches their spec)
+             --per-run-jsonl      stream each run's progress as <label>.jsonl
   fig3       convergence vs baselines (paper Fig. 3)   [--k --taus 2,4,6,8]
   fig4       ring vs star topology    (paper Fig. 4)   [--k --tau]
   fig5       scalability K=8,16,32    (paper Fig. 5)   [--ks --taus]
@@ -382,6 +435,9 @@ COMMON FLAGS
   --backend pjrt|native   compute backend (default: pjrt when built with the
                           `pjrt` feature, else native — the pure-Rust mirror)
   --out results/          output directory for CSVs
+  --workers N             sweep worker threads for fig*/ablate/faults/sweep
+                          (default: machine parallelism, capped at 8;
+                          results are bit-identical for any N)
 
 Unknown commands and flags error with a did-you-mean hint; malformed
 numeric flags are errors, never silent defaults."

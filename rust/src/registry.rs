@@ -110,6 +110,20 @@ impl<T: 'static> Registry<T> {
             None => anyhow::bail!("unknown {} '{name}' (known: {known})", self.kind),
         }
     }
+
+    /// Resolve a whole axis list (a sweep-spec grid), tagging errors with
+    /// the failing element's position so `"network scenario axis [2]:
+    /// unknown network scenario 'lozzy' — did you mean 'lossy'?"` points
+    /// at the exact grid cell.
+    pub fn resolve_list(&self, specs: &[String]) -> anyhow::Result<Vec<T>> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                self.resolve(s).map_err(|e| anyhow::anyhow!("{} axis [{i}]: {e}", self.kind))
+            })
+            .collect()
+    }
 }
 
 /// Levenshtein edit distance (iterative two-row DP) — small inputs only.
@@ -640,6 +654,15 @@ mod tests {
         let err = format!("{:#}", losses().resolve("zzz").unwrap_err());
         assert!(!err.contains("did you mean"), "{err}");
         assert!(err.contains("logit"), "{err}");
+    }
+
+    #[test]
+    fn resolve_list_tags_the_failing_index() {
+        let specs: Vec<String> = vec!["ring".into(), "lozenge".into()];
+        let err = format!("{:#}", topologies().resolve_list(&specs).unwrap_err());
+        assert!(err.contains("axis [1]"), "{err}");
+        let ok = topologies().resolve_list(&["ring".to_string(), "star".to_string()]).unwrap();
+        assert_eq!(ok, vec![Topology::Ring, Topology::Star]);
     }
 
     #[test]

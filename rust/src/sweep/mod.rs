@@ -1,0 +1,1221 @@
+//! The sweep engine: declare a whole experiment grid, run it on a worker
+//! pool, get a deterministic aggregate.
+//!
+//! The paper's results are all *grids* — Fig. 3–7 and Tables II–IV sweep
+//! algorithms × datasets × losses × τ × K — and every one of them used to
+//! be a hand-rolled sequential `for` loop over single runs. This module
+//! replaces those loops with one declarative, parallel executor:
+//!
+//! * [`SweepSpec`] — a base [`ExperimentSpec`] plus axis grids (dataset /
+//!   loss / algo / τ / K / topology / compressor / network / driver /
+//!   trigger / γ / seed lists). [`SweepSpec::expand`] produces the
+//!   cross-product of concrete `ExperimentSpec`s in a fixed nesting
+//!   order (dataset outermost, seed innermost), so the **expansion
+//!   index** of every run is stable across invocations. Serializes to
+//!   JSON (schema [`SWEEP_SCHEMA`], `cidertf sweep --spec sweep.json`)
+//!   with registry-backed did-you-mean errors on every named axis.
+//! * [`run_specs`] — the one executor. A scoped worker pool pulls runs
+//!   off an atomic queue; each worker drives a full
+//!   [`Session`] with **`Arc`-shared datasets** (each distinct
+//!   (dataset, value-kind) pair is loaded once on the main thread and
+//!   shared read-only — PR 4's `Arc<ShardData>` data plane makes the
+//!   per-run sharding a pointer copy, not a tensor copy). Per-run
+//!   outputs (curve CSV, record JSON, optional JSONL stream) land under
+//!   one sweep directory.
+//! * **Determinism** — runs are independent and internally seeded, so
+//!   the aggregate `sweep.jsonl` and the summary table are ordered by
+//!   expansion index (never completion order) and contain only
+//!   deterministic fields (no wall-clock times): their bytes are
+//!   **identical whether the sweep ran with 1 worker or N**
+//!   (test-asserted in `tests/sweep.rs`).
+//! * **Resumability** — every finished run writes a
+//!   `run_<index>_<label>.json` record (schema [`RUN_SCHEMA`]) embedding
+//!   its exact spec; re-running the sweep skips runs whose record file
+//!   matches and re-executes only the missing (or spec-drifted) ones.
+//!
+//! The harness figure/table drivers (`harness::fig3` … `fig7`,
+//! `ablate`, `faults`) are now thin [`SweepSpec`] constructors fed to
+//! this executor.
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::compress::Compressor;
+use crate::data::Dataset;
+use crate::engine::metrics::RunRecord;
+use crate::engine::session::{CsvObserver, JsonlObserver, Session};
+use crate::engine::spec::{algo_from_json, algo_to_json, fs_component, ExperimentSpec};
+use crate::engine::AlgoConfig;
+use crate::factor::FactorSet;
+use crate::losses::Loss;
+use crate::net::driver::DriverKind;
+use crate::net::sim::FaultConfig;
+use crate::runtime::NativeOrPjrt;
+use crate::topology::Topology;
+use crate::util::benchkit::{fmt_bytes, Table};
+use crate::util::json::Json;
+
+/// Schema tag of a serialized [`SweepSpec`].
+pub const SWEEP_SCHEMA: &str = "cidertf-sweep-v1";
+
+/// Schema tag of a per-run record file (`run_<index>_<label>.json`).
+pub const RUN_SCHEMA: &str = "cidertf-sweep-run-v1";
+
+/// One point on the event-trigger schedule axis: λ₀ scale and growth α
+/// (the paper grid-searches α in `[1, 2]`). A `lambda0_scale` of exactly
+/// `0.0` means "trigger disabled" — expansion turns
+/// `algo.event_triggered` off for that cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TriggerPoint {
+    /// scale on λ₀ = scale/γ (`0.0` = trigger disabled baseline)
+    pub lambda0_scale: f64,
+    /// threshold growth factor α
+    pub alpha: f64,
+}
+
+/// A declarative experiment grid: a base [`ExperimentSpec`] plus one
+/// value list per sweep axis. Empty axes keep the base value; non-empty
+/// axes multiply the grid. See [`SweepSpec::expand`] for the expansion
+/// order and the post-expansion policy passes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    /// every field a cell does not override comes from here
+    pub base: ExperimentSpec,
+    /// dataset axis (registry names / `file:` / `csv:` specs)
+    pub datasets: Vec<String>,
+    /// loss axis
+    pub losses: Vec<Loss>,
+    /// algorithm axis (full Table II rows, including compressor/ρ/flags)
+    pub algos: Vec<AlgoConfig>,
+    /// local-round period axis (rewrites each algo's τ and `_t<τ>` name)
+    pub taus: Vec<usize>,
+    /// client-count axis
+    pub ks: Vec<usize>,
+    /// communication-graph axis
+    pub topologies: Vec<Topology>,
+    /// compressor-override axis (suffixes the algo name with the tag)
+    pub compressors: Vec<Compressor>,
+    /// network fault-envelope axis (`None` = ideal)
+    pub networks: Vec<Option<FaultConfig>>,
+    /// execution-path axis
+    pub drivers: Vec<DriverKind>,
+    /// event-trigger schedule axis
+    pub triggers: Vec<TriggerPoint>,
+    /// learning-rate axis (mutually exclusive with `auto_gamma`)
+    pub gammas: Vec<f64>,
+    /// master-seed axis
+    pub seeds: Vec<u64>,
+    /// run centralized presets (gcp/bras_cpd/centralized_cidertf) with
+    /// K = 1 regardless of the K axis (the harness convention)
+    pub centralized_k1: bool,
+    /// derive γ per cell from the grid-searched (dataset, loss) table
+    /// ([`tuned_gamma`]), rescaled by 1-β for momentum runs — exactly
+    /// what `Ctx::base_config` always did
+    pub auto_gamma: bool,
+    /// multiply `epochs` by this for block-randomized algos (they touch
+    /// 1/D of the gradients per iteration; Fig. 7 matches total gradient
+    /// work by setting this to the tensor order)
+    pub block_random_epochs_scale: usize,
+}
+
+impl SweepSpec {
+    /// A sweep over nothing: every axis empty, expansion = `[base]`.
+    pub fn new(base: ExperimentSpec) -> Self {
+        SweepSpec {
+            base,
+            datasets: Vec::new(),
+            losses: Vec::new(),
+            algos: Vec::new(),
+            taus: Vec::new(),
+            ks: Vec::new(),
+            topologies: Vec::new(),
+            compressors: Vec::new(),
+            networks: Vec::new(),
+            drivers: Vec::new(),
+            triggers: Vec::new(),
+            gammas: Vec::new(),
+            seeds: Vec::new(),
+            centralized_k1: false,
+            auto_gamma: false,
+            block_random_epochs_scale: 1,
+        }
+    }
+
+    /// The tiny built-in grid behind `cidertf sweep --smoke`: 2 algos ×
+    /// 2 seeds on the `tiny` tensor — 4 cheap runs that still exercise
+    /// dataset sharing, the worker pool, and the deterministic aggregate.
+    pub fn smoke() -> Self {
+        let mut base = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        base.k = 2;
+        base.rank = 4;
+        base.fiber_samples = 16;
+        base.eval_batch = 64;
+        base.gamma = 0.5;
+        base.epochs = 1;
+        base.iters_per_epoch = 40;
+        let mut spec = SweepSpec::new(base);
+        spec.algos = vec![AlgoConfig::cidertf(2), AlgoConfig::dpsgd()];
+        spec.seeds = vec![7, 8];
+        spec
+    }
+
+    /// Cheap cross-axis invariants, checked before expansion.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.block_random_epochs_scale >= 1,
+            "block_random_epochs_scale must be >= 1"
+        );
+        anyhow::ensure!(
+            !(self.auto_gamma && !self.gammas.is_empty()),
+            "auto_gamma and an explicit gamma axis are mutually exclusive"
+        );
+        for (i, t) in self.triggers.iter().enumerate() {
+            anyhow::ensure!(
+                t.lambda0_scale >= 0.0 && t.alpha >= 1.0,
+                "triggers[{i}]: need lambda0_scale >= 0 and alpha >= 1"
+            );
+        }
+        Ok(())
+    }
+
+    /// Number of grid cells [`SweepSpec::expand`] will produce.
+    pub fn len(&self) -> usize {
+        let dim = |n: usize| n.max(1);
+        dim(self.datasets.len())
+            * dim(self.losses.len())
+            * dim(self.algos.len())
+            * dim(self.taus.len())
+            * dim(self.ks.len())
+            * dim(self.topologies.len())
+            * dim(self.compressors.len())
+            * dim(self.networks.len())
+            * dim(self.drivers.len())
+            * dim(self.triggers.len())
+            * dim(self.gammas.len())
+            * dim(self.seeds.len())
+    }
+
+    /// True when expansion is just `[base]`.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 1
+    }
+
+    /// Expand to the cross-product of concrete specs. Nesting order is
+    /// fixed — dataset → loss → algo → τ → K → topology → compressor →
+    /// network → driver → trigger → γ → seed (dataset outermost, seed
+    /// innermost) — so a run's expansion index is stable across
+    /// invocations, which is what resumability and the deterministic
+    /// aggregate key on. After the product, four policy passes run per
+    /// cell: `centralized_k1`, `auto_gamma`, the block-random epoch
+    /// scale, and a driver upgrade (a fault envelope on a lock-step
+    /// driver moves to `sim`, mirroring the CLI's `--network` handling);
+    /// every cell is then validated.
+    pub fn expand(&self) -> anyhow::Result<Vec<ExperimentSpec>> {
+        self.validate()?;
+        let mut specs = vec![self.base.clone()];
+        specs = apply_axis(specs, &self.datasets, |s, d| s.dataset = d.clone());
+        specs = apply_axis(specs, &self.losses, |s, l| s.loss = *l);
+        specs = apply_axis(specs, &self.algos, |s, a| s.algo = a.clone());
+        specs = apply_axis(specs, &self.taus, |s, t| {
+            s.algo.tau = *t;
+            s.algo.name = retau_name(&s.algo.name, *t);
+        });
+        specs = apply_axis(specs, &self.ks, |s, k| s.k = *k);
+        specs = apply_axis(specs, &self.topologies, |s, t| s.topology = *t);
+        specs = apply_axis(specs, &self.compressors, |s, c| {
+            s.algo.compressor = *c;
+            s.algo.name = format!("{}_{}", s.algo.name, compressor_tag(c));
+        });
+        specs = apply_axis(specs, &self.networks, |s, f| s.fault = f.clone());
+        specs = apply_axis(specs, &self.drivers, |s, d| s.driver = *d);
+        specs = apply_axis(specs, &self.triggers, |s, t| {
+            s.trigger_lambda0_scale = t.lambda0_scale.max(f64::MIN_POSITIVE);
+            s.trigger_alpha = t.alpha;
+            if t.lambda0_scale == 0.0 {
+                s.algo.event_triggered = false;
+            }
+            s.algo.name = format!("{}_trig_s{}_a{}", s.algo.name, t.lambda0_scale, t.alpha);
+        });
+        specs = apply_axis(specs, &self.gammas, |s, g| s.gamma = *g);
+        specs = apply_axis(specs, &self.seeds, |s, sd| s.seed = *sd);
+
+        for (i, s) in specs.iter_mut().enumerate() {
+            if self.centralized_k1 {
+                s.k = centralized_k(&s.algo, s.k);
+            }
+            if self.auto_gamma {
+                let mut gamma = tuned_gamma(&s.dataset, s.loss);
+                if let Some(beta) = s.algo.momentum {
+                    gamma *= 1.0 - beta;
+                }
+                s.gamma = gamma;
+            }
+            if self.block_random_epochs_scale > 1 && s.algo.block_random {
+                s.epochs *= self.block_random_epochs_scale;
+            }
+            if s.fault.is_some()
+                && matches!(s.driver, DriverKind::Sequential | DriverKind::Parallel)
+            {
+                s.driver = DriverKind::Sim;
+            }
+            s.validate()
+                .map_err(|e| anyhow::anyhow!("sweep cell {i} ({}): {e}", s.label()))?;
+        }
+        Ok(specs)
+    }
+
+    // ---- JSON layer ----
+
+    /// Serialize (schema [`SWEEP_SCHEMA`]): the base spec verbatim, each
+    /// axis as an array (algos as full objects, networks as fault
+    /// objects or `null`, seeds as lossless strings).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SWEEP_SCHEMA.to_string())),
+            ("base", self.base.to_json()),
+            ("datasets", Json::arr_str(&self.datasets)),
+            (
+                "losses",
+                Json::Arr(
+                    self.losses.iter().map(|l| Json::Str(l.name().to_string())).collect(),
+                ),
+            ),
+            ("algos", Json::Arr(self.algos.iter().map(algo_to_json).collect())),
+            ("taus", Json::arr_usize(&self.taus)),
+            ("ks", Json::arr_usize(&self.ks)),
+            (
+                "topologies",
+                Json::Arr(
+                    self.topologies.iter().map(|t| Json::Str(t.name().to_string())).collect(),
+                ),
+            ),
+            (
+                "compressors",
+                Json::Arr(
+                    self.compressors.iter().map(|c| Json::Str(c.spec_string())).collect(),
+                ),
+            ),
+            (
+                "networks",
+                Json::Arr(
+                    self.networks
+                        .iter()
+                        .map(|n| n.as_ref().map(FaultConfig::to_json).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+            (
+                "drivers",
+                Json::Arr(
+                    self.drivers.iter().map(|d| Json::Str(d.name().to_string())).collect(),
+                ),
+            ),
+            (
+                "triggers",
+                Json::Arr(
+                    self.triggers
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("lambda0_scale", Json::Num(t.lambda0_scale)),
+                                ("alpha", Json::Num(t.alpha)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("gammas", Json::arr_f64(&self.gammas)),
+            ("seeds", Json::arr_u64(&self.seeds)),
+            ("centralized_k1", Json::Bool(self.centralized_k1)),
+            ("auto_gamma", Json::Bool(self.auto_gamma)),
+            (
+                "block_random_epochs_scale",
+                Json::Num(self.block_random_epochs_scale as f64),
+            ),
+        ])
+    }
+
+    /// Deserialize the [`SweepSpec::to_json`] layout. Strict like the
+    /// experiment spec: unknown keys error with a did-you-mean hint, and
+    /// every named axis element resolves through its
+    /// [`crate::registry`] table (so `"lozzy:0.2"` suggests `lossy`).
+    /// Hand-written files may use strings on the algo axis
+    /// (`"cidertf:8"`) and string scenario names on the network axis
+    /// (`"lossy:0.2"`); serialization always emits the full objects.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        j.ensure_known_keys(
+            "sweep",
+            &[
+                "schema",
+                "base",
+                "datasets",
+                "losses",
+                "algos",
+                "taus",
+                "ks",
+                "topologies",
+                "compressors",
+                "networks",
+                "drivers",
+                "triggers",
+                "gammas",
+                "seeds",
+                "centralized_k1",
+                "auto_gamma",
+                "block_random_epochs_scale",
+            ],
+        )?;
+        if let Some(s) = j.get("schema").and_then(Json::as_str) {
+            anyhow::ensure!(
+                s == SWEEP_SCHEMA,
+                "unsupported sweep schema '{s}' (want {SWEEP_SCHEMA})"
+            );
+        }
+        let base = ExperimentSpec::from_json(
+            j.get("base").ok_or_else(|| anyhow::anyhow!("missing 'base' spec"))?,
+        )?;
+
+        let mut algos = Vec::new();
+        for (i, v) in arr(j, "algos")?.iter().enumerate() {
+            let a = match v {
+                Json::Str(s) => crate::registry::algos().resolve(s),
+                obj => algo_from_json(obj),
+            }
+            .map_err(|e| anyhow::anyhow!("algos[{i}]: {e}"))?;
+            algos.push(a);
+        }
+        let mut networks = Vec::new();
+        for (i, v) in arr(j, "networks")?.iter().enumerate() {
+            let n = match v {
+                Json::Null => Ok(None),
+                Json::Str(s) => crate::registry::networks().resolve(s),
+                obj => FaultConfig::from_json(obj).map(Some),
+            }
+            .map_err(|e| anyhow::anyhow!("networks[{i}]: {e}"))?;
+            networks.push(n);
+        }
+        let mut triggers = Vec::new();
+        for (i, v) in arr(j, "triggers")?.iter().enumerate() {
+            v.ensure_known_keys("trigger point", &["lambda0_scale", "alpha"])
+                .map_err(|e| anyhow::anyhow!("triggers[{i}]: {e}"))?;
+            triggers.push(TriggerPoint {
+                lambda0_scale: v
+                    .req_f64("lambda0_scale")
+                    .map_err(|e| anyhow::anyhow!("triggers[{i}]: {e}"))?,
+                alpha: v.req_f64("alpha").map_err(|e| anyhow::anyhow!("triggers[{i}]: {e}"))?,
+            });
+        }
+
+        let spec = SweepSpec {
+            base,
+            datasets: str_list(j, "datasets")?,
+            losses: crate::registry::losses().resolve_list(&str_list(j, "losses")?)?,
+            algos,
+            taus: usize_list(j, "taus")?,
+            ks: usize_list(j, "ks")?,
+            topologies: crate::registry::topologies()
+                .resolve_list(&str_list(j, "topologies")?)?,
+            compressors: crate::registry::compressors()
+                .resolve_list(&str_list(j, "compressors")?)?,
+            networks,
+            drivers: crate::registry::drivers().resolve_list(&str_list(j, "drivers")?)?,
+            triggers,
+            gammas: f64_list(j, "gammas")?,
+            seeds: u64_list(j, "seeds")?,
+            centralized_k1: opt_bool(j, "centralized_k1")?,
+            auto_gamma: opt_bool(j, "auto_gamma")?,
+            block_random_epochs_scale: match j.get("block_random_epochs_scale") {
+                None => 1,
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("invalid 'block_random_epochs_scale' (integer expected)")
+                })?,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a sweep spec from JSON text.
+    pub fn from_json_str(s: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("sweep spec: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Load from a `--spec sweep.json` file.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read sweep spec {}: {e}", path.display()))?;
+        Self::from_json_str(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Write the sweep spec as pretty JSON.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_pretty_string())
+            .map_err(|e| anyhow::anyhow!("cannot write sweep spec {}: {e}", path.display()))
+    }
+}
+
+/// Cross one axis into the accumulated grid (no-op when the axis is
+/// empty). Applying axes in sequence makes the *last* applied axis the
+/// innermost loop of the expansion order.
+fn apply_axis<T>(
+    specs: Vec<ExperimentSpec>,
+    values: &[T],
+    set: impl Fn(&mut ExperimentSpec, &T),
+) -> Vec<ExperimentSpec> {
+    if values.is_empty() {
+        return specs;
+    }
+    let mut out = Vec::with_capacity(specs.len() * values.len());
+    for s in specs {
+        for v in values {
+            let mut cell = s.clone();
+            set(&mut cell, v);
+            out.push(cell);
+        }
+    }
+    out
+}
+
+/// Rewrite an algo name's `_t<digits>` suffix for the τ axis (appends
+/// when the name carries no period suffix, e.g. `dpsgd` → `dpsgd_t4`).
+fn retau_name(name: &str, tau: usize) -> String {
+    if let Some(pos) = name.rfind("_t") {
+        let tail = &name[pos + 2..];
+        if !tail.is_empty() && tail.bytes().all(|b| b.is_ascii_digit()) {
+            return format!("{}_t{tau}", &name[..pos]);
+        }
+    }
+    format!("{name}_t{tau}")
+}
+
+/// Filename-safe tag for the compressor-override axis.
+fn compressor_tag(c: &Compressor) -> String {
+    match c {
+        Compressor::Sign => "sign".to_string(),
+        Compressor::None => "dense".to_string(),
+        Compressor::TopK { ratio } => format!("top{ratio}"),
+    }
+}
+
+/// Grid-searched learning rate per (dataset, loss) — powers of two, as
+/// the paper prescribes (§IV-A3); found by `cidertf tune`. The canonical
+/// table — `harness::Ctx::gamma_for` delegates here.
+pub fn tuned_gamma(dataset: &str, loss: Loss) -> f64 {
+    match (dataset, loss) {
+        ("tiny", Loss::Logit) => 0.5,
+        ("tiny", Loss::Ls) => 2.0,
+        (_, Loss::Logit) => 8.0,
+        (_, Loss::Ls) => 8.0,
+    }
+}
+
+/// Centralized-vs-decentralized K selection: the centralized presets
+/// always run K = 1. Sweep expansion applies this when
+/// [`SweepSpec::centralized_k1`] is set. The τ/compressor/trigger axes
+/// rewrite algo names by *appending* suffixes (`bras_cpd` →
+/// `bras_cpd_t2`), so the centralized family is matched by prefix —
+/// a renamed centralized baseline must not silently run decentralized.
+pub fn centralized_k(algo: &AlgoConfig, default_k: usize) -> usize {
+    const CENTRALIZED: [&str; 3] = ["gcp", "bras_cpd", "centralized_cidertf"];
+    let name = algo.name.as_str();
+    let is_centralized = CENTRALIZED
+        .iter()
+        .any(|c| name == *c || (name.starts_with(c) && name.as_bytes()[c.len()] == b'_'));
+    if is_centralized {
+        1
+    } else {
+        default_k
+    }
+}
+
+// ---- JSON list helpers ----
+
+fn arr<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a [Json]> {
+    match j.get(key) {
+        None => Ok(&[]),
+        Some(Json::Arr(a)) => Ok(a),
+        Some(_) => anyhow::bail!("'{key}' must be an array"),
+    }
+}
+
+fn str_list(j: &Json, key: &str) -> anyhow::Result<Vec<String>> {
+    arr(j, key)?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("'{key}[{i}]' must be a string"))
+        })
+        .collect()
+}
+
+fn usize_list(j: &Json, key: &str) -> anyhow::Result<Vec<usize>> {
+    arr(j, key)?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_usize().ok_or_else(|| anyhow::anyhow!("'{key}[{i}]' must be an integer"))
+        })
+        .collect()
+}
+
+fn f64_list(j: &Json, key: &str) -> anyhow::Result<Vec<f64>> {
+    arr(j, key)?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_f64().ok_or_else(|| anyhow::anyhow!("'{key}[{i}]' must be a number"))
+        })
+        .collect()
+}
+
+fn u64_list(j: &Json, key: &str) -> anyhow::Result<Vec<u64>> {
+    arr(j, key)?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_u64().ok_or_else(|| anyhow::anyhow!("'{key}[{i}]' must be a u64"))
+        })
+        .collect()
+}
+
+fn opt_bool(j: &Json, key: &str) -> anyhow::Result<bool> {
+    match j.get(key) {
+        None => Ok(false),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("invalid '{key}' (bool expected)")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The executor
+// ---------------------------------------------------------------------
+
+/// How [`run_specs`] executes and where it writes.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// worker threads (clamped to `[1, pending runs]`)
+    pub workers: usize,
+    /// sweep directory: per-run CSV/record files + `sweep.jsonl`
+    pub dir: PathBuf,
+    /// skip runs whose record file already matches their spec
+    pub resume: bool,
+    /// write the per-run training-curve CSV (what the figures plot)
+    pub curves: bool,
+    /// stream per-run progress as `<label>.jsonl`
+    pub per_run_jsonl: bool,
+    /// suppress per-run completion lines (the summary table still prints)
+    pub quiet: bool,
+    /// datasets to seed the executor's cache with (keyed by
+    /// [`dataset_cache_key`]) — a caller that already materialized a
+    /// dataset (fig7's FMS reference run) hands over its `Arc` instead
+    /// of letting the executor load a second copy
+    pub preload: BTreeMap<(String, bool), Arc<Dataset>>,
+}
+
+impl SweepOptions {
+    /// Defaults: `workers` threads into `dir`, resume on, curves on,
+    /// per-run JSONL off, nothing preloaded.
+    pub fn new(dir: impl Into<PathBuf>, workers: usize) -> Self {
+        SweepOptions {
+            workers,
+            dir: dir.into(),
+            resume: true,
+            curves: true,
+            per_run_jsonl: false,
+            quiet: false,
+            preload: BTreeMap::new(),
+        }
+    }
+}
+
+/// A sensible worker default: the machine's parallelism, capped at 8
+/// (each run may itself allocate per-client state; the cap keeps memory
+/// bounded on large hosts).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// One finished grid cell, aligned with the expansion order.
+#[derive(Debug, Clone)]
+pub struct SweepRunResult {
+    /// expansion index (== position in [`SweepOutcome::runs`])
+    pub index: usize,
+    /// true when the run was restored from its record file, not executed
+    pub skipped: bool,
+    /// the run's metric record
+    pub record: RunRecord,
+}
+
+/// Everything a finished sweep produced.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// the expanded specs, in expansion order
+    pub runs: Vec<ExperimentSpec>,
+    /// one result per run, same order
+    pub results: Vec<SweepRunResult>,
+    /// the deterministic aggregate (`<dir>/sweep.jsonl`)
+    pub jsonl_path: PathBuf,
+    /// the datasets the executor loaded this invocation, keyed by
+    /// (dataset spec, is-least-squares) — empty when every run was
+    /// restored from records. Callers needing the data post-sweep (e.g.
+    /// fig6's tensor order) reuse these instead of re-loading.
+    pub datasets: BTreeMap<(String, bool), Arc<Dataset>>,
+}
+
+impl SweepOutcome {
+    /// The records in expansion order (what the old per-figure loops
+    /// returned).
+    pub fn into_records(self) -> Vec<RunRecord> {
+        self.results.into_iter().map(|r| r.record).collect()
+    }
+
+    /// How many runs were restored from record files instead of re-run.
+    pub fn skipped(&self) -> usize {
+        self.results.iter().filter(|r| r.skipped).count()
+    }
+
+    /// The dataset for (name, loss): the executor's `Arc` when this
+    /// invocation loaded it, otherwise loaded fresh (fully-restored
+    /// sweeps load nothing up front).
+    pub fn dataset(&self, name: &str, loss: Loss) -> anyhow::Result<Arc<Dataset>> {
+        if let Some(d) = self.datasets.get(&(name.to_string(), loss == Loss::Ls)) {
+            return Ok(Arc::clone(d));
+        }
+        let vk = if loss == Loss::Ls {
+            crate::tensor::synth::ValueKind::Gaussian
+        } else {
+            crate::tensor::synth::ValueKind::Binary
+        };
+        Ok(Arc::new(crate::data::load_dataset(name, vk)?))
+    }
+}
+
+/// A worker slot: `None` until its run executes, then the record or the
+/// formatted error (errors cross the pool as strings; the vendored
+/// `anyhow` error need not be `Send`).
+type RunSlot = Option<Result<RunRecord, String>>;
+
+/// Expand a [`SweepSpec`] and execute it — the one entry point the CLI
+/// and every harness driver share.
+pub fn execute(
+    spec: &SweepSpec,
+    opts: &SweepOptions,
+    fms_reference: Option<&FactorSet>,
+) -> anyhow::Result<SweepOutcome> {
+    run_specs(spec.expand()?, opts, fms_reference)
+}
+
+/// Execute an explicit run list (what [`execute`] calls after expansion;
+/// harness drivers that post-process their expanded specs call this
+/// directly). Runs execute on a scoped worker pool pulling from an
+/// atomic queue; datasets are loaded once per distinct
+/// (dataset, value-kind) pair and `Arc`-shared read-only across workers.
+/// The aggregate `sweep.jsonl` and summary table are ordered by
+/// expansion index and carry no wall-clock fields, so their bytes do not
+/// depend on the worker count.
+pub fn run_specs(
+    runs: Vec<ExperimentSpec>,
+    opts: &SweepOptions,
+    fms_reference: Option<&FactorSet>,
+) -> anyhow::Result<SweepOutcome> {
+    anyhow::ensure!(!runs.is_empty(), "sweep expanded to zero runs");
+    std::fs::create_dir_all(&opts.dir)
+        .map_err(|e| anyhow::anyhow!("cannot create sweep dir {}: {e}", opts.dir.display()))?;
+
+    // deterministic per-run file stems (labels deduped by expansion index)
+    let stems = run_stems(&runs);
+
+    // resumability: restore finished runs whose record matches their spec
+    let mut restored: Vec<Option<RunRecord>> = Vec::with_capacity(runs.len());
+    let mut pending: Vec<usize> = Vec::new();
+    for (i, spec) in runs.iter().enumerate() {
+        let saved = if opts.resume {
+            load_saved_record(&record_path(&opts.dir, i, &stems[i]), spec)
+        } else {
+            None
+        };
+        if saved.is_none() {
+            pending.push(i);
+        }
+        restored.push(saved);
+    }
+    if !opts.quiet && pending.len() < runs.len() {
+        println!(
+            "resuming sweep: {} of {} runs already recorded in {}",
+            runs.len() - pending.len(),
+            runs.len(),
+            opts.dir.display()
+        );
+    }
+
+    // load each distinct dataset once, share read-only — only the ones
+    // pending runs actually touch (a fully-restored sweep loads nothing
+    // beyond what the caller preloaded)
+    let mut datasets: BTreeMap<(String, bool), Arc<Dataset>> = opts.preload.clone();
+    for &i in &pending {
+        let spec = &runs[i];
+        if let Entry::Vacant(slot) = datasets.entry(dataset_key(spec)) {
+            let data = spec
+                .dataset_data()
+                .map_err(|e| anyhow::anyhow!("dataset '{}': {e}", spec.dataset))?;
+            slot.insert(Arc::new(data));
+        }
+    }
+
+    // the pool: workers pull expansion indices off an atomic queue
+    let slots: Vec<Mutex<RunSlot>> = runs.iter().map(|_| Mutex::new(None)).collect();
+    if !pending.is_empty() {
+        let n_workers = opts.workers.clamp(1, pending.len());
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                scope.spawn(|| loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let slot = next.fetch_add(1, Ordering::Relaxed);
+                    if slot >= pending.len() {
+                        break;
+                    }
+                    let i = pending[slot];
+                    let outcome =
+                        execute_one(&runs[i], i, &stems[i], &datasets, opts, fms_reference)
+                            .map_err(|e| format!("{e:#}"));
+                    if outcome.is_err() {
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    *slots[i].lock().unwrap() = Some(outcome);
+                });
+            }
+        });
+    }
+
+    // collect in expansion order; surface the first real error
+    let raw: Vec<RunSlot> = slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    for (i, r) in raw.iter().enumerate() {
+        if let Some(Err(msg)) = r {
+            anyhow::bail!("sweep run {i} ({}) failed: {msg}", runs[i].label());
+        }
+    }
+    let mut results = Vec::with_capacity(runs.len());
+    for (i, (saved, executed)) in restored.into_iter().zip(raw).enumerate() {
+        let (record, skipped) = match (saved, executed) {
+            (Some(rec), _) => (rec, true),
+            (None, Some(Ok(rec))) => (rec, false),
+            (None, _) => anyhow::bail!(
+                "sweep run {i} ({}) was never executed (pool aborted early)",
+                runs[i].label()
+            ),
+        };
+        results.push(SweepRunResult { index: i, skipped, record });
+    }
+
+    // deterministic aggregate + summary, both in expansion order
+    let jsonl_path = opts.dir.join("sweep.jsonl");
+    write_aggregate(&jsonl_path, &runs, &results)?;
+    print_summary(&runs, &results);
+    if !opts.quiet {
+        println!(
+            "sweep complete: {} runs ({} restored) -> {}",
+            runs.len(),
+            results.iter().filter(|r| r.skipped).count(),
+            jsonl_path.display()
+        );
+    }
+    Ok(SweepOutcome { runs, results, jsonl_path, datasets })
+}
+
+/// Dataset-cache key: the loader spec plus the value model the loss
+/// selects (mirrors [`ExperimentSpec::dataset_data`]). Used for
+/// [`SweepOptions::preload`] and [`SweepOutcome::datasets`].
+pub fn dataset_cache_key(dataset: &str, loss: Loss) -> (String, bool) {
+    (dataset.to_string(), loss == Loss::Ls)
+}
+
+fn dataset_key(spec: &ExperimentSpec) -> (String, bool) {
+    dataset_cache_key(&spec.dataset, spec.loss)
+}
+
+/// Filename stems, one per run: the spec label, made filesystem-safe,
+/// with the expansion index appended whenever two runs share a label
+/// (e.g. the same config at several drop rates).
+fn run_stems(runs: &[ExperimentSpec]) -> Vec<String> {
+    let labels: Vec<String> = runs.iter().map(|s| fs_component(&s.label())).collect();
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for l in &labels {
+        *counts.entry(l.as_str()).or_insert(0) += 1;
+    }
+    labels
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            if counts[l.as_str()] > 1 {
+                format!("{l}_r{i:03}")
+            } else {
+                l.clone()
+            }
+        })
+        .collect()
+}
+
+fn record_path(dir: &Path, index: usize, stem: &str) -> PathBuf {
+    dir.join(format!("run_{index:03}_{stem}.json"))
+}
+
+/// Reload a finished run's record, iff the file parses and the embedded
+/// spec is *exactly* the spec we are about to run (any drift — profile,
+/// seed, axis edit — forces a re-run).
+fn load_saved_record(path: &Path, spec: &ExperimentSpec) -> Option<RunRecord> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get("schema").and_then(Json::as_str) != Some(RUN_SCHEMA) {
+        return None;
+    }
+    if j.get("spec") != Some(&spec.to_json()) {
+        return None;
+    }
+    RunRecord::from_json(j.get("record")?).ok()
+}
+
+/// Run one grid cell on this worker: resolve the backend from the
+/// spec's flag, attach the per-run observers, drive the session on the
+/// shared dataset, and persist the record file (atomically — write then
+/// rename — so a crash never leaves a half-record that resume trusts).
+fn execute_one(
+    spec: &ExperimentSpec,
+    index: usize,
+    stem: &str,
+    datasets: &BTreeMap<(String, bool), Arc<Dataset>>,
+    opts: &SweepOptions,
+    fms_reference: Option<&FactorSet>,
+) -> anyhow::Result<RunRecord> {
+    let data = datasets.get(&dataset_key(spec)).expect("dataset preloaded").as_ref();
+    let mut backend = NativeOrPjrt::from_flag(&spec.backend)?;
+    let mut session = Session::new(spec.clone());
+    if opts.curves {
+        session = session
+            .observe(Box::new(CsvObserver::new(opts.dir.join(format!("{stem}.csv")))));
+    }
+    if opts.per_run_jsonl {
+        session = session
+            .observe(Box::new(JsonlObserver::new(opts.dir.join(format!("{stem}.jsonl")))));
+    }
+    let out = session.run_on(data, backend.as_mut(), fms_reference)?;
+
+    let path = record_path(&opts.dir, index, stem);
+    let body = Json::obj(vec![
+        ("schema", Json::Str(RUN_SCHEMA.to_string())),
+        ("index", Json::Num(index as f64)),
+        ("spec", spec.to_json()),
+        ("record", out.record.to_json()),
+    ]);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, body.to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .map_err(|e| anyhow::anyhow!("cannot move record into place {}: {e}", path.display()))?;
+
+    if !opts.quiet {
+        println!(
+            "  [{index:>3}] {:<48} loss {:.3e}  uplink {}",
+            spec.label(),
+            out.record.final_loss(),
+            fmt_bytes(out.record.total.bytes as f64)
+        );
+    }
+    Ok(out.record)
+}
+
+/// Write `sweep.jsonl`: one header line, then one line per run in
+/// expansion order. Only deterministic fields (no wall-clock seconds —
+/// per-run CSVs keep those), so the file is byte-identical for any
+/// worker count.
+fn write_aggregate(
+    path: &Path,
+    runs: &[ExperimentSpec],
+    results: &[SweepRunResult],
+) -> anyhow::Result<()> {
+    let mut out = String::new();
+    let header = Json::obj(vec![
+        ("event", Json::Str("sweep".to_string())),
+        ("schema", Json::Str(SWEEP_SCHEMA.to_string())),
+        ("runs", Json::Num(runs.len() as f64)),
+    ]);
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for r in results {
+        let spec = &runs[r.index];
+        let rec = &r.record;
+        let curve: Vec<Json> = rec
+            .points
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("epoch".to_string(), Json::Num(p.epoch as f64));
+                m.insert("iter".to_string(), Json::Num(p.iter as f64));
+                m.insert("loss".to_string(), Json::Num(p.loss));
+                m.insert("bytes".to_string(), Json::u64(p.bytes));
+                if let Some(f) = p.fms {
+                    m.insert("fms".to_string(), Json::Num(f));
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let line = Json::obj(vec![
+            ("event", Json::Str("run".to_string())),
+            ("index", Json::Num(r.index as f64)),
+            ("label", Json::Str(spec.label())),
+            ("algo", Json::Str(rec.algo.clone())),
+            ("dataset", Json::Str(rec.dataset.clone())),
+            ("loss", Json::Str(rec.loss.clone())),
+            ("topology", Json::Str(rec.topology.clone())),
+            ("driver", Json::Str(spec.driver.name().to_string())),
+            ("k", Json::Num(rec.k as f64)),
+            ("tau", Json::Num(rec.tau as f64)),
+            ("seed", Json::u64(spec.seed)),
+            (
+                "drop_rate",
+                spec.fault
+                    .as_ref()
+                    .map(|f| Json::Num(f.drop_rate))
+                    .unwrap_or(Json::Null),
+            ),
+            ("final_loss", Json::Num(rec.final_loss())),
+            ("best_loss", Json::Num(rec.best_loss())),
+            ("bytes", Json::u64(rec.total.bytes)),
+            ("messages", Json::u64(rec.total.messages)),
+            ("triggered", Json::u64(rec.total.triggered)),
+            ("suppressed", Json::u64(rec.total.suppressed)),
+            ("delivered", Json::u64(rec.net.delivered)),
+            ("dropped", Json::u64(rec.net.dropped)),
+            ("stale", Json::u64(rec.net.stale)),
+            ("offline_rounds", Json::u64(rec.net.offline_rounds)),
+            ("curve", Json::Arr(curve)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))
+}
+
+/// Print the expansion-ordered summary table (deterministic columns
+/// only — wall times live in the per-run CSVs).
+fn print_summary(runs: &[ExperimentSpec], results: &[SweepRunResult]) {
+    let table = Table::new(&[
+        "idx", "algo", "dataset", "loss", "topo", "K", "tau", "driver", "final_loss", "uplink",
+        "msgs",
+    ]);
+    for r in results {
+        let spec = &runs[r.index];
+        let rec = &r.record;
+        table.row(&[
+            r.index.to_string(),
+            rec.algo.clone(),
+            rec.dataset.clone(),
+            rec.loss.clone(),
+            rec.topology.clone(),
+            rec.k.to_string(),
+            rec.tau.to_string(),
+            spec.driver.name().to_string(),
+            format!("{:.3e}", rec.final_loss()),
+            fmt_bytes(rec.total.bytes as f64),
+            rec.total.messages.to_string(),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_base() -> ExperimentSpec {
+        let mut base = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        base.k = 2;
+        base.rank = 4;
+        base.fiber_samples = 16;
+        base.eval_batch = 64;
+        base.gamma = 0.5;
+        base.epochs = 1;
+        base.iters_per_epoch = 20;
+        base
+    }
+
+    #[test]
+    fn empty_axes_expand_to_base() {
+        let spec = SweepSpec::new(tiny_base());
+        assert!(spec.is_empty());
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0], spec.base);
+    }
+
+    #[test]
+    fn expansion_order_is_outer_to_inner() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.datasets = vec!["tiny".into(), "synthetic".into()];
+        spec.ks = vec![2, 4];
+        spec.seeds = vec![1, 2];
+        assert_eq!(spec.len(), 8);
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs.len(), 8);
+        // dataset outermost, seed innermost
+        assert_eq!(runs[0].dataset, "tiny");
+        assert_eq!((runs[0].k, runs[0].seed), (2, 1));
+        assert_eq!((runs[1].k, runs[1].seed), (2, 2));
+        assert_eq!((runs[2].k, runs[2].seed), (4, 1));
+        assert_eq!(runs[4].dataset, "synthetic");
+        assert_eq!((runs[7].k, runs[7].seed), (4, 2));
+    }
+
+    #[test]
+    fn tau_axis_rewrites_algo_names() {
+        assert_eq!(retau_name("cidertf_t4", 8), "cidertf_t8");
+        assert_eq!(retau_name("cidertf_m_t2", 16), "cidertf_m_t16");
+        assert_eq!(retau_name("dpsgd", 4), "dpsgd_t4");
+        assert_eq!(retau_name("x_table", 3), "x_table_t3");
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.algos = vec![AlgoConfig::cidertf(2)];
+        spec.taus = vec![2, 8];
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs[1].algo.tau, 8);
+        assert_eq!(runs[1].algo.name, "cidertf_t8");
+    }
+
+    #[test]
+    fn policy_passes_apply() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.algos = vec![AlgoConfig::gcp(), AlgoConfig::bras_cpd(), AlgoConfig::cidertf(2)];
+        spec.ks = vec![8];
+        spec.centralized_k1 = true;
+        spec.auto_gamma = true;
+        spec.block_random_epochs_scale = 3;
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs[0].k, 1, "gcp runs centralized");
+        assert_eq!(runs[2].k, 8, "cidertf keeps the K axis");
+        assert_eq!(runs[2].gamma, tuned_gamma("tiny", Loss::Logit));
+        assert_eq!(runs[0].epochs, 1, "gcp is not block-random");
+        assert_eq!(runs[1].epochs, 3, "bras_cpd epochs scale by D");
+        // fault on a lock-step driver upgrades to sim
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.networks = vec![None, Some(FaultConfig::lossy(0.2))];
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs[0].driver, DriverKind::Sequential);
+        assert_eq!(runs[1].driver, DriverKind::Sim);
+    }
+
+    #[test]
+    fn centralized_k1_survives_name_rewriting_axes() {
+        // the tau axis renames bras_cpd -> bras_cpd_t2 before the policy
+        // pass; a renamed centralized baseline must still run K = 1
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.algos = vec![AlgoConfig::bras_cpd(), AlgoConfig::cidertf(2)];
+        spec.taus = vec![2, 4];
+        spec.ks = vec![8];
+        spec.centralized_k1 = true;
+        let runs = spec.expand().unwrap();
+        assert_eq!(runs[0].algo.name, "bras_cpd_t2");
+        assert_eq!(runs[0].k, 1, "renamed centralized baseline stays K=1");
+        assert_eq!(runs[1].k, 1);
+        assert_eq!(runs[2].k, 8, "cidertf keeps the K axis");
+        // prefix matching must not swallow unrelated names
+        let mut lookalike = AlgoConfig::dpsgd();
+        lookalike.name = "bras_cpd2".into();
+        assert_eq!(centralized_k(&lookalike, 8), 8);
+        assert_eq!(centralized_k(&AlgoConfig::gcp(), 8), 1);
+    }
+
+    #[test]
+    fn trigger_axis_disables_at_zero() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.triggers = vec![
+            TriggerPoint { lambda0_scale: 0.0, alpha: 1.0 },
+            TriggerPoint { lambda0_scale: 1.0, alpha: 1.3 },
+        ];
+        let runs = spec.expand().unwrap();
+        assert!(!runs[0].algo.event_triggered);
+        assert!(runs[0].trigger_lambda0_scale > 0.0, "λ₀ stays positive");
+        assert!(runs[1].algo.event_triggered);
+        assert_eq!(runs[1].trigger_alpha, 1.3);
+        assert!(runs[1].algo.name.contains("_trig_s1_a1.3"), "{}", runs[1].algo.name);
+    }
+
+    #[test]
+    fn sweep_json_round_trips() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.datasets = vec!["tiny".into()];
+        spec.losses = vec![Loss::Logit, Loss::Ls];
+        spec.algos = vec![AlgoConfig::cidertf(4), AlgoConfig::dpsgd()];
+        spec.taus = vec![2, 4];
+        spec.ks = vec![2, 4];
+        spec.topologies = vec![Topology::Ring, Topology::Star];
+        spec.compressors = vec![Compressor::Sign, Compressor::TopK { ratio: 16 }];
+        spec.networks = vec![None, Some(FaultConfig::lossy(0.25))];
+        spec.drivers = vec![DriverKind::Sim];
+        spec.triggers = vec![TriggerPoint { lambda0_scale: 1.0, alpha: 1.3 }];
+        spec.gammas = vec![0.5, 0.25];
+        spec.seeds = vec![1, 0xDEAD_BEEF_FEED_F00D];
+        spec.centralized_k1 = true;
+        spec.block_random_epochs_scale = 3;
+        let pretty = spec.to_json().to_pretty_string();
+        let back = SweepSpec::from_json_str(&pretty).unwrap();
+        assert_eq!(back, spec);
+        let compact = spec.to_json().to_string();
+        assert_eq!(SweepSpec::from_json_str(&compact).unwrap(), spec);
+    }
+
+    #[test]
+    fn sweep_json_accepts_string_axes_and_suggests_on_typos() {
+        let base = tiny_base().to_json().to_string();
+        let text = format!(
+            r#"{{"schema":"cidertf-sweep-v1","base":{base},
+                "algos":["cidertf:8","dpsgd"],"networks":[null,"lossy:0.3"]}}"#
+        );
+        let spec = SweepSpec::from_json_str(&text).unwrap();
+        assert_eq!(spec.algos[0].tau, 8);
+        assert!((spec.networks[1].as_ref().unwrap().drop_rate - 0.3).abs() < 1e-12);
+
+        let bad = format!(
+            r#"{{"schema":"cidertf-sweep-v1","base":{base},"networks":["lozzy:0.3"]}}"#
+        );
+        let err = format!("{:#}", SweepSpec::from_json_str(&bad).unwrap_err());
+        assert!(err.contains("lossy"), "did-you-mean missing: {err}");
+
+        let typo = format!(r#"{{"schema":"cidertf-sweep-v1","base":{base},"algoss":[]}}"#);
+        let err = format!("{:#}", SweepSpec::from_json_str(&typo).unwrap_err());
+        assert!(err.contains("algos"), "axis-key hint missing: {err}");
+    }
+
+    #[test]
+    fn auto_gamma_conflicts_with_gamma_axis() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.auto_gamma = true;
+        spec.gammas = vec![0.5];
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn run_stems_disambiguate_label_collisions() {
+        let base = tiny_base();
+        let mut spec = SweepSpec::new(base);
+        spec.networks = vec![None, Some(FaultConfig::lossy(0.1))];
+        spec.drivers = vec![DriverKind::Sim];
+        let runs = spec.expand().unwrap();
+        // same label (network is not part of the label) -> indexed stems
+        assert_eq!(runs[0].label(), runs[1].label());
+        let stems = run_stems(&runs);
+        assert_ne!(stems[0], stems[1]);
+        assert!(stems[1].ends_with("_r001"), "{}", stems[1]);
+    }
+}

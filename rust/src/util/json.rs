@@ -134,6 +134,13 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing/invalid u64 field '{key}'"))
     }
 
+    /// Typed bool field lookup.
+    pub fn req_bool(&self, key: &str) -> anyhow::Result<bool> {
+        self.get(key)
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid bool field '{key}'"))
+    }
+
     /// Reject objects carrying keys outside `allowed`, with a
     /// did-you-mean hint — so a typo'd field in a hand-written config
     /// file is an error instead of a silently-ignored default.
@@ -167,6 +174,16 @@ impl Json {
 
     pub fn arr_usize(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// Array of lossless u64s (each encoded per [`Json::u64`]).
+    pub fn arr_u64(xs: &[u64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::u64(x)).collect())
+    }
+
+    /// Array of strings.
+    pub fn arr_str(xs: &[String]) -> Json {
+        Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect())
     }
 
     /// Serialize compactly.

@@ -1,0 +1,150 @@
+//! Sweep-engine integration tests — the PR's acceptance criteria:
+//! a `SweepSpec` (and its expansion) round-trips through JSON; a 6-run
+//! grid executed with `workers = 1` and `workers = 4` produces
+//! byte-identical `sweep.jsonl`; resuming a half-finished sweep dir
+//! re-runs only the missing runs.
+
+use std::path::PathBuf;
+
+use cidertf::engine::spec::ExperimentSpec;
+use cidertf::engine::AlgoConfig;
+use cidertf::losses::Loss;
+use cidertf::sweep::{self, SweepOptions, SweepSpec};
+
+fn tiny_base() -> ExperimentSpec {
+    let mut base = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+    base.k = 2;
+    base.rank = 4;
+    base.fiber_samples = 16;
+    base.eval_batch = 64;
+    base.gamma = 0.5;
+    base.epochs = 1;
+    base.iters_per_epoch = 30;
+    base.backend = "native".to_string();
+    base
+}
+
+/// 2 algos × 3 seeds = 6 runs, all sharing one Arc-loaded dataset.
+fn six_run_grid() -> SweepSpec {
+    let mut spec = SweepSpec::new(tiny_base());
+    spec.algos = vec![AlgoConfig::cidertf(2), AlgoConfig::dpsgd()];
+    spec.seeds = vec![1, 2, 3];
+    spec
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cidertf_sweep_test_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn quiet_opts(dir: PathBuf, workers: usize) -> SweepOptions {
+    let mut opts = SweepOptions::new(dir, workers);
+    opts.quiet = true;
+    opts
+}
+
+#[test]
+fn sweep_spec_and_expansion_round_trip_through_json() {
+    let spec = six_run_grid();
+    let text = spec.to_json().to_pretty_string();
+    let back = SweepSpec::from_json_str(&text).expect("sweep spec parses back");
+    assert_eq!(back, spec);
+    // the *expansion* survives the round trip too — the resumability and
+    // determinism guarantees key on it
+    let runs = spec.expand().unwrap();
+    let back_runs = back.expand().unwrap();
+    assert_eq!(runs.len(), 6);
+    assert_eq!(runs, back_runs);
+    // every expanded cell itself round-trips (it is a full ExperimentSpec)
+    for r in &runs {
+        let cell = ExperimentSpec::from_json_str(&r.to_json().to_string()).unwrap();
+        assert_eq!(&cell, r);
+    }
+}
+
+#[test]
+fn multi_worker_aggregate_is_bit_identical_to_single_worker() {
+    let spec = six_run_grid();
+
+    let dir1 = tmp_dir("workers1");
+    let out1 = sweep::execute(&spec, &quiet_opts(dir1.clone(), 1), None).unwrap();
+    let jsonl1 = std::fs::read(&out1.jsonl_path).unwrap();
+
+    let dir4 = tmp_dir("workers4");
+    let out4 = sweep::execute(&spec, &quiet_opts(dir4.clone(), 4), None).unwrap();
+    let jsonl4 = std::fs::read(&out4.jsonl_path).unwrap();
+
+    assert_eq!(out1.results.len(), 6);
+    assert_eq!(out4.results.len(), 6);
+    assert!(!jsonl1.is_empty());
+    assert_eq!(
+        jsonl1, jsonl4,
+        "sweep.jsonl must be byte-identical for any worker count"
+    );
+    // 6 runs + header
+    assert_eq!(jsonl1.iter().filter(|&&b| b == b'\n').count(), 7);
+    // and the per-run records agree on the deterministic fields
+    for (a, b) in out1.results.iter().zip(out4.results.iter()) {
+        assert_eq!(a.record.final_loss().to_bits(), b.record.final_loss().to_bits());
+        assert_eq!(a.record.total.bytes, b.record.total.bytes);
+        assert_eq!(a.record.total.messages, b.record.total.messages);
+    }
+
+    std::fs::remove_dir_all(&dir1).ok();
+    std::fs::remove_dir_all(&dir4).ok();
+}
+
+#[test]
+fn resume_skips_finished_runs_and_reruns_missing_ones() {
+    let spec = six_run_grid();
+    let dir = tmp_dir("resume");
+    let out = sweep::execute(&spec, &quiet_opts(dir.clone(), 2), None).unwrap();
+    assert_eq!(out.skipped(), 0);
+    let jsonl_before = std::fs::read(&out.jsonl_path).unwrap();
+
+    // simulate a half-finished sweep: drop two run records
+    let mut record_files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            name.starts_with("run_") && name.ends_with(".json")
+        })
+        .collect();
+    record_files.sort();
+    assert_eq!(record_files.len(), 6, "one record file per run");
+    std::fs::remove_file(&record_files[1]).unwrap();
+    std::fs::remove_file(&record_files[4]).unwrap();
+
+    let resumed = sweep::execute(&spec, &quiet_opts(dir.clone(), 2), None).unwrap();
+    assert_eq!(resumed.skipped(), 4, "only the two missing runs re-execute");
+    for (i, r) in resumed.results.iter().enumerate() {
+        assert_eq!(r.skipped, i != 1 && i != 4, "run {i}");
+    }
+    // the aggregate is regenerated and identical (runs are deterministic)
+    let jsonl_after = std::fs::read(&resumed.jsonl_path).unwrap();
+    assert_eq!(jsonl_before, jsonl_after);
+
+    // a spec drift forces a full re-run: same dir, different seed axis
+    let mut drifted = spec.clone();
+    drifted.seeds = vec![4, 5, 6];
+    let fresh = sweep::execute(&drifted, &quiet_opts(dir.clone(), 2), None).unwrap();
+    assert_eq!(fresh.skipped(), 0, "changed specs must not reuse stale records");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn curves_and_records_land_in_the_sweep_dir() {
+    let mut spec = SweepSpec::new(tiny_base());
+    spec.seeds = vec![9];
+    let dir = tmp_dir("outputs");
+    let out = sweep::execute(&spec, &quiet_opts(dir.clone(), 1), None).unwrap();
+    assert_eq!(out.results.len(), 1);
+    let label = out.runs[0].label();
+    assert!(dir.join(format!("{label}.csv")).exists(), "per-run curve CSV");
+    assert!(dir.join(format!("run_000_{label}.json")).exists(), "per-run record");
+    assert!(dir.join("sweep.jsonl").exists(), "aggregate");
+    std::fs::remove_dir_all(&dir).ok();
+}
