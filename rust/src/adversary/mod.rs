@@ -1,0 +1,523 @@
+//! Byzantine client simulation — the adversary axis of the experiment
+//! plane.
+//!
+//! CiderTF's decentralized setting exists because a central server is an
+//! attack target, yet honest-only simulation says nothing about what a
+//! *compromised site* does to convergence. This module corrupts gossip
+//! payloads at publish time, after compression and ledger accounting:
+//! the wire carries whatever the adversary emits, every neighbor of a
+//! Byzantine client receives the same corrupted delta (matching the
+//! broadcast model of the honest path), and the comm ledger keeps the
+//! honest byte count the client *claims* to have sent.
+//!
+//! # Determinism
+//!
+//! Which clients are Byzantine is a static trait of
+//! ([`AdversarySchedule::seed`], client id) via the same unit-hash used
+//! for straggler assignment — independent of call order. The
+//! `scaled_noise` attack derives a fresh RNG from
+//! `(seed, client, round, mode)` per corruption, so adversarial noise is
+//! a pure function of its coordinates: bit-identical across drivers,
+//! worker counts, and checkpoint/resume. `stale_replay` carries a replay
+//! buffer that is serialized into checkpoints
+//! ([`Adversary::state_json`]), preserving bit-exact resume.
+//!
+//! The default seed [`AdversarySchedule::DEFAULT_SEED`] is a sentinel:
+//! specs replace it with the run seed at materialization (same
+//! inheritance rule as [`crate::net::sim::FaultConfig`]), so two runs
+//! differing only in `seed` get different Byzantine subsets.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::compress::Payload;
+use crate::net::sim::unit_hash;
+use crate::util::json::Json;
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+/// Which attack a Byzantine client mounts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdversaryKind {
+    /// Negate every published delta (gradient-reversal attack).
+    SignFlip,
+    /// Add `N(0, σ²)` noise to every published delta (σ = the payload's
+    /// scale is *not* consulted — large σ swamps the honest signal).
+    ScaledNoise(f64),
+    /// Replay the delta published `age` rounds ago for the same mode
+    /// (model-poisoning via stale updates; honest until the buffer
+    /// fills).
+    StaleReplay(usize),
+}
+
+impl AdversaryKind {
+    /// Registry key for this attack.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdversaryKind::SignFlip => "sign_flip",
+            AdversaryKind::ScaledNoise(_) => "scaled_noise",
+            AdversaryKind::StaleReplay(_) => "stale_replay",
+        }
+    }
+}
+
+/// Spec-carried adversary axis: which attack, what fraction of clients
+/// mount it, and the seed that picks the Byzantine subset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdversarySchedule {
+    /// the attack every Byzantine client mounts
+    pub kind: AdversaryKind,
+    /// fraction of clients that are Byzantine (deterministic subset)
+    pub fraction: f64,
+    /// subset-selection + noise seed; [`Self::DEFAULT_SEED`] is a
+    /// sentinel replaced by the run seed at materialization
+    pub seed: u64,
+}
+
+impl AdversarySchedule {
+    /// Sentinel seed meaning "inherit the experiment seed".
+    pub const DEFAULT_SEED: u64 = 0xAD5E;
+    /// Default Byzantine fraction for registry string forms.
+    pub const DEFAULT_FRACTION: f64 = 0.2;
+    /// Default `scaled_noise` σ.
+    pub const DEFAULT_SIGMA: f64 = 8.0;
+    /// Default `stale_replay` age (rounds).
+    pub const DEFAULT_AGE: usize = 5;
+
+    /// `sign_flip` schedule at `fraction` (registry constructor).
+    pub fn sign_flip(fraction: f64) -> Self {
+        AdversarySchedule { kind: AdversaryKind::SignFlip, fraction, seed: Self::DEFAULT_SEED }
+    }
+
+    /// `scaled_noise` schedule at `fraction` with the default σ.
+    pub fn scaled_noise(fraction: f64) -> Self {
+        AdversarySchedule {
+            kind: AdversaryKind::ScaledNoise(Self::DEFAULT_SIGMA),
+            fraction,
+            seed: Self::DEFAULT_SEED,
+        }
+    }
+
+    /// `stale_replay` schedule at `fraction` with the default age.
+    pub fn stale_replay(fraction: f64) -> Self {
+        AdversarySchedule {
+            kind: AdversaryKind::StaleReplay(Self::DEFAULT_AGE),
+            fraction,
+            seed: Self::DEFAULT_SEED,
+        }
+    }
+
+    /// Replace the sentinel seed with the run seed (no-op for an
+    /// explicitly pinned seed) — call at materialization, like
+    /// `FaultConfig` seed inheritance.
+    pub fn inherit_seed(&mut self, run_seed: u64) {
+        if self.seed == Self::DEFAULT_SEED {
+            self.seed = run_seed;
+        }
+    }
+
+    /// Is `client` Byzantine under this schedule? A static trait of
+    /// `(seed, client)` — stable across rounds and call order.
+    pub fn is_adversarial(&self, client: usize) -> bool {
+        unit_hash(self.seed, client as u64, 0, 17) < self.fraction
+    }
+
+    /// The Byzantine subset of `0..k` (ascending, deterministic).
+    pub fn adversarial_clients(&self, k: usize) -> Vec<usize> {
+        (0..k).filter(|&c| self.is_adversarial(c)).collect()
+    }
+
+    /// Filesystem-safe label fragment for run stems (no `:`).
+    pub fn label_component(&self) -> String {
+        match &self.kind {
+            AdversaryKind::SignFlip => format!("signflip{}", self.fraction),
+            AdversaryKind::ScaledNoise(s) => format!("noise{}s{s}", self.fraction),
+            AdversaryKind::StaleReplay(a) => format!("stale{}a{a}", self.fraction),
+        }
+    }
+
+    /// Materialize the payload corruptor for one run.
+    pub fn build(&self) -> Box<dyn Adversary> {
+        match &self.kind {
+            AdversaryKind::SignFlip => Box::new(SignFlip),
+            AdversaryKind::ScaledNoise(sigma) => {
+                Box::new(ScaledNoise { sigma: *sigma, seed: self.seed })
+            }
+            AdversaryKind::StaleReplay(age) => {
+                Box::new(StaleReplay { age: *age, history: BTreeMap::new() })
+            }
+        }
+    }
+
+    /// Spec JSON object: `{"kind", "fraction", "seed"}` plus the
+    /// kind-specific parameter (`"sigma"` or `"age"`).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("kind", Json::Str(self.kind.name().to_string())),
+            ("fraction", Json::Num(self.fraction)),
+        ];
+        match &self.kind {
+            AdversaryKind::SignFlip => {}
+            AdversaryKind::ScaledNoise(s) => fields.push(("sigma", Json::Num(*s))),
+            AdversaryKind::StaleReplay(a) => fields.push(("age", Json::Num(*a as f64))),
+        }
+        fields.push(("seed", Json::u64(self.seed)));
+        Json::obj(fields)
+    }
+
+    /// Parse [`AdversarySchedule::to_json`] back (strict keys; `seed`
+    /// optional → sentinel, parameters optional → kind defaults).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        j.ensure_known_keys("adversary", &["kind", "fraction", "sigma", "age", "seed"])?;
+        let kind = match j.req_str("kind")? {
+            "sign_flip" => AdversaryKind::SignFlip,
+            "scaled_noise" => {
+                let sigma = match j.get("sigma") {
+                    None => Self::DEFAULT_SIGMA,
+                    Some(v) => {
+                        v.as_f64().ok_or_else(|| anyhow::anyhow!("bad adversary 'sigma'"))?
+                    }
+                };
+                AdversaryKind::ScaledNoise(sigma)
+            }
+            "stale_replay" => {
+                let age = match j.get("age") {
+                    None => Self::DEFAULT_AGE,
+                    Some(v) => {
+                        v.as_usize().ok_or_else(|| anyhow::anyhow!("bad adversary 'age'"))?
+                    }
+                };
+                AdversaryKind::StaleReplay(age)
+            }
+            other => anyhow::bail!("unknown adversary kind '{other}'"),
+        };
+        let fraction = j.req_f64("fraction")?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&fraction),
+            "adversary fraction {fraction} outside [0, 1]"
+        );
+        let seed = match j.get("seed") {
+            None => Self::DEFAULT_SEED,
+            Some(v) => v.as_u64().ok_or_else(|| anyhow::anyhow!("bad adversary 'seed'"))?,
+        };
+        Ok(AdversarySchedule { kind, fraction, seed })
+    }
+}
+
+/// A payload corruptor, applied after compression at publish time.
+pub trait Adversary {
+    /// The attack's registry name (for events/observers).
+    fn kind_name(&self) -> &'static str;
+
+    /// Corrupt `payload` in place. `rows x cols` is the decoded shape of
+    /// the mode-`mode` delta; `client`/`round` feed deterministic
+    /// per-corruption randomness.
+    fn corrupt(
+        &mut self,
+        client: usize,
+        mode: usize,
+        round: usize,
+        rows: usize,
+        cols: usize,
+        payload: &mut Payload,
+    );
+
+    /// Checkpointable internal state (`Json::Null` for stateless
+    /// attacks).
+    fn state_json(&self) -> Json {
+        Json::Null
+    }
+
+    /// Restore a [`Adversary::state_json`] snapshot.
+    fn restore_state(&mut self, j: &Json) -> anyhow::Result<()> {
+        anyhow::ensure!(matches!(j, Json::Null), "unexpected adversary state for stateless attack");
+        Ok(())
+    }
+}
+
+/// Negates every published delta without touching its wire encoding.
+struct SignFlip;
+
+impl Adversary for SignFlip {
+    fn kind_name(&self) -> &'static str {
+        "sign_flip"
+    }
+
+    fn corrupt(
+        &mut self,
+        _client: usize,
+        _mode: usize,
+        _round: usize,
+        _rows: usize,
+        _cols: usize,
+        payload: &mut Payload,
+    ) {
+        match payload {
+            Payload::Dense(v) => v.iter_mut().for_each(|x| *x = -*x),
+            // decode emits ±scale by bit: negating the scale flips every
+            // sign while keeping the exact wire size
+            Payload::Sign { scale, .. } => *scale = -*scale,
+            Payload::TopK { values, .. } => values.iter_mut().for_each(|x| *x = -*x),
+            Payload::Zero { .. } => {}
+        }
+    }
+}
+
+/// Adds `N(0, σ²)` noise to the decoded delta and republishes it dense.
+struct ScaledNoise {
+    sigma: f64,
+    seed: u64,
+}
+
+impl Adversary for ScaledNoise {
+    fn kind_name(&self) -> &'static str {
+        "scaled_noise"
+    }
+
+    fn corrupt(
+        &mut self,
+        client: usize,
+        mode: usize,
+        round: usize,
+        rows: usize,
+        cols: usize,
+        payload: &mut Payload,
+    ) {
+        // fresh stream per (client, round, mode): the noise is a pure
+        // function of its coordinates, so resume replays it bit-exactly
+        let mut rng = Rng::new(self.seed ^ 0x5CA1_ED00)
+            .split(client as u64)
+            .split(round as u64)
+            .split(mode as u64);
+        let mut m = payload.decode(rows, cols);
+        for x in m.data.iter_mut() {
+            *x += (self.sigma * rng.normal()) as f32;
+        }
+        *payload = Payload::Dense(m.data);
+    }
+}
+
+/// Replays the delta published `age` rounds ago for the same mode.
+struct StaleReplay {
+    age: usize,
+    /// per-(client, mode) ring of decoded published deltas, oldest first
+    history: BTreeMap<(usize, usize), VecDeque<Mat>>,
+}
+
+impl Adversary for StaleReplay {
+    fn kind_name(&self) -> &'static str {
+        "stale_replay"
+    }
+
+    fn corrupt(
+        &mut self,
+        client: usize,
+        mode: usize,
+        round: usize,
+        rows: usize,
+        cols: usize,
+        payload: &mut Payload,
+    ) {
+        let _ = round;
+        let q = self.history.entry((client, mode)).or_default();
+        q.push_back(payload.decode(rows, cols));
+        if q.len() > self.age {
+            let stale = q.pop_front().expect("non-empty replay buffer");
+            *payload = Payload::Dense(stale.data);
+        }
+    }
+
+    fn state_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .history
+            .iter()
+            .map(|(&(client, mode), q)| {
+                let deltas: Vec<Json> = q
+                    .iter()
+                    .map(|m| {
+                        Json::obj(vec![
+                            ("r", Json::Num(m.rows as f64)),
+                            ("c", Json::Num(m.cols as f64)),
+                            ("b", Json::Str(m.encode_bits())),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("client", Json::Num(client as f64)),
+                    ("mode", Json::Num(mode as f64)),
+                    ("deltas", Json::Arr(deltas)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("history", Json::Arr(entries))])
+    }
+
+    fn restore_state(&mut self, j: &Json) -> anyhow::Result<()> {
+        self.history.clear();
+        if matches!(j, Json::Null) {
+            return Ok(());
+        }
+        for entry in j.req_array("history")? {
+            let client = entry.req_usize("client")?;
+            let mode = entry.req_usize("mode")?;
+            let mut q = VecDeque::new();
+            for d in entry.req_array("deltas")? {
+                q.push_back(Mat::decode_bits(d.req_usize("r")?, d.req_usize("c")?, d.req_str("b")?)?);
+            }
+            self.history.insert((client, mode), q);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compressor;
+
+    fn delta(seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::rand_normal(4, 3, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn subset_is_stable_and_fraction_sized() {
+        let sched = AdversarySchedule::sign_flip(0.2);
+        let a = sched.adversarial_clients(200);
+        let b = sched.adversarial_clients(200);
+        assert_eq!(a, b, "static per-client trait");
+        // ~20% of 200 with unit-hash scatter
+        assert!((20..=60).contains(&a.len()), "got {} adversaries", a.len());
+        // a different seed picks a different subset
+        let mut other = sched.clone();
+        other.seed = 99;
+        assert_ne!(a, other.adversarial_clients(200));
+    }
+
+    #[test]
+    fn sentinel_seed_inherits_run_seed_but_pinned_stays() {
+        let mut s = AdversarySchedule::sign_flip(0.3);
+        s.inherit_seed(7);
+        assert_eq!(s.seed, 7);
+        let mut pinned = AdversarySchedule::sign_flip(0.3);
+        pinned.seed = 42;
+        pinned.inherit_seed(7);
+        assert_eq!(pinned.seed, 42);
+    }
+
+    #[test]
+    fn sign_flip_negates_every_encoding() {
+        let m = delta(1);
+        let mut adv = AdversarySchedule::sign_flip(1.0).build();
+        for comp in [Compressor::None, Compressor::Sign, Compressor::TopK { ratio: 4 }] {
+            let mut p = comp.compress(&m);
+            let honest = p.decode(4, 3);
+            adv.corrupt(0, 1, 0, 4, 3, &mut p);
+            let corrupted = p.decode(4, 3);
+            for (h, c) in honest.data.iter().zip(corrupted.data.iter()) {
+                assert_eq!((-h).to_bits(), c.to_bits(), "{comp:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_noise_is_deterministic_per_coordinates() {
+        let m = delta(2);
+        let sched = AdversarySchedule::scaled_noise(1.0);
+        let mut a = sched.build();
+        let mut b = sched.build();
+        let mut pa = Compressor::None.compress(&m);
+        let mut pb = Compressor::None.compress(&m);
+        a.corrupt(3, 1, 10, 4, 3, &mut pa);
+        b.corrupt(3, 1, 10, 4, 3, &mut pb);
+        assert_eq!(pa.decode(4, 3).data, pb.decode(4, 3).data);
+        // different round -> different noise
+        let mut pc = Compressor::None.compress(&m);
+        b.corrupt(3, 1, 11, 4, 3, &mut pc);
+        assert_ne!(pa.decode(4, 3).data, pc.decode(4, 3).data);
+        // and the corruption actually moved the payload
+        assert_ne!(pa.decode(4, 3).data, m.data);
+    }
+
+    #[test]
+    fn stale_replay_is_honest_until_the_buffer_fills() {
+        let mut adv = AdversarySchedule::stale_replay(1.0).build();
+        let deltas: Vec<Mat> = (0..4).map(|i| delta(10 + i)).collect();
+        let mut published = Vec::new();
+        for (round, d) in deltas.iter().enumerate() {
+            let mut p = Compressor::None.compress(d);
+            adv.corrupt(0, 1, round, 4, 3, &mut p);
+            published.push(p.decode(4, 3));
+        }
+        // DEFAULT_AGE = 5 > 4 rounds: everything still honest
+        for (d, p) in deltas.iter().zip(published.iter()) {
+            assert_eq!(d.data, p.data);
+        }
+        // age = 2: round t >= 2 republishes round t-2
+        let sched = AdversarySchedule {
+            kind: AdversaryKind::StaleReplay(2),
+            fraction: 1.0,
+            seed: 1,
+        };
+        let mut adv = sched.build();
+        let mut published = Vec::new();
+        for (round, d) in deltas.iter().enumerate() {
+            let mut p = Compressor::None.compress(d);
+            adv.corrupt(0, 1, round, 4, 3, &mut p);
+            published.push(p.decode(4, 3));
+        }
+        assert_eq!(published[0].data, deltas[0].data);
+        assert_eq!(published[1].data, deltas[1].data);
+        assert_eq!(published[2].data, deltas[0].data);
+        assert_eq!(published[3].data, deltas[1].data);
+    }
+
+    #[test]
+    fn stale_replay_state_round_trips_bit_exactly() {
+        let sched = AdversarySchedule {
+            kind: AdversaryKind::StaleReplay(3),
+            fraction: 1.0,
+            seed: 1,
+        };
+        let mut adv = sched.build();
+        for round in 0..2 {
+            let mut p = Compressor::None.compress(&delta(20 + round as u64));
+            adv.corrupt(1, 2, round, 4, 3, &mut p);
+        }
+        let snap = adv.state_json();
+        let mut restored = sched.build();
+        restored.restore_state(&snap).unwrap();
+        // both continue identically
+        for round in 2..6 {
+            let d = delta(20 + round as u64);
+            let mut pa = Compressor::None.compress(&d);
+            let mut pb = Compressor::None.compress(&d);
+            adv.corrupt(1, 2, round, 4, 3, &mut pa);
+            restored.corrupt(1, 2, round, 4, 3, &mut pb);
+            assert_eq!(pa.decode(4, 3).data, pb.decode(4, 3).data, "round {round}");
+        }
+    }
+
+    #[test]
+    fn schedule_json_round_trips() {
+        let scheds = [
+            AdversarySchedule::sign_flip(0.2),
+            AdversarySchedule::scaled_noise(0.35),
+            AdversarySchedule::stale_replay(0.1),
+            AdversarySchedule { kind: AdversaryKind::ScaledNoise(2.5), fraction: 0.4, seed: 77 },
+        ];
+        for s in &scheds {
+            let back = AdversarySchedule::from_json(&s.to_json()).unwrap();
+            assert_eq!(&back, s);
+        }
+        assert!(AdversarySchedule::from_json(&Json::obj(vec![
+            ("kind", Json::Str("sign_flip".into())),
+            ("fraction", Json::Num(1.5)),
+        ]))
+        .is_err());
+        assert!(AdversarySchedule::from_json(&Json::obj(vec![
+            ("kind", Json::Str("gradient_ascent".into())),
+            ("fraction", Json::Num(0.2)),
+        ]))
+        .is_err());
+    }
+}

@@ -40,7 +40,7 @@ pub fn extract(factors: &FactorSet, n: usize, per_mode: usize) -> Vec<Phenotype>
 
 fn top_rows_of_column(m: &Mat, col: usize, k: usize) -> Vec<(usize, f32)> {
     let mut rows: Vec<(usize, f32)> = (0..m.rows).map(|i| (i, m.at(i, col))).collect();
-    rows.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+    rows.sort_by(|a, b| crate::util::order::nan_last_desc_abs_f32(&a.1, &b.1));
     rows.truncate(k);
     rows
 }
@@ -152,6 +152,22 @@ mod tests {
         let ph = extract(&rand, 3, supp);
         let score = support_recovery(&ph, &truth);
         assert!(score < 0.6, "random factors scored {score}");
+    }
+
+    #[test]
+    fn nan_poisoned_factor_column_does_not_panic_top_rows() {
+        // regression: the magnitude sort used partial_cmp().unwrap(),
+        // which panics on NaN; NaN weights must now sort last so a
+        // diverged factor still yields the finite top features
+        let mut m = Mat::zeros(5, 1);
+        *m.at_mut(0, 0) = 0.5;
+        *m.at_mut(1, 0) = f32::NAN;
+        *m.at_mut(2, 0) = -3.0;
+        *m.at_mut(3, 0) = 1.0;
+        *m.at_mut(4, 0) = -f32::NAN;
+        let top = top_rows_of_column(&m, 0, 3);
+        let ids: Vec<usize> = top.iter().map(|&(i, _)| i).collect();
+        assert_eq!(ids, vec![2, 3, 0], "finite rows ordered by |weight|, NaNs excluded");
     }
 
     #[test]

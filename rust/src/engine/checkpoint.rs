@@ -46,6 +46,9 @@ pub struct SessionState {
     pub sampler_t: usize,
     /// network-model internal state (`Json::Null` for stateless models)
     pub net_model: Json,
+    /// adversary internal state ([`crate::adversary::Adversary::state_json`];
+    /// `Json::Null` for honest runs and pre-adversary checkpoints)
+    pub adversary: Json,
     /// nnz of the dataset the run was training on — re-checked on
     /// resume so a changed/regenerated `file:`/`csv:` source fails
     /// loudly instead of silently voiding the bit-exact-resume
@@ -168,6 +171,7 @@ pub(crate) fn snapshot_client(c: &ClientState) -> Json {
                 ("dropped", Json::u64(c.net.dropped)),
                 ("stale", Json::u64(c.net.stale)),
                 ("offline_rounds", Json::u64(c.net.offline_rounds)),
+                ("adversarial", Json::u64(c.net.adversarial)),
             ]),
         ),
     ])
@@ -257,6 +261,8 @@ pub(crate) fn restore_client(c: &mut ClientState, j: &Json) -> anyhow::Result<()
     c.net.dropped = nj.req_u64("dropped")?;
     c.net.stale = nj.req_u64("stale")?;
     c.net.offline_rounds = nj.req_u64("offline_rounds")?;
+    // absent in checkpoints written before the adversary plane existed
+    c.net.adversarial = nj.get("adversarial").and_then(Json::as_u64).unwrap_or(0);
     Ok(())
 }
 
@@ -269,6 +275,7 @@ fn state_to_json(st: &SessionState) -> Json {
         ("sampler_rng", rng_json(st.sampler_rng)),
         ("sampler_t", Json::Num(st.sampler_t as f64)),
         ("net_model", st.net_model.clone()),
+        ("adversary", st.adversary.clone()),
         ("data_nnz", st.data_nnz.map(Json::u64).unwrap_or(Json::Null)),
         ("data_fp", st.data_fp.map(Json::u64).unwrap_or(Json::Null)),
         ("points", Json::Arr(st.points.iter().map(point_json).collect())),
@@ -285,6 +292,7 @@ fn state_from_json(j: &Json) -> anyhow::Result<SessionState> {
         )?,
         sampler_t: j.req_usize("sampler_t")?,
         net_model: j.get("net_model").cloned().unwrap_or(Json::Null),
+        adversary: j.get("adversary").cloned().unwrap_or(Json::Null),
         data_nnz: j.get("data_nnz").and_then(Json::as_u64),
         data_fp: j.get("data_fp").and_then(Json::as_u64),
         points: j

@@ -311,13 +311,14 @@ fn init_factors_for_shard(
     seed: u64,
 ) -> FactorSet {
     // Row i of the global patient factor depends only on (seed, global row
-    // index), so any K produces the same global init — K=1 and K=8 runs
-    // are directly comparable and shards never need the global row count.
+    // index), so any K — and any partitioner, contiguous or not —
+    // produces the same global init; K=1 and K=8 runs are directly
+    // comparable and shards never need the global row count.
     let mut mats = Vec::with_capacity(dims.len());
     // patient mode: per-global-row deterministic rows
     let mut a0 = Mat::zeros(dims[0], rank);
     for local in 0..dims[0] {
-        let global_row = shard.row_offset + local;
+        let global_row = shard.global_rows[local] as usize;
         let mut row_rng = Rng::new(seed ^ 0xA0).split(global_row as u64);
         for r in 0..rank {
             *a0.at_mut(local, r) = row_rng.uniform_f32() * init_scale;
@@ -417,13 +418,36 @@ mod tests {
         // rows of a K=2 shard must equal the same global rows at K=1
         let k1 = mk_client(0, 1, false);
         let c1 = mk_client(1, 2, false);
-        let offset = c1.shard.row_offset;
         for local in 0..c1.factors.mats[0].rows {
             assert_eq!(
                 c1.factors.mats[0].row(local),
-                k1.factors.mats[0].row(offset + local),
+                k1.factors.mats[0].row(c1.shard.global_rows[local] as usize),
                 "row {local}"
             );
+        }
+    }
+
+    #[test]
+    fn non_contiguous_shard_init_matches_global_slice() {
+        // a site_vocab shard owns scattered global rows; each local row
+        // must still equal the K=1 global init at its global index
+        let data = SynthConfig::tiny(11).generate();
+        let k1 = mk_client(0, 1, false);
+        let shards = crate::tensor::partition::partition_shared_with(
+            &data.tensor,
+            3,
+            &crate::tensor::partition::Partitioner::SiteVocab(0.2),
+            9,
+        );
+        for (id, sh) in shards.into_iter().enumerate() {
+            let c = ClientState::new(id, sh, 4, 0.2, 123, 16, 32, false, false);
+            for local in 0..c.factors.mats[0].rows {
+                assert_eq!(
+                    c.factors.mats[0].row(local),
+                    k1.factors.mats[0].row(c.shard.global_rows[local] as usize),
+                    "row {local}"
+                );
+            }
         }
     }
 

@@ -131,6 +131,8 @@ impl RunRecord {
             dropped: j.req_f64("dropped")? as u64,
             stale: j.req_f64("stale")? as u64,
             offline_rounds: j.req_f64("offline_rounds")? as u64,
+            // absent in records written before the adversary plane existed
+            adversarial: j.get("adversarial").and_then(Json::as_f64).unwrap_or(0.0) as u64,
         };
         Ok(RunRecord {
             algo: j.req_str("algo")?.to_string(),
@@ -179,6 +181,7 @@ impl RunRecord {
             ("dropped", Json::Num(self.net.dropped as f64)),
             ("stale", Json::Num(self.net.stale as f64)),
             ("offline_rounds", Json::Num(self.net.offline_rounds as f64)),
+            ("adversarial", Json::Num(self.net.adversarial as f64)),
             ("points", Json::Arr(points)),
         ])
     }

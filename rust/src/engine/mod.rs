@@ -21,15 +21,16 @@ pub mod presets;
 pub mod session;
 pub mod spec;
 
+use crate::adversary::AdversarySchedule;
 use crate::compress::{Compressor, Payload};
 use crate::data::Dataset;
 use crate::factor::{fms::fms, FactorSet};
-use crate::gossip::Message;
+use crate::gossip::{Aggregator, Message};
 use crate::losses::Loss;
 use crate::net::sim::NetStats;
 use crate::runtime::ComputeBackend;
 use crate::sched::TriggerSchedule;
-use crate::tensor::partition::partition_shared;
+use crate::tensor::partition::{partition_shared_with, Partitioner};
 use crate::topology::{Graph, Topology};
 use crate::util::mat::Mat;
 use client::ClientState;
@@ -88,6 +89,14 @@ pub struct TrainConfig {
     /// execution paths (`train` / `train_parallel` / `train_sim`) receive
     /// the same value so they remain bit-identical to each other.
     pub compute_threads: usize,
+    /// how patient rows are split across institutions (even / skewed /
+    /// site-vocabulary; non-even modes draw from `seed`)
+    pub partitioner: Partitioner,
+    /// consensus combiner for peer estimates (mean / trimmed mean /
+    /// coordinate-wise median)
+    pub aggregator: Aggregator,
+    /// Byzantine-client schedule; `None` = every client honest
+    pub adversary: Option<AdversarySchedule>,
     pub algo: AlgoConfig,
 }
 
@@ -119,6 +128,9 @@ impl TrainConfig {
             trigger_alpha: 1.3,
             sim_iter_s: 1.0,
             compute_threads: 1,
+            partitioner: Partitioner::Even,
+            aggregator: Aggregator::Mean,
+            adversary: None,
             algo,
         }
     }
@@ -168,7 +180,7 @@ pub(crate) fn build_clients(
     data: &Dataset,
     graph: &Graph,
 ) -> Vec<ClientState> {
-    let shards = partition_shared(&data.tensor, cfg.k);
+    let shards = partition_shared_with(&data.tensor, cfg.k, &cfg.partitioner, cfg.seed);
     let mut clients: Vec<ClientState> = shards
         .into_iter()
         .enumerate()
@@ -286,11 +298,13 @@ pub(crate) fn publish_one(
     }
 }
 
-/// Consensus phase (Alg. 1 line 18) for every (online) client:
-/// `A^k += ϱ Σ_j w_kj (Â^j − Â^k)` on mode `m`.
+/// Consensus phase (Alg. 1 line 18) for every (online) client, combining
+/// peer estimates through `aggregator` — the plain mean reproduces
+/// `A^k += ϱ Σ_j w_kj (Â^j − Â^k)` on mode `m` bit-exactly.
 pub(crate) fn consensus_phase(
     clients: &mut [ClientState],
     graph: &Graph,
+    aggregator: &Aggregator,
     rho: f64,
     m: usize,
     online: Option<&[bool]>,
@@ -303,7 +317,8 @@ pub(crate) fn consensus_phase(
         }
         let ClientState { estimates, factors, .. } = c;
         let est = estimates.as_ref().expect("estimates");
-        est.consensus_into(
+        aggregator.consensus_into(
+            est,
             &mut factors.mats[m],
             m,
             &graph.neighbors[k],
@@ -336,23 +351,22 @@ pub(crate) fn apply_error_feedback(c: &mut ClientState, m: usize, compressor: Co
     shadow[m] = a_new;
 }
 
-/// Concatenate patient factors (shard order) and average feature factors.
+/// Scatter patient factors back to their global rows and average feature
+/// factors. Works for any partitioner: each shard carries its own
+/// `global_rows` map, so non-contiguous (skewed / site-vocab) shards land
+/// in the right global slots.
 pub fn assemble_global(clients: &[ClientState]) -> FactorSet {
     let d = clients[0].factors.order();
     let r = clients[0].factors.rank();
     let mut mats = Vec::with_capacity(d);
-    // patient mode: vertical concat in row_offset order
+    // patient mode: every partition covers each global row exactly once
     let total_rows: usize = clients.iter().map(|c| c.factors.mats[0].rows).sum();
     let mut a0 = Mat::zeros(total_rows, r);
-    let mut order: Vec<usize> = (0..clients.len()).collect();
-    order.sort_by_key(|&k| clients[k].shard.row_offset);
-    let mut at = 0;
-    for &k in &order {
-        let m = &clients[k].factors.mats[0];
+    for c in clients {
+        let m = &c.factors.mats[0];
         for i in 0..m.rows {
-            a0.row_mut(at + i).copy_from_slice(m.row(i));
+            a0.row_mut(c.shard.global_rows[i] as usize).copy_from_slice(m.row(i));
         }
-        at += m.rows;
     }
     mats.push(a0);
     // feature modes: average across clients

@@ -101,6 +101,17 @@ pub enum SessionEvent {
         /// what happened
         kind: NetFaultKind,
     },
+    /// a Byzantine client corrupted its published delta before broadcast
+    AdversarialAct {
+        /// iteration index
+        t: usize,
+        /// the Byzantine client id
+        client: usize,
+        /// the mode whose delta was corrupted
+        mode: usize,
+        /// the attack's registry name (`sign_flip`, `scaled_noise`, ...)
+        kind: &'static str,
+    },
     /// a metric point was recorded
     EvalPoint {
         /// the point (epoch, iter, time, loss, bytes, fms)
@@ -185,6 +196,9 @@ impl Observer for ConsoleObserver {
                         n.offline_rounds
                     );
                 }
+                if n.adversarial > 0 {
+                    println!("adversary: {} corrupted payloads", n.adversarial);
+                }
             }
             _ => {}
         }
@@ -234,13 +248,21 @@ pub struct JsonlObserver {
     rounds: u64,
     dropped: u64,
     offline: u64,
+    adversarial: u64,
 }
 
 impl JsonlObserver {
     /// JSONL destination (parent directories are created, lines appended
     /// starting at `RunStart`).
     pub fn new(path: impl Into<PathBuf>) -> Self {
-        JsonlObserver { path: path.into(), out: None, rounds: 0, dropped: 0, offline: 0 }
+        JsonlObserver {
+            path: path.into(),
+            out: None,
+            rounds: 0,
+            dropped: 0,
+            offline: 0,
+            adversarial: 0,
+        }
     }
 
     fn write_line(&mut self, line: Json) -> anyhow::Result<()> {
@@ -280,6 +302,7 @@ impl Observer for JsonlObserver {
                 NetFaultKind::Dropped { .. } => self.dropped += 1,
                 NetFaultKind::Offline { .. } => self.offline += 1,
             },
+            SessionEvent::AdversarialAct { .. } => self.adversarial += 1,
             SessionEvent::CommBytes { .. } => {}
             SessionEvent::EvalPoint { point: p } => {
                 let line = Json::obj(vec![
@@ -293,10 +316,12 @@ impl Observer for JsonlObserver {
                     ("rounds", Json::u64(self.rounds)),
                     ("dropped", Json::u64(self.dropped)),
                     ("offline", Json::u64(self.offline)),
+                    ("adversarial", Json::u64(self.adversarial)),
                 ]);
                 self.rounds = 0;
                 self.dropped = 0;
                 self.offline = 0;
+                self.adversarial = 0;
                 self.write_line(line)?;
             }
             SessionEvent::Checkpoint { t, path } => {
@@ -617,6 +642,16 @@ pub(crate) fn run_loop(
     let decentralized = cfg.k > 1;
     let mut clients = build_clients(cfg, data, &graph);
 
+    // Byzantine plane: the schedule picks the static corrupt subset, the
+    // built adversary mutates payloads at publish time. A sentinel seed
+    // inherits the run seed (specs materialize this in to_train_config;
+    // direct TrainConfig users get the same rule here).
+    let mut adversary = cfg.adversary.clone().map(|mut sched| {
+        sched.inherit_seed(cfg.seed);
+        (sched.adversarial_clients(cfg.k), sched.build())
+    });
+    let adv_kind = adversary.as_ref().map(|(_, a)| a.kind_name());
+
     let mut block_sampler = BlockSampler::new(d_order, cfg.seed, true);
     let trigger = cfg.trigger_schedule();
     let all_modes: Vec<usize> = (0..d_order).collect();
@@ -657,6 +692,9 @@ pub(crate) fn run_loop(
         }
         block_sampler.restore(st.sampler_rng, st.sampler_t);
         net.restore_state(&st.net_model)?;
+        if let Some((_, adv)) = adversary.as_mut() {
+            adv.restore_state(&st.adversary)?;
+        }
         clock.advance_to(st.time_s);
         wall_offset = st.time_s;
         points = st.points.clone();
@@ -694,6 +732,7 @@ pub(crate) fn run_loop(
     let has_observers = !hooks.observers.is_empty();
     let mut online: Vec<bool> = vec![false; cfg.k];
     let mut drops: Vec<(usize, usize)> = Vec::new();
+    let mut adv_acts: Vec<usize> = Vec::new();
 
     for t in start_t..total_iters {
         for (k, slot) in online.iter_mut().enumerate() {
@@ -743,8 +782,44 @@ pub(crate) fn run_loop(
                 if m == 0 {
                     continue; // patient mode never travels (privacy)
                 }
-                let payloads =
+                let mut payloads =
                     publish_phase(&mut clients, &graph, cfg, &trigger, t, m, Some(&online[..]));
+
+                // own delta applies locally before any tampering — it
+                // never touches the wire. A Byzantine client lies to its
+                // *peers*, not to itself: its private Â^k keeps tracking
+                // A^k, so its published deltas stay bounded instead of
+                // compounding its own corruption round over round.
+                for k in 0..clients.len() {
+                    if let Some(p) = &payloads[k] {
+                        clients[k].estimates.as_mut().expect("estimates").apply_delta(k, m, p);
+                    }
+                }
+
+                // Byzantine corruption happens between publish and
+                // delivery, so every *receiver* of the broadcast gets the
+                // same corrupted delta and receiver-side copies of Â^k
+                // stay consistent with each other — the invariant honest
+                // consensus relies on.
+                adv_acts.clear();
+                if let Some((byzantine, adv)) = adversary.as_mut() {
+                    for &j in byzantine.iter() {
+                        if let Some(p) = payloads[j].as_mut() {
+                            let shape = &clients[j].factors.mats[m];
+                            let (rows, cols) = (shape.rows, shape.cols);
+                            adv.corrupt(j, m, t, rows, cols, p);
+                            clients[j].net.adversarial += 1;
+                            if has_observers {
+                                adv_acts.push(j);
+                            }
+                        }
+                    }
+                }
+                if let Some(kind) = adv_kind {
+                    for client in adv_acts.drain(..) {
+                        hooks.emit(SessionEvent::AdversarialAct { t, client, mode: m, kind })?;
+                    }
+                }
 
                 drops.clear();
                 for k in 0..clients.len() {
@@ -759,10 +834,6 @@ pub(crate) fn run_loop(
                             }
                         }
                         continue;
-                    }
-                    // own delta applies locally, never on the wire
-                    if let Some(p) = &payloads[k] {
-                        clients[k].estimates.as_mut().expect("estimates").apply_delta(k, m, p);
                     }
                     for &j in &graph.neighbors[k] {
                         let Some(p) = &payloads[j] else { continue };
@@ -781,7 +852,14 @@ pub(crate) fn run_loop(
                 }
                 clock.flush_latency();
 
-                consensus_phase(&mut clients, &graph, cfg.algo.rho, m, Some(&online[..]));
+                consensus_phase(
+                    &mut clients,
+                    &graph,
+                    &cfg.aggregator,
+                    cfg.algo.rho,
+                    m,
+                    Some(&online[..]),
+                );
 
                 for (from, to) in drops.drain(..) {
                     hooks.emit(SessionEvent::NetFault {
@@ -855,6 +933,10 @@ pub(crate) fn run_loop(
                         sampler_rng: block_sampler.state().0,
                         sampler_t: block_sampler.state().1,
                         net_model: net.state_json(),
+                        adversary: adversary
+                            .as_ref()
+                            .map(|(_, a)| a.state_json())
+                            .unwrap_or(Json::Null),
                         data_nnz: Some(data.tensor.nnz() as u64),
                         data_fp,
                         points: points.clone(),

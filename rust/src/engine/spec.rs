@@ -20,12 +20,15 @@
 
 use std::path::Path;
 
+use crate::adversary::AdversarySchedule;
 use crate::data::Dataset;
 use crate::engine::{AlgoConfig, TrainConfig};
+use crate::gossip::Aggregator;
 use crate::losses::Loss;
 use crate::net::driver::DriverKind;
 use crate::net::sim::{self, FaultConfig, NetworkModel};
 use crate::runtime::NativeOrPjrt;
+use crate::tensor::partition::Partitioner;
 use crate::tensor::synth::ValueKind;
 use crate::topology::Topology;
 use crate::util::json::Json;
@@ -120,6 +123,12 @@ pub struct ExperimentSpec {
     pub compute_threads: usize,
     /// network fault envelope (`None` = ideal network)
     pub fault: Option<FaultConfig>,
+    /// mode-0 patient partitioner (heterogeneity axis)
+    pub partitioner: Partitioner,
+    /// consensus combiner for peer estimates (robustness axis)
+    pub aggregator: Aggregator,
+    /// Byzantine-client schedule (`None` = every client honest)
+    pub adversary: Option<AdversarySchedule>,
     /// execution path
     pub driver: DriverKind,
     /// compute backend flag (`native` or `pjrt`)
@@ -171,6 +180,9 @@ impl ExperimentSpec {
             sim_iter_s: cfg.sim_iter_s,
             compute_threads: cfg.compute_threads,
             fault,
+            partitioner: cfg.partitioner.clone(),
+            aggregator: cfg.aggregator.clone(),
+            adversary: cfg.adversary.clone(),
             driver,
             backend: backend.to_string(),
             eval_every: 1,
@@ -210,8 +222,24 @@ impl ExperimentSpec {
             trigger_alpha: self.trigger_alpha,
             sim_iter_s: self.sim_iter_s,
             compute_threads: self.compute_threads,
+            partitioner: self.partitioner.clone(),
+            aggregator: self.aggregator.clone(),
+            // materialized: sentinel seeds inherit the master seed here,
+            // so the engine always sees the effective Byzantine subset
+            adversary: self.adversary_schedule(),
             algo: self.algo.clone(),
         }
+    }
+
+    /// The effective adversary schedule: a schedule still carrying the
+    /// sentinel seed inherits the spec's master seed (same rule as
+    /// [`ExperimentSpec::network_model`] fault seeds), so one `--seed`
+    /// reseeds the Byzantine subset along with everything else.
+    pub fn adversary_schedule(&self) -> Option<AdversarySchedule> {
+        self.adversary.clone().map(|mut s| {
+            s.inherit_seed(self.seed);
+            s
+        })
     }
 
     /// Cross-axis invariants (cheap, pure): fault envelopes need a
@@ -231,6 +259,25 @@ impl ExperimentSpec {
             "driver '{}' cannot inject network faults — use sim or async",
             self.driver.name()
         );
+        anyhow::ensure!(
+            !(self.adversary.is_some()
+                && matches!(self.driver, DriverKind::Parallel | DriverKind::Async)),
+            "driver '{}' does not support Byzantine clients yet — use seq or sim",
+            self.driver.name()
+        );
+        if let Some(a) = &self.adversary {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&a.fraction),
+                "adversary fraction {} outside [0, 1]",
+                a.fraction
+            );
+        }
+        if let Aggregator::TrimmedMean(b) = &self.aggregator {
+            anyhow::ensure!(
+                (0.0..0.5).contains(b),
+                "trimmed_mean fraction {b} outside [0, 0.5)"
+            );
+        }
         Ok(())
     }
 
@@ -262,11 +309,13 @@ impl ExperimentSpec {
     }
 
     /// Filename-friendly label:
-    /// `dataset_loss_algo_driver_topology_kK`. Loader dataset specs
-    /// (`file:dir/t.tns`) are sanitized so the label never introduces
-    /// path separators.
+    /// `dataset_loss_algo_driver_topology_kK`, with suffixes for any
+    /// non-default robustness/heterogeneity axis (adversary, aggregator,
+    /// partitioner) so grid cells never collide on disk. Loader dataset
+    /// specs (`file:dir/t.tns`) are sanitized so the label never
+    /// introduces path separators.
     pub fn label(&self) -> String {
-        format!(
+        let mut label = format!(
             "{}_{}_{}_{}_{}_k{}",
             fs_component(&self.dataset),
             self.loss.name(),
@@ -274,7 +323,20 @@ impl ExperimentSpec {
             self.driver.name(),
             self.topology.name(),
             self.k
-        )
+        );
+        if let Some(a) = &self.adversary {
+            label.push('_');
+            label.push_str(&a.label_component());
+        }
+        if self.aggregator != Aggregator::Mean {
+            label.push('_');
+            label.push_str(&self.aggregator.label_component());
+        }
+        if self.partitioner != Partitioner::Even {
+            label.push('_');
+            label.push_str(&self.partitioner.label_component());
+        }
+        label
     }
 
     // ---- JSON layer ----
@@ -305,6 +367,12 @@ impl ExperimentSpec {
             (
                 "network",
                 self.fault.as_ref().map(FaultConfig::to_json).unwrap_or(Json::Null),
+            ),
+            ("partitioner", Json::Str(self.partitioner.spec_string())),
+            ("aggregator", Json::Str(self.aggregator.spec_string())),
+            (
+                "adversary",
+                self.adversary.as_ref().map(AdversarySchedule::to_json).unwrap_or(Json::Null),
             ),
             ("driver", Json::Str(self.driver.name().to_string())),
             ("backend", Json::Str(self.backend.clone())),
@@ -340,6 +408,9 @@ impl ExperimentSpec {
                 "sim_iter_s",
                 "compute_threads",
                 "network",
+                "partitioner",
+                "aggregator",
+                "adversary",
                 "driver",
                 "backend",
                 "eval_every",
@@ -356,6 +427,26 @@ impl ExperimentSpec {
         let fault = match j.get("network") {
             None | Some(Json::Null) => None,
             Some(fj) => Some(FaultConfig::from_json(fj)?),
+        };
+        let partitioner = match j.get("partitioner") {
+            None | Some(Json::Null) => Partitioner::Even,
+            Some(v) => crate::registry::partitioners().resolve(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("invalid 'partitioner' (string expected)"))?,
+            )?,
+        };
+        let aggregator = match j.get("aggregator") {
+            None | Some(Json::Null) => Aggregator::Mean,
+            Some(v) => crate::registry::aggregators().resolve(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("invalid 'aggregator' (string expected)"))?,
+            )?,
+        };
+        let adversary = match j.get("adversary") {
+            None | Some(Json::Null) => None,
+            // accept the registry string form in hand-written specs
+            Some(Json::Str(s)) => crate::registry::adversaries().resolve(s)?,
+            Some(aj) => Some(AdversarySchedule::from_json(aj)?),
         };
         let spec = ExperimentSpec {
             dataset: j.req_str("dataset")?.to_string(),
@@ -376,6 +467,9 @@ impl ExperimentSpec {
             sim_iter_s: j.req_f64("sim_iter_s")?,
             compute_threads: j.req_usize("compute_threads")?,
             fault,
+            partitioner,
+            aggregator,
+            adversary,
             driver: DriverKind::from_name(j.req_str("driver")?)?,
             backend: j.req_str("backend")?.to_string(),
             eval_every: match j.get("eval_every") {
@@ -529,6 +623,12 @@ impl ExperimentSpecBuilder {
         driver: DriverKind);
     setter!(/// network fault envelope (`None` = ideal)
         fault: Option<FaultConfig>);
+    setter!(/// mode-0 patient partitioner
+        partitioner: Partitioner);
+    setter!(/// consensus combiner for peer estimates
+        aggregator: Aggregator);
+    setter!(/// Byzantine-client schedule (`None` = all honest)
+        adversary: Option<AdversarySchedule>);
     setter!(/// epochs between eval points
         eval_every: usize);
 
@@ -625,6 +725,86 @@ mod tests {
             }
         }
         assert!(ExperimentSpec::from_json(&j).is_err(), "quoted momentum must error");
+    }
+
+    #[test]
+    fn every_registered_robustness_axis_round_trips() {
+        let base = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        for name in crate::registry::adversaries().names() {
+            let mut spec = base.clone();
+            spec.adversary = crate::registry::adversaries().resolve(name).unwrap();
+            let back = ExperimentSpec::from_json_str(&spec.to_json().to_string()).unwrap();
+            assert_eq!(back, spec, "adversary '{name}'");
+        }
+        for name in crate::registry::aggregators().names() {
+            let mut spec = base.clone();
+            spec.aggregator = crate::registry::aggregators().resolve(name).unwrap();
+            let back = ExperimentSpec::from_json_str(&spec.to_json().to_string()).unwrap();
+            assert_eq!(back, spec, "aggregator '{name}'");
+        }
+        for name in crate::registry::partitioners().names() {
+            let mut spec = base.clone();
+            spec.partitioner = crate::registry::partitioners().resolve(name).unwrap();
+            let back = ExperimentSpec::from_json_str(&spec.to_json().to_string()).unwrap();
+            assert_eq!(back, spec, "partitioner '{name}'");
+        }
+    }
+
+    #[test]
+    fn adversary_string_form_and_bad_axes_error() {
+        // hand-written specs may name the adversary as a registry string
+        let base = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("adversary".into(), Json::Str("sign_flip:0.4".into()));
+        }
+        let spec = ExperimentSpec::from_json(&j).unwrap();
+        assert!((spec.adversary.unwrap().fraction - 0.4).abs() < 1e-12);
+        // unknown axis names error through the registry (did-you-mean)
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("aggregator".into(), Json::Str("trimed_mean:0.2".into()));
+        }
+        let err = format!("{:#}", ExperimentSpec::from_json(&j).unwrap_err());
+        assert!(err.contains("trimmed_mean"), "{err}");
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("partitioner".into(), Json::Num(3.0));
+        }
+        assert!(ExperimentSpec::from_json(&j).is_err(), "non-string partitioner must error");
+    }
+
+    #[test]
+    fn robustness_axes_extend_the_label_and_gate_drivers() {
+        let mut spec = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        let plain = spec.label();
+        spec.adversary = Some(AdversarySchedule::sign_flip(0.2));
+        spec.aggregator = Aggregator::TrimmedMean(0.25);
+        spec.partitioner = Partitioner::Skewed(1.5);
+        let l = spec.label();
+        assert!(l.starts_with(&plain), "{l}");
+        assert!(l.contains("signflip0.2") && l.contains("trim0.25") && l.contains("skew1.5"), "{l}");
+        assert!(!l.contains(':') && !l.contains('/'), "label must stay fs-safe: {l}");
+        // Byzantine clients need a publish-intercepting driver
+        spec.driver = DriverKind::Async;
+        assert!(spec.validate().is_err());
+        spec.driver = DriverKind::Sim;
+        spec.fault = Some(FaultConfig::lossy(0.1));
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn adversary_seed_inherits_master_seed() {
+        let mut spec = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        spec.seed = 99;
+        spec.adversary = Some(AdversarySchedule::sign_flip(0.2));
+        assert_eq!(spec.adversary_schedule().unwrap().seed, 99);
+        assert_eq!(spec.to_train_config().adversary.unwrap().seed, 99);
+        // an explicitly pinned seed is respected
+        let mut pinned = AdversarySchedule::sign_flip(0.2);
+        pinned.seed = 5;
+        spec.adversary = Some(pinned);
+        assert_eq!(spec.adversary_schedule().unwrap().seed, 5);
     }
 
     #[test]

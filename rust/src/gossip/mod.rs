@@ -14,6 +14,10 @@
 
 #![warn(missing_docs)]
 
+pub mod robust;
+
+pub use robust::Aggregator;
+
 use crate::compress::Payload;
 use crate::util::mat::Mat;
 

@@ -1,0 +1,203 @@
+//! Robust consensus aggregators — Byzantine-tolerant alternatives to the
+//! weighted gossip mean of [`EstimateState::consensus_into`].
+//!
+//! The plain consensus step trusts every neighbor estimate linearly, so a
+//! single Byzantine peer can drag `A[t+1]` arbitrarily far. The robust
+//! aggregators replace the weighted average of neighbor estimates with a
+//! per-coordinate robust center:
+//!
+//! * `trimmed_mean(β)` — drop the `⌊β·n⌋` smallest and largest values of
+//!   each coordinate, mean the rest. `β = 0` trims nothing and is defined
+//!   to dispatch to the *existing* weighted-mean code path, bit-identically.
+//! * `coordinate_median` — the per-coordinate median (even counts average
+//!   the two middles).
+//!
+//! For `β > 0` (and the median) the per-peer gossip weights no longer
+//! scale individual values — a Byzantine peer's weight is exactly what it
+//! would game — so the robust center is computed over the *unweighted*
+//! value set `{Â^j : j ∈ N_k} ∪ {Â^k}` and the consensus step becomes
+//! `a += ϱ (Σ_j w_kj) (center − Â^k)`: the same total step size as the
+//! mean path, aimed at the robust center instead of the weighted average.
+//!
+//! Determinism: values are collected in fixed order (self, then the
+//! graph's neighbor order) and sorted with a NaN-last `total_cmp`
+//! comparator ([`crate::util::order::nan_last_f32`]), so the result is a
+//! pure function of the value multiset — bit-identical across drivers,
+//! worker counts, and input permutations. NaN and ±inf payloads sort to
+//! the extremes, which is precisely where trimming removes them.
+
+use crate::util::mat::Mat;
+use crate::util::order::nan_last_f32;
+
+use super::EstimateState;
+
+/// Which consensus aggregator a run uses (spec axis `aggregator`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Aggregator {
+    /// The paper's weighted gossip mean (Alg. 1 line 18) — the default.
+    Mean,
+    /// Per-coordinate β-trimmed mean over neighbor+self estimates.
+    /// `TrimmedMean(0.0)` is bit-identical to [`Aggregator::Mean`].
+    TrimmedMean(f64),
+    /// Per-coordinate median over neighbor+self estimates.
+    CoordinateMedian,
+}
+
+impl Aggregator {
+    /// Short axis name (registry key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregator::Mean => "mean",
+            Aggregator::TrimmedMean(_) => "trimmed_mean",
+            Aggregator::CoordinateMedian => "coordinate_median",
+        }
+    }
+
+    /// Registry-parseable string form (`mean`, `trimmed_mean:<beta>`,
+    /// `coordinate_median`) — what `ExperimentSpec` JSON carries.
+    pub fn spec_string(&self) -> String {
+        match self {
+            Aggregator::Mean => "mean".to_string(),
+            Aggregator::TrimmedMean(b) => format!("trimmed_mean:{b}"),
+            Aggregator::CoordinateMedian => "coordinate_median".to_string(),
+        }
+    }
+
+    /// Filesystem-safe label fragment for run stems (no `:`).
+    pub fn label_component(&self) -> String {
+        match self {
+            Aggregator::Mean => "mean".to_string(),
+            Aggregator::TrimmedMean(b) => format!("trim{b}"),
+            Aggregator::CoordinateMedian => "median".to_string(),
+        }
+    }
+
+    /// One consensus step on `a = A[t+½]`, dispatching between the
+    /// weighted-mean path and the robust per-coordinate path.
+    pub fn consensus_into(
+        &self,
+        est: &EstimateState,
+        a: &mut Mat,
+        mode: usize,
+        neighbors: &[usize],
+        weights_row: &[f64],
+        rho: f64,
+    ) {
+        match self {
+            // β = 0 trims nothing: defined as the literal mean code path
+            // so `trimmed_mean:0` is bit-identical to `mean`.
+            Aggregator::Mean => est.consensus_into(a, mode, neighbors, weights_row, rho),
+            Aggregator::TrimmedMean(beta) if *beta == 0.0 => {
+                est.consensus_into(a, mode, neighbors, weights_row, rho);
+            }
+            Aggregator::TrimmedMean(beta) => {
+                robust_step(est, a, mode, neighbors, weights_row, rho, |vals| {
+                    trimmed_mean_of(vals, *beta)
+                });
+            }
+            Aggregator::CoordinateMedian => {
+                robust_step(est, a, mode, neighbors, weights_row, rho, |vals| {
+                    coordinate_median_of(vals)
+                });
+            }
+        }
+    }
+}
+
+/// `a += ϱ (Σ_j w_kj) (center(values) − Â^k)` per coordinate, with
+/// `values = [Â^k, Â^j...]` collected in fixed (self, neighbor) order.
+fn robust_step(
+    est: &EstimateState,
+    a: &mut Mat,
+    mode: usize,
+    neighbors: &[usize],
+    weights_row: &[f64],
+    rho: f64,
+    center: impl Fn(&mut [f32]) -> f32,
+) {
+    let self_hat = est.self_estimate(mode);
+    let sum_w: f64 = neighbors.iter().map(|&j| weights_row[j]).sum();
+    let c = (rho * sum_w) as f32;
+    if c == 0.0 || neighbors.is_empty() {
+        return;
+    }
+    let hats: Vec<&Mat> = neighbors.iter().map(|&j| est.estimate(j, mode)).collect();
+    debug_assert!(hats.iter().all(|h| h.data.len() == a.data.len()));
+    let mut vals = Vec::with_capacity(hats.len() + 1);
+    for (i, av) in a.data.iter_mut().enumerate() {
+        vals.clear();
+        let vk = self_hat.data[i];
+        vals.push(vk);
+        for h in &hats {
+            vals.push(h.data[i]);
+        }
+        *av += c * (center(&mut vals) - vk);
+    }
+}
+
+/// β-trimmed mean: sort (NaN last), drop `⌊β·n⌋` from each end, mean the
+/// rest in sorted order. `β` is clamped so at least one value survives.
+/// Pure and permutation-invariant — the test-facing core of
+/// [`Aggregator::TrimmedMean`].
+pub fn trimmed_mean_of(values: &mut [f32], beta: f64) -> f32 {
+    assert!(!values.is_empty(), "trimmed mean of no values");
+    values.sort_by(nan_last_f32);
+    let n = values.len();
+    let g = ((beta.max(0.0) * n as f64).floor() as usize).min((n - 1) / 2);
+    let kept = &values[g..n - g];
+    let sum: f64 = kept.iter().map(|&v| v as f64).sum();
+    (sum / kept.len() as f64) as f32
+}
+
+/// Per-coordinate median: sort (NaN last), take the middle (even counts
+/// average the two middles). Pure and permutation-invariant.
+pub fn coordinate_median_of(values: &mut [f32]) -> f32 {
+    assert!(!values.is_empty(), "median of no values");
+    values.sort_by(nan_last_f32);
+    let n = values.len();
+    if n % 2 == 1 {
+        values[n / 2]
+    } else {
+        0.5 * (values[n / 2 - 1] + values[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let mut v = vec![100.0f32, 1.0, 2.0, 3.0, -100.0];
+        assert_eq!(trimmed_mean_of(&mut v, 0.25), 2.0);
+    }
+
+    #[test]
+    fn trim_zero_is_the_plain_mean() {
+        let mut v = vec![1.0f32, 2.0, 6.0];
+        assert_eq!(trimmed_mean_of(&mut v, 0.0), 3.0);
+    }
+
+    #[test]
+    fn median_odd_and_even() {
+        let mut odd = vec![5.0f32, 1.0, 3.0];
+        assert_eq!(coordinate_median_of(&mut odd), 3.0);
+        let mut even = vec![4.0f32, 1.0, 3.0, 2.0];
+        assert_eq!(coordinate_median_of(&mut even), 2.5);
+    }
+
+    #[test]
+    fn beta_clamps_to_keep_one_value() {
+        let mut v = vec![7.0f32, 9.0];
+        // β=0.5 would trim 1 from each end of 2 values; clamp keeps ≥1
+        assert_eq!(trimmed_mean_of(&mut v, 0.5), 8.0);
+    }
+
+    #[test]
+    fn spec_strings_are_stable() {
+        assert_eq!(Aggregator::Mean.spec_string(), "mean");
+        assert_eq!(Aggregator::TrimmedMean(0.25).spec_string(), "trimmed_mean:0.25");
+        assert_eq!(Aggregator::CoordinateMedian.spec_string(), "coordinate_median");
+        assert_eq!(Aggregator::TrimmedMean(0.25).label_component(), "trim0.25");
+    }
+}

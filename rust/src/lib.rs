@@ -14,6 +14,7 @@
 //!
 //! See DESIGN.md for the system inventory and per-experiment index.
 
+pub mod adversary;
 pub mod analysis;
 pub mod compress;
 pub mod data;

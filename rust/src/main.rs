@@ -230,6 +230,16 @@ fn spec_from_args(args: &Args) -> anyhow::Result<ExperimentSpec> {
                 .map_err(|_| anyhow::anyhow!("--max-bytes expects an integer, got '{b}'"))?,
         );
     }
+    // robustness axes (registry-resolved, did-you-mean on typos)
+    if let Some(p) = args.opt_str("partitioner")? {
+        spec.partitioner = registry::partitioners().resolve(&p)?;
+    }
+    if let Some(a) = args.opt_str("aggregator")? {
+        spec.aggregator = registry::aggregators().resolve(&a)?;
+    }
+    if let Some(a) = args.opt_str("adversary")? {
+        spec.adversary = registry::adversaries().resolve(&a)?;
+    }
     spec.backend = args.get_str("backend", NativeOrPjrt::default_flag())?;
     spec.validate()?;
     Ok(spec)
@@ -298,6 +308,8 @@ fn cmd_spec(args: &Args) -> anyhow::Result<()> {
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let sweep_spec = if args.flag("smoke") {
         SweepSpec::smoke()
+    } else if args.flag("smoke-robust") {
+        SweepSpec::robust_smoke()
     } else {
         let path = args.opt_str("spec")?.ok_or_else(|| {
             anyhow::anyhow!("sweep needs --spec sweep.json (or --smoke for the built-in grid)")
@@ -393,6 +405,9 @@ COMMANDS
              --epochs N --iters-per-epoch N --gamma G --rank R --seed S
              --driver seq|par|sim|async   execution path (default seq)
              --network ideal|lossy[:p]|bursty|wan|stragglers|churning|hostile
+             --partitioner even|skewed[:alpha]|site_vocab[:overlap]
+             --aggregator mean|trimmed_mean[:beta]|coordinate_median
+             --adversary honest|sign_flip[:f]|scaled_noise[:f]|stale_replay[:f]
              --threads N          native-backend compute threads (default 1)
              --eval-every N       epochs between eval points
              --target-loss L --max-bytes B          early-stopping rules
@@ -405,11 +420,13 @@ COMMANDS
   sweep      run a whole experiment grid on a worker pool
              --spec sweep.json    base ExperimentSpec + axis lists (datasets/
                                   losses/algos/taus/ks/topologies/compressors/
-                                  networks/drivers/triggers/gammas/seeds)
+                                  networks/drivers/partitioners/aggregators/
+                                  adversaries/triggers/gammas/seeds)
              --workers N          concurrent runs (results identical for any N)
              --out results/sweep  sweep dir: per-run CSV + record JSON +
                                   deterministic aggregate sweep.jsonl
              --smoke              built-in tiny 4-run grid (CI exercise)
+             --smoke-robust       built-in adversary x aggregator grid (CI)
              --print              list the expanded runs without executing
              --fresh              re-run everything (default: skip runs whose
                                   record file already matches their spec)

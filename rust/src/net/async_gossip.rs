@@ -64,6 +64,10 @@ pub fn train_async(
 ) -> anyhow::Result<TrainOutcome> {
     let d_order = data.tensor.dims.len();
     anyhow::ensure!(cfg.rank >= 1 && cfg.k >= 1 && cfg.algo.tau >= 1);
+    anyhow::ensure!(
+        cfg.adversary.is_none(),
+        "the async driver does not support Byzantine clients yet — use seq or sim"
+    );
     backend.set_threads(cfg.compute_threads);
     let graph = Graph::build(cfg.topology, cfg.k)?;
     let decentralized = cfg.k > 1;
@@ -249,7 +253,8 @@ fn async_gossip_step(
 
     // consensus with whatever estimates are on hand (stale included)
     let ClientState { estimates, factors, .. } = &mut node.c;
-    estimates.as_ref().expect("estimates").consensus_into(
+    cfg.aggregator.consensus_into(
+        estimates.as_ref().expect("estimates"),
         &mut factors.mats[m],
         m,
         &graph.neighbors[k],

@@ -57,6 +57,10 @@ where
 {
     let k_clients = cfg.k;
     anyhow::ensure!(k_clients >= 1);
+    anyhow::ensure!(
+        cfg.adversary.is_none(),
+        "the parallel driver does not support Byzantine clients yet — use seq or sim"
+    );
     let graph = Arc::new(Graph::build(cfg.topology, k_clients)?);
     let decentralized = k_clients > 1;
     let d_order = data.tensor.dims.len();
@@ -149,7 +153,8 @@ where
 
                             // 3) consensus (line 18)
                             let ClientState { estimates, factors, .. } = &mut client;
-                            estimates.as_ref().expect("estimates").consensus_into(
+                            cfg.aggregator.consensus_into(
+                                estimates.as_ref().expect("estimates"),
                                 &mut factors.mats[m],
                                 m,
                                 &graph.neighbors[id],

@@ -47,6 +47,8 @@ pub struct NetStats {
     pub stale: u64,
     /// (client, round) pairs skipped because the client was churned out
     pub offline_rounds: u64,
+    /// payloads this client corrupted before broadcast (Byzantine runs)
+    pub adversarial: u64,
 }
 
 impl NetStats {
@@ -56,6 +58,7 @@ impl NetStats {
         self.dropped += other.dropped;
         self.stale += other.stale;
         self.offline_rounds += other.offline_rounds;
+        self.adversarial += other.adversarial;
     }
 
     /// Fraction of attempted deliveries that were lost (`0.0` when no
@@ -358,7 +361,7 @@ impl FaultConfig {
 /// Deterministic hash of a small tuple into `[0, 1)` — used for *static*
 /// per-link / per-client traits (latency spread, straggler assignment,
 /// churn windows) so they do not depend on call order.
-fn unit_hash(seed: u64, a: u64, b: u64, c: u64) -> f64 {
+pub(crate) fn unit_hash(seed: u64, a: u64, b: u64, c: u64) -> f64 {
     let mut x = seed ^ 0x9E37_79B9_7F4A_7C15;
     for v in [a.wrapping_add(1), b.wrapping_add(0x1000), c.wrapping_add(0x2000)] {
         x ^= v.wrapping_mul(0xA24B_AED4_963E_E407);

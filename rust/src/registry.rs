@@ -22,12 +22,15 @@
 
 use std::path::PathBuf;
 
+use crate::adversary::AdversarySchedule;
 use crate::compress::Compressor;
 use crate::data::{CsvSource, DatasetSource, FileSource, SynthSource};
 use crate::engine::AlgoConfig;
+use crate::gossip::Aggregator;
 use crate::losses::Loss;
 use crate::net::driver::DriverKind;
 use crate::net::sim::FaultConfig;
+use crate::tensor::partition::Partitioner;
 use crate::tensor::synth::SynthConfig;
 use crate::topology::Topology;
 
@@ -478,6 +481,129 @@ pub fn networks() -> &'static Registry<Option<FaultConfig>> {
     &REG
 }
 
+// ---- adversary schedules ----
+
+fn fraction_arg(arg: Option<&str>) -> anyhow::Result<f64> {
+    let f = f64_arg(arg, "adversarial fraction", AdversarySchedule::DEFAULT_FRACTION)?;
+    anyhow::ensure!((0.0..=1.0).contains(&f), "adversarial fraction {f} out of range [0, 1]");
+    Ok(f)
+}
+
+/// Byzantine-client schedules; `None` is the all-honest network.
+pub fn adversaries() -> &'static Registry<Option<AdversarySchedule>> {
+    static ENTRIES: &[RegEntry<Option<AdversarySchedule>>] = &[
+        RegEntry {
+            name: "honest",
+            aliases: &["none"],
+            help: "every client publishes its true delta",
+            make: |a| {
+                no_arg("honest", a)?;
+                Ok(None)
+            },
+        },
+        RegEntry {
+            name: "sign_flip",
+            aliases: &["signflip"],
+            help: "sign_flip[:frac] — frac of clients negate every published delta (default 0.2)",
+            make: |a| Ok(Some(AdversarySchedule::sign_flip(fraction_arg(a)?))),
+        },
+        RegEntry {
+            name: "scaled_noise",
+            aliases: &["noise"],
+            help: "scaled_noise[:frac] — frac of clients add large Gaussian noise (default 0.2)",
+            make: |a| Ok(Some(AdversarySchedule::scaled_noise(fraction_arg(a)?))),
+        },
+        RegEntry {
+            name: "stale_replay",
+            aliases: &["stale", "replay"],
+            help: "stale_replay[:frac] — frac of clients rebroadcast old deltas (default 0.2)",
+            make: |a| Ok(Some(AdversarySchedule::stale_replay(fraction_arg(a)?))),
+        },
+    ];
+    static REG: Registry<Option<AdversarySchedule>> = Registry::new("adversary", ENTRIES);
+    &REG
+}
+
+// ---- consensus aggregators ----
+
+/// Consensus combiners for peer estimates (gossip robustness axis).
+pub fn aggregators() -> &'static Registry<Aggregator> {
+    static ENTRIES: &[RegEntry<Aggregator>] = &[
+        RegEntry {
+            name: "mean",
+            aliases: &[],
+            help: "weighted mean — the paper's consensus step",
+            make: |a| {
+                no_arg("mean", a)?;
+                Ok(Aggregator::Mean)
+            },
+        },
+        RegEntry {
+            name: "trimmed_mean",
+            aliases: &["trim"],
+            help: "trimmed_mean[:beta] — drop the beta-fraction extremes per coordinate (default 0.2)",
+            make: |a| {
+                let b = f64_arg(a, "trim fraction", 0.2)?;
+                anyhow::ensure!((0.0..0.5).contains(&b), "trim fraction {b} out of range [0, 0.5)");
+                Ok(Aggregator::TrimmedMean(b))
+            },
+        },
+        RegEntry {
+            name: "coordinate_median",
+            aliases: &["median"],
+            help: "coordinate-wise median of self + neighbor estimates",
+            make: |a| {
+                no_arg("coordinate_median", a)?;
+                Ok(Aggregator::CoordinateMedian)
+            },
+        },
+    ];
+    static REG: Registry<Aggregator> = Registry::new("aggregator", ENTRIES);
+    &REG
+}
+
+// ---- patient partitioners ----
+
+/// Mode-0 (patient) partitioners — how rows are split across sites.
+pub fn partitioners() -> &'static Registry<Partitioner> {
+    static ENTRIES: &[RegEntry<Partitioner>] = &[
+        RegEntry {
+            name: "even",
+            aliases: &["uniform"],
+            help: "contiguous near-equal shards (the i.i.d. baseline)",
+            make: |a| {
+                no_arg("even", a)?;
+                Ok(Partitioner::Even)
+            },
+        },
+        RegEntry {
+            name: "skewed",
+            aliases: &[],
+            help: "skewed[:alpha] — power-law patient counts per site (default 1.0)",
+            make: |a| {
+                let alpha = f64_arg(a, "skew exponent", 1.0)?;
+                anyhow::ensure!(
+                    alpha.is_finite() && alpha >= 0.0,
+                    "skew exponent {alpha} must be finite and >= 0"
+                );
+                Ok(Partitioner::Skewed(alpha))
+            },
+        },
+        RegEntry {
+            name: "site_vocab",
+            aliases: &["vocab"],
+            help: "site_vocab[:overlap] — per-site code vocabularies sharing an overlap fraction (default 0.3)",
+            make: |a| {
+                let ov = f64_arg(a, "vocabulary overlap", 0.3)?;
+                anyhow::ensure!((0.0..=1.0).contains(&ov), "vocabulary overlap {ov} out of range [0, 1]");
+                Ok(Partitioner::SiteVocab(ov))
+            },
+        },
+    ];
+    static REG: Registry<Partitioner> = Registry::new("partitioner", ENTRIES);
+    &REG
+}
+
 // ---- round drivers ----
 
 /// Execution paths (how rounds are driven).
@@ -606,6 +732,9 @@ pub fn axis_names() -> Vec<(&'static str, Vec<&'static str>)> {
         ("compressors", compressors().names()),
         ("topologies", topologies().names()),
         ("networks", networks().names()),
+        ("adversaries", adversaries().names()),
+        ("aggregators", aggregators().names()),
+        ("partitioners", partitioners().names()),
         ("drivers", drivers().names()),
         ("datasets", datasets().names()),
     ]
@@ -621,6 +750,9 @@ pub fn axis_help() -> Vec<(&'static str, Vec<String>)> {
         ("compressors", compressors().help_lines()),
         ("topologies", topologies().help_lines()),
         ("networks", networks().help_lines()),
+        ("adversaries", adversaries().help_lines()),
+        ("aggregators", aggregators().help_lines()),
+        ("partitioners", partitioners().help_lines()),
         ("drivers", drivers().help_lines()),
         ("datasets", datasets().help_lines()),
     ]
@@ -684,6 +816,38 @@ mod tests {
         assert!(err.contains("requires a path"), "{err}");
         assert!(datasets().resolve("csv").is_err());
         assert!(datasets().resolve("tiny:x").is_err());
+    }
+
+    #[test]
+    fn robustness_axes_resolve() {
+        assert!(adversaries().resolve("honest").unwrap().is_none());
+        let s = adversaries().resolve("sign_flip:0.4").unwrap().unwrap();
+        assert!((s.fraction - 0.4).abs() < 1e-12);
+        let s = adversaries().resolve("stale").unwrap().unwrap();
+        assert!((s.fraction - AdversarySchedule::DEFAULT_FRACTION).abs() < 1e-12);
+        assert_eq!(aggregators().resolve("mean").unwrap(), Aggregator::Mean);
+        assert_eq!(aggregators().resolve("trim:0.25").unwrap(), Aggregator::TrimmedMean(0.25));
+        assert_eq!(aggregators().resolve("median").unwrap(), Aggregator::CoordinateMedian);
+        assert_eq!(partitioners().resolve("even").unwrap(), Partitioner::Even);
+        assert_eq!(partitioners().resolve("skewed:1.5").unwrap(), Partitioner::Skewed(1.5));
+        assert_eq!(partitioners().resolve("vocab").unwrap(), Partitioner::SiteVocab(0.3));
+    }
+
+    #[test]
+    fn robustness_axes_reject_bad_specs() {
+        // typos get a did-you-mean pointing at the new names
+        let err = format!("{:#}", adversaries().resolve("sing_flip").unwrap_err());
+        assert!(err.contains("did you mean 'sign_flip'"), "{err}");
+        let err = format!("{:#}", aggregators().resolve("trimed_mean").unwrap_err());
+        assert!(err.contains("trimmed_mean"), "{err}");
+        let err = format!("{:#}", partitioners().resolve("skewd").unwrap_err());
+        assert!(err.contains("skewed"), "{err}");
+        // out-of-range arguments are rejected with the range in the message
+        assert!(adversaries().resolve("sign_flip:1.5").is_err());
+        assert!(aggregators().resolve("trimmed_mean:0.5").is_err(), "beta 0.5 trims everything");
+        assert!(aggregators().resolve("mean:0.1").is_err(), "mean takes no argument");
+        assert!(partitioners().resolve("site_vocab:-0.1").is_err());
+        assert!(partitioners().resolve("skewed:nan").is_err());
     }
 
     #[test]

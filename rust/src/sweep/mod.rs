@@ -43,8 +43,11 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::adversary::AdversarySchedule;
 use crate::compress::Compressor;
 use crate::data::Dataset;
+use crate::gossip::Aggregator;
+use crate::tensor::partition::Partitioner;
 use crate::engine::metrics::RunRecord;
 use crate::engine::session::{CsvObserver, JsonlObserver, Session};
 use crate::engine::spec::{algo_from_json, algo_to_json, fs_component, ExperimentSpec};
@@ -102,6 +105,12 @@ pub struct SweepSpec {
     pub networks: Vec<Option<FaultConfig>>,
     /// execution-path axis
     pub drivers: Vec<DriverKind>,
+    /// patient-partitioner axis (non-IID heterogeneity)
+    pub partitioners: Vec<Partitioner>,
+    /// consensus-aggregator axis (Byzantine-robust alternatives)
+    pub aggregators: Vec<Aggregator>,
+    /// Byzantine-adversary axis (`None` = all-honest)
+    pub adversaries: Vec<Option<AdversarySchedule>>,
     /// event-trigger schedule axis
     pub triggers: Vec<TriggerPoint>,
     /// learning-rate axis (mutually exclusive with `auto_gamma`)
@@ -135,6 +144,9 @@ impl SweepSpec {
             compressors: Vec::new(),
             networks: Vec::new(),
             drivers: Vec::new(),
+            partitioners: Vec::new(),
+            aggregators: Vec::new(),
+            adversaries: Vec::new(),
             triggers: Vec::new(),
             gammas: Vec::new(),
             seeds: Vec::new(),
@@ -159,6 +171,28 @@ impl SweepSpec {
         let mut spec = SweepSpec::new(base);
         spec.algos = vec![AlgoConfig::cidertf(2), AlgoConfig::dpsgd()];
         spec.seeds = vec![7, 8];
+        spec
+    }
+
+    /// The robustness grid behind `cidertf sweep --smoke-robust`:
+    /// (honest, sign_flip) × (mean, trimmed_mean) on the `tiny` tensor
+    /// under a skewed partition — 4 cheap runs exercising the adversary
+    /// plane, the robust consensus path, and a non-IID partitioner on
+    /// the deterministic executor.
+    pub fn robust_smoke() -> Self {
+        let mut base = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        base.k = 4;
+        base.rank = 4;
+        base.fiber_samples = 16;
+        base.eval_batch = 64;
+        base.gamma = 0.5;
+        base.epochs = 1;
+        base.iters_per_epoch = 40;
+        base.partitioner = Partitioner::Skewed(1.0);
+        let mut spec = SweepSpec::new(base);
+        spec.aggregators = vec![Aggregator::Mean, Aggregator::TrimmedMean(0.25)];
+        spec.adversaries = vec![None, Some(AdversarySchedule::sign_flip(0.25))];
+        spec.seeds = vec![7];
         spec
     }
 
@@ -193,6 +227,9 @@ impl SweepSpec {
             * dim(self.compressors.len())
             * dim(self.networks.len())
             * dim(self.drivers.len())
+            * dim(self.partitioners.len())
+            * dim(self.aggregators.len())
+            * dim(self.adversaries.len())
             * dim(self.triggers.len())
             * dim(self.gammas.len())
             * dim(self.seeds.len())
@@ -205,7 +242,8 @@ impl SweepSpec {
 
     /// Expand to the cross-product of concrete specs. Nesting order is
     /// fixed — dataset → loss → algo → τ → K → topology → compressor →
-    /// network → driver → trigger → γ → seed (dataset outermost, seed
+    /// network → driver → partitioner → aggregator → adversary →
+    /// trigger → γ → seed (dataset outermost, seed
     /// innermost) — so a run's expansion index is stable across
     /// invocations, which is what resumability and the deterministic
     /// aggregate key on. After the product, four policy passes run per
@@ -231,6 +269,9 @@ impl SweepSpec {
         });
         specs = apply_axis(specs, &self.networks, |s, f| s.fault = f.clone());
         specs = apply_axis(specs, &self.drivers, |s, d| s.driver = *d);
+        specs = apply_axis(specs, &self.partitioners, |s, p| s.partitioner = p.clone());
+        specs = apply_axis(specs, &self.aggregators, |s, a| s.aggregator = a.clone());
+        specs = apply_axis(specs, &self.adversaries, |s, a| s.adversary = a.clone());
         specs = apply_axis(specs, &self.triggers, |s, t| {
             s.trigger_lambda0_scale = t.lambda0_scale.max(f64::MIN_POSITIVE);
             s.trigger_alpha = t.alpha;
@@ -260,6 +301,11 @@ impl SweepSpec {
                 && matches!(s.driver, DriverKind::Sequential | DriverKind::Parallel)
             {
                 s.driver = DriverKind::Sim;
+            }
+            // Byzantine cells need the reference loop: the barrier-parallel
+            // driver rejects adversaries, and seq is bit-identical anyway
+            if s.adversary.is_some() && s.driver == DriverKind::Parallel {
+                s.driver = DriverKind::Sequential;
             }
             s.validate()
                 .map_err(|e| anyhow::anyhow!("sweep cell {i} ({}): {e}", s.label()))?;
@@ -314,6 +360,29 @@ impl SweepSpec {
                 ),
             ),
             (
+                "partitioners",
+                Json::Arr(
+                    self.partitioners.iter().map(|p| Json::Str(p.spec_string())).collect(),
+                ),
+            ),
+            (
+                "aggregators",
+                Json::Arr(
+                    self.aggregators.iter().map(|a| Json::Str(a.spec_string())).collect(),
+                ),
+            ),
+            (
+                "adversaries",
+                Json::Arr(
+                    self.adversaries
+                        .iter()
+                        .map(|a| {
+                            a.as_ref().map(AdversarySchedule::to_json).unwrap_or(Json::Null)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
                 "triggers",
                 Json::Arr(
                     self.triggers
@@ -360,6 +429,9 @@ impl SweepSpec {
                 "compressors",
                 "networks",
                 "drivers",
+                "partitioners",
+                "aggregators",
+                "adversaries",
                 "triggers",
                 "gammas",
                 "seeds",
@@ -397,6 +469,16 @@ impl SweepSpec {
             .map_err(|e| anyhow::anyhow!("networks[{i}]: {e}"))?;
             networks.push(n);
         }
+        let mut adversaries = Vec::new();
+        for (i, v) in arr(j, "adversaries")?.iter().enumerate() {
+            let a = match v {
+                Json::Null => Ok(None),
+                Json::Str(s) => crate::registry::adversaries().resolve(s),
+                obj => AdversarySchedule::from_json(obj).map(Some),
+            }
+            .map_err(|e| anyhow::anyhow!("adversaries[{i}]: {e}"))?;
+            adversaries.push(a);
+        }
         let mut triggers = Vec::new();
         for (i, v) in arr(j, "triggers")?.iter().enumerate() {
             v.ensure_known_keys("trigger point", &["lambda0_scale", "alpha"])
@@ -422,6 +504,11 @@ impl SweepSpec {
                 .resolve_list(&str_list(j, "compressors")?)?,
             networks,
             drivers: crate::registry::drivers().resolve_list(&str_list(j, "drivers")?)?,
+            partitioners: crate::registry::partitioners()
+                .resolve_list(&str_list(j, "partitioners")?)?,
+            aggregators: crate::registry::aggregators()
+                .resolve_list(&str_list(j, "aggregators")?)?,
+            adversaries,
             triggers,
             gammas: f64_list(j, "gammas")?,
             seeds: u64_list(j, "seeds")?,
@@ -991,6 +1078,15 @@ fn write_aggregate(
                     .map(|f| Json::Num(f.drop_rate))
                     .unwrap_or(Json::Null),
             ),
+            ("partitioner", Json::Str(spec.partitioner.spec_string())),
+            ("aggregator", Json::Str(spec.aggregator.spec_string())),
+            (
+                "adversary",
+                spec.adversary
+                    .as_ref()
+                    .map(|a| Json::Str(a.label_component()))
+                    .unwrap_or(Json::Null),
+            ),
             ("final_loss", Json::Num(rec.final_loss())),
             ("best_loss", Json::Num(rec.best_loss())),
             ("bytes", Json::u64(rec.total.bytes)),
@@ -1001,6 +1097,7 @@ fn write_aggregate(
             ("dropped", Json::u64(rec.net.dropped)),
             ("stale", Json::u64(rec.net.stale)),
             ("offline_rounds", Json::u64(rec.net.offline_rounds)),
+            ("adversarial", Json::u64(rec.net.adversarial)),
             ("curve", Json::Arr(curve)),
         ]);
         out.push_str(&line.to_string());
@@ -1163,6 +1260,9 @@ mod tests {
         spec.compressors = vec![Compressor::Sign, Compressor::TopK { ratio: 16 }];
         spec.networks = vec![None, Some(FaultConfig::lossy(0.25))];
         spec.drivers = vec![DriverKind::Sim];
+        spec.partitioners = vec![Partitioner::Even, Partitioner::Skewed(1.5)];
+        spec.aggregators = vec![Aggregator::Mean, Aggregator::TrimmedMean(0.25)];
+        spec.adversaries = vec![None, Some(AdversarySchedule::scaled_noise(0.3))];
         spec.triggers = vec![TriggerPoint { lambda0_scale: 1.0, alpha: 1.3 }];
         spec.gammas = vec![0.5, 0.25];
         spec.seeds = vec![1, 0xDEAD_BEEF_FEED_F00D];
@@ -1186,6 +1286,24 @@ mod tests {
         assert_eq!(spec.algos[0].tau, 8);
         assert!((spec.networks[1].as_ref().unwrap().drop_rate - 0.3).abs() < 1e-12);
 
+        // the robustness axes accept registry string forms too
+        let text = format!(
+            r#"{{"schema":"cidertf-sweep-v1","base":{base},
+                "adversaries":[null,"sign_flip:0.3"],
+                "aggregators":["trimmed_mean:0.25"],
+                "partitioners":["skewed:1.5"]}}"#
+        );
+        let spec = SweepSpec::from_json_str(&text).unwrap();
+        assert_eq!(spec.adversaries[0], None);
+        assert_eq!(spec.adversaries[1], Some(AdversarySchedule::sign_flip(0.3)));
+        assert_eq!(spec.aggregators, vec![Aggregator::TrimmedMean(0.25)]);
+        assert_eq!(spec.partitioners, vec![Partitioner::Skewed(1.5)]);
+        let bad = format!(
+            r#"{{"schema":"cidertf-sweep-v1","base":{base},"aggregators":["trimed_mean"]}}"#
+        );
+        let err = format!("{:#}", SweepSpec::from_json_str(&bad).unwrap_err());
+        assert!(err.contains("trimmed_mean"), "did-you-mean missing: {err}");
+
         let bad = format!(
             r#"{{"schema":"cidertf-sweep-v1","base":{base},"networks":["lozzy:0.3"]}}"#
         );
@@ -1195,6 +1313,33 @@ mod tests {
         let typo = format!(r#"{{"schema":"cidertf-sweep-v1","base":{base},"algoss":[]}}"#);
         let err = format!("{:#}", SweepSpec::from_json_str(&typo).unwrap_err());
         assert!(err.contains("algos"), "axis-key hint missing: {err}");
+    }
+
+    #[test]
+    fn robustness_axes_expand_and_downgrade_parallel() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.drivers = vec![DriverKind::Parallel];
+        spec.partitioners = vec![Partitioner::SiteVocab(0.3)];
+        spec.aggregators = vec![Aggregator::Mean, Aggregator::CoordinateMedian];
+        spec.adversaries = vec![None, Some(AdversarySchedule::sign_flip(0.25))];
+        assert_eq!(spec.len(), 4);
+        let runs = spec.expand().unwrap();
+        // adversary innermost: (mean, honest), (mean, byz), (median, honest), ...
+        assert_eq!(runs[0].driver, DriverKind::Parallel, "honest cells keep parallel");
+        assert_eq!(runs[1].driver, DriverKind::Sequential, "Byzantine cells downgrade");
+        assert!(runs.iter().all(|r| r.partitioner == Partitioner::SiteVocab(0.3)));
+        assert_eq!(runs[2].aggregator, Aggregator::CoordinateMedian);
+        assert_eq!(runs[3].adversary, Some(AdversarySchedule::sign_flip(0.25)));
+        // the built-in robustness smoke grid expands with distinct stems
+        let smoke = SweepSpec::robust_smoke();
+        let runs = smoke.expand().unwrap();
+        assert_eq!(runs.len(), 4);
+        let stems = run_stems(&runs);
+        for (i, a) in stems.iter().enumerate() {
+            for b in stems.iter().skip(i + 1) {
+                assert_ne!(a, b, "robust smoke labels must not collide");
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,28 @@
-//! Horizontal (patient-mode) partitioning — paper eq. (5).
+//! Horizontal (patient-mode) partitioning — paper eq. (5) — plus the
+//! non-IID partitioners of the heterogeneity axis.
 //!
-//! The global tensor is split along mode 0 into K contiguous row blocks,
-//! one per client/institution. Mode-0 indices are re-based so each local
-//! tensor is self-contained; `row_offset` maps back to global patient ids.
+//! The global tensor is split along mode 0 into K row sets, one per
+//! client/institution. Mode-0 indices are re-based so each local tensor
+//! is self-contained; `global_rows` maps every local row back to its
+//! global patient id (`row_offset` is kept as the first global row for
+//! the contiguous partitioners' callers).
+//!
+//! Three [`Partitioner`]s:
+//!
+//! * `even` — contiguous blocks of (near-)equal size, the IID default
+//!   ([`partition_mode0`]).
+//! * `skewed:<alpha>` — contiguous blocks with power-law sizes
+//!   `(s+1)^-alpha`, shuffled across clients by the seed: a few giant
+//!   hospitals, many small clinics.
+//! * `site_vocab:<overlap>` — per-site code vocabularies: a seeded
+//!   fraction `overlap` of mode-1 codes is shared by all sites, the rest
+//!   are split into per-site private vocabularies, and each patient row
+//!   is assigned to the site whose private codes dominate its events
+//!   (non-contiguous row sets — the realistic "each hospital sees its
+//!   own specialty mix" regime).
+//!
+//! Every partitioner is a pure function of `(tensor, k, seed)`; shard
+//! membership never depends on call order.
 //!
 //! [`partition_shared`] wraps each shard in an `Arc<ShardData>` — the
 //! tensor plus all per-mode fiber indices, built **once** and immutably
@@ -14,13 +34,17 @@ use std::sync::Arc;
 
 use super::fiber::ModeIndices;
 use super::SparseTensor;
+use crate::util::order::nan_last_f64;
+use crate::util::rng::Rng;
 
-/// One client's shard (raw partition output: tensor + global offset).
+/// One client's shard (raw partition output: tensor + global row map).
 #[derive(Debug, Clone)]
 pub struct Shard {
     pub tensor: SparseTensor,
-    /// global patient-row offset of local row 0
+    /// global patient row of local row 0 (== `global_rows[0]`)
     pub row_offset: usize,
+    /// local row -> global patient row (ascending)
+    pub global_rows: Vec<u32>,
 }
 
 /// The immutable per-site data plane: one shard's tensor with every
@@ -33,53 +57,157 @@ pub struct ShardData {
     pub tensor: SparseTensor,
     /// per-mode fiber indices, built once at load
     pub indices: ModeIndices,
-    /// global patient-row offset of local row 0
+    /// global patient row of local row 0 (== `global_rows[0]`)
     pub row_offset: usize,
+    /// local row -> global patient row (ascending)
+    pub global_rows: Vec<u32>,
 }
 
 impl ShardData {
-    /// Build the data plane for one shard (tensor + all fiber indices).
+    /// Build the data plane for a *contiguous* shard starting at
+    /// `row_offset` (the pre-heterogeneity contract, kept for callers
+    /// that construct shards directly).
     pub fn new(tensor: SparseTensor, row_offset: usize) -> Self {
+        let global_rows = (0..tensor.dims[0]).map(|r| (row_offset + r) as u32).collect();
+        Self::with_rows(tensor, global_rows)
+    }
+
+    /// Build the data plane from an explicit local→global row map.
+    pub fn with_rows(tensor: SparseTensor, global_rows: Vec<u32>) -> Self {
+        assert_eq!(global_rows.len(), tensor.dims[0], "one global row per local row");
         let indices = ModeIndices::build(&tensor);
-        ShardData { tensor, indices, row_offset }
+        let row_offset = global_rows.first().copied().unwrap_or(0) as usize;
+        ShardData { tensor, indices, row_offset, global_rows }
     }
 
     /// Lift a raw [`Shard`] into the shared data plane.
     pub fn from_shard(shard: Shard) -> Self {
-        Self::new(shard.tensor, shard.row_offset)
+        Self::with_rows(shard.tensor, shard.global_rows)
     }
 }
 
-/// [`partition_mode0`] + fiber-index construction, each shard wrapped in
-/// an `Arc` for zero-copy sharing across clients and threads.
-pub fn partition_shared(t: &SparseTensor, k: usize) -> Vec<Arc<ShardData>> {
-    partition_mode0(t, k).into_iter().map(|s| Arc::new(ShardData::from_shard(s))).collect()
+/// How patient rows are distributed across clients (spec axis
+/// `partitioner`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Partitioner {
+    /// Contiguous (near-)equal blocks — the IID default.
+    Even,
+    /// Contiguous power-law blocks: client sizes ∝ `(s+1)^-alpha`,
+    /// shuffled across clients by the seed.
+    Skewed(f64),
+    /// Per-site code vocabularies with the given shared-overlap fraction;
+    /// patients follow their dominant private vocabulary.
+    SiteVocab(f64),
 }
 
-/// Split `t` into `k` shards of (near-)equal patient rows.
-///
-/// Row counts differ by at most 1; every global row lands in exactly one
-/// shard and local indices are re-based.
-pub fn partition_mode0(t: &SparseTensor, k: usize) -> Vec<Shard> {
+impl Partitioner {
+    /// Short axis name (registry key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::Even => "even",
+            Partitioner::Skewed(_) => "skewed",
+            Partitioner::SiteVocab(_) => "site_vocab",
+        }
+    }
+
+    /// Registry-parseable string form (`even`, `skewed:<alpha>`,
+    /// `site_vocab:<overlap>`) — what `ExperimentSpec` JSON carries.
+    pub fn spec_string(&self) -> String {
+        match self {
+            Partitioner::Even => "even".to_string(),
+            Partitioner::Skewed(a) => format!("skewed:{a}"),
+            Partitioner::SiteVocab(o) => format!("site_vocab:{o}"),
+        }
+    }
+
+    /// Filesystem-safe label fragment for run stems (no `:`).
+    pub fn label_component(&self) -> String {
+        match self {
+            Partitioner::Even => "even".to_string(),
+            Partitioner::Skewed(a) => format!("skew{a}"),
+            Partitioner::SiteVocab(o) => format!("vocab{o}"),
+        }
+    }
+}
+
+/// [`partition_with`] + fiber-index construction, each shard wrapped in
+/// an `Arc` for zero-copy sharing across clients and threads.
+pub fn partition_shared_with(
+    t: &SparseTensor,
+    k: usize,
+    p: &Partitioner,
+    seed: u64,
+) -> Vec<Arc<ShardData>> {
+    partition_with(t, k, p, seed).into_iter().map(|s| Arc::new(ShardData::from_shard(s))).collect()
+}
+
+/// The even (IID) partition behind an `Arc` — back-compat shorthand for
+/// [`partition_shared_with`] with [`Partitioner::Even`].
+pub fn partition_shared(t: &SparseTensor, k: usize) -> Vec<Arc<ShardData>> {
+    partition_shared_with(t, k, &Partitioner::Even, 0)
+}
+
+/// Split `t` into `k` shards under `p`. Every global row lands in exactly
+/// one shard, every shard is non-empty, and local indices are re-based;
+/// `seed` drives the non-IID partitioners (ignored by `even`).
+pub fn partition_with(t: &SparseTensor, k: usize, p: &Partitioner, seed: u64) -> Vec<Shard> {
     assert!(k >= 1);
     let i0 = t.dims[0];
     assert!(k <= i0, "more clients ({k}) than patient rows ({i0})");
-    let base = i0 / k;
-    let extra = i0 % k;
-    // shard s covers rows [starts[s], starts[s+1])
-    let mut starts = Vec::with_capacity(k + 1);
-    let mut acc = 0usize;
-    for s in 0..k {
-        starts.push(acc);
-        acc += base + usize::from(s < extra);
-    }
-    starts.push(i0);
+    let rows_per_shard = match p {
+        Partitioner::Even => contiguous_rows(&shard_rows(i0, k)),
+        Partitioner::Skewed(alpha) => contiguous_rows(&skewed_sizes(i0, k, *alpha, seed)),
+        Partitioner::SiteVocab(overlap) => site_vocab_rows(t, k, *overlap, seed),
+    };
+    shards_from_rows(t, rows_per_shard)
+}
 
-    let mut shards: Vec<Shard> = (0..k)
-        .map(|s| {
+/// Split `t` into `k` shards of (near-)equal contiguous patient blocks
+/// (the IID default; row counts differ by at most 1).
+pub fn partition_mode0(t: &SparseTensor, k: usize) -> Vec<Shard> {
+    partition_with(t, k, &Partitioner::Even, 0)
+}
+
+/// Turn per-shard sizes into contiguous ascending global-row lists.
+fn contiguous_rows(sizes: &[usize]) -> Vec<Vec<u32>> {
+    let mut start = 0u32;
+    sizes
+        .iter()
+        .map(|&n| {
+            let rows = (start..start + n as u32).collect();
+            start += n as u32;
+            rows
+        })
+        .collect()
+}
+
+/// Materialize shards from explicit row ownership (each global row in
+/// exactly one list; lists ascending). The single assembly path every
+/// partitioner funnels through.
+fn shards_from_rows(t: &SparseTensor, rows_per_shard: Vec<Vec<u32>>) -> Vec<Shard> {
+    let i0 = t.dims[0];
+    let mut owner = vec![usize::MAX; i0];
+    let mut local_of = vec![0u32; i0];
+    for (s, rows) in rows_per_shard.iter().enumerate() {
+        assert!(!rows.is_empty(), "partitioner produced an empty shard {s}");
+        for (l, &r) in rows.iter().enumerate() {
+            assert_eq!(owner[r as usize], usize::MAX, "row {r} assigned twice");
+            owner[r as usize] = s;
+            local_of[r as usize] = l as u32;
+        }
+    }
+    assert!(owner.iter().all(|&o| o != usize::MAX), "partitioner left a row unassigned");
+
+    let mut shards: Vec<Shard> = rows_per_shard
+        .into_iter()
+        .map(|rows| {
             let mut dims = t.dims.clone();
-            dims[0] = starts[s + 1] - starts[s];
-            Shard { tensor: SparseTensor::new(dims), row_offset: starts[s] }
+            dims[0] = rows.len();
+            Shard {
+                tensor: SparseTensor::new(dims),
+                row_offset: rows[0] as usize,
+                global_rows: rows,
+            }
         })
         .collect();
 
@@ -88,13 +216,9 @@ pub fn partition_mode0(t: &SparseTensor, k: usize) -> Vec<Shard> {
     for e in 0..t.nnz() {
         let idx = t.entry(e);
         let row = idx[0] as usize;
-        // find shard by binary search over starts
-        let s = match starts.binary_search(&row) {
-            Ok(pos) => pos.min(k - 1),
-            Err(pos) => pos - 1,
-        };
+        let s = owner[row];
         local_idx.copy_from_slice(idx);
-        local_idx[0] = (row - starts[s]) as u32;
+        local_idx[0] = local_of[row];
         shards[s].tensor.push(&local_idx, t.vals[e]);
     }
     shards
@@ -107,6 +231,121 @@ pub fn shard_rows(i0: usize, k: usize) -> Vec<usize> {
     let base = i0 / k;
     let extra = i0 % k;
     (0..k).map(|s| base + usize::from(s < extra)).collect()
+}
+
+/// Power-law shard sizes: every shard gets 1 row, the remaining
+/// `i0 - k` are distributed by largest remainder over weights
+/// `(s+1)^-alpha` (ties broken by index), then the size list is
+/// seed-shuffled across clients. Deterministic per `(i0, k, alpha,
+/// seed)`.
+pub fn skewed_sizes(i0: usize, k: usize, alpha: f64, seed: u64) -> Vec<usize> {
+    assert!(k >= 1 && k <= i0);
+    let weights: Vec<f64> = (0..k).map(|s| ((s + 1) as f64).powf(-alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    let spare = i0 - k;
+    let ideal: Vec<f64> = weights.iter().map(|w| spare as f64 * w / total).collect();
+    let mut sizes: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    let assigned: usize = sizes.iter().sum();
+    // largest-remainder rounding, ties by lower index
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        nan_last_f64(&(ideal[b] - ideal[b].floor()), &(ideal[a] - ideal[a].floor()))
+            .then(a.cmp(&b))
+    });
+    for &s in order.iter().take(spare - assigned) {
+        sizes[s] += 1;
+    }
+    for s in sizes.iter_mut() {
+        *s += 1; // the guaranteed row
+    }
+    Rng::new(seed ^ 0x9A27_1710).shuffle(&mut sizes);
+    sizes
+}
+
+/// Per-site mode-1 code vocabularies: a seeded permutation of all codes,
+/// the first `round(overlap * J)` shared by every site, the rest split
+/// into per-site private chunks. Each vocabulary is ascending; their
+/// union always covers `0..j_dim`.
+pub fn site_vocabularies(j_dim: usize, k: usize, overlap: f64, seed: u64) -> Vec<Vec<usize>> {
+    assert!(k >= 1);
+    let mut perm: Vec<usize> = (0..j_dim).collect();
+    let mut rng = Rng::new(seed ^ 0x50CA_B017);
+    rng.shuffle(&mut perm);
+    let n_shared = ((overlap.clamp(0.0, 1.0) * j_dim as f64).round() as usize).min(j_dim);
+    let (shared, rest) = perm.split_at(n_shared);
+    let base = rest.len() / k;
+    let extra = rest.len() % k;
+    let mut vocabs = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for s in 0..k {
+        let n = base + usize::from(s < extra);
+        let mut v: Vec<usize> = shared.iter().chain(rest[start..start + n].iter()).copied().collect();
+        v.sort_unstable();
+        vocabs.push(v);
+        start += n;
+    }
+    vocabs
+}
+
+/// Assign each patient row to the site whose *private* vocabulary
+/// dominates its events (ties → lowest site; rows touching only shared
+/// codes → round-robin). Empty shards are repaired by moving rows from
+/// the largest shard, deterministically.
+fn site_vocab_rows(t: &SparseTensor, k: usize, overlap: f64, seed: u64) -> Vec<Vec<u32>> {
+    assert!(t.order() >= 2, "site_vocab partitioner needs a code mode (mode 1)");
+    let i0 = t.dims[0];
+    let j_dim = t.dims[1];
+    let vocabs = site_vocabularies(j_dim, k, overlap, seed);
+
+    // codes listed by exactly one site are private to it
+    let mut appearances = vec![0u32; j_dim];
+    let mut owner_of_code = vec![usize::MAX; j_dim];
+    for (s, v) in vocabs.iter().enumerate() {
+        for &c in v {
+            appearances[c] += 1;
+            owner_of_code[c] = s;
+        }
+    }
+    for c in 0..j_dim {
+        if appearances[c] != 1 {
+            owner_of_code[c] = usize::MAX; // shared (or unused) — no vote
+        }
+    }
+
+    // per-row private-code votes
+    let mut votes = vec![0u32; i0 * k];
+    for e in 0..t.nnz() {
+        let idx = t.entry(e);
+        let site = owner_of_code[idx[1] as usize];
+        if site != usize::MAX {
+            votes[idx[0] as usize * k + site] += 1;
+        }
+    }
+
+    let mut rows_per_shard: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for r in 0..i0 {
+        let row_votes = &votes[r * k..(r + 1) * k];
+        let best = row_votes.iter().enumerate().max_by_key(|&(s, &v)| (v, std::cmp::Reverse(s)));
+        let site = match best {
+            Some((s, &v)) if v > 0 => s,
+            _ => r % k, // no private-code signal: round-robin
+        };
+        rows_per_shard[site].push(r as u32);
+    }
+
+    // repair empty shards: move the largest shard's last row over
+    loop {
+        let Some(empty) = rows_per_shard.iter().position(Vec::is_empty) else { break };
+        let donor = (0..k)
+            .max_by_key(|&s| (rows_per_shard[s].len(), std::cmp::Reverse(s)))
+            .expect("k >= 1");
+        let moved = rows_per_shard[donor].pop().expect("donor has rows (k <= i0)");
+        rows_per_shard[empty].push(moved);
+    }
+    for rows in rows_per_shard.iter_mut() {
+        rows.sort_unstable();
+    }
+    rows_per_shard
 }
 
 #[cfg(test)]
@@ -130,11 +369,106 @@ mod tests {
             for sh in &shards {
                 for e in 0..sh.tensor.nnz() {
                     let mut idx = sh.tensor.entry(e).to_vec();
-                    idx[0] += sh.row_offset as u32;
+                    idx[0] = sh.global_rows[idx[0] as usize];
                     assert!(global.contains(&t.linearize(&idx)));
                     assert!((sh.tensor.entry(e)[0] as usize) < sh.tensor.dims[0]);
                 }
             }
+        }
+    }
+
+    /// Shared property harness for every partitioner: entries covered
+    /// exactly once, rows covered exactly once, local indices re-based,
+    /// no empty shard.
+    fn assert_valid_partition(t: &SparseTensor, shards: &[Shard]) {
+        let total: usize = shards.iter().map(|s| s.tensor.nnz()).sum();
+        assert_eq!(total, t.nnz());
+        let mut seen_rows = vec![false; t.dims[0]];
+        for sh in shards {
+            assert!(sh.tensor.dims[0] > 0, "empty shard");
+            assert_eq!(sh.global_rows.len(), sh.tensor.dims[0]);
+            assert_eq!(sh.row_offset, sh.global_rows[0] as usize);
+            assert!(sh.global_rows.windows(2).all(|w| w[0] < w[1]), "global rows ascending");
+            for &g in &sh.global_rows {
+                assert!(!seen_rows[g as usize], "row {g} in two shards");
+                seen_rows[g as usize] = true;
+            }
+            assert_eq!(&sh.tensor.dims[1..], &t.dims[1..]);
+        }
+        assert!(seen_rows.iter().all(|&s| s), "row missing from every shard");
+        let global: std::collections::HashSet<u64> = t.cell_set();
+        for sh in shards {
+            for e in 0..sh.tensor.nnz() {
+                let mut idx = sh.tensor.entry(e).to_vec();
+                assert!((idx[0] as usize) < sh.tensor.dims[0]);
+                idx[0] = sh.global_rows[idx[0] as usize];
+                assert!(global.contains(&t.linearize(&idx)));
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_partition_covers_everything_and_skews() {
+        let data = SynthConfig::tiny(11).generate();
+        let t = &data.tensor;
+        let shards = partition_with(t, 4, &Partitioner::Skewed(1.2), 7);
+        assert_valid_partition(t, &shards);
+        let mut sizes: Vec<usize> = shards.iter().map(|s| s.tensor.dims[0]).collect();
+        sizes.sort_unstable();
+        assert!(sizes[3] > sizes[0], "alpha=1.2 must produce unequal shard sizes");
+    }
+
+    #[test]
+    fn skewed_sizes_are_deterministic_per_seed_and_sum() {
+        for (i0, k, alpha) in [(64, 6, 0.5), (100, 10, 1.0), (33, 33, 2.0), (40, 1, 1.5)] {
+            let a = skewed_sizes(i0, k, alpha, 3);
+            let b = skewed_sizes(i0, k, alpha, 3);
+            assert_eq!(a, b, "deterministic per seed");
+            assert_eq!(a.iter().sum::<usize>(), i0);
+            assert!(a.iter().all(|&s| s >= 1), "every client keeps at least one row");
+            let c = skewed_sizes(i0, k, alpha, 4);
+            assert_eq!(c.iter().sum::<usize>(), i0, "other seeds still cover");
+        }
+        // alpha = 0 degenerates to the even split (sorted: shuffle only
+        // permutes client order)
+        let mut even = skewed_sizes(64, 6, 0.0, 9);
+        even.sort_unstable();
+        let mut expect = shard_rows(64, 6);
+        expect.sort_unstable();
+        assert_eq!(even, expect);
+    }
+
+    #[test]
+    fn site_vocabularies_union_covers_and_shares() {
+        for (j, k, overlap) in [(40, 4, 0.3), (17, 3, 0.0), (12, 5, 1.0), (9, 1, 0.5)] {
+            let vocabs = site_vocabularies(j, k, overlap, 11);
+            let mut union: Vec<usize> = vocabs.iter().flatten().copied().collect();
+            union.sort_unstable();
+            union.dedup();
+            assert_eq!(union, (0..j).collect::<Vec<_>>(), "j={j} k={k} overlap={overlap}");
+            let n_shared = ((overlap * j as f64).round() as usize).min(j);
+            for v in &vocabs {
+                assert!(v.len() >= n_shared, "each site holds at least the shared codes");
+                assert!(v.windows(2).all(|w| w[0] < w[1]), "vocabulary sorted + deduped");
+            }
+            assert_eq!(vocabs, site_vocabularies(j, k, overlap, 11), "deterministic");
+        }
+    }
+
+    #[test]
+    fn site_vocab_partition_covers_everything() {
+        let data = SynthConfig::tiny(13).generate();
+        let t = &data.tensor;
+        for overlap in [0.0, 0.3, 1.0] {
+            let shards = partition_with(t, 3, &Partitioner::SiteVocab(overlap), 5);
+            assert_valid_partition(t, &shards);
+        }
+        // determinism across calls
+        let a = partition_with(t, 3, &Partitioner::SiteVocab(0.3), 5);
+        let b = partition_with(t, 3, &Partitioner::SiteVocab(0.3), 5);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.global_rows, y.global_rows);
+            assert_eq!(x.tensor.idx, y.tensor.idx);
         }
     }
 
@@ -145,6 +479,10 @@ mod tests {
         let mut expect = 0;
         for sh in &shards {
             assert_eq!(sh.row_offset, expect);
+            assert_eq!(
+                sh.global_rows,
+                (expect as u32..(expect + sh.tensor.dims[0]) as u32).collect::<Vec<_>>()
+            );
             expect += sh.tensor.dims[0];
         }
         assert_eq!(expect, data.tensor.dims[0]);
@@ -190,5 +528,13 @@ mod tests {
         for sh in &shards {
             assert_eq!(&sh.tensor.dims[1..], &data.tensor.dims[1..]);
         }
+    }
+
+    #[test]
+    fn partitioner_spec_strings_are_stable() {
+        assert_eq!(Partitioner::Even.spec_string(), "even");
+        assert_eq!(Partitioner::Skewed(1.5).spec_string(), "skewed:1.5");
+        assert_eq!(Partitioner::SiteVocab(0.3).spec_string(), "site_vocab:0.3");
+        assert_eq!(Partitioner::Skewed(1.5).label_component(), "skew1.5");
     }
 }

@@ -97,19 +97,27 @@ pub fn bench<T>(name: &str, target_ms: u64, mut f: impl FnMut() -> T) -> Stats {
         samples.push(s.elapsed().as_nanos() as f64 / sample_iters as f64);
         total_iters += sample_iters;
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = stats_from_samples(name, total_iters, samples);
+    stats.print();
+    stats
+}
+
+/// Percentile reduction over raw per-iteration samples. NaN samples
+/// (possible if a caller derives timings arithmetically) sort last
+/// instead of panicking the comparator, so percentiles stay meaningful
+/// over the finite prefix.
+fn stats_from_samples(name: &str, total_iters: usize, mut samples: Vec<f64>) -> Stats {
+    samples.sort_by(crate::util::order::nan_last_f64);
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
-    let stats = Stats {
+    Stats {
         name: name.to_string(),
         iters: total_iters,
         mean_ns: mean,
         p50_ns: pct(0.5),
         p95_ns: pct(0.95),
         min_ns: samples[0],
-    };
-    stats.print();
-    stats
+    }
 }
 
 /// Aligned table printer for experiment benches.
@@ -269,6 +277,17 @@ mod tests {
         assert!(s.mean_ns > 0.0);
         assert!(s.p50_ns <= s.p95_ns * 1.0001);
         assert!(s.iters > 100);
+    }
+
+    #[test]
+    fn nan_poisoned_samples_do_not_panic_the_percentile_sort() {
+        // regression: the sample sort used partial_cmp().unwrap(), which
+        // panics on NaN; it must now push NaNs last and keep the finite
+        // order statistics intact
+        let s = stats_from_samples("poisoned", 40, vec![3.0, f64::NAN, 1.0, 2.0, f64::NAN]);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.p50_ns, 3.0);
+        assert!(s.p95_ns.is_nan(), "NaNs sort to the tail percentiles");
     }
 
     #[test]

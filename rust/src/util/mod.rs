@@ -8,5 +8,6 @@ pub mod cli;
 pub mod csv;
 pub mod json;
 pub mod mat;
+pub mod order;
 pub mod propcheck;
 pub mod rng;

@@ -1,0 +1,82 @@
+//! NaN-safe total orderings for floats.
+//!
+//! `f32::total_cmp` alone is not enough for "NaN sorts last": IEEE-754
+//! total order places *negative* NaN below -inf, so a poisoned slice
+//! would sort NaNs to the *front* depending on the sign bit. These
+//! comparators treat every NaN (either sign) as the greatest element,
+//! so `sort_by(nan_last_*)` pushes all NaNs to the tail and the finite
+//! prefix is ordered by `total_cmp` — deterministic, never panics.
+
+use std::cmp::Ordering;
+
+/// Ascending order, any NaN last.
+pub fn nan_last_f32(a: &f32, b: &f32) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(b),
+    }
+}
+
+/// Ascending order, any NaN last.
+pub fn nan_last_f64(a: &f64, b: &f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(b),
+    }
+}
+
+/// Descending by absolute value, any NaN last (|NaN| is NaN, so the
+/// naive `b.abs().total_cmp(&a.abs())` would sort NaNs *first* in a
+/// descending sort).
+pub fn nan_last_desc_abs_f32(a: &f32, b: &f32) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.abs().total_cmp(&a.abs()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nan_last_f32_sorts_nans_to_tail() {
+        let mut v = vec![f32::NAN, 2.0, -f32::NAN, -1.0, f32::INFINITY, f32::NEG_INFINITY, 0.0];
+        v.sort_by(nan_last_f32);
+        assert_eq!(&v[..5], &[f32::NEG_INFINITY, -1.0, 0.0, 2.0, f32::INFINITY]);
+        assert!(v[5].is_nan() && v[6].is_nan());
+    }
+
+    #[test]
+    fn nan_last_f64_sorts_nans_to_tail() {
+        // -NaN is the regression case: raw total_cmp puts it before -inf
+        let mut v = vec![-f64::NAN, 1.5, f64::NAN, -3.0, 0.25];
+        v.sort_by(nan_last_f64);
+        assert_eq!(&v[..3], &[-3.0, 0.25, 1.5]);
+        assert!(v[3].is_nan() && v[4].is_nan());
+    }
+
+    #[test]
+    fn desc_abs_orders_by_magnitude_with_nans_last() {
+        let mut v = vec![0.5f32, f32::NAN, -4.0, 2.0, -f32::NAN, -0.25];
+        v.sort_by(nan_last_desc_abs_f32);
+        assert_eq!(&v[..4], &[-4.0, 2.0, 0.5, -0.25]);
+        assert!(v[4].is_nan() && v[5].is_nan());
+    }
+
+    #[test]
+    fn comparators_are_total_on_poisoned_input() {
+        // sort_by panics on inconsistent comparators in debug builds;
+        // surviving a fully poisoned slice is the regression guard
+        let mut v = vec![f32::NAN; 8];
+        v.sort_by(nan_last_f32);
+        v.sort_by(nan_last_desc_abs_f32);
+        assert_eq!(v.len(), 8);
+    }
+}

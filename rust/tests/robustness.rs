@@ -1,0 +1,438 @@
+//! Adversary & heterogeneity plane — the tentpole acceptance tests:
+//! (1) trimmed-mean consensus survives 20% sign-flip adversaries (final
+//! loss within 2x of the honest-mean baseline) while the plain mean
+//! measurably degrades; (2) checkpoint/resume stays bit-identical under
+//! an adversarial run on a faulty network (including the stateful
+//! `stale_replay` attack, whose replay buffer rides the checkpoint);
+//! (3) the sweep aggregate over an (adversary x aggregator) grid is
+//! byte-identical for 1 vs N workers. Plus seeded property tests for the
+//! robust aggregator cores (permutation invariance, range bounds,
+//! `trimmed_mean(0) == mean`, non-finite stability).
+
+use std::path::PathBuf;
+
+use cidertf::adversary::AdversarySchedule;
+use cidertf::data::Dataset;
+use cidertf::engine::session::{Observer, Session, SessionEvent};
+use cidertf::engine::spec::ExperimentSpec;
+use cidertf::engine::{AlgoConfig, TrainOutcome};
+use cidertf::gossip::robust::{coordinate_median_of, trimmed_mean_of};
+use cidertf::gossip::Aggregator;
+use cidertf::losses::Loss;
+use cidertf::net::driver::DriverKind;
+use cidertf::net::sim::FaultConfig;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::sweep::{self, SweepOptions, SweepSpec};
+use cidertf::tensor::partition::Partitioner;
+use cidertf::topology::Topology;
+use cidertf::util::order::nan_last_f32;
+use cidertf::util::propcheck::forall;
+use cidertf::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// shared setup
+// ---------------------------------------------------------------------
+
+/// k=5 on the complete graph with master seed 5: at fraction 0.2 the
+/// unit-hash subset marks exactly client 1 Byzantine — one adversary,
+/// four honest clients, every honest client sees the corrupted delta.
+fn robust_spec(aggregator: Aggregator, adversary: Option<AdversarySchedule>) -> ExperimentSpec {
+    ExperimentSpec::builder("tiny", Loss::Logit, AlgoConfig::cidertf(2))
+        .rank(4)
+        .fiber_samples(16)
+        .k(5)
+        .topology(Topology::Complete)
+        .gamma(0.5)
+        .iters_per_epoch(50)
+        .epochs(4)
+        .eval_batch(64)
+        .init_scale(0.3)
+        .seed(5)
+        .driver(DriverKind::Sequential)
+        .aggregator(aggregator)
+        .adversary(adversary)
+        .build()
+        .unwrap()
+}
+
+fn run_spec(spec: &ExperimentSpec, data: &Dataset) -> TrainOutcome {
+    let mut backend = NativeBackend::new();
+    Session::new(spec.clone()).run_on(data, &mut backend, None).unwrap()
+}
+
+fn sign_flip_20() -> Option<AdversarySchedule> {
+    Some(AdversarySchedule::sign_flip(0.2))
+}
+
+// ---------------------------------------------------------------------
+// (1) convergence under attack
+// ---------------------------------------------------------------------
+
+/// Counts `AdversarialAct` events and cross-checks them against the
+/// `NetStats` counter at `RunEnd`.
+#[derive(Default)]
+struct AdvObserver {
+    acts: u64,
+}
+
+impl Observer for AdvObserver {
+    fn on_event(&mut self, event: &SessionEvent) -> anyhow::Result<()> {
+        match event {
+            SessionEvent::AdversarialAct { client, mode, kind, .. } => {
+                assert_eq!(*client, 1, "only client 1 is Byzantine under seed 5");
+                assert_ne!(*mode, 0, "the patient mode never travels, so it cannot be corrupted");
+                assert_eq!(*kind, "sign_flip");
+                self.acts += 1;
+            }
+            SessionEvent::RunEnd { record } => {
+                assert!(self.acts > 0, "no AdversarialAct events observed");
+                assert_eq!(
+                    self.acts, record.net.adversarial,
+                    "event count must match the NetStats adversarial counter"
+                );
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn trimmed_mean_survives_sign_flip_adversaries() {
+    let honest = robust_spec(Aggregator::Mean, None);
+    // the pinned Byzantine subset the whole test keys on
+    let sched = robust_spec(Aggregator::Mean, sign_flip_20()).adversary_schedule().unwrap();
+    assert_eq!(sched.adversarial_clients(5), vec![1], "seed-5 subset drifted");
+
+    let data = honest.dataset_data().unwrap();
+    let honest_out = run_spec(&honest, &data);
+    let honest_loss = honest_out.record.final_loss();
+    assert!(honest_loss.is_finite() && honest_loss > 0.0, "honest baseline broken: {honest_loss}");
+    assert_eq!(honest_out.record.net.adversarial, 0, "honest run counted attacks");
+
+    // plain mean trusts every neighbor linearly: the mirrored estimate a
+    // sign-flip adversary broadcasts drags the whole fleet
+    let mean_out = run_spec(&robust_spec(Aggregator::Mean, sign_flip_20()), &data);
+    assert!(mean_out.record.net.adversarial > 0, "attack never fired");
+    let mean_loss = mean_out.record.final_loss();
+
+    // trimmed mean drops one value per extreme of the 5-value coordinate
+    // set, which is exactly where the mirrored estimate lands
+    let trimmed = robust_spec(Aggregator::TrimmedMean(0.25), sign_flip_20());
+    let mut backend = NativeBackend::new();
+    let trim_out = Session::new(trimmed)
+        .observe(Box::new(AdvObserver::default()))
+        .run_on(&data, &mut backend, None)
+        .unwrap();
+    assert!(trim_out.record.net.adversarial > 0, "attack never fired under trimmed mean");
+    let trim_loss = trim_out.record.final_loss();
+
+    assert!(
+        trim_loss.is_finite() && trim_loss <= 2.0 * honest_loss,
+        "trimmed mean did not hold under attack: {trim_loss} vs honest {honest_loss}"
+    );
+    assert!(
+        mean_loss.is_nan() || mean_loss > 1.05 * honest_loss,
+        "plain mean did not degrade under attack: {mean_loss} vs honest {honest_loss}"
+    );
+    assert!(
+        mean_loss.is_nan() || trim_loss < mean_loss,
+        "robust aggregation did not beat the naive mean: {trim_loss} vs {mean_loss}"
+    );
+}
+
+#[test]
+fn trimmed_mean_zero_dispatches_bit_identically_to_mean() {
+    // β = 0 is *defined* as the weighted-mean code path, so an honest run
+    // must be bit-identical, not merely close
+    let mean_spec = robust_spec(Aggregator::Mean, None);
+    let data = mean_spec.dataset_data().unwrap();
+    let a = run_spec(&mean_spec, &data);
+    let b = run_spec(&robust_spec(Aggregator::TrimmedMean(0.0), None), &data);
+    for (m, (x, y)) in a.factors.mats.iter().zip(b.factors.mats.iter()).enumerate() {
+        assert_eq!(x.data, y.data, "trimmed_mean:0 diverged from mean (mode {m})");
+    }
+    for (p, q) in a.record.points.iter().zip(b.record.points.iter()) {
+        assert_eq!(p.loss.to_bits(), q.loss.to_bits());
+    }
+}
+
+#[test]
+fn non_iid_partitioners_are_deterministic_and_change_the_run() {
+    let mut skewed = robust_spec(Aggregator::Mean, None);
+    skewed.partitioner = Partitioner::SiteVocab(0.5);
+    let data = skewed.dataset_data().unwrap();
+    let a = run_spec(&skewed, &data);
+    let b = run_spec(&skewed, &data);
+    assert!(a.record.final_loss().is_finite());
+    for (x, y) in a.factors.mats.iter().zip(b.factors.mats.iter()) {
+        assert_eq!(x.data, y.data, "site_vocab partitioning is not deterministic");
+    }
+    // a different partitioner means different local data, hence a
+    // genuinely different trajectory
+    let even = run_spec(&robust_spec(Aggregator::Mean, None), &data);
+    assert!(
+        a.factors.mats.iter().zip(even.factors.mats.iter()).any(|(x, y)| x.data != y.data),
+        "site_vocab run is indistinguishable from the even partition"
+    );
+}
+
+// ---------------------------------------------------------------------
+// (2) checkpoint/resume bit-identity under adversarial faulty runs
+// ---------------------------------------------------------------------
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("cidertf_robustness_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}_{}.ckpt.json", std::process::id()))
+}
+
+/// Run `spec` truncated to `cut` epochs with checkpointing, then resume
+/// extended back to the full epoch count (same shape as the session-API
+/// checkpoint tests).
+fn interrupted_run(spec: &ExperimentSpec, cut: usize, data: &Dataset, tag: &str) -> TrainOutcome {
+    let path = ckpt_path(tag);
+    let mut truncated = spec.clone();
+    truncated.epochs = cut;
+    let mut backend = NativeBackend::new();
+    Session::new(truncated).checkpoint_every(&path, 1).run_on(data, &mut backend, None).unwrap();
+
+    let mut resumed = Session::resume_from(&path).unwrap();
+    resumed.spec_mut().epochs = spec.epochs;
+    let mut backend = NativeBackend::new();
+    let out = resumed.run_on(data, &mut backend, None).unwrap();
+    std::fs::remove_file(&path).ok();
+    out
+}
+
+fn assert_bit_identical(full: &TrainOutcome, resumed: &TrainOutcome) {
+    for (m, (a, b)) in full.factors.mats.iter().zip(resumed.factors.mats.iter()).enumerate() {
+        assert_eq!(a.data, b.data, "factors diverged after resume (mode {m})");
+    }
+    assert_eq!(full.record.points.len(), resumed.record.points.len());
+    for (p, q) in full.record.points.iter().zip(resumed.record.points.iter()) {
+        assert_eq!(p.loss.to_bits(), q.loss.to_bits(), "loss diverged at epoch {}", p.epoch);
+        assert_eq!(p.bytes, q.bytes, "comm bytes diverged at epoch {}", p.epoch);
+        assert_eq!(p.time_s.to_bits(), q.time_s.to_bits(), "virtual clock diverged");
+    }
+    assert_eq!(full.record.total.bytes, resumed.record.total.bytes);
+    assert_eq!(full.record.net.delivered, resumed.record.net.delivered);
+    assert_eq!(full.record.net.dropped, resumed.record.net.dropped);
+    assert_eq!(full.record.net.offline_rounds, resumed.record.net.offline_rounds);
+    assert_eq!(
+        full.record.net.adversarial, resumed.record.net.adversarial,
+        "adversarial-act counter diverged after resume"
+    );
+}
+
+#[test]
+fn checkpoint_resume_bit_identical_under_adversarial_faulty_network() {
+    // the stateful attack (replay buffer rides the checkpoint) on a
+    // faulty network, defended by the median — the worst-case resume
+    let mut spec = robust_spec(Aggregator::CoordinateMedian, None);
+    spec.adversary = Some(AdversarySchedule::stale_replay(0.2));
+    spec.driver = DriverKind::Sim;
+    spec.fault = Some(FaultConfig {
+        seed: 1234,
+        drop_rate: 0.3,
+        burst_rate: 0.05,
+        churn_rate: 0.2,
+        churn_period: 20,
+        straggler_ids: vec![1],
+        latency_base_s: 0.01,
+        bandwidth_bps: 1e6,
+        ..Default::default()
+    });
+    let data = spec.dataset_data().unwrap();
+    let full = run_spec(&spec, &data);
+    assert!(full.record.net.adversarial > 0, "stale_replay never fired");
+    assert!(full.record.net.dropped > 0, "fault envelope not exercised");
+    let resumed = interrupted_run(&spec, 2, &data, "stale_faulty");
+    assert_bit_identical(&full, &resumed);
+}
+
+#[test]
+fn checkpoint_resume_bit_identical_sign_flip_trimmed() {
+    let mut spec = robust_spec(Aggregator::TrimmedMean(0.25), sign_flip_20());
+    spec.driver = DriverKind::Sim;
+    let data = spec.dataset_data().unwrap();
+    let full = run_spec(&spec, &data);
+    assert!(full.record.net.adversarial > 0);
+    let resumed = interrupted_run(&spec, 2, &data, "signflip_trim");
+    assert_bit_identical(&full, &resumed);
+}
+
+// ---------------------------------------------------------------------
+// (3) sweep over the (adversary x aggregator) grid
+// ---------------------------------------------------------------------
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cidertf_robustness_sweep_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn quiet_opts(dir: PathBuf, workers: usize) -> SweepOptions {
+    let mut opts = SweepOptions::new(dir, workers);
+    opts.quiet = true;
+    opts
+}
+
+#[test]
+fn robustness_grid_aggregate_is_bit_identical_across_workers() {
+    // the CI smoke grid: {mean, trimmed_mean} x {honest, sign_flip} over
+    // a skewed partition (4 runs)
+    let mut spec = SweepSpec::robust_smoke();
+    spec.base.backend = "native".to_string();
+    let runs = spec.expand().unwrap();
+    assert_eq!(runs.len(), 4);
+    let mut labels: Vec<String> = runs.iter().map(|r| r.label()).collect();
+    labels.sort();
+    labels.dedup();
+    assert_eq!(labels.len(), 4, "grid cells collide on disk");
+
+    let dir1 = tmp_dir("workers1");
+    let out1 = sweep::execute(&spec, &quiet_opts(dir1.clone(), 1), None).unwrap();
+    let jsonl1 = std::fs::read(&out1.jsonl_path).unwrap();
+
+    let dir3 = tmp_dir("workers3");
+    let out3 = sweep::execute(&spec, &quiet_opts(dir3.clone(), 3), None).unwrap();
+    let jsonl3 = std::fs::read(&out3.jsonl_path).unwrap();
+
+    assert!(!jsonl1.is_empty());
+    assert_eq!(jsonl1, jsonl3, "robustness-grid aggregate must be worker-count invariant");
+
+    // the aggregate names the robustness axes so grid cells are
+    // distinguishable downstream
+    let text = String::from_utf8_lossy(&jsonl1).into_owned();
+    for key in ["\"aggregator\"", "\"adversary\"", "\"partitioner\"", "\"adversarial\""] {
+        assert!(text.contains(key), "aggregate lines lack {key}");
+    }
+    // adversarial cells attacked, honest cells did not
+    for (run, res) in out1.runs.iter().zip(out1.results.iter()) {
+        if run.adversary.is_some() {
+            assert!(res.record.net.adversarial > 0, "no attacks in {}", run.label());
+        } else {
+            assert_eq!(res.record.net.adversarial, 0, "attacks in honest {}", run.label());
+        }
+    }
+
+    std::fs::remove_dir_all(&dir1).ok();
+    std::fs::remove_dir_all(&dir3).ok();
+}
+
+// ---------------------------------------------------------------------
+// robust-aggregator property tests (seeded, reproducible)
+// ---------------------------------------------------------------------
+
+fn gen_finite_values(rng: &mut Rng) -> Vec<f32> {
+    let n = 1 + rng.below(12);
+    (0..n).map(|_| (rng.uniform() * 20.0 - 10.0) as f32).collect()
+}
+
+#[test]
+fn robust_centers_are_permutation_invariant() {
+    forall("robust centers permutation invariance", 200, gen_finite_values, |vals, rng| {
+        let beta = rng.uniform() * 0.49;
+        let mut a = vals.clone();
+        let mut b = vals.clone();
+        for i in (1..b.len()).rev() {
+            b.swap(i, rng.below(i + 1));
+        }
+        let (ta, tb) = (trimmed_mean_of(&mut a, beta), trimmed_mean_of(&mut b, beta));
+        if ta.to_bits() != tb.to_bits() {
+            return Err(format!("trimmed mean order-dependent: {ta} vs {tb} (beta {beta})"));
+        }
+        let (ma, mb) = (coordinate_median_of(&mut a), coordinate_median_of(&mut b));
+        if ma.to_bits() != mb.to_bits() {
+            return Err(format!("median order-dependent: {ma} vs {mb}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn robust_centers_stay_within_the_input_range() {
+    forall("robust centers bounded by input range", 200, gen_finite_values, |vals, rng| {
+        let beta = rng.uniform() * 0.49;
+        let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let t = trimmed_mean_of(&mut vals.clone(), beta);
+        if !(lo..=hi).contains(&t) {
+            return Err(format!("trimmed mean {t} outside [{lo}, {hi}] (beta {beta})"));
+        }
+        let m = coordinate_median_of(&mut vals.clone());
+        if !(lo..=hi).contains(&m) {
+            return Err(format!("median {m} outside [{lo}, {hi}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trimmed_mean_beta_zero_is_the_plain_mean_bitwise() {
+    forall("trimmed_mean(0) == mean", 200, gen_finite_values, |vals, _| {
+        // the oracle mirrors the documented contract: sort (NaN-last),
+        // sum in f64, divide — with zero trim that is the plain mean
+        let mut sorted = vals.clone();
+        sorted.sort_by(nan_last_f32);
+        let mean = (sorted.iter().map(|&v| v as f64).sum::<f64>() / sorted.len() as f64) as f32;
+        let t = trimmed_mean_of(&mut vals.clone(), 0.0);
+        if t.to_bits() != mean.to_bits() {
+            return Err(format!("beta=0 is not the plain mean: {t} vs {mean}"));
+        }
+        Ok(())
+    });
+}
+
+/// A contaminated coordinate set: `finite` honest values plus up to `g`
+/// `-inf` and up to `g` `+inf`/NaN values, with `beta` chosen so exactly
+/// `g` values are trimmed from each end.
+#[derive(Debug)]
+struct Contaminated {
+    values: Vec<f32>,
+    beta: f64,
+    lo: f32,
+    hi: f32,
+}
+
+fn gen_contaminated(rng: &mut Rng) -> Contaminated {
+    let g = 1 + rng.below(3);
+    let finite: Vec<f32> =
+        (0..2 * g + 1 + rng.below(5)).map(|_| (rng.uniform() * 20.0 - 10.0) as f32).collect();
+    let lo = finite.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = finite.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut values = finite;
+    for _ in 0..rng.below(g + 1) {
+        values.push(f32::NEG_INFINITY);
+    }
+    for _ in 0..rng.below(g + 1) {
+        values.push(if rng.bernoulli(0.5) { f32::INFINITY } else { f32::NAN });
+    }
+    let beta = (g as f64 + 0.5) / values.len() as f64;
+    Contaminated { values, beta, lo, hi }
+}
+
+#[test]
+fn trimming_removes_non_finite_extremes() {
+    forall("non-finite payloads are trimmed away", 200, gen_contaminated, |case, rng| {
+        let mut v = case.values.clone();
+        for i in (1..v.len()).rev() {
+            v.swap(i, rng.below(i + 1));
+        }
+        let t = trimmed_mean_of(&mut v.clone(), case.beta);
+        if !t.is_finite() || !(case.lo..=case.hi).contains(&t) {
+            return Err(format!(
+                "trimmed mean not stabilized: {t} (finite range [{}, {}])",
+                case.lo, case.hi
+            ));
+        }
+        // NaN/-inf/+inf sort to the extremes, so the median's middle
+        // stays finite for this contamination level too
+        let m = coordinate_median_of(&mut v.clone());
+        if !m.is_finite() {
+            return Err(format!("median not stabilized: {m}"));
+        }
+        Ok(())
+    });
+}

@@ -6,8 +6,10 @@
 
 use std::path::PathBuf;
 
+use cidertf::adversary::AdversarySchedule;
 use cidertf::compress::Compressor;
 use cidertf::engine::presets::Scenario;
+use cidertf::gossip::Aggregator;
 use cidertf::engine::session::{Observer, Session, SessionEvent};
 use cidertf::engine::spec::{ExperimentSpec, StopRule};
 use cidertf::engine::{train, AlgoConfig, TrainOutcome};
@@ -16,6 +18,7 @@ use cidertf::net::driver::DriverKind;
 use cidertf::net::sim::FaultConfig;
 use cidertf::registry;
 use cidertf::runtime::native::NativeBackend;
+use cidertf::tensor::partition::Partitioner;
 use cidertf::tensor::synth::SynthData;
 use cidertf::topology::Topology;
 use cidertf::util::propcheck::forall;
@@ -63,6 +66,24 @@ fn gen_spec(rng: &mut Rng) -> ExperimentSpec {
         [DriverKind::Sequential, DriverKind::Parallel, DriverKind::Sim, DriverKind::Async]
             [rng.below(4)]
     };
+    let partitioner = match rng.below(3) {
+        0 => Partitioner::Even,
+        1 => Partitioner::Skewed(0.25 + rng.uniform() * 2.0),
+        _ => Partitioner::SiteVocab(0.1 + rng.uniform() * 0.8),
+    };
+    let aggregator = match rng.below(3) {
+        0 => Aggregator::Mean,
+        1 => Aggregator::TrimmedMean(rng.uniform() * 0.49),
+        _ => Aggregator::CoordinateMedian,
+    };
+    // Byzantine schedules need a publish-intercepting driver (seq/sim)
+    let adversary = (matches!(driver, DriverKind::Sequential | DriverKind::Sim)
+        && rng.bernoulli(0.4))
+    .then(|| match rng.below(3) {
+        0 => AdversarySchedule::sign_flip(rng.uniform()),
+        1 => AdversarySchedule::scaled_noise(rng.uniform()),
+        _ => AdversarySchedule::stale_replay(rng.uniform()),
+    });
     ExperimentSpec {
         dataset: datasets[rng.below(3)].to_string(),
         loss,
@@ -82,6 +103,9 @@ fn gen_spec(rng: &mut Rng) -> ExperimentSpec {
         sim_iter_s: rng.uniform(),
         compute_threads: 1 + rng.below(8),
         fault,
+        partitioner,
+        aggregator,
+        adversary,
         driver,
         backend: if rng.bernoulli(0.8) { "native" } else { "pjrt" }.to_string(),
         eval_every: 1 + rng.below(3),
