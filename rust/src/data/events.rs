@@ -11,7 +11,7 @@
 //! quoted fields are rejected with an error rather than silently
 //! miskeyed.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
 use crate::tensor::SparseTensor;
@@ -54,8 +54,12 @@ pub struct EventVocabs {
 
 /// Load an event-log CSV into a count tensor plus its vocabularies.
 ///
-/// Entries are materialized in linearized-index order, so the tensor is
-/// identical however the HashMap iterates.
+/// Counts accumulate in a `BTreeMap` keyed by the id triple, so entries
+/// materialize in key order structurally — re-ingesting the same file
+/// always yields a bit-identical tensor (asserted in the tests below).
+/// The per-vocabulary `HashMap` is a lookup index only (ids are assigned
+/// in first-appearance order and never iterated), so it cannot leak hash
+/// order into the output.
 pub fn load_events_csv(path: &Path) -> anyhow::Result<(SparseTensor, EventVocabs)> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
@@ -71,7 +75,7 @@ pub fn load_events_csv(path: &Path) -> anyhow::Result<(SparseTensor, EventVocabs
     );
 
     let mut vocabs: [Vocab; 3] = Default::default();
-    let mut counts: HashMap<(u32, u32, u32), f32> = HashMap::new();
+    let mut counts: BTreeMap<(u32, u32, u32), f32> = BTreeMap::new();
     for (lineno, line) in lines {
         // naive comma splitting by design (offline substrate, no csv
         // crate) — quoted fields would be silently miskeyed, so reject
@@ -108,10 +112,9 @@ pub fn load_events_csv(path: &Path) -> anyhow::Result<(SparseTensor, EventVocabs
     anyhow::ensure!(!counts.is_empty(), "{}: no event rows", path.display());
 
     let dims = vec![vocabs[0].len(), vocabs[1].len(), vocabs[2].len()];
-    let mut entries: Vec<((u32, u32, u32), f32)> = counts.into_iter().collect();
-    entries.sort_unstable_by_key(|&(k, _)| k);
     let mut t = SparseTensor::new(dims);
-    for ((p, c, tm), v) in entries {
+    // BTreeMap iteration is already key-ordered — no sort pass needed
+    for (&(p, c, tm), &v) in counts.iter() {
         t.push(&[p, c, tm], v);
     }
     let [patients, codes, times] = vocabs;
@@ -150,6 +153,35 @@ mod tests {
         // (p1, dx_flu, w1) fired twice
         let e = (0..t.nnz()).find(|&e| t.entry(e) == [0, 0, 0]).unwrap();
         assert_eq!(t.vals[e], 2.0);
+    }
+
+    #[test]
+    fn reingesting_the_same_log_is_bit_identical() {
+        // regression for hash-order leakage: enough distinct keys that a
+        // hash-ordered accumulator would almost surely permute entries
+        let path = tmp("stable.csv");
+        let mut body = String::from("patient,code,time\n");
+        for i in 0..97u32 {
+            // spread keys across all three vocabularies, with repeats
+            body.push_str(&format!("p{},c{},t{}\n", i % 29, (i * 7) % 13, (i * 3) % 11));
+            body.push_str(&format!("p{},c{},t{}\n", (i * 5) % 29, i % 13, (i * 2) % 11));
+        }
+        std::fs::write(&path, body).unwrap();
+        let (t1, v1) = load_events_csv(&path).unwrap();
+        let (t2, v2) = load_events_csv(&path).unwrap();
+        assert_eq!(t1.dims, t2.dims);
+        assert_eq!(t1.nnz(), t2.nnz());
+        for e in 0..t1.nnz() {
+            assert_eq!(t1.entry(e), t2.entry(e), "entry {e} index order drifted");
+            assert_eq!(
+                t1.vals[e].to_bits(),
+                t2.vals[e].to_bits(),
+                "entry {e} value drifted"
+            );
+        }
+        assert_eq!(v1.patients.names, v2.patients.names);
+        assert_eq!(v1.codes.names, v2.codes.names);
+        assert_eq!(v1.times.names, v2.times.names);
     }
 
     #[test]

@@ -317,6 +317,15 @@ pub(crate) fn consensus_phase(
         }
         let ClientState { estimates, factors, .. } = c;
         let est = estimates.as_ref().expect("estimates");
+        // the finiteness scan is debug-only: consensus may legitimately
+        // propagate a NaN a diverged local step produced, but must never
+        // manufacture one from all-finite inputs
+        let inputs_finite = crate::util::invariant::enabled()
+            && factors.mats[m].data.iter().all(|v| v.is_finite())
+            && est
+                .peers
+                .iter()
+                .all(|&p| est.estimate(p, m).data.iter().all(|v| v.is_finite()));
         aggregator.consensus_into(
             est,
             &mut factors.mats[m],
@@ -324,6 +333,12 @@ pub(crate) fn consensus_phase(
             &graph.neighbors[k],
             &graph.weights[k],
             rho,
+        );
+        crate::util::invariant::consensus_kept_finite(
+            k,
+            m,
+            inputs_finite,
+            &factors.mats[m].data,
         );
     }
 }

@@ -641,6 +641,11 @@ pub(crate) fn run_loop(
     let graph = Graph::build(cfg.topology, cfg.k)?;
     let decentralized = cfg.k > 1;
     let mut clients = build_clients(cfg, data, &graph);
+    for c in clients.iter() {
+        if let Some(est) = c.estimates.as_ref() {
+            crate::util::invariant::estimate_slots_aligned(c.id, &est.peers, &graph.neighbors[c.id]);
+        }
+    }
 
     // Byzantine plane: the schedule picks the static corrupt subset, the
     // built adversary mutates payloads at publish time. A sentinel seed
@@ -656,6 +661,9 @@ pub(crate) fn run_loop(
     let trigger = cfg.trigger_schedule();
     let all_modes: Vec<usize> = (0..d_order).collect();
     let mut clock = VirtualClock::default();
+    // lint: allow(wall-clock) — seq-driver wall timing only; it feeds the
+    // time_s/wall_s reporting fields, never a deterministic aggregate
+    #[allow(clippy::disallowed_methods)]
     let start = Instant::now();
     let mut wall_offset = 0.0f64;
 
@@ -776,14 +784,29 @@ pub(crate) fn run_loop(
 
         // ---- round level: gossip through the network model ----
         if decentralized && t % cfg.algo.tau == 0 {
+            let track_bytes = has_observers || crate::util::invariant::enabled();
             let bytes_before: u64 =
-                if has_observers { clients.iter().map(|c| c.ledger.bytes).sum() } else { 0 };
+                if track_bytes { clients.iter().map(|c| c.ledger.bytes).sum() } else { 0 };
+            let mut expected_round_bytes = 0u64;
             for &m in modes {
                 if m == 0 {
                     continue; // patient mode never travels (privacy)
                 }
                 let mut payloads =
                     publish_phase(&mut clients, &graph, cfg, &trigger, t, m, Some(&online[..]));
+
+                // wire-byte conservation: snapshot what publish charged
+                // (pre-corruption — the ledger was charged on the honest
+                // payload) so the invariant can reconcile the ledgers
+                // after the round
+                if crate::util::invariant::enabled() {
+                    for (k, p) in payloads.iter().enumerate() {
+                        if let Some(p) = p {
+                            expected_round_bytes += (p.wire_bytes() + Message::HEADER_BYTES)
+                                * graph.neighbors[k].len() as u64;
+                        }
+                    }
+                }
 
                 // own delta applies locally before any tampering — it
                 // never touches the wire. A Byzantine client lies to its
@@ -868,9 +891,15 @@ pub(crate) fn run_loop(
                     })?;
                 }
             }
-            if has_observers {
+            if track_bytes {
                 let bytes_after: u64 = clients.iter().map(|c| c.ledger.bytes).sum();
-                if bytes_after > bytes_before {
+                crate::util::invariant::wire_bytes_conserved(
+                    t,
+                    bytes_before,
+                    bytes_after,
+                    expected_round_bytes,
+                );
+                if has_observers && bytes_after > bytes_before {
                     hooks.emit(SessionEvent::CommBytes {
                         t,
                         round_bytes: bytes_after - bytes_before,

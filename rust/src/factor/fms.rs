@@ -87,13 +87,7 @@ pub fn fms_with_matching(a: &FactorSet, b: &FactorSet) -> (f64, Vec<usize>) {
     // whole rows/columns of `sim`) sort last instead of panicking, so a
     // diverged run still gets matched on its finite components first
     pairs.sort_by(|&(r1, s1), &(r2, s2)| {
-        let (x, y) = (sim[r1][s1], sim[r2][s2]);
-        match (x.is_nan(), y.is_nan()) {
-            (true, true) => std::cmp::Ordering::Equal,
-            (true, false) => std::cmp::Ordering::Greater,
-            (false, true) => std::cmp::Ordering::Less,
-            (false, false) => y.total_cmp(&x),
-        }
+        crate::util::order::nan_last_desc_f64(&sim[r1][s1], &sim[r2][s2])
     });
     let mut used_r = vec![false; r_dim];
     let mut used_s = vec![false; sim[0].len()];

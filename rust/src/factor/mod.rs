@@ -51,12 +51,7 @@ impl FactorSet {
     pub fn top_components(&self, k: usize) -> Vec<usize> {
         let lw = self.lambda_weights();
         let mut order: Vec<usize> = (0..lw.len()).collect();
-        order.sort_by(|&a, &b| match (lw[a].is_nan(), lw[b].is_nan()) {
-            (true, true) => std::cmp::Ordering::Equal,
-            (true, false) => std::cmp::Ordering::Greater,
-            (false, true) => std::cmp::Ordering::Less,
-            (false, false) => lw[b].total_cmp(&lw[a]),
-        });
+        order.sort_by(|&a, &b| crate::util::order::nan_last_desc_f64(&lw[a], &lw[b]));
         order.truncate(k);
         order
     }

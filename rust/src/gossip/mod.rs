@@ -109,6 +109,7 @@ impl EstimateState {
         // unique, so every id maps to exactly one estimate slot
         peers.dedup();
         let self_slot = peers.iter().position(|&p| p == client).unwrap();
+        crate::util::invariant::estimate_slots_aligned(client, &peers, neighbors);
         let mats = peers.iter().map(|_| init.to_vec()).collect();
         EstimateState { peers, mats, self_slot }
     }

@@ -115,6 +115,7 @@ fn robust_step(
     rho: f64,
     center: impl Fn(&mut [f32]) -> f32,
 ) {
+    crate::util::invariant::neighbors_sorted(neighbors);
     let self_hat = est.self_estimate(mode);
     let sum_w: f64 = neighbors.iter().map(|&j| weights_row[j]).sum();
     let c = (rho * sum_w) as f32;

@@ -76,6 +76,9 @@ where
     let losses = Arc::new(Mutex::new(vec![0.0f64; n_points]));
     let bytes_per_point = Arc::new(Mutex::new(vec![0u64; n_points]));
     let trigger = cfg.trigger_schedule();
+    // lint: allow(wall-clock) — per-thread wall timing only; feeds the
+    // time_s curve column, never a deterministic aggregate
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
 
     let results: Vec<anyhow::Result<(ClientState, Vec<f64>)>> = std::thread::scope(|scope| {

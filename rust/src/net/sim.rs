@@ -392,14 +392,17 @@ impl LinkState {
 /// Seeded realization of a [`FaultConfig`].
 pub struct FaultyNetwork {
     cfg: FaultConfig,
-    /// directed-link fault machines, keyed `(from, to)`
-    links: std::collections::HashMap<(usize, usize), LinkState>,
+    /// directed-link fault machines, keyed `(from, to)`. A `BTreeMap` so
+    /// every iteration (checkpoint serialization in particular) is
+    /// key-ordered structurally — no hash order anywhere near the state
+    /// that feeds bit-exact resume.
+    links: std::collections::BTreeMap<(usize, usize), LinkState>,
 }
 
 impl FaultyNetwork {
     /// Build the model; all decision streams derive from `cfg.seed`.
     pub fn new(cfg: FaultConfig) -> Self {
-        FaultyNetwork { cfg, links: std::collections::HashMap::new() }
+        FaultyNetwork { cfg, links: std::collections::BTreeMap::new() }
     }
 
     /// The fault envelope this model realizes.
@@ -463,13 +466,12 @@ impl NetworkModel for FaultyNetwork {
     fn state_json(&self) -> Json {
         // static traits (latency spread, stragglers, churn windows) are
         // pure hashes of the config — only the per-link fault machines
-        // carry mutable state. Sorted for a deterministic file.
-        let mut keys: Vec<(usize, usize)> = self.links.keys().copied().collect();
-        keys.sort_unstable();
-        let links: Vec<Json> = keys
-            .into_iter()
-            .map(|k| {
-                let st = &self.links[&k];
+        // carry mutable state. BTreeMap iteration is key-ordered, so the
+        // file is deterministic without a sort pass.
+        let links: Vec<Json> = self
+            .links
+            .iter()
+            .map(|(k, st)| {
                 Json::obj(vec![
                     ("from", Json::Num(k.0 as f64)),
                     ("to", Json::Num(k.1 as f64)),

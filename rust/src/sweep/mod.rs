@@ -909,6 +909,7 @@ pub fn run_specs(
     }
 
     // deterministic aggregate + summary, both in expansion order
+    crate::util::invariant::aggregate_expansion_order(results.iter().map(|r| r.index));
     let jsonl_path = opts.dir.join("sweep.jsonl");
     write_aggregate(&jsonl_path, &runs, &results)?;
     print_summary(&runs, &results);

@@ -11,6 +11,7 @@ pub mod fiber;
 pub mod partition;
 pub mod synth;
 
+// lint: allow(hash-structure) — membership probes only (see cell_set)
 use std::collections::HashSet;
 
 /// COO sparse tensor, f32 values, u32 per-mode indices.
@@ -90,6 +91,9 @@ impl SparseTensor {
     }
 
     /// Set of linearized nonzero cell ids (for stratified zero sampling).
+    // lint: allow(hash-structure) — callers only probe membership
+    // (rejection sampling); the set is never iterated, so hash order
+    // cannot reach any output
     pub fn cell_set(&self) -> HashSet<u64> {
         (0..self.nnz()).map(|e| self.linearize(self.entry(e))).collect()
     }

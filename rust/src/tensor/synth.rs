@@ -165,6 +165,9 @@ impl SynthConfig {
         // 2. Structured entries: for each component, each patient in its
         //    support fires a Bernoulli(fire_prob) coin per cross-support
         //    feature combination, sampled sparsely.
+        // lint: allow(hash-structure) — dedup accumulator only; entries
+        // materialize through the sort_unstable_by_key pass below, so
+        // hash order never reaches the tensor
         let mut cells = std::collections::HashMap::<u64, f32>::new();
         let mut gen_rng = rng.split(2);
         let mut t = SparseTensor::new(self.dims.clone());

@@ -1,0 +1,180 @@
+//! Debug/test-gated runtime invariants for the determinism-critical hot
+//! paths (session round loop, gossip consensus, sweep aggregation).
+//!
+//! Every check here guards a property the acceptance suite depends on
+//! but that no single unit test can watch continuously:
+//!
+//! * **estimate-slot alignment** — a client's peer-estimate slots always
+//!   mirror `sorted({neighbors} ∪ {self})` from the topology, so
+//!   `slot_of` can never read another peer's estimate;
+//! * **wire-byte conservation** — the bytes the `CommLedger`s grow by in
+//!   one gossip round equal exactly the bytes charged at publish time
+//!   (payload + header, once per neighbor), so `NetStats`/`CommBytes`
+//!   reporting can never drift from what "traveled";
+//! * **consensus finiteness** — the consensus fold introduces no
+//!   non-finite values that were not already present in its inputs
+//!   (a diverged run may legitimately carry NaN, but consensus itself
+//!   must never manufacture one from finite inputs);
+//! * **aggregator column-order fixity** — robust aggregators consume the
+//!   neighbor list in the graph's strictly-increasing order, the premise
+//!   behind their "[self, neighbors]" fixed value layout;
+//! * **sweep expansion order** — the aggregate is written strictly in
+//!   expansion-index order, never completion order.
+//!
+//! All functions compile to nothing in release builds: the bodies branch
+//! on `cfg!(debug_assertions)` (a compile-time constant the optimizer
+//! removes), so the hot paths pay zero cost outside tests and debug
+//! binaries. The static side of this firewall is `cargo xtask verify`
+//! (see `xtask/src/lint.rs`); ARCHITECTURE.md "Static analysis &
+//! invariants" documents both halves.
+
+/// Whether the invariant layer is active in this build (debug/test only).
+/// Hot paths use this to skip the *preparation* of check inputs (byte
+/// sums, finiteness scans) in release, not just the checks themselves.
+pub const fn enabled() -> bool {
+    cfg!(debug_assertions)
+}
+
+/// A client's estimate slots must be exactly
+/// `sorted(dedup({neighbors} ∪ {client}))`: strictly increasing, self and
+/// every neighbor present, nothing else. Asserted when clients are built
+/// (session) and when [`crate::gossip::EstimateState`] is constructed.
+pub fn estimate_slots_aligned(client: usize, peers: &[usize], neighbors: &[usize]) {
+    if cfg!(debug_assertions) {
+        assert!(
+            peers.windows(2).all(|w| w[0] < w[1]),
+            "invariant: client {client} estimate slots not strictly increasing: {peers:?}"
+        );
+        assert!(
+            peers.contains(&client),
+            "invariant: client {client} missing from its own estimate slots {peers:?}"
+        );
+        for n in neighbors {
+            assert!(
+                peers.contains(n),
+                "invariant: client {client} has no estimate slot for neighbor {n} \
+                 (slots {peers:?}, topology neighbors {neighbors:?})"
+            );
+        }
+        for p in peers {
+            assert!(
+                *p == client || neighbors.contains(p),
+                "invariant: client {client} tracks estimate slot {p} that is neither \
+                 itself nor a topology neighbor {neighbors:?}"
+            );
+        }
+    }
+}
+
+/// The robust aggregators collect values as `[self, neighbors...]` and
+/// rely on the graph handing them neighbors in strictly-increasing order
+/// (what [`crate::topology::Graph::build`] guarantees). A permuted list
+/// would still be *correct* for permutation-invariant centers, but would
+/// silently void the fixed-column-order contract the tests byte-compare
+/// against — so it is asserted, not assumed.
+pub fn neighbors_sorted(neighbors: &[usize]) {
+    if cfg!(debug_assertions) {
+        assert!(
+            neighbors.windows(2).all(|w| w[0] < w[1]),
+            "invariant: aggregator neighbor order not strictly increasing: {neighbors:?}"
+        );
+    }
+}
+
+/// Ledger bytes after one gossip round must have grown by exactly the
+/// bytes charged at publish time: `(payload + header) × |neighbors|` per
+/// fired client, with corruption/drops/latency all unable to change the
+/// total (a Byzantine client lies about *content*, not byte counts).
+pub fn wire_bytes_conserved(t: usize, before: u64, after: u64, expected: u64) {
+    if cfg!(debug_assertions) {
+        assert!(
+            after - before == expected,
+            "invariant: round {t} ledger bytes grew by {} but publish charged {expected} \
+             (before {before}, after {after})",
+            after - before
+        );
+    }
+}
+
+/// The consensus fold on one client/mode must not manufacture non-finite
+/// values: if every input (the client's own factor plus all tracked peer
+/// estimates for the mode) was finite, the folded factor must be too.
+/// `inputs_finite` is computed by the caller *before* the fold (skip the
+/// scan entirely when [`enabled`] is false).
+pub fn consensus_kept_finite(client: usize, mode: usize, inputs_finite: bool, out: &[f32]) {
+    if cfg!(debug_assertions) && inputs_finite {
+        assert!(
+            out.iter().all(|v| v.is_finite()),
+            "invariant: consensus on client {client} mode {mode} produced a non-finite \
+             value from all-finite inputs"
+        );
+    }
+}
+
+/// The sweep aggregate is written in expansion order: result `i` must
+/// carry expansion index `i`, whatever order the worker pool finished in.
+pub fn aggregate_expansion_order<I: IntoIterator<Item = usize>>(indices: I) {
+    if cfg!(debug_assertions) {
+        for (want, got) in indices.into_iter().enumerate() {
+            assert!(
+                want == got,
+                "invariant: sweep aggregate slot {want} carries expansion index {got} \
+                 — results permuted out of expansion order"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_slots_pass() {
+        estimate_slots_aligned(1, &[0, 1, 2], &[0, 2]);
+        // self-loop topologies list the client among its own neighbors
+        estimate_slots_aligned(1, &[0, 1, 2], &[0, 1, 2]);
+        neighbors_sorted(&[0, 2, 5]);
+        neighbors_sorted(&[]);
+        wire_bytes_conserved(0, 100, 164, 64);
+        consensus_kept_finite(0, 1, true, &[1.0, -2.0]);
+        // poisoned inputs exempt the output
+        consensus_kept_finite(0, 1, false, &[f32::NAN]);
+        aggregate_expansion_order([0usize, 1, 2]);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "invariants compile out in release")]
+    #[should_panic(expected = "not strictly increasing")]
+    fn unsorted_slots_panic() {
+        estimate_slots_aligned(1, &[2, 0, 1], &[0, 2]);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "invariants compile out in release")]
+    #[should_panic(expected = "no estimate slot for neighbor")]
+    fn missing_neighbor_slot_panics() {
+        estimate_slots_aligned(1, &[0, 1], &[0, 2]);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "invariants compile out in release")]
+    #[should_panic(expected = "publish charged")]
+    fn unconserved_bytes_panic() {
+        wire_bytes_conserved(3, 0, 10, 12);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "invariants compile out in release")]
+    #[should_panic(expected = "non-finite")]
+    fn manufactured_nan_panics() {
+        consensus_kept_finite(0, 1, true, &[1.0, f32::NAN]);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "invariants compile out in release")]
+    #[should_panic(expected = "expansion order")]
+    fn permuted_aggregate_panics() {
+        aggregate_expansion_order([1usize, 0]);
+    }
+}

@@ -6,6 +6,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod csv;
+pub mod invariant;
 pub mod json;
 pub mod mat;
 pub mod order;

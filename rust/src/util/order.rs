@@ -29,6 +29,17 @@ pub fn nan_last_f64(a: &f64, b: &f64) -> Ordering {
     }
 }
 
+/// Descending order, any NaN last (a raw descending `b.total_cmp(a)`
+/// would sort *positive* NaNs to the front).
+pub fn nan_last_desc_f64(a: &f64, b: &f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.total_cmp(a),
+    }
+}
+
 /// Descending by absolute value, any NaN last (|NaN| is NaN, so the
 /// naive `b.abs().total_cmp(&a.abs())` would sort NaNs *first* in a
 /// descending sort).
@@ -60,6 +71,14 @@ mod tests {
         v.sort_by(nan_last_f64);
         assert_eq!(&v[..3], &[-3.0, 0.25, 1.5]);
         assert!(v[3].is_nan() && v[4].is_nan());
+    }
+
+    #[test]
+    fn desc_f64_orders_descending_with_nans_last() {
+        let mut v = vec![0.5f64, f64::NAN, -4.0, 2.0, -f64::NAN, f64::INFINITY];
+        v.sort_by(nan_last_desc_f64);
+        assert_eq!(&v[..4], &[f64::INFINITY, 2.0, 0.5, -4.0]);
+        assert!(v[4].is_nan() && v[5].is_nan());
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! The schedule-fuzzing half of `cargo xtask verify --determinism`.
+//!
+//! Builds the release binary and proves three bit-level equalities the
+//! repo's determinism contract promises (README "Verifying determinism"):
+//!
+//! 1. **Sweep schedule fuzz** — the built-in `--smoke` grid produces a
+//!    byte-identical `sweep.jsonl` under 1, 2, and 4 workers. Worker
+//!    count changes both the interleaving and the OS thread schedule, so
+//!    each run exercises a different completion order.
+//! 2. **Compute-thread fuzz** — a sim-driver training run produces a
+//!    byte-identical checkpoint under 1, 2, and 4 compute threads (the
+//!    fixed-lane reducers make partial-sum order invisible).
+//! 3. **Seq-vs-sim driver equivalence** — under an ideal network the
+//!    sequential and simulated drivers reach the same state. The seq
+//!    driver timestamps points with the wall clock by design, so the
+//!    comparison normalizes every `"time_s":<num>` value first; all
+//!    remaining bytes (factors, RNG states, samplers, stats) must match.
+//!
+//! Everything runs out of a per-pid temp directory that is removed on
+//! success and kept on failure for inspection.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+/// Tiny, fast training scenario shared by checks 2 and 3. `tiny` is the
+/// 64x32x32 test tensor; two epochs keep the whole harness under a few
+/// seconds per run while still crossing a checkpoint boundary.
+const TRAIN_ARGS: &[&str] = &[
+    "train",
+    "--dataset",
+    "tiny",
+    "--epochs",
+    "2",
+    "--iters-per-epoch",
+    "8",
+    "--seed",
+    "11",
+];
+
+fn run_cmd(program: &str, args: &[&str], cwd: &Path) -> Result<(), String> {
+    let out = Command::new(program)
+        .args(args)
+        .current_dir(cwd)
+        .output()
+        .map_err(|e| format!("failed to spawn {program}: {e}"))?;
+    if out.status.success() {
+        return Ok(());
+    }
+    let tail = |b: &[u8]| {
+        let s = String::from_utf8_lossy(b);
+        let lines: Vec<&str> = s.lines().collect();
+        lines[lines.len().saturating_sub(15)..].join("\n")
+    };
+    Err(format!(
+        "`{program} {}` failed ({}):\n{}\n{}",
+        args.join(" "),
+        out.status,
+        tail(&out.stdout),
+        tail(&out.stderr)
+    ))
+}
+
+fn read(path: &Path) -> Result<Vec<u8>, String> {
+    std::fs::read(path).map_err(|e| format!("cannot read {}: {e}", path.display()))
+}
+
+/// Blank the numeric value after every `"time_s":` occurrence — the one
+/// field the seq driver fills from the wall clock.
+fn normalize_time_s(bytes: &[u8]) -> Vec<u8> {
+    let key = b"\"time_s\":";
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i..].starts_with(key) {
+            out.extend_from_slice(key);
+            i += key.len();
+            while i < bytes.len()
+                && (bytes[i].is_ascii_digit() || matches!(bytes[i], b'.' | b'-' | b'+' | b'e' | b'E'))
+            {
+                i += 1;
+            }
+            out.push(b'0');
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Build the release binary and run the three checks. `repo_root` is the
+/// workspace root (the xtask binary resolves it from its manifest dir).
+pub fn run(repo_root: &Path) -> Result<(), String> {
+    let cargo = std::env::var("CARGO").unwrap_or_else(|_| "cargo".to_string());
+    println!("determinism: building release binary ...");
+    run_cmd(&cargo, &["build", "--release", "--package", "cidertf"], repo_root)?;
+
+    let target_dir = std::env::var("CARGO_TARGET_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| repo_root.join("target"));
+    let bin_path = target_dir.join("release").join("cidertf");
+    let bin = bin_path.to_string_lossy().to_string();
+
+    let tmp = std::env::temp_dir().join(format!("cidertf-verify-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).map_err(|e| format!("cannot create {}: {e}", tmp.display()))?;
+    let tmp_str = |p: PathBuf| p.to_string_lossy().to_string();
+
+    // check 1: sweep schedule fuzz
+    let mut sweeps: Vec<Vec<u8>> = Vec::new();
+    for workers in ["1", "2", "4"] {
+        let out_dir = tmp.join(format!("sweep_w{workers}"));
+        let out_s = tmp_str(out_dir.clone());
+        println!("determinism: sweep --smoke with {workers} worker(s) ...");
+        run_cmd(
+            &bin,
+            &["sweep", "--smoke", "--fresh", "--workers", workers, "--out", &out_s],
+            repo_root,
+        )?;
+        sweeps.push(read(&out_dir.join("sweep.jsonl"))?);
+    }
+    if sweeps.iter().any(|s| *s != sweeps[0]) {
+        return Err(format!(
+            "sweep.jsonl differs across 1/2/4 workers (kept for inspection under {})",
+            tmp.display()
+        ));
+    }
+    println!("determinism: sweep aggregate byte-identical across 1/2/4 workers");
+
+    // check 2: compute-thread fuzz (sim driver, virtual clock)
+    let mut ckpts: Vec<Vec<u8>> = Vec::new();
+    for threads in ["1", "2", "4"] {
+        let ckpt = tmp.join(format!("ckpt_sim_t{threads}.json"));
+        let ckpt_s = tmp_str(ckpt.clone());
+        let out_s = tmp_str(tmp.join(format!("train_sim_t{threads}")));
+        println!("determinism: train --driver sim with {threads} thread(s) ...");
+        let mut args: Vec<&str> = TRAIN_ARGS.to_vec();
+        args.extend_from_slice(&[
+            "--driver", "sim", "--threads", threads, "--checkpoint", &ckpt_s, "--out", &out_s,
+        ]);
+        run_cmd(&bin, &args, repo_root)?;
+        ckpts.push(read(&ckpt)?);
+    }
+    if ckpts.iter().any(|c| *c != ckpts[0]) {
+        return Err(format!(
+            "sim checkpoint differs across 1/2/4 compute threads \
+             (kept for inspection under {})",
+            tmp.display()
+        ));
+    }
+    let sim_t1 = ckpts.swap_remove(0);
+    println!("determinism: sim checkpoint byte-identical across 1/2/4 threads");
+
+    // check 3: seq-vs-sim driver equivalence (time_s normalized — the
+    // seq driver reads the wall clock for it by design)
+    let ckpt = tmp.join("ckpt_seq.json");
+    let ckpt_s = tmp_str(ckpt.clone());
+    let out_s = tmp_str(tmp.join("train_seq"));
+    println!("determinism: train --driver seq (reference path) ...");
+    let mut args: Vec<&str> = TRAIN_ARGS.to_vec();
+    args.extend_from_slice(&[
+        "--driver", "seq", "--threads", "1", "--checkpoint", &ckpt_s, "--out", &out_s,
+    ]);
+    run_cmd(&bin, &args, repo_root)?;
+    let seq = normalize_time_s(&read(&ckpt)?);
+    let sim = normalize_time_s(&sim_t1);
+    if seq != sim {
+        return Err(format!(
+            "seq and sim checkpoints differ beyond time_s \
+             (kept for inspection under {})",
+            tmp.display()
+        ));
+    }
+    println!("determinism: seq and sim drivers byte-identical (time_s normalized)");
+
+    let _ = std::fs::remove_dir_all(&tmp);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::normalize_time_s;
+
+    #[test]
+    fn time_s_values_are_blanked() {
+        let a = br#"{"t":3,"time_s":1.25e-3,"points":[{"time_s":-0.5,"loss":1.0}]}"#;
+        let b = br#"{"t":3,"time_s":99.0,"points":[{"time_s":0.125,"loss":1.0}]}"#;
+        assert_eq!(normalize_time_s(a), normalize_time_s(b));
+        let n = normalize_time_s(a);
+        let s = String::from_utf8(n).unwrap();
+        assert!(s.contains(r#""time_s":0,"#));
+        assert!(!s.contains("1.25e-3"));
+    }
+
+    #[test]
+    fn non_time_bytes_are_untouched() {
+        let a = br#"{"loss":1.25,"rng":[1,2,3]}"#;
+        assert_eq!(normalize_time_s(a), a.to_vec());
+    }
+}

@@ -1,0 +1,6 @@
+//! Library surface of the `xtask` verification tool, split out so the
+//! fixture tests (`tests/lint_fixtures.rs`) can drive the lint engine
+//! directly. The binary in `main.rs` is a thin dispatcher over these.
+
+pub mod determinism;
+pub mod lint;

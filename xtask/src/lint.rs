@@ -1,0 +1,469 @@
+//! The determinism lint engine behind `cargo xtask verify`.
+//!
+//! An offline, line/token-based scanner over `rust/src` enforcing the
+//! repo-specific rules clippy cannot express (module-scoped hazards,
+//! comparator-span analysis). Comments, string literals, and char
+//! literals are blanked by a small state machine before matching, so a
+//! doc comment *describing* a hazard never trips a rule. Everything from
+//! the first `#[cfg(test)]` to the end of a file is skipped — test code
+//! cannot leak nondeterminism into run outputs, and the repo convention
+//! keeps test modules last.
+//!
+//! Rules (also tabulated in ARCHITECTURE.md "Static analysis &
+//! invariants"):
+//!
+//! | id   | name              | scope                      |
+//! |------|-------------------|----------------------------|
+//! | D000 | malformed-allow   | everywhere                 |
+//! | D001 | nan-ordering      | outside `util/order.rs`    |
+//! | D002 | inline-float-sort | outside `util/order.rs`    |
+//! | D003 | hash-structure    | determinism-critical dirs  |
+//! | D004 | wall-clock        | outside bench/harness      |
+//! | D005 | unseeded-rng      | everywhere                 |
+//! | D006 | float-sum         | determinism-critical dirs  |
+//!
+//! Escape hatch: `// lint: allow(<rule-name>) — <justification>` on the
+//! flagged line or up to three lines above it (so a clippy attribute or
+//! a continuation comment can sit between). An allow without a
+//! justification, or naming an unknown rule, is itself a finding (D000).
+
+use std::path::Path;
+
+/// One lint rule: stable id, allow-name, and the diagnostic hint.
+pub struct Rule {
+    /// stable diagnostic id (`D001`)
+    pub id: &'static str,
+    /// the name `// lint: allow(<name>)` refers to
+    pub name: &'static str,
+    /// remediation hint appended to every diagnostic
+    pub hint: &'static str,
+}
+
+/// The rule table. D000 is the meta-rule for malformed allows and is not
+/// itself allowable.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "D000",
+        name: "malformed-allow",
+        hint: "every allow needs a known rule name and a justification",
+    },
+    Rule {
+        id: "D001",
+        name: "nan-ordering",
+        hint: "partial_cmp is None on NaN (panicking unwraps, inconsistent sorts); \
+               use the total comparators in util/order.rs",
+    },
+    Rule {
+        id: "D002",
+        name: "inline-float-sort",
+        hint: "hand-rolled NaN handling inside a comparator callback; \
+               use the nan_last_* helpers in util/order.rs",
+    },
+    Rule {
+        id: "D003",
+        name: "hash-structure",
+        hint: "HashMap/HashSet iteration order is unseeded and can leak into outputs \
+               in a determinism-critical module; use BTreeMap/BTreeSet, or justify \
+               why order cannot escape",
+    },
+    Rule {
+        id: "D004",
+        name: "wall-clock",
+        hint: "wall-clock reads outside the bench/harness allowlist; deterministic \
+               paths must take time from the virtual clock",
+    },
+    Rule {
+        id: "D005",
+        name: "unseeded-rng",
+        hint: "randomness must flow from the run seed (util/rng); ambient entropy \
+               breaks bit-exact replay",
+    },
+    Rule {
+        id: "D006",
+        name: "float-sum",
+        hint: "free-form float summation in a determinism-critical module; use the \
+               fixed-lane reducers in util/mat.rs",
+    },
+];
+
+/// Directories under `rust/src` where hash-order and float-sum hazards
+/// feed run outputs (aggregates, checkpoints, NetStats).
+const CRITICAL_DIRS: &[&str] = &["engine/", "gossip/", "sweep/", "net/", "tensor/", "compress/"];
+
+/// Files allowed to read the wall clock (the timing harness itself).
+fn wall_clock_allowed(rel: &str) -> bool {
+    rel == "util/benchkit.rs" || rel.starts_with("harness/")
+}
+
+/// One diagnostic.
+#[derive(Debug)]
+pub struct Finding {
+    /// rule id (`D003`)
+    pub rule_id: &'static str,
+    /// rule allow-name (`hash-structure`)
+    pub rule_name: &'static str,
+    /// path as reported (relative to `rust/src` from [`lint_source`];
+    /// [`run`] rewrites it repo-relative)
+    pub file: String,
+    /// 1-based line
+    pub line: usize,
+    /// what was matched + the rule hint
+    pub message: String,
+}
+
+impl Finding {
+    /// `D003 [hash-structure] rust/src/net/sim.rs:396 — ...`
+    pub fn render(&self) -> String {
+        format!(
+            "{} [{}] {}:{} — {}",
+            self.rule_id, self.rule_name, self.file, self.line, self.message
+        )
+    }
+}
+
+struct Allow {
+    line: usize,
+    rule: String,
+    justified: bool,
+}
+
+/// Blank comments, string literals, and char literals, preserving line
+/// structure (every line keeps its index; matched tokens keep their
+/// columns). Block comments nest; raw strings, escaped chars, and
+/// backslash-continued strings are handled; lifetimes survive.
+fn strip(source: &str) -> Vec<String> {
+    #[derive(Clone, Copy)]
+    enum S {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(usize),
+    }
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = String::with_capacity(source.len());
+    let mut state = S::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        match state {
+            S::Code => {
+                if c == '/' && next == Some('/') {
+                    state = S::LineComment;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = S::BlockComment(1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == 'r' && (next == Some('"') || next == Some('#')) {
+                    // possible raw string r"..." / r#"..."#
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        state = S::RawStr(hashes);
+                        for _ in i..=j {
+                            out.push(' ');
+                        }
+                        i = j + 1;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    state = S::Str;
+                    out.push(' ');
+                    i += 1;
+                } else if c == '\'' {
+                    if next == Some('\\') {
+                        // escaped char literal: blank through the close
+                        let mut j = i + 3; // past the escape lead char
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        let end = j.min(chars.len().saturating_sub(1));
+                        for _ in i..=end {
+                            out.push(' ');
+                        }
+                        i = end + 1;
+                    } else if next.is_some() && chars.get(i + 2) == Some(&'\'') {
+                        // plain char literal 'x'
+                        out.push_str("   ");
+                        i += 3;
+                    } else {
+                        // lifetime
+                        out.push(c);
+                        i += 1;
+                    }
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            S::LineComment => {
+                if c == '\n' {
+                    state = S::Code;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            S::BlockComment(depth) => {
+                if c == '/' && next == Some('*') {
+                    state = S::BlockComment(depth + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 { S::Code } else { S::BlockComment(depth - 1) };
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            S::Str => {
+                if c == '\\' && next.is_some() {
+                    out.push(' ');
+                    out.push(if next == Some('\n') { '\n' } else { ' ' });
+                    i += 2;
+                } else if c == '"' {
+                    state = S::Code;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            S::RawStr(hashes) => {
+                if c == '"' && (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    for _ in 0..=hashes {
+                        out.push(' ');
+                    }
+                    i += hashes + 1;
+                    state = S::Code;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.split('\n').map(|l| l.to_string()).collect()
+}
+
+/// Parse `// lint: allow(<rule>) — <justification>` annotations from the
+/// raw (unstripped) lines.
+fn parse_allows(source: &str) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for (idx, line) in source.lines().enumerate() {
+        let Some(pos) = line.find("lint: allow(") else { continue };
+        // the marker must live in a line comment
+        if !line[..pos].contains("//") {
+            continue;
+        }
+        let rest = &line[pos + "lint: allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim().to_string();
+        let justification = rest[close + 1..]
+            .trim_matches(|c: char| c.is_whitespace() || c == '—' || c == '-' || c == ':');
+        allows.push(Allow {
+            line: idx + 1,
+            rule,
+            justified: !justification.trim().is_empty(),
+        });
+    }
+    allows
+}
+
+/// D002: scan `*_by(` comparator callbacks (sort_by, sort_unstable_by,
+/// select_nth_unstable_by, max_by, ...) for hand-rolled `is_nan` handling
+/// anywhere in the balanced-paren span.
+fn comparator_findings(stripped: &[String], last_line: usize, out: &mut Vec<Finding>) {
+    let joined = stripped.join("\n");
+    let bytes = joined.as_bytes();
+    let mut search = 0usize;
+    while let Some(p) = joined[search..].find("_by(") {
+        let at = search + p;
+        let open = at + 3; // the '('
+        search = open + 1;
+        let line = joined[..at].bytes().filter(|&b| b == b'\n').count() + 1;
+        if line > last_line {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut end = bytes.len();
+        for (k, &b) in bytes[open..].iter().enumerate() {
+            if b == b'(' {
+                depth += 1;
+            } else if b == b')' {
+                depth -= 1;
+                if depth == 0 {
+                    end = open + k;
+                    break;
+                }
+            }
+        }
+        if joined[open..end].contains("is_nan") {
+            push_finding(out, "D002", "comparator callback hand-rolls NaN ordering", line);
+        }
+    }
+}
+
+fn push_finding(out: &mut Vec<Finding>, id: &str, what: &str, line: usize) {
+    let rule = RULES.iter().find(|r| r.id == id).expect("known rule id");
+    out.push(Finding {
+        rule_id: rule.id,
+        rule_name: rule.name,
+        file: String::new(), // filled by the caller
+        line,
+        message: format!("{what}; {}", rule.hint),
+    });
+}
+
+/// Lint one file. `rel` is the path relative to `rust/src` with `/`
+/// separators (it drives the per-module scoping); `source` is the raw
+/// file text. Pure — the fixture tests drive this directly.
+pub fn lint_source(rel: &str, source: &str) -> Vec<Finding> {
+    let stripped = strip(source);
+    let allows = parse_allows(source);
+
+    // skip everything from the first `#[cfg(test)]` on (repo convention:
+    // test modules are last; test code cannot reach run outputs)
+    let last_line = stripped
+        .iter()
+        .position(|l| l.contains("#[cfg(test)]"))
+        .unwrap_or(stripped.len());
+
+    let critical = CRITICAL_DIRS.iter().any(|d| rel.starts_with(d));
+    let order_rs = rel == "util/order.rs";
+    let clock_ok = wall_clock_allowed(rel);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    for (idx, line) in stripped.iter().enumerate().take(last_line) {
+        let ln = idx + 1;
+        if !order_rs && line.contains(".partial_cmp(") {
+            push_finding(&mut raw, "D001", "raw `.partial_cmp(` call", ln);
+        }
+        if critical {
+            for token in ["HashMap", "HashSet"] {
+                if line.contains(token) {
+                    push_finding(
+                        &mut raw,
+                        "D003",
+                        &format!("`{token}` in a determinism-critical module"),
+                        ln,
+                    );
+                }
+            }
+            for token in [".sum::<f32>()", ".sum::<f64>()"] {
+                if line.contains(token) {
+                    push_finding(
+                        &mut raw,
+                        "D006",
+                        &format!("`{token}` in a determinism-critical module"),
+                        ln,
+                    );
+                }
+            }
+        }
+        if !clock_ok {
+            for token in ["Instant::now", "SystemTime"] {
+                if line.contains(token) {
+                    push_finding(&mut raw, "D004", &format!("`{token}` wall-clock read"), ln);
+                }
+            }
+        }
+        for token in ["thread_rng", "from_entropy", "rand::random", "RandomState", "getrandom"] {
+            if line.contains(token) {
+                push_finding(&mut raw, "D005", &format!("`{token}` unseeded randomness"), ln);
+            }
+        }
+    }
+    if !order_rs {
+        comparator_findings(&stripped, last_line, &mut raw);
+    }
+
+    // apply allows: an annotation suppresses its rule on the same line or
+    // up to 3 lines below the annotation
+    let mut findings: Vec<Finding> = raw
+        .into_iter()
+        .filter(|f| {
+            !allows.iter().any(|a| {
+                a.rule == f.rule_name && a.line <= f.line && f.line <= a.line + 3
+            })
+        })
+        .collect();
+
+    // D000: malformed allows (unknown rule / missing justification) are
+    // findings themselves and cannot be allowed away
+    for a in &allows {
+        if !RULES.iter().any(|r| r.name == a.rule) {
+            push_finding(
+                &mut findings,
+                "D000",
+                &format!("allow names unknown rule '{}'", a.rule),
+                a.line,
+            );
+        } else if !a.justified {
+            push_finding(
+                &mut findings,
+                "D000",
+                &format!("allow({}) has no justification", a.rule),
+                a.line,
+            );
+        }
+    }
+
+    for f in findings.iter_mut() {
+        f.file = rel.to_string();
+    }
+    findings.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule_id.cmp(b.rule_id)));
+    findings
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `<repo_root>/rust/src`, in sorted path
+/// order. Returns the findings (empty = clean tree).
+pub fn run(repo_root: &Path) -> Result<Vec<Finding>, String> {
+    let src = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files)?;
+    files.sort();
+    let mut all = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src)
+            .expect("file under rust/src")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        for mut f in lint_source(&rel, &text) {
+            f.file = format!("rust/src/{rel}");
+            all.push(f);
+        }
+    }
+    Ok(all)
+}

@@ -1,0 +1,86 @@
+//! `cargo xtask verify [--determinism]` — the determinism firewall.
+//!
+//! * `verify` runs the in-repo lint engine (see `lint.rs`) over
+//!   `rust/src` and exits nonzero on any finding.
+//! * `verify --determinism` additionally builds the release binary and
+//!   runs the schedule-fuzzing harness (see `determinism.rs`).
+//!
+//! Invoked through the `.cargo/config.toml` alias; works offline with
+//! zero dependencies.
+
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    // xtask lives at <repo>/xtask, so the workspace root is one up from
+    // this crate's manifest dir
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask crate sits inside the workspace")
+        .to_path_buf()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut determinism = false;
+    let mut verify = false;
+    for a in &args {
+        match a.as_str() {
+            "verify" => verify = true,
+            "--determinism" => determinism = true,
+            "help" | "--help" | "-h" => {
+                print_help();
+                return;
+            }
+            other => {
+                eprintln!("xtask: unknown argument '{other}'\n");
+                print_help();
+                std::process::exit(2);
+            }
+        }
+    }
+    if !verify {
+        print_help();
+        std::process::exit(2);
+    }
+
+    let root = repo_root();
+    match xtask::lint::run(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("lint: rust/src clean ({} rules)", xtask::lint::RULES.len());
+        }
+        Ok(findings) => {
+            for f in &findings {
+                eprintln!("{}", f.render());
+            }
+            eprintln!("\nlint: {} finding(s)", findings.len());
+            eprintln!(
+                "(suppress a deliberate site with `// lint: allow(<rule>) — <justification>` \
+                 on or up to 3 lines above it; see ARCHITECTURE.md \"Static analysis & invariants\")"
+            );
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("lint: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    if determinism {
+        if let Err(e) = xtask::determinism::run(&root) {
+            eprintln!("determinism: FAILED\n{e}");
+            std::process::exit(1);
+        }
+        println!("determinism: all schedule-fuzz checks passed");
+    }
+}
+
+fn print_help() {
+    println!(
+        "cargo xtask verify [--determinism]\n\
+         \n\
+         verify          lint rust/src with the determinism rules (D000-D006)\n\
+         --determinism   also build the release binary and prove byte-identical\n\
+                         outputs across worker schedules, compute-thread counts,\n\
+                         and the seq/sim driver pair"
+    );
+}

@@ -1,0 +1,8 @@
+// Known-bad fixture for D000 (malformed-allow). Not compiled — fed to
+// the lint engine as text by tests/lint_fixtures.rs.
+
+// lint: allow(totally-bogus) — misspelled rule names must not pass silently
+pub fn suppressed_by_typo() {}
+
+// lint: allow(nan-ordering)
+pub fn suppressed_without_justification() {}

@@ -1,0 +1,6 @@
+// Known-bad fixture for D001 (nan-ordering). Not compiled — fed to the
+// lint engine as text by tests/lint_fixtures.rs.
+
+pub fn worst(a: f64, b: f64) -> bool {
+    a.partial_cmp(&b).unwrap() == std::cmp::Ordering::Less
+}

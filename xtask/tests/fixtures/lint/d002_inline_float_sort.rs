@@ -1,0 +1,14 @@
+// Known-bad fixture for D002 (inline-float-sort). Not compiled — fed to
+// the lint engine as text by tests/lint_fixtures.rs.
+
+pub fn worst(v: &mut [f32]) {
+    v.sort_by(|a, b| {
+        if a.is_nan() {
+            std::cmp::Ordering::Greater
+        } else if b.is_nan() {
+            std::cmp::Ordering::Less
+        } else {
+            a.total_cmp(b)
+        }
+    });
+}

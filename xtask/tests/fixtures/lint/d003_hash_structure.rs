@@ -1,0 +1,11 @@
+// Known-bad fixture for D003 (hash-structure). Not compiled — fed to
+// the lint engine as text by tests/lint_fixtures.rs under a
+// determinism-critical path (engine/).
+
+pub fn worst(pairs: &[(u64, f32)]) -> Vec<u64> {
+    let mut m = std::collections::HashMap::new();
+    for &(k, v) in pairs {
+        m.insert(k, v);
+    }
+    m.into_keys().collect()
+}

@@ -1,0 +1,8 @@
+// Known-bad fixture for D004 (wall-clock). Not compiled — fed to the
+// lint engine as text by tests/lint_fixtures.rs under a path outside
+// the bench/harness allowlist.
+
+pub fn worst() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

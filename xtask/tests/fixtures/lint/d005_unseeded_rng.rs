@@ -1,0 +1,6 @@
+// Known-bad fixture for D005 (unseeded-rng). Not compiled — fed to the
+// lint engine as text by tests/lint_fixtures.rs.
+
+pub fn worst() -> f64 {
+    rand::random::<f64>()
+}

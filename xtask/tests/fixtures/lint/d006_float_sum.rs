@@ -1,0 +1,7 @@
+// Known-bad fixture for D006 (float-sum). Not compiled — fed to the
+// lint engine as text by tests/lint_fixtures.rs under a
+// determinism-critical path (engine/).
+
+pub fn worst(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}

@@ -1,0 +1,169 @@
+//! Fixture tests for the determinism lint engine (ISSUE: every rule has
+//! a known-bad snippet that trips exactly that rule, and a
+//! `// lint: allow(...)` annotation suppresses it).
+//!
+//! The fixtures under `fixtures/lint/` are plain text to the engine —
+//! cargo never compiles them (only top-level files in `tests/` become
+//! test targets).
+
+use xtask::lint::{lint_source, RULES};
+
+/// (source, rel path under rust/src, rule id, rule name) — the path
+/// places each fixture where its rule is in scope (e.g. `engine/` for
+/// the determinism-critical-module rules).
+const CASES: &[(&str, &str, &str, &str)] = &[
+    (
+        include_str!("fixtures/lint/d001_nan_ordering.rs"),
+        "factor/fixture.rs",
+        "D001",
+        "nan-ordering",
+    ),
+    (
+        include_str!("fixtures/lint/d002_inline_float_sort.rs"),
+        "factor/fixture.rs",
+        "D002",
+        "inline-float-sort",
+    ),
+    (
+        include_str!("fixtures/lint/d003_hash_structure.rs"),
+        "engine/fixture.rs",
+        "D003",
+        "hash-structure",
+    ),
+    (
+        include_str!("fixtures/lint/d004_wall_clock.rs"),
+        "util/fixture.rs",
+        "D004",
+        "wall-clock",
+    ),
+    (
+        include_str!("fixtures/lint/d005_unseeded_rng.rs"),
+        "data/fixture.rs",
+        "D005",
+        "unseeded-rng",
+    ),
+    (
+        include_str!("fixtures/lint/d006_float_sum.rs"),
+        "engine/fixture.rs",
+        "D006",
+        "float-sum",
+    ),
+];
+
+#[test]
+fn rule_table_is_well_formed() {
+    for r in RULES {
+        assert!(r.id.starts_with('D') && r.id.len() == 4, "bad id {}", r.id);
+        assert!(!r.name.is_empty() && !r.hint.is_empty());
+    }
+    let mut ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), RULES.len(), "duplicate rule ids");
+    let mut names: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+    names.sort();
+    names.dedup();
+    assert_eq!(names.len(), RULES.len(), "duplicate rule names");
+    // every CASES entry references a real rule
+    for &(_, _, id, name) in CASES {
+        assert!(RULES.iter().any(|r| r.id == id && r.name == name), "{id} missing");
+    }
+}
+
+#[test]
+fn each_fixture_trips_exactly_its_rule() {
+    for &(src, rel, id, _) in CASES {
+        let findings = lint_source(rel, src);
+        assert!(!findings.is_empty(), "{id} fixture tripped nothing");
+        for f in &findings {
+            assert_eq!(f.rule_id, id, "{id} fixture tripped {}: {}", f.rule_id, f.render());
+        }
+    }
+}
+
+#[test]
+fn malformed_allow_fixture_trips_only_d000() {
+    let src = include_str!("fixtures/lint/d000_malformed_allow.rs");
+    let findings = lint_source("data/fixture.rs", src);
+    assert_eq!(findings.len(), 2, "expected unknown-rule + missing-justification");
+    for f in &findings {
+        assert_eq!(f.rule_id, "D000", "{}", f.render());
+    }
+}
+
+/// Insert a justified allow annotation directly above every finding line
+/// and assert the fixture lints clean.
+#[test]
+fn allow_annotation_suppresses_each_fixture() {
+    for &(src, rel, id, name) in CASES {
+        let mut lines: Vec<usize> =
+            lint_source(rel, src).iter().map(|f| f.line).collect();
+        lines.sort_unstable();
+        lines.dedup();
+        let mut patched: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+        for &n in lines.iter().rev() {
+            patched.insert(n - 1, format!("// lint: allow({name}) — fixture justification"));
+        }
+        let after = lint_source(rel, &patched.join("\n"));
+        assert!(
+            after.is_empty(),
+            "{id} fixture still trips after allow: {:?}",
+            after.iter().map(|f| f.render()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn same_line_allow_also_suppresses() {
+    let src = "pub fn f() -> std::time::Instant {\n    \
+               std::time::Instant::now() // lint: allow(wall-clock) — fixture justification\n}\n";
+    assert!(lint_source("util/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn comments_strings_and_test_code_are_invisible() {
+    // a doc comment describing the hazard is not the hazard
+    let src = "//! HashMap iteration order and Instant::now are banned here.\npub fn f() {}\n";
+    assert!(lint_source("engine/doc.rs", src).is_empty());
+    // string literals are blanked before matching
+    let src = "pub fn f() -> &'static str {\n    \"thread_rng and SystemTime\"\n}\n";
+    assert!(lint_source("engine/strs.rs", src).is_empty());
+    // everything from the first #[cfg(test)] on is skipped
+    let src = "pub fn f() {}\n\n#[cfg(test)]\nmod tests {\n    \
+               use std::collections::HashMap;\n    \
+               fn g() { let _ = std::time::Instant::now(); }\n}\n";
+    assert!(lint_source("engine/tested.rs", src).is_empty());
+}
+
+#[test]
+fn scoping_is_per_module() {
+    // hash structures are fine outside the determinism-critical dirs
+    let src = "pub fn f() { let _ = std::collections::HashMap::<u32, u32>::new(); }\n";
+    assert!(lint_source("data/free.rs", src).is_empty());
+    assert!(!lint_source("engine/hot.rs", src).is_empty());
+    // the timing harness may read the clock
+    let src = "pub fn f() { let _ = std::time::Instant::now(); }\n";
+    assert!(lint_source("util/benchkit.rs", src).is_empty());
+    assert!(lint_source("harness/bench.rs", src).is_empty());
+    assert!(!lint_source("engine/hot.rs", src).is_empty());
+    // util/order.rs is the one place raw partial_cmp may live
+    let src = "pub fn f(a: f64, b: f64) { let _ = a.partial_cmp(&b); }\n";
+    assert!(lint_source("util/order.rs", src).is_empty());
+    assert!(!lint_source("util/mat.rs", src).is_empty());
+}
+
+#[test]
+fn whole_tree_is_clean() {
+    // the real rust/src must lint clean — CI runs `cargo xtask verify`,
+    // and this keeps `cargo test` equivalent
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .to_path_buf();
+    let findings = xtask::lint::run(&root).expect("lint walk");
+    assert!(
+        findings.is_empty(),
+        "rust/src has lint findings:\n{}",
+        findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+    );
+}
