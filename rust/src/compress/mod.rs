@@ -110,6 +110,130 @@ impl Payload {
             Payload::Zero { len } => assert_eq!(*len, n),
         }
     }
+
+    // ---- binary wire codec (deployment plane) ----
+
+    /// Frame tag byte for [`Payload::Dense`].
+    pub const TAG_DENSE: u8 = 0;
+    /// Frame tag byte for [`Payload::Sign`].
+    pub const TAG_SIGN: u8 = 1;
+    /// Frame tag byte for [`Payload::TopK`].
+    pub const TAG_TOPK: u8 = 2;
+    /// Frame tag byte for [`Payload::Zero`].
+    pub const TAG_ZERO: u8 = 3;
+
+    /// The variant tag that rides in a frame header (see
+    /// `gossip::Message::encode_frame`).
+    pub fn tag(&self) -> u8 {
+        match self {
+            Payload::Dense(_) => Self::TAG_DENSE,
+            Payload::Sign { .. } => Self::TAG_SIGN,
+            Payload::TopK { .. } => Self::TAG_TOPK,
+            Payload::Zero { .. } => Self::TAG_ZERO,
+        }
+    }
+
+    /// Logical element count `n` of the (uncompressed) delta this payload
+    /// describes. Carried in the frame header — together with the body
+    /// length it makes every variant self-describing on the wire.
+    pub fn logical_len(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::Sign { len, .. } | Payload::TopK { len, .. } | Payload::Zero { len } => *len,
+        }
+    }
+
+    /// Append the canonical body encoding to `out`: exactly
+    /// [`Payload::wire_bytes`] bytes, little-endian throughout, f32 as raw
+    /// IEEE-754 bit patterns — NaN payloads, infinities, and signed zeros
+    /// survive the round trip bit-for-bit.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::Dense(v) => {
+                out.reserve(4 * v.len());
+                for &x in v {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            Payload::Sign { scale, bits, .. } => {
+                out.reserve(4 + bits.len());
+                out.extend_from_slice(&scale.to_bits().to_le_bytes());
+                out.extend_from_slice(bits);
+            }
+            Payload::TopK { indices, values, .. } => {
+                out.reserve(4 * (indices.len() + values.len()));
+                for &i in indices {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for &v in values {
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            Payload::Zero { .. } => {}
+        }
+    }
+
+    /// Decode a body produced by [`Payload::encode_into`]. `tag` and
+    /// `logical_len` come from the frame header; every length relation and
+    /// every `TopK` index is validated so a corrupt frame is an error, not
+    /// a panic in the receive hot path.
+    pub fn decode_body(tag: u8, logical_len: usize, body: &[u8]) -> anyhow::Result<Payload> {
+        let f32_at = |c: &[u8]| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        match tag {
+            Self::TAG_DENSE => {
+                anyhow::ensure!(
+                    body.len() == 4 * logical_len,
+                    "dense body is {} bytes, expected {} for n = {logical_len}",
+                    body.len(),
+                    4 * logical_len
+                );
+                Ok(Payload::Dense(body.chunks_exact(4).map(f32_at).collect()))
+            }
+            Self::TAG_SIGN => {
+                let want = 4 + logical_len.div_ceil(8);
+                anyhow::ensure!(
+                    body.len() == want,
+                    "sign body is {} bytes, expected {want} for n = {logical_len}",
+                    body.len()
+                );
+                Ok(Payload::Sign {
+                    scale: f32_at(body),
+                    bits: body[4..].to_vec(),
+                    len: logical_len,
+                })
+            }
+            Self::TAG_TOPK => {
+                anyhow::ensure!(
+                    body.len() % 8 == 0,
+                    "topk body length {} is not a multiple of 8",
+                    body.len()
+                );
+                let k = body.len() / 8;
+                anyhow::ensure!(k <= logical_len, "topk keeps {k} of n = {logical_len} entries");
+                let indices: Vec<u32> = body[..4 * k]
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                for &i in &indices {
+                    anyhow::ensure!(
+                        (i as usize) < logical_len,
+                        "topk index {i} out of range for n = {logical_len}"
+                    );
+                }
+                let values = body[4 * k..].chunks_exact(4).map(f32_at).collect();
+                Ok(Payload::TopK { indices, values, len: logical_len })
+            }
+            Self::TAG_ZERO => {
+                anyhow::ensure!(
+                    body.is_empty(),
+                    "zero payload carries {} body bytes",
+                    body.len()
+                );
+                Ok(Payload::Zero { len: logical_len })
+            }
+            other => anyhow::bail!("unknown payload tag {other:#04x}"),
+        }
+    }
 }
 
 /// Which compressor a configuration uses (Table II "Element-level").
@@ -228,7 +352,7 @@ impl ErrorFeedback {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
@@ -387,5 +511,126 @@ mod tests {
         let m = Mat::from_vec(2, 8, (0..16).map(|i| i as f32 - 8.0).collect());
         let p = Compressor::TopK { ratio: 4 }.compress(&m); // k = 4
         assert_eq!(p.wire_bytes(), 8 * 4);
+    }
+
+    // ---- wire codec ----
+
+    /// An adversarial f32: special values and raw bit patterns (including
+    /// NaNs with arbitrary payload bits) are all fair game on the wire.
+    fn hostile_f32(rng: &mut Rng) -> f32 {
+        match rng.below(6) {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            2 => f32::NEG_INFINITY,
+            3 => -0.0,
+            4 => 0.0,
+            _ => f32::from_bits(rng.next_u32()),
+        }
+    }
+
+    /// A random payload covering every variant, including empty (`n = 0`)
+    /// shapes and `Zero`.
+    pub(crate) fn arbitrary_payload(rng: &mut Rng) -> Payload {
+        let n = rng.below(65); // 0..=64 logical elements
+        match rng.below(4) {
+            0 => Payload::Dense((0..n).map(|_| hostile_f32(rng)).collect()),
+            1 => Payload::Sign {
+                scale: hostile_f32(rng),
+                bits: (0..n.div_ceil(8)).map(|_| rng.next_u32() as u8).collect(),
+                len: n,
+            },
+            2 => {
+                let k = if n == 0 { 0 } else { rng.below(n + 1) };
+                let mut indices: Vec<u32> =
+                    rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect();
+                indices.sort_unstable();
+                Payload::TopK {
+                    indices,
+                    values: (0..k).map(|_| hostile_f32(rng)).collect(),
+                    len: n,
+                }
+            }
+            _ => Payload::Zero { len: n },
+        }
+    }
+
+    /// Structural + bit-pattern equality (NaN == NaN when the bits agree).
+    pub(crate) fn payload_bits_eq(a: &Payload, b: &Payload) -> bool {
+        let beq = |x: &[f32], y: &[f32]| {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        };
+        match (a, b) {
+            (Payload::Dense(x), Payload::Dense(y)) => beq(x, y),
+            (
+                Payload::Sign { scale: s1, bits: b1, len: l1 },
+                Payload::Sign { scale: s2, bits: b2, len: l2 },
+            ) => s1.to_bits() == s2.to_bits() && b1 == b2 && l1 == l2,
+            (
+                Payload::TopK { indices: i1, values: v1, len: l1 },
+                Payload::TopK { indices: i2, values: v2, len: l2 },
+            ) => i1 == i2 && beq(v1, v2) && l1 == l2,
+            (Payload::Zero { len: l1 }, Payload::Zero { len: l2 }) => l1 == l2,
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_every_variant_bit_exactly() {
+        crate::util::propcheck::forall(
+            "payload encode/decode round-trip",
+            256,
+            arbitrary_payload,
+            |p, _| {
+                let mut body = Vec::new();
+                p.encode_into(&mut body);
+                if body.len() as u64 != p.wire_bytes() {
+                    return Err(format!(
+                        "encoded {} bytes but wire_bytes() charges {}",
+                        body.len(),
+                        p.wire_bytes()
+                    ));
+                }
+                let back = Payload::decode_body(p.tag(), p.logical_len(), &body)
+                    .map_err(|e| format!("decode failed: {e:#}"))?;
+                if !payload_bits_eq(p, &back) {
+                    return Err(format!("round-trip mismatch: {back:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn codec_rejects_malformed_bodies() {
+        // wrong body length for the declared logical length
+        assert!(Payload::decode_body(Payload::TAG_DENSE, 3, &[0u8; 8]).is_err());
+        assert!(Payload::decode_body(Payload::TAG_SIGN, 9, &[0u8; 4]).is_err());
+        // truncated topk pair
+        assert!(Payload::decode_body(Payload::TAG_TOPK, 8, &[0u8; 12]).is_err());
+        // more kept entries than logical elements
+        assert!(Payload::decode_body(Payload::TAG_TOPK, 1, &[0u8; 16]).is_err());
+        // out-of-range topk index: k = 1, index = 7, n = 4
+        let mut body = 7u32.to_le_bytes().to_vec();
+        body.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
+        assert!(Payload::decode_body(Payload::TAG_TOPK, 4, &body).is_err());
+        // zero must be body-free
+        assert!(Payload::decode_body(Payload::TAG_ZERO, 4, &[1]).is_err());
+        // unknown tag
+        let err = format!("{:#}", Payload::decode_body(9, 0, &[]).unwrap_err());
+        assert!(err.contains("unknown payload tag"), "{err}");
+    }
+
+    #[test]
+    fn compressed_outputs_roundtrip_through_the_codec() {
+        // not just arbitrary payloads: the compressors' real outputs too
+        let m = randmat(9, 5, 11);
+        for c in [Compressor::None, Compressor::Sign, Compressor::TopK { ratio: 8 }] {
+            let p = c.compress(&m);
+            let mut body = Vec::new();
+            p.encode_into(&mut body);
+            assert_eq!(body.len() as u64, p.wire_bytes(), "{c:?}");
+            let back = Payload::decode_body(p.tag(), p.logical_len(), &body).unwrap();
+            assert!(payload_bits_eq(&p, &back), "{c:?}");
+        }
     }
 }

@@ -525,6 +525,12 @@ impl Session {
                 self.emit_outcome(&out)?;
                 Ok(out)
             }
+            DriverKind::Node => anyhow::bail!(
+                "spec driver is 'node': each client runs as its own OS process over \
+                 real sockets — launch with 'cidertf fleet spawn --config <fleet.json>' \
+                 (or one 'cidertf node --config <fleet.json> --id <k>' per process), \
+                 not through an in-process Session"
+            ),
         }
     }
 

@@ -131,6 +131,9 @@ pub struct ExperimentSpec {
     pub adversary: Option<AdversarySchedule>,
     /// execution path
     pub driver: DriverKind,
+    /// socket transport for the `node` driver (`tcp` or `uds`; see
+    /// `cidertf info` → transports). Ignored by in-process drivers.
+    pub transport: String,
     /// compute backend flag (`native` or `pjrt`)
     pub backend: String,
     /// epochs between eval points (1 = every epoch)
@@ -184,6 +187,7 @@ impl ExperimentSpec {
             aggregator: cfg.aggregator.clone(),
             adversary: cfg.adversary.clone(),
             driver,
+            transport: "tcp".to_string(),
             backend: backend.to_string(),
             eval_every: 1,
             stop: StopRule::default(),
@@ -255,16 +259,32 @@ impl ExperimentSpec {
         anyhow::ensure!(self.eval_batch >= 1, "eval_batch must be >= 1");
         anyhow::ensure!(
             !(self.fault.is_some()
-                && matches!(self.driver, DriverKind::Sequential | DriverKind::Parallel)),
+                && matches!(
+                    self.driver,
+                    DriverKind::Sequential | DriverKind::Parallel | DriverKind::Node
+                )),
             "driver '{}' cannot inject network faults — use sim or async",
             self.driver.name()
         );
         anyhow::ensure!(
             !(self.adversary.is_some()
-                && matches!(self.driver, DriverKind::Parallel | DriverKind::Async)),
+                && matches!(
+                    self.driver,
+                    DriverKind::Parallel | DriverKind::Async | DriverKind::Node
+                )),
             "driver '{}' does not support Byzantine clients yet — use seq or sim",
             self.driver.name()
         );
+        // the transport name must resolve even for in-process drivers (a
+        // typo'd spec should fail loudly, not only once handed to a fleet)
+        crate::registry::transports().resolve(&self.transport)?;
+        if self.driver == DriverKind::Node {
+            anyhow::ensure!(
+                self.stop == StopRule::default(),
+                "the node driver cannot evaluate early-stopping rules — they need the \
+                 global loss, which no single node computes; drop 'stop' or use sim"
+            );
+        }
         if let Some(a) = &self.adversary {
             anyhow::ensure!(
                 (0.0..=1.0).contains(&a.fraction),
@@ -375,6 +395,7 @@ impl ExperimentSpec {
                 self.adversary.as_ref().map(AdversarySchedule::to_json).unwrap_or(Json::Null),
             ),
             ("driver", Json::Str(self.driver.name().to_string())),
+            ("transport", Json::Str(self.transport.clone())),
             ("backend", Json::Str(self.backend.clone())),
             ("eval_every", Json::Num(self.eval_every as f64)),
             ("stop", self.stop.to_json()),
@@ -412,6 +433,7 @@ impl ExperimentSpec {
                 "aggregator",
                 "adversary",
                 "driver",
+                "transport",
                 "backend",
                 "eval_every",
                 "stop",
@@ -471,6 +493,14 @@ impl ExperimentSpec {
             aggregator,
             adversary,
             driver: DriverKind::from_name(j.req_str("driver")?)?,
+            // pre-deployment-plane specs carry no transport: default tcp
+            transport: match j.get("transport") {
+                None => "tcp".to_string(),
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("invalid 'transport' (string expected)"))?
+                    .to_string(),
+            },
             backend: j.req_str("backend")?.to_string(),
             eval_every: match j.get("eval_every") {
                 None => 1,
@@ -638,6 +668,12 @@ impl ExperimentSpecBuilder {
         self
     }
 
+    /// Socket transport for the `node` driver (`tcp`/`uds`).
+    pub fn transport(mut self, t: &str) -> Self {
+        self.spec.transport = t.to_string();
+        self
+    }
+
     /// Stop early once the loss reaches this target.
     pub fn target_loss(mut self, l: f64) -> Self {
         self.spec.stop.target_loss = Some(l);
@@ -748,6 +784,51 @@ mod tests {
             let back = ExperimentSpec::from_json_str(&spec.to_json().to_string()).unwrap();
             assert_eq!(back, spec, "partitioner '{name}'");
         }
+    }
+
+    #[test]
+    fn every_driver_and_transport_round_trips() {
+        // satellite for the deployment plane: the driver x transport grid
+        // survives the JSON round trip exactly, for every registered name
+        let base = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        for d in crate::registry::drivers().names() {
+            for t in crate::registry::transports().names() {
+                let mut spec = base.clone();
+                spec.driver = DriverKind::from_name(d).unwrap();
+                spec.transport = t.to_string();
+                let back = ExperimentSpec::from_json_str(&spec.to_json().to_string()).unwrap();
+                assert_eq!(back, spec, "driver '{d}' transport '{t}'");
+            }
+        }
+        // pre-deployment-plane specs (no transport key) still load, as tcp
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("transport");
+        }
+        assert_eq!(ExperimentSpec::from_json(&j).unwrap().transport, "tcp");
+        // unknown transports fail at validate with a did-you-mean
+        let mut spec = base.clone();
+        spec.transport = "tpc".to_string();
+        let err = format!("{:#}", spec.validate().unwrap_err());
+        assert!(err.contains("did you mean 'tcp'"), "{err}");
+    }
+
+    #[test]
+    fn node_driver_gates() {
+        let mut spec = ExperimentSpec::new("tiny", Loss::Logit, AlgoConfig::cidertf(2));
+        spec.driver = DriverKind::Node;
+        assert!(spec.validate().is_ok());
+        // real sockets cannot inject simulated faults
+        spec.fault = Some(FaultConfig::lossy(0.1));
+        assert!(spec.validate().is_err());
+        spec.fault = None;
+        // no node sees the global loss, so stopping rules are rejected
+        spec.stop.target_loss = Some(1e-3);
+        let err = format!("{:#}", spec.validate().unwrap_err());
+        assert!(err.contains("early-stopping"), "{err}");
+        spec.stop = StopRule::default();
+        spec.adversary = Some(AdversarySchedule::sign_flip(0.2));
+        assert!(spec.validate().is_err());
     }
 
     #[test]

@@ -44,6 +44,110 @@ impl Message {
     pub fn wire_bytes(&self) -> u64 {
         Self::HEADER_BYTES + self.payload.wire_bytes()
     }
+
+    /// Serialize to a length-prefixed wire frame: a u32 LE frame length
+    /// followed by magic `"CT"`, version, the payload tag, the four
+    /// accounted header words (from/mode/round/logical-len, u32 LE each),
+    /// and the canonical payload body from
+    /// [`Payload::encode_into`](crate::compress::Payload::encode_into).
+    ///
+    /// The 8 bytes of length prefix + magic + version + tag are transport
+    /// envelope, deliberately *not* charged by
+    /// [`Message::wire_bytes`]/[`CommLedger`]: the accounted cost stays
+    /// `HEADER_BYTES + body`, so the ledger and the wire agree on the
+    /// modeled protocol regardless of how frames are delimited.
+    pub fn encode_frame(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        self.payload.encode_into(&mut body);
+        encode_frame_parts(
+            self.payload.tag(),
+            self.from as u32,
+            self.mode as u32,
+            self.round as u32,
+            self.payload.logical_len() as u32,
+            &body,
+        )
+    }
+
+    /// Decode one frame (the bytes *after* the u32 length prefix). The
+    /// magic, version, tag, and all body-length relations are validated.
+    pub fn decode_frame(frame: &[u8]) -> anyhow::Result<Message> {
+        let (tag, from, mode, round, logical_len, body) = decode_frame_parts(frame)?;
+        let payload = Payload::decode_body(tag, logical_len as usize, body)?;
+        Ok(Message {
+            from: from as usize,
+            mode: mode as usize,
+            round: round as usize,
+            payload,
+        })
+    }
+}
+
+/// Frame magic: every frame after its length prefix starts `b"CT"`.
+pub const FRAME_MAGIC: [u8; 2] = *b"CT";
+/// Wire protocol version carried in every frame header.
+pub const FRAME_VERSION: u8 = 1;
+/// Frame bytes that precede the body: magic (2) + version + tag +
+/// from/mode/round/logical-len (u32 LE each).
+pub const FRAME_HEADER_BYTES: usize = 20;
+
+/// Assemble a length-prefixed frame from raw header parts. Shared by
+/// [`Message::encode_frame`] and the node control channel (which reuses
+/// the envelope with its own tag space).
+pub(crate) fn encode_frame_parts(
+    tag: u8,
+    from: u32,
+    mode: u32,
+    round: u32,
+    logical_len: u32,
+    body: &[u8],
+) -> Vec<u8> {
+    let frame_len = FRAME_HEADER_BYTES + body.len();
+    let mut out = Vec::with_capacity(4 + frame_len);
+    out.extend_from_slice(&(frame_len as u32).to_le_bytes());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    out.push(tag);
+    out.extend_from_slice(&from.to_le_bytes());
+    out.extend_from_slice(&mode.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&logical_len.to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Split a frame (without its length prefix) into
+/// `(tag, from, mode, round, logical_len, body)`, validating magic and
+/// version.
+pub(crate) fn decode_frame_parts(
+    frame: &[u8],
+) -> anyhow::Result<(u8, u32, u32, u32, u32, &[u8])> {
+    anyhow::ensure!(
+        frame.len() >= FRAME_HEADER_BYTES,
+        "frame is {} bytes, shorter than the {FRAME_HEADER_BYTES}-byte header",
+        frame.len()
+    );
+    anyhow::ensure!(
+        frame[..2] == FRAME_MAGIC,
+        "bad frame magic {:02x}{:02x} (expected \"CT\")",
+        frame[0],
+        frame[1]
+    );
+    anyhow::ensure!(
+        frame[2] == FRAME_VERSION,
+        "unsupported wire version {} (this build speaks {FRAME_VERSION})",
+        frame[2]
+    );
+    let u32_at =
+        |o: usize| u32::from_le_bytes([frame[o], frame[o + 1], frame[o + 2], frame[o + 3]]);
+    Ok((
+        frame[3],
+        u32_at(4),
+        u32_at(8),
+        u32_at(12),
+        u32_at(16),
+        &frame[FRAME_HEADER_BYTES..],
+    ))
 }
 
 /// Uplink communication ledger for one client (the paper's reported
@@ -316,5 +420,71 @@ mod tests {
         let mut st = EstimateState::new(0, &[1], &init3());
         let delta = Compressor::None.compress(&mat(3, 2, 0.5));
         st.apply_delta(1, 0, &delta); // mode 0 = patient, untracked
+    }
+
+    #[test]
+    fn message_frame_roundtrips_every_payload_variant() {
+        crate::util::propcheck::forall(
+            "message frame round-trip",
+            256,
+            |rng| Message {
+                from: rng.below(1024),
+                mode: rng.below(8),
+                round: rng.below(1 << 20),
+                payload: crate::compress::tests::arbitrary_payload(rng),
+            },
+            |msg, _| {
+                let frame = msg.encode_frame();
+                // u32 length prefix + envelope (magic/version/tag) +
+                // accounted header + exactly wire_bytes() of body
+                let expect =
+                    4 + FRAME_HEADER_BYTES as u64 + msg.payload.wire_bytes();
+                if frame.len() as u64 != expect {
+                    return Err(format!("frame is {} bytes, expected {expect}", frame.len()));
+                }
+                let declared = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]);
+                if declared as usize != frame.len() - 4 {
+                    return Err(format!("length prefix {declared} != {}", frame.len() - 4));
+                }
+                let back = Message::decode_frame(&frame[4..])
+                    .map_err(|e| format!("decode failed: {e:#}"))?;
+                if (back.from, back.mode, back.round) != (msg.from, msg.mode, msg.round) {
+                    return Err(format!(
+                        "header mismatch: ({}, {}, {})",
+                        back.from, back.mode, back.round
+                    ));
+                }
+                if !crate::compress::tests::payload_bits_eq(&msg.payload, &back.payload) {
+                    return Err(format!("payload mismatch: {:?}", back.payload));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn frame_decode_rejects_bad_envelope() {
+        let msg = Message {
+            from: 1,
+            mode: 1,
+            round: 3,
+            payload: Compressor::Sign.compress(&mat(3, 2, 1.0)),
+        };
+        let frame = msg.encode_frame()[4..].to_vec();
+        // truncated header
+        assert!(Message::decode_frame(&frame[..10]).is_err());
+        // bad magic
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        let err = format!("{:#}", Message::decode_frame(&bad).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+        // wrong version
+        let mut bad = frame.clone();
+        bad[2] = 9;
+        let err = format!("{:#}", Message::decode_frame(&bad).unwrap_err());
+        assert!(err.contains("version"), "{err}");
+        // body truncated relative to the declared logical length
+        let bad = frame[..frame.len() - 1].to_vec();
+        assert!(Message::decode_frame(&bad).is_err());
     }
 }

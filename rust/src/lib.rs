@@ -24,6 +24,7 @@ pub mod gossip;
 pub mod harness;
 pub mod losses;
 pub mod net;
+pub mod node;
 pub mod registry;
 pub mod runtime;
 pub mod sched;

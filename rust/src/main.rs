@@ -69,8 +69,9 @@ fn ctx_from(args: &Args) -> anyhow::Result<Ctx> {
 
 /// Every subcommand, for the did-you-mean hint on typos.
 const COMMANDS: &[&str] = &[
-    "train", "spec", "sweep", "fig3", "fig4", "fig5", "fig6", "fig7", "table2", "table3",
-    "table4", "faults", "ablate", "theorems", "bench", "tune", "info", "help",
+    "train", "spec", "sweep", "node", "fleet", "fig3", "fig4", "fig5", "fig6", "fig7",
+    "table2", "table3", "table4", "faults", "ablate", "theorems", "bench", "tune", "info",
+    "help",
 ];
 
 fn run() -> anyhow::Result<()> {
@@ -80,6 +81,8 @@ fn run() -> anyhow::Result<()> {
         "train" => cmd_train(&args)?,
         "spec" => cmd_spec(&args)?,
         "sweep" => cmd_sweep(&args)?,
+        "node" => cmd_node(&args)?,
+        "fleet" => cmd_fleet(&args)?,
         "fig3" => {
             let mut ctx = ctx_from(&args)?;
             let k = args.get_usize("k", 8)?;
@@ -241,8 +244,63 @@ fn spec_from_args(args: &Args) -> anyhow::Result<ExperimentSpec> {
         spec.adversary = registry::adversaries().resolve(&a)?;
     }
     spec.backend = args.get_str("backend", NativeOrPjrt::default_flag())?;
+    if let Some(t) = args.opt_str("transport")? {
+        // resolve canonicalizes aliases ("unix" -> "uds") and gives a
+        // did-you-mean on typos before validate sees the spec
+        spec.transport = registry::transports().resolve(&t)?.name().to_string();
+    }
     spec.validate()?;
     Ok(spec)
+}
+
+/// `cidertf node --config fleet.json --id K [--control addr]`: run ONE
+/// client of the fleet's spec as this OS process, gossiping with its
+/// peers over real sockets. Normally launched by `fleet spawn`, but can
+/// be started by hand (one invocation per node id) across machines.
+fn cmd_node(args: &Args) -> anyhow::Result<()> {
+    let config = args
+        .opt_str("config")?
+        .ok_or_else(|| anyhow::anyhow!("node needs --config fleet.json"))?;
+    let id: usize = match args.opt_str("id")? {
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--id expects an integer, got '{v}'"))?,
+        None => anyhow::bail!("node needs --id <k> (index into the fleet's node list)"),
+    };
+    let control = args.opt_str("control")?;
+    let cfg = cidertf::node::fleet::FleetConfig::load(Path::new(&config))?;
+    let outcome = cidertf::node::daemon::run_node(&cfg, id, control.as_deref())?;
+    println!(
+        "node {id} done: {} iterations, virtual {:.1}s, final client state captured",
+        outcome.t, outcome.time_s
+    );
+    Ok(())
+}
+
+/// `cidertf fleet spawn|status|stop`: launch a local fleet of node
+/// daemons as child processes, inspect a running fleet's progress, or
+/// signal it to stop.
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let verb = args.positional(0).unwrap_or("").to_string();
+    let out_dir: PathBuf = args.get_str("out", "results/fleet")?.into();
+    match verb.as_str() {
+        "spawn" => {
+            let config = args
+                .opt_str("config")?
+                .ok_or_else(|| anyhow::anyhow!("fleet spawn needs --config fleet.json"))?;
+            cidertf::node::controller::spawn(Path::new(&config), &out_dir)
+        }
+        "status" => cidertf::node::controller::status(&out_dir),
+        "stop" => cidertf::node::controller::stop(&out_dir),
+        "" => anyhow::bail!("fleet needs a subcommand: spawn | status | stop"),
+        other => {
+            let verbs = ["spawn", "status", "stop"];
+            let hint = registry::did_you_mean(other, verbs.iter().copied())
+                .map(|s| format!(" — did you mean 'fleet {s}'?"))
+                .unwrap_or_default();
+            anyhow::bail!("unknown fleet subcommand '{other}'{hint} (spawn | status | stop)")
+        }
+    }
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -403,7 +461,8 @@ COMMANDS
                        |file:<path.tns|.bin|.ctf>|csv:<events.csv>  (real data)
              --loss logit|ls  --k 8  --topology ring|star|complete|chain|torus
              --epochs N --iters-per-epoch N --gamma G --rank R --seed S
-             --driver seq|par|sim|async   execution path (default seq)
+             --driver seq|par|sim|async|node   execution path (default seq)
+             --transport tcp|uds  socket family for the node driver
              --network ideal|lossy[:p]|bursty|wan|stragglers|churning|hostile
              --partitioner even|skewed[:alpha]|site_vocab[:overlap]
              --aggregator mean|trimmed_mean[:beta]|coordinate_median
@@ -431,6 +490,17 @@ COMMANDS
              --fresh              re-run everything (default: skip runs whose
                                   record file already matches their spec)
              --per-run-jsonl      stream each run's progress as <label>.jsonl
+  node       run ONE client of a fleet as this OS process (real sockets)
+             --config fleet.json  fleet file: spec + node id -> address map
+             --id K               which fleet entry this process is
+             --control host:port  stream NDJSON events to a fleet controller
+  fleet      launch / inspect / stop a local fleet of node daemons
+             spawn  --config fleet.json [--out results/fleet]
+                    start one child process per node, collect their event
+                    streams, merge the final states into a checkpoint that
+                    is byte-identical to the sim driver's
+             status [--out results/fleet]   print the live status.json
+             stop   [--out results/fleet]   signal every fleet process
   fig3       convergence vs baselines (paper Fig. 3)   [--k --taus 2,4,6,8]
   fig4       ring vs star topology    (paper Fig. 4)   [--k --tau]
   fig5       scalability K=8,16,32    (paper Fig. 5)   [--ks --taus]

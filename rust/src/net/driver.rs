@@ -30,6 +30,9 @@ pub enum DriverKind {
     Sim,
     /// event-driven asynchronous gossip (no barriers)
     Async,
+    /// one OS process per client over real sockets (`cidertf node` /
+    /// `cidertf fleet` — see [`crate::node`])
+    Node,
 }
 
 impl DriverKind {
@@ -40,6 +43,7 @@ impl DriverKind {
             DriverKind::Parallel => "par",
             DriverKind::Sim => "sim",
             DriverKind::Async => "async",
+            DriverKind::Node => "node",
         }
     }
 
@@ -192,6 +196,11 @@ pub fn driver_from_flags(
         DriverKind::Async => {
             Box::new(AsyncGossipDriver { backend: NativeOrPjrt::from_flag(backend_flag)?, net })
         }
+        DriverKind::Node => anyhow::bail!(
+            "the node driver runs clients as separate OS processes over real sockets — \
+             launch it with 'cidertf fleet spawn --config fleet.json' (or 'cidertf node' \
+             per process), not through an in-process RoundDriver"
+        ),
     })
 }
 

@@ -1,0 +1,391 @@
+//! The `cidertf fleet` controller: spawn a local fleet of node daemons,
+//! tail their event streams, and merge the results.
+//!
+//! `fleet spawn` launches one child process per client id (the current
+//! executable re-invoked as `cidertf node`), hands each the controller's
+//! control-socket address, and consumes their NDJSON event streams
+//! (`round_end` / `comm_bytes` / `eval` / `node_done`). Progress lands
+//! in `<out>/status.json` (schema [`STATUS_SCHEMA`], atomically
+//! replaced) for `fleet status`, per-node stdout/stderr in
+//! `<out>/node-<id>.log`, and child pids in `<out>/fleet.pid` for
+//! `fleet stop`. When every node reports its outcome the controller
+//! merges them ([`crate::node::fleet::merge_outcomes`]) and writes
+//! `<out>/merged.ckpt.json` — byte-identical to the sim driver's final
+//! checkpoint for the same spec.
+//!
+//! Deliberately no wall clock here (lint D004): pacing uses channel
+//! receive timeouts and child exit polling, never `Instant::now`.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::engine::checkpoint::write_checkpoint;
+use crate::node::fleet::{merge_outcomes, FleetConfig, NodeOutcome};
+use crate::util::benchkit::fmt_bytes;
+use crate::util::json::Json;
+
+/// Schema tag of `<out>/status.json`.
+pub const STATUS_SCHEMA: &str = "cidertf-fleet-status-v1";
+
+/// Filename of the merged checkpoint under the out directory.
+pub const MERGED_CHECKPOINT: &str = "merged.ckpt.json";
+
+/// Per-node progress snapshot for `status.json`.
+#[derive(Debug, Clone, Default)]
+struct NodeProgress {
+    /// rounds finished (last `round_end` t + 1)
+    rounds: u64,
+    /// virtual clock at the last event
+    time_s: f64,
+    /// last reported local loss share
+    loss: Option<f64>,
+    /// node reported its final outcome
+    done: bool,
+}
+
+fn write_status(
+    out_dir: &Path,
+    phase: &str,
+    total_iters: usize,
+    nodes: &BTreeMap<usize, NodeProgress>,
+) -> anyhow::Result<()> {
+    let rows: Vec<Json> = nodes
+        .iter()
+        .map(|(id, p)| {
+            Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("rounds", Json::u64(p.rounds)),
+                ("time_s", Json::Num(p.time_s)),
+                ("loss", p.loss.map(Json::Num).unwrap_or(Json::Null)),
+                ("done", Json::Bool(p.done)),
+            ])
+        })
+        .collect();
+    let status = Json::obj(vec![
+        ("schema", Json::Str(STATUS_SCHEMA.to_string())),
+        ("phase", Json::Str(phase.to_string())),
+        ("total_iters", Json::Num(total_iters as f64)),
+        ("nodes", Json::Arr(rows)),
+    ]);
+    let path = out_dir.join("status.json");
+    let tmp = out_dir.join("status.json.tmp");
+    std::fs::write(&tmp, status.to_pretty_string())
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .map_err(|e| anyhow::anyhow!("cannot move status into place at {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Launch the fleet described by `config_path`, stream its progress, and
+/// on completion write the merged checkpoint under `out_dir`. Runs in
+/// the foreground until the fleet finishes or fails.
+pub fn spawn(config_path: &Path, out_dir: &Path) -> anyhow::Result<()> {
+    let cfg = FleetConfig::load(config_path)?;
+    std::fs::create_dir_all(out_dir)
+        .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", out_dir.display()))?;
+    let config_abs = config_path
+        .canonicalize()
+        .map_err(|e| anyhow::anyhow!("cannot resolve {}: {e}", config_path.display()))?;
+
+    // control socket first, so every child can connect immediately
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| anyhow::anyhow!("cannot bind control socket: {e}"))?;
+    let control_addr = listener.local_addr()?.to_string();
+
+    let exe = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("cannot locate own executable: {e}"))?;
+    let mut children: Vec<(usize, Child)> = Vec::with_capacity(cfg.spec.k);
+    for id in 0..cfg.spec.k {
+        let log = std::fs::File::create(out_dir.join(format!("node-{id}.log")))
+            .map_err(|e| anyhow::anyhow!("cannot create node-{id}.log: {e}"))?;
+        let child = Command::new(&exe)
+            .arg("node")
+            .arg("--config")
+            .arg(&config_abs)
+            .arg("--id")
+            .arg(id.to_string())
+            .arg("--control")
+            .arg(&control_addr)
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log.try_clone()?))
+            .stderr(Stdio::from(log))
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("cannot spawn node {id}: {e}"))?;
+        children.push((id, child));
+    }
+    let pid_lines: Vec<String> = children
+        .iter()
+        .map(|(_, c)| c.id().to_string())
+        .chain(std::iter::once(std::process::id().to_string()))
+        .collect();
+    std::fs::write(out_dir.join("fleet.pid"), pid_lines.join("\n") + "\n")
+        .map_err(|e| anyhow::anyhow!("cannot write fleet.pid: {e}"))?;
+    println!(
+        "fleet: {} nodes up (transport {}, control {control_addr}), logs in {}",
+        cfg.spec.k,
+        cfg.spec.transport,
+        out_dir.display()
+    );
+
+    let result = drive(&cfg, &listener, &mut children, out_dir);
+    if result.is_err() {
+        for (_, c) in children.iter_mut() {
+            let _ = c.kill();
+        }
+    }
+    for (_, c) in children.iter_mut() {
+        let _ = c.wait();
+    }
+    let _ = std::fs::remove_file(out_dir.join("fleet.pid"));
+    result
+}
+
+/// Event-pump phase of [`spawn`]: accept one control connection per
+/// node, fan their NDJSON lines into a channel, track progress, and
+/// merge once every node is done.
+fn drive(
+    cfg: &FleetConfig,
+    listener: &TcpListener,
+    children: &mut [(usize, Child)],
+    out_dir: &Path,
+) -> anyhow::Result<()> {
+    let k = cfg.spec.k;
+    let total_iters = cfg.spec.epochs * cfg.spec.iters_per_epoch;
+    let (tx, rx) = mpsc::channel::<anyhow::Result<Json>>();
+
+    // accept control connections without blocking forever: a child that
+    // dies before connecting must fail the launch, not hang it
+    listener.set_nonblocking(true)?;
+    let mut accepted = 0usize;
+    while accepted < k {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for line in BufReader::new(stream).lines() {
+                        let sent = match line {
+                            Ok(l) if l.trim().is_empty() => continue,
+                            Ok(l) => tx.send(
+                                Json::parse(&l)
+                                    .map_err(|e| anyhow::anyhow!("bad control line: {e}")),
+                            ),
+                            Err(e) => {
+                                tx.send(Err(anyhow::anyhow!("control read failed: {e}")))
+                            }
+                        };
+                        if sent.is_err() {
+                            break; // controller went away
+                        }
+                    }
+                });
+                accepted += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                check_children(children, out_dir, &BTreeMap::new())?;
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => anyhow::bail!("control accept failed: {e}"),
+        }
+    }
+    drop(tx); // readers hold the only senders now: disconnect == all streams closed
+
+    let mut progress: BTreeMap<usize, NodeProgress> =
+        (0..k).map(|i| (i, NodeProgress::default())).collect();
+    // aggregate eval points keyed by iteration: (epoch, loss sum, bytes sum, reports)
+    let mut evals: BTreeMap<usize, (usize, f64, u64, usize)> = BTreeMap::new();
+    let mut outcomes: Vec<NodeOutcome> = Vec::with_capacity(k);
+    write_status(out_dir, "running", total_iters, &progress)?;
+
+    while outcomes.len() < k {
+        match rx.recv_timeout(Duration::from_millis(500)) {
+            Ok(line) => {
+                let ev = line?;
+                handle_event(&ev, &mut progress, &mut evals, &mut outcomes, k)?;
+                let kind = ev.get("event").and_then(Json::as_str).unwrap_or("");
+                if kind == "eval" || kind == "node_done" {
+                    write_status(out_dir, "running", total_iters, &progress)?;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                check_children(children, out_dir, &progress)?;
+                write_status(out_dir, "running", total_iters, &progress)?;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                check_children(children, out_dir, &progress)?;
+                anyhow::bail!(
+                    "all control streams closed after {}/{k} node outcomes — see the \
+                     node-*.log files under {}",
+                    outcomes.len(),
+                    out_dir.display()
+                );
+            }
+        }
+    }
+
+    let (merged_spec, state) = merge_outcomes(&cfg.spec, &outcomes)?;
+    let ckpt = out_dir.join(MERGED_CHECKPOINT);
+    write_checkpoint(&ckpt, &merged_spec, &state)?;
+    write_status(out_dir, "done", total_iters, &progress)?;
+    print_summary(&state, &ckpt);
+    Ok(())
+}
+
+/// Fold one NDJSON event into the progress/outcome trackers, printing
+/// aggregate eval lines once every node has reported an iteration.
+fn handle_event(
+    ev: &Json,
+    progress: &mut BTreeMap<usize, NodeProgress>,
+    evals: &mut BTreeMap<usize, (usize, f64, u64, usize)>,
+    outcomes: &mut Vec<NodeOutcome>,
+    k: usize,
+) -> anyhow::Result<()> {
+    let kind = ev.req_str("event")?;
+    let id = ev.req_usize("id")?;
+    anyhow::ensure!(id < k, "control event from unknown node id {id}");
+    let slot = progress.get_mut(&id).expect("id range checked");
+    match kind {
+        "round_end" => {
+            slot.rounds = ev.req_u64("t")? + 1;
+            slot.time_s = ev.req_f64("time_s")?;
+        }
+        "comm_bytes" | "net_fault" => {}
+        "eval" => {
+            let iter = ev.req_usize("iter")?;
+            let epoch = ev.req_usize("epoch")?;
+            let loss = ev.req_f64("loss")?;
+            slot.loss = Some(loss);
+            slot.time_s = ev.req_f64("time_s")?;
+            let agg = evals.entry(iter).or_insert((epoch, 0.0, 0, 0));
+            agg.1 += loss;
+            agg.2 += ev.req_u64("bytes")?;
+            agg.3 += 1;
+            if agg.3 == k {
+                println!(
+                    "epoch {:>3}  t={:>7}  loss={:.6e}  uplink={}",
+                    agg.0,
+                    iter,
+                    agg.1,
+                    fmt_bytes(agg.2 as f64)
+                );
+            }
+        }
+        "node_done" => {
+            let outcome = NodeOutcome::from_json(
+                ev.get("outcome").ok_or_else(|| anyhow::anyhow!("node_done without outcome"))?,
+            )?;
+            anyhow::ensure!(outcome.id == id, "node_done id mismatch");
+            slot.done = true;
+            slot.rounds = outcome.t as u64;
+            slot.time_s = outcome.time_s;
+            outcomes.push(outcome);
+        }
+        other => anyhow::bail!("unknown control event '{other}' from node {id}"),
+    }
+    Ok(())
+}
+
+/// Fail fast when a child exited without finishing its run. A `success`
+/// exit is only fatal once paired with a missing outcome at disconnect
+/// time — its `node_done` may still be in flight in the channel.
+fn check_children(
+    children: &mut [(usize, Child)],
+    out_dir: &Path,
+    progress: &BTreeMap<usize, NodeProgress>,
+) -> anyhow::Result<()> {
+    for (id, child) in children.iter_mut() {
+        if let Some(status) = child.try_wait()? {
+            let done = progress.get(id).map(|p| p.done).unwrap_or(false);
+            if !status.success() && !done {
+                anyhow::bail!(
+                    "node {id} exited early ({status}) — see {}",
+                    out_dir.join(format!("node-{id}.log")).display()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Final console summary: merged loss curve tail plus the merged comm
+/// ledgers and delivery stats from the per-client state blobs.
+fn print_summary(state: &crate::engine::checkpoint::SessionState, ckpt: &Path) {
+    let (mut bytes, mut messages, mut triggered, mut suppressed) = (0u64, 0u64, 0u64, 0u64);
+    let (mut delivered, mut dropped) = (0u64, 0u64);
+    for c in &state.clients {
+        if let Some(l) = c.get("ledger") {
+            bytes += l.get("bytes").and_then(Json::as_u64).unwrap_or(0);
+            messages += l.get("messages").and_then(Json::as_u64).unwrap_or(0);
+            triggered += l.get("triggered").and_then(Json::as_u64).unwrap_or(0);
+            suppressed += l.get("suppressed").and_then(Json::as_u64).unwrap_or(0);
+        }
+        if let Some(n) = c.get("net") {
+            delivered += n.get("delivered").and_then(Json::as_u64).unwrap_or(0);
+            dropped += n.get("dropped").and_then(Json::as_u64).unwrap_or(0);
+        }
+    }
+    let final_loss = state.points.last().map(|p| p.loss).unwrap_or(f64::NAN);
+    println!(
+        "network: delivered {delivered}, dropped {dropped}; uplink {}, msgs {messages} \
+         (triggered {triggered}, suppressed {suppressed})",
+        fmt_bytes(bytes as f64)
+    );
+    println!(
+        "fleet done: final loss {final_loss:.6e}, virtual {:.1}s, merged checkpoint {}",
+        state.time_s,
+        ckpt.display()
+    );
+}
+
+/// Print the current `<out>/status.json` (written atomically by a
+/// running `fleet spawn`).
+pub fn status(out_dir: &Path) -> anyhow::Result<()> {
+    let path = out_dir.join("status.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!("cannot read {} (is a fleet running with --out here?): {e}", path.display())
+    })?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let schema = j.req_str("schema")?;
+    anyhow::ensure!(schema == STATUS_SCHEMA, "unsupported status schema '{schema}'");
+    print!("{}", j.to_pretty_string());
+    println!();
+    Ok(())
+}
+
+/// Signal every process recorded in `<out>/fleet.pid` (the node
+/// children, then the controller) and remove the pid file. Idempotent:
+/// a missing pid file reports nothing to stop.
+pub fn stop(out_dir: &Path) -> anyhow::Result<()> {
+    let path: PathBuf = out_dir.join("fleet.pid");
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("fleet stop: no {} — nothing to stop", path.display());
+            return Ok(());
+        }
+    };
+    let mut signalled = 0usize;
+    for pid in text.lines().map(str::trim).filter(|l| !l.is_empty()) {
+        anyhow::ensure!(
+            pid.bytes().all(|b| b.is_ascii_digit()),
+            "fleet.pid holds a non-numeric entry '{pid}'"
+        );
+        let ok = Command::new("kill")
+            .arg(pid)
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false);
+        if ok {
+            signalled += 1;
+        }
+    }
+    std::fs::remove_file(&path)
+        .map_err(|e| anyhow::anyhow!("cannot remove {}: {e}", path.display()))?;
+    println!("fleet stop: signalled {signalled} process(es)");
+    Ok(())
+}

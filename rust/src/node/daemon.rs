@@ -1,0 +1,325 @@
+//! The `cidertf node` daemon: one client of an experiment, over real
+//! sockets.
+//!
+//! [`run_node`] executes exactly the float operations the unified
+//! session loop (`engine::session::run_loop`) performs *for this
+//! client* under the ideal network: the shared block-sampler stream is
+//! replicated from the spec seed, all `k` clients are built so the
+//! deterministic initialization matches, but only this node's client is
+//! ever stepped — neighbor deltas arrive as wire frames instead of
+//! in-process `Payload`s, and are applied in the same sorted-neighbor
+//! order the in-process loop uses. The spec validation layer guarantees
+//! the run is fault-free and honest (see [`crate::node`]'s bit-identity
+//! contract), so lock-step framing is sound: every neighbor sends
+//! exactly one frame per communicating `(round, mode)` — a payload, or
+//! an explicit [`crate::node::TAG_SUPPRESSED`] marker when its event
+//! trigger kept the delta home.
+//!
+//! Progress streams to an optional controller as NDJSON events
+//! (`round_end`, `comm_bytes`, `eval`, then one `node_done` carrying the
+//! full [`NodeOutcome`]) over a TCP control socket.
+
+use std::collections::BTreeMap;
+
+use crate::compress::Payload;
+use crate::engine::checkpoint::snapshot_client;
+use crate::engine::{apply_error_feedback, build_clients, consensus_phase, publish_one};
+use crate::gossip::{decode_frame_parts, Message};
+use crate::net::sim::VirtualClock;
+use crate::node::fleet::{FleetConfig, NodeOutcome, NodePoint};
+use crate::node::transport::{Conn, Listener, PeerConn, TransportKind};
+use crate::node::{control_frame, TAG_HELLO, TAG_SUPPRESSED};
+use crate::runtime::NativeOrPjrt;
+use crate::sched::BlockSampler;
+use crate::topology::Graph;
+use crate::util::json::Json;
+
+/// NDJSON event writer for the controller's control socket. With no
+/// controller attached every emit is a no-op, so direct `cidertf node`
+/// runs and in-process tests skip the I/O entirely.
+struct Control {
+    conn: Option<Conn>,
+    id: usize,
+}
+
+impl Control {
+    fn emit(&mut self, event: &str, fields: Vec<(&str, Json)>) -> anyhow::Result<()> {
+        let Some(conn) = self.conn.as_mut() else { return Ok(()) };
+        let mut obj = vec![
+            ("event", Json::Str(event.to_string())),
+            ("id", Json::Num(self.id as f64)),
+        ];
+        obj.extend(fields);
+        conn.write_line(&Json::obj(obj).to_string())
+            .map_err(|e| anyhow::anyhow!("node {}: control channel write failed: {e}", self.id))
+    }
+}
+
+/// Run client `id` of `cfg` to completion: bind this node's listen
+/// address, mesh up with its topology neighbors, and train lock-step
+/// with the rest of the fleet. `control` is the controller's NDJSON
+/// event address (TCP), or `None` for a standalone run.
+pub fn run_node(
+    cfg: &FleetConfig,
+    id: usize,
+    control: Option<&str>,
+) -> anyhow::Result<NodeOutcome> {
+    cfg.validate()?;
+    anyhow::ensure!(id < cfg.spec.k, "node id {id} out of range (k = {})", cfg.spec.k);
+    let listener = Listener::bind(cfg.transport_kind()?, cfg.addr_of(id)?)
+        .map_err(|e| anyhow::anyhow!("node {id}: {e:#}"))?;
+    run_node_with_listener(cfg, id, listener, control)
+}
+
+/// [`run_node`] with a pre-bound listener — the in-process tests bind
+/// `127.0.0.1:0` themselves to dodge port races, then hand the resolved
+/// listeners to one thread per node.
+pub fn run_node_with_listener(
+    cfg: &FleetConfig,
+    id: usize,
+    listener: Listener,
+    control: Option<&str>,
+) -> anyhow::Result<NodeOutcome> {
+    cfg.validate()?;
+    anyhow::ensure!(id < cfg.spec.k, "node id {id} out of range (k = {})", cfg.spec.k);
+    let spec = &cfg.spec;
+    let kind = cfg.transport_kind()?;
+    let opts = cfg.dial_opts();
+
+    let mut control = Control {
+        id,
+        conn: match control {
+            None => None,
+            Some(addr) => Some(
+                crate::node::transport::dial(TransportKind::Tcp, addr, &opts)
+                    .map_err(|e| anyhow::anyhow!("node {id}: control channel: {e:#}"))?,
+            ),
+        },
+    };
+
+    // deterministic construction, identical on every node: full client
+    // set (only ours is ever stepped), graph, sampler, trigger schedule
+    let tc = spec.to_train_config();
+    let data = spec.dataset_data()?;
+    let d_order = data.tensor.dims.len();
+    anyhow::ensure!(tc.rank >= 1 && tc.k >= 1 && tc.algo.tau >= 1);
+    let mut backend = NativeOrPjrt::from_flag(&spec.backend)?;
+    backend.set_threads(tc.compute_threads);
+    let graph = Graph::build(tc.topology, tc.k)?;
+    let decentralized = tc.k > 1;
+    let mut clients = build_clients(&tc, &data, &graph);
+    let neighbors: Vec<usize> = graph.neighbors[id].clone();
+    let mut own_mask = vec![false; tc.k];
+    own_mask[id] = true;
+
+    // ---- mesh up: dial every neighbor, then accept every neighbor ----
+    // Dials complete against the peers' kernel backlogs even before
+    // their accept loops start, so the symmetric order cannot deadlock;
+    // retry-backoff inside `dial` rides out peers that boot later.
+    let mut outbound: BTreeMap<usize, PeerConn> = BTreeMap::new();
+    let mut inbound: BTreeMap<usize, Conn> = BTreeMap::new();
+    if decentralized {
+        for &j in &neighbors {
+            let conn = PeerConn::connect(kind, cfg.addr_of(j)?, &opts, id)
+                .map_err(|e| anyhow::anyhow!("node {id}: connecting to node {j}: {e:#}"))?;
+            outbound.insert(j, conn);
+        }
+        for _ in 0..neighbors.len() {
+            let mut conn = listener
+                .accept(&opts)
+                .map_err(|e| anyhow::anyhow!("node {id}: {e:#}"))?;
+            let frame = conn
+                .recv_frame()
+                .map_err(|e| anyhow::anyhow!("node {id}: handshake read failed: {e:#}"))?;
+            let (tag, from, _, _, _, _) = decode_frame_parts(&frame)?;
+            anyhow::ensure!(
+                tag == TAG_HELLO,
+                "node {id}: expected HELLO on a fresh connection, got tag {tag:#04x}"
+            );
+            let from = from as usize;
+            anyhow::ensure!(
+                neighbors.contains(&from),
+                "node {id}: HELLO from node {from}, which is not a topology neighbor"
+            );
+            anyhow::ensure!(
+                inbound.insert(from, conn).is_none(),
+                "node {id}: duplicate HELLO from node {from}"
+            );
+        }
+    }
+
+    // ---- the lock-step loop (run_loop's float ops, this client only) ----
+    let mut block_sampler = BlockSampler::new(d_order, tc.seed, true);
+    let trigger = tc.trigger_schedule();
+    let all_modes: Vec<usize> = (0..d_order).collect();
+    let mut clock = VirtualClock::default();
+    let total_iters = tc.epochs * tc.iters_per_epoch;
+    let eval_period = tc.iters_per_epoch * spec.eval_every.max(1);
+    let mut points: Vec<NodePoint> = Vec::new();
+
+    let mut eval_point = |clients: &mut Vec<_>,
+                          backend: &mut dyn crate::runtime::ComputeBackend,
+                          control: &mut Control,
+                          points: &mut Vec<NodePoint>,
+                          epoch: usize,
+                          iter: usize,
+                          time_s: f64|
+     -> anyhow::Result<()> {
+        let c: &mut crate::engine::client::ClientState = &mut clients[id];
+        let loss = c.eval_loss(tc.loss, backend)?;
+        let p = NodePoint { epoch, iter, time_s, loss, bytes: c.ledger.bytes };
+        control.emit(
+            "eval",
+            vec![
+                ("epoch", Json::Num(epoch as f64)),
+                ("iter", Json::Num(iter as f64)),
+                ("time_s", Json::Num(time_s)),
+                ("loss", Json::Num(loss)),
+                ("bytes", Json::u64(p.bytes)),
+            ],
+        )?;
+        points.push(p);
+        // run_loop stops on a non-finite *global* loss without writing a
+        // final checkpoint; a non-finite local share makes the global
+        // loss non-finite too, so failing the node keeps fleet and sim
+        // in agreement (neither produces a merged/final checkpoint)
+        anyhow::ensure!(
+            loss.is_finite(),
+            "node {id} diverged at iteration {iter} (local loss is not finite)"
+        );
+        Ok(())
+    };
+
+    eval_point(&mut clients, backend.as_mut(), &mut control, &mut points, 0, 0, clock.now())?;
+
+    for t in 0..total_iters {
+        // the shared mode sequence is drawn every round on every node so
+        // the replicated sampler streams stay aligned
+        let sampled_mode = block_sampler.next_mode();
+        let modes: &[usize] =
+            if tc.algo.block_random { std::slice::from_ref(&sampled_mode) } else { &all_modes };
+
+        for &m in modes {
+            let c = &mut clients[id];
+            c.local_step(
+                m,
+                tc.loss,
+                tc.fiber_samples,
+                tc.gamma,
+                tc.algo.momentum,
+                backend.as_mut(),
+            )?;
+            if tc.algo.error_feedback {
+                apply_error_feedback(c, m, tc.algo.compressor);
+            }
+        }
+        clock.advance(tc.sim_iter_s);
+
+        if decentralized && t % tc.algo.tau == 0 {
+            let bytes_before = clients[id].ledger.bytes;
+            for &m in modes {
+                if m == 0 {
+                    continue; // patient mode never travels (privacy)
+                }
+                let payload = publish_one(&mut clients[id], &graph, &tc, &trigger, t, m);
+                let frame = match payload {
+                    Some(p) => {
+                        // own delta applies locally before broadcast,
+                        // exactly as in the in-process loop
+                        clients[id].estimates.as_mut().expect("estimates").apply_delta(id, m, &p);
+                        Message { from: id, mode: m, round: t, payload: p }.encode_frame()
+                    }
+                    None => control_frame(TAG_SUPPRESSED, id, m, t),
+                };
+                for &j in &neighbors {
+                    outbound
+                        .get_mut(&j)
+                        .expect("dialed at mesh-up")
+                        .send(&frame)
+                        .map_err(|e| anyhow::anyhow!("node {id}: sending to node {j}: {e:#}"))?;
+                }
+                // receive one frame per inbound neighbor and apply the
+                // surviving deltas in sorted-neighbor order — the order
+                // run_loop's delivery scan uses
+                for &j in &neighbors {
+                    let fr = inbound
+                        .get_mut(&j)
+                        .expect("accepted at mesh-up")
+                        .recv_frame()
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "node {id}: receiving from node {j} (round {t}, mode {m}): {e:#}"
+                            )
+                        })?;
+                    let (tag, from, mode, round, logical_len, body) = decode_frame_parts(&fr)?;
+                    anyhow::ensure!(
+                        from as usize == j && mode as usize == m && round as usize == t,
+                        "node {id}: protocol desync — got (from {from}, mode {mode}, round \
+                         {round}) from node {j}, expected (from {j}, mode {m}, round {t})"
+                    );
+                    if tag == TAG_SUPPRESSED {
+                        continue; // peer's trigger held its delta — zero update
+                    }
+                    let p = Payload::decode_body(tag, logical_len as usize, body)?;
+                    let c = &mut clients[id];
+                    c.estimates.as_mut().expect("estimates").apply_delta(j, m, &p);
+                    c.net.delivered += 1;
+                    clock.note_latency(0.0);
+                }
+                clock.flush_latency();
+                consensus_phase(
+                    &mut clients,
+                    &graph,
+                    &tc.aggregator,
+                    tc.algo.rho,
+                    m,
+                    Some(&own_mask),
+                );
+            }
+            let bytes_after = clients[id].ledger.bytes;
+            if bytes_after > bytes_before {
+                control.emit(
+                    "comm_bytes",
+                    vec![
+                        ("t", Json::Num(t as f64)),
+                        ("round_bytes", Json::u64(bytes_after - bytes_before)),
+                        ("total_bytes", Json::u64(bytes_after)),
+                    ],
+                )?;
+            }
+        }
+
+        control.emit(
+            "round_end",
+            vec![("t", Json::Num(t as f64)), ("time_s", Json::Num(clock.now()))],
+        )?;
+
+        if (t + 1) % eval_period == 0 || t + 1 == total_iters {
+            let epoch = (t + 1) / tc.iters_per_epoch;
+            eval_point(
+                &mut clients,
+                backend.as_mut(),
+                &mut control,
+                &mut points,
+                epoch,
+                t + 1,
+                clock.now(),
+            )?;
+        }
+    }
+
+    let (sampler_rng, sampler_t) = block_sampler.state();
+    let outcome = NodeOutcome {
+        id,
+        t: total_iters,
+        time_s: clock.now(),
+        sampler_rng,
+        sampler_t,
+        data_nnz: data.tensor.nnz() as u64,
+        data_fp: data.fingerprint(),
+        points,
+        client: snapshot_client(&clients[id]),
+    };
+    control.emit("node_done", vec![("outcome", outcome.to_json())])?;
+    Ok(outcome)
+}

@@ -1,0 +1,571 @@
+//! Fleet configuration and the deterministic merge of per-node results.
+//!
+//! A fleet config is one JSON file (schema [`FLEET_SCHEMA`]) naming the
+//! experiment spec (inline under `"spec"` or by path under
+//! `"spec_path"`), every node's listen address, and the socket timing
+//! knobs. The transport itself is the spec's `transport` axis, resolved
+//! through [`crate::registry::transports`] (typos get did-you-mean
+//! suggestions).
+//!
+//! After every node reports its [`NodeOutcome`], [`merge_outcomes`]
+//! cross-checks that the fleet stayed lock-step (same iteration count,
+//! virtual clock, sampler stream, and dataset fingerprint on every node)
+//! and assembles a [`SessionState`] whose checkpoint — written with the
+//! spec's driver rewritten to `sim` — is **byte-identical** to the one
+//! the in-process sim driver writes for the same spec.
+
+use std::path::Path;
+
+use crate::engine::checkpoint::SessionState;
+use crate::engine::metrics::MetricPoint;
+use crate::engine::spec::ExperimentSpec;
+use crate::net::driver::DriverKind;
+use crate::node::transport::{DialOpts, TransportKind};
+use crate::util::json::Json;
+use crate::util::rng::{state_from_json as rng_from_json, state_to_json as rng_json};
+
+/// Schema tag every fleet config file must carry.
+pub const FLEET_SCHEMA: &str = "cidertf-fleet-v1";
+
+/// One node's identity and listen address.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeAddr {
+    /// client id this node runs (0-based, one per spec `k`)
+    pub id: usize,
+    /// listen address — `host:port` for tcp, a filesystem path for uds
+    pub addr: String,
+}
+
+/// Parsed and validated fleet configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// the experiment every node runs (driver must be `node`)
+    pub spec: ExperimentSpec,
+    /// one entry per client id, any order in the file; validated to
+    /// cover exactly `0..spec.k`
+    pub nodes: Vec<NodeAddr>,
+    /// per-connection read timeout (ms; 0 = none)
+    pub read_timeout_ms: u64,
+    /// per-connection write timeout (ms; 0 = none)
+    pub write_timeout_ms: u64,
+    /// total budget for reaching a peer, dial retries included (ms)
+    pub dial_timeout_ms: u64,
+    /// sleep between dial retries (ms)
+    pub backoff_ms: u64,
+}
+
+impl FleetConfig {
+    /// Parse from JSON text. `base_dir` anchors a relative `spec_path`
+    /// (pass the config file's directory).
+    pub fn from_json_str(text: &str, base_dir: Option<&Path>) -> anyhow::Result<FleetConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("fleet config: {e}"))?;
+        j.ensure_known_keys(
+            "fleet config",
+            &[
+                "schema",
+                "spec",
+                "spec_path",
+                "nodes",
+                "read_timeout_ms",
+                "write_timeout_ms",
+                "dial_timeout_ms",
+                "backoff_ms",
+            ],
+        )?;
+        let schema = j.req_str("schema")?;
+        anyhow::ensure!(
+            schema == FLEET_SCHEMA,
+            "unsupported fleet config schema '{schema}' (want {FLEET_SCHEMA})"
+        );
+        let spec = match (j.get("spec"), j.get("spec_path")) {
+            (Some(sj), None) => ExperimentSpec::from_json(sj)?,
+            (None, Some(pj)) => {
+                let rel = pj
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("fleet config: 'spec_path' must be a string"))?;
+                let path = match base_dir {
+                    Some(d) => d.join(rel),
+                    None => std::path::PathBuf::from(rel),
+                };
+                ExperimentSpec::load(&path)?
+            }
+            (Some(_), Some(_)) => {
+                anyhow::bail!("fleet config: give 'spec' or 'spec_path', not both")
+            }
+            (None, None) => anyhow::bail!("fleet config: missing 'spec' (or 'spec_path')"),
+        };
+        let mut nodes = Vec::new();
+        for nj in j.req_array("nodes")? {
+            nj.ensure_known_keys("fleet config node", &["id", "addr"])?;
+            nodes.push(NodeAddr { id: nj.req_usize("id")?, addr: nj.req_str("addr")?.to_string() });
+        }
+        let opt_ms = |key: &str, default: u64| -> anyhow::Result<u64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("fleet config: '{key}' must be a number")),
+            }
+        };
+        let d = DialOpts::default();
+        let cfg = FleetConfig {
+            spec,
+            nodes,
+            read_timeout_ms: opt_ms("read_timeout_ms", d.read_timeout_ms)?,
+            write_timeout_ms: opt_ms("write_timeout_ms", d.write_timeout_ms)?,
+            dial_timeout_ms: opt_ms("dial_timeout_ms", d.dial_timeout_ms)?,
+            backoff_ms: opt_ms("backoff_ms", d.backoff_ms)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load and validate a fleet config file (relative `spec_path`
+    /// entries resolve against the file's directory).
+    pub fn load(path: &Path) -> anyhow::Result<FleetConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read fleet config {}: {e}", path.display()))?;
+        Self::from_json_str(&text, path.parent())
+            .map_err(|e| anyhow::anyhow!("{}: {e:#}", path.display()))
+    }
+
+    /// Cross-field invariants: the spec must target the node driver and
+    /// pass its own validation (which rejects faults, adversaries, and
+    /// stop rules — the bit-identity contract), and the node list must
+    /// cover client ids `0..k` exactly, each with a unique address.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.spec.validate()?;
+        anyhow::ensure!(
+            self.spec.driver == DriverKind::Node,
+            "fleet config: spec driver is '{}' — a fleet needs driver 'node'",
+            self.spec.driver.name()
+        );
+        anyhow::ensure!(
+            self.nodes.len() == self.spec.k,
+            "fleet config: {} node entries for a spec with k = {}",
+            self.nodes.len(),
+            self.spec.k
+        );
+        let mut seen = vec![false; self.spec.k];
+        for n in &self.nodes {
+            anyhow::ensure!(
+                n.id < self.spec.k,
+                "fleet config: node id {} out of range (k = {})",
+                n.id,
+                self.spec.k
+            );
+            anyhow::ensure!(!seen[n.id], "fleet config: duplicate node id {}", n.id);
+            seen[n.id] = true;
+            anyhow::ensure!(!n.addr.is_empty(), "fleet config: node {} has an empty address", n.id);
+        }
+        for (i, a) in self.nodes.iter().enumerate() {
+            for b in &self.nodes[i + 1..] {
+                anyhow::ensure!(
+                    a.addr != b.addr,
+                    "fleet config: nodes {} and {} share address {}",
+                    a.id,
+                    b.id,
+                    a.addr
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The resolved socket family (the spec's `transport` axis).
+    pub fn transport_kind(&self) -> anyhow::Result<TransportKind> {
+        crate::registry::transports().resolve(&self.spec.transport)
+    }
+
+    /// The listen address of client `id`.
+    pub fn addr_of(&self, id: usize) -> anyhow::Result<&str> {
+        self.nodes
+            .iter()
+            .find(|n| n.id == id)
+            .map(|n| n.addr.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no node entry for client id {id}"))
+    }
+
+    /// Socket timing knobs as a [`DialOpts`].
+    pub fn dial_opts(&self) -> DialOpts {
+        DialOpts {
+            read_timeout_ms: self.read_timeout_ms,
+            write_timeout_ms: self.write_timeout_ms,
+            dial_timeout_ms: self.dial_timeout_ms,
+            backoff_ms: self.backoff_ms,
+        }
+    }
+
+    /// Serialize (inline spec form) — what `fleet spawn` materializes
+    /// for its child processes and the tests round-trip.
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("id", Json::Num(n.id as f64)),
+                    ("addr", Json::Str(n.addr.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str(FLEET_SCHEMA.to_string())),
+            ("spec", self.spec.to_json()),
+            ("nodes", Json::Arr(nodes)),
+            ("read_timeout_ms", Json::u64(self.read_timeout_ms)),
+            ("write_timeout_ms", Json::u64(self.write_timeout_ms)),
+            ("dial_timeout_ms", Json::u64(self.dial_timeout_ms)),
+            ("backoff_ms", Json::u64(self.backoff_ms)),
+        ])
+    }
+}
+
+/// One node's share of a metric point: its own loss contribution and its
+/// own cumulative uplink bytes at an eval boundary.
+#[derive(Debug, Clone)]
+pub struct NodePoint {
+    /// epoch index (0 for the pre-training point)
+    pub epoch: usize,
+    /// iteration index the point was taken at
+    pub iter: usize,
+    /// virtual clock at the point (identical on every node)
+    pub time_s: f64,
+    /// this client's loss-estimator contribution
+    pub loss: f64,
+    /// this client's cumulative uplink bytes
+    pub bytes: u64,
+}
+
+impl NodePoint {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("iter", Json::Num(self.iter as f64)),
+            ("time_s", Json::Num(self.time_s)),
+            ("loss", Json::Num(self.loss)),
+            ("bytes", Json::u64(self.bytes)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<NodePoint> {
+        Ok(NodePoint {
+            epoch: j.req_usize("epoch")?,
+            iter: j.req_usize("iter")?,
+            time_s: j.req_f64("time_s")?,
+            loss: j.req_f64("loss")?,
+            bytes: j.req_u64("bytes")?,
+        })
+    }
+}
+
+/// Everything one finished node hands back for the merge: its client
+/// state snapshot (the same blob a checkpoint stores), its metric-point
+/// shares, and the lock-step witnesses every node must agree on.
+#[derive(Debug, Clone)]
+pub struct NodeOutcome {
+    /// the client id this node ran
+    pub id: usize,
+    /// iterations executed (must equal `epochs * iters_per_epoch`)
+    pub t: usize,
+    /// final virtual clock
+    pub time_s: f64,
+    /// final shared block-sampler RNG stream
+    pub sampler_rng: ([u64; 4], Option<f64>),
+    /// final shared block-sampler draw counter
+    pub sampler_t: usize,
+    /// nonzeros of the dataset this node trained on
+    pub data_nnz: u64,
+    /// content fingerprint of the dataset
+    pub data_fp: u64,
+    /// this node's metric-point shares, in recording order
+    pub points: Vec<NodePoint>,
+    /// the client state blob ([`crate::engine::checkpoint`] format)
+    pub client: Json,
+}
+
+impl NodeOutcome {
+    /// Serialize for the control channel / stdout.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("t", Json::Num(self.t as f64)),
+            ("time_s", Json::Num(self.time_s)),
+            ("sampler_rng", rng_json(self.sampler_rng)),
+            ("sampler_t", Json::Num(self.sampler_t as f64)),
+            ("data_nnz", Json::u64(self.data_nnz)),
+            ("data_fp", Json::u64(self.data_fp)),
+            ("points", Json::Arr(self.points.iter().map(NodePoint::to_json).collect())),
+            ("client", self.client.clone()),
+        ])
+    }
+
+    /// Parse a [`NodeOutcome::to_json`] blob.
+    pub fn from_json(j: &Json) -> anyhow::Result<NodeOutcome> {
+        Ok(NodeOutcome {
+            id: j.req_usize("id")?,
+            t: j.req_usize("t")?,
+            time_s: j.req_f64("time_s")?,
+            sampler_rng: rng_from_json(
+                j.get("sampler_rng").ok_or_else(|| anyhow::anyhow!("missing 'sampler_rng'"))?,
+            )?,
+            sampler_t: j.req_usize("sampler_t")?,
+            data_nnz: j.req_u64("data_nnz")?,
+            data_fp: j.req_u64("data_fp")?,
+            points: j
+                .req_array("points")?
+                .iter()
+                .map(NodePoint::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            client: j
+                .get("client")
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("missing 'client'"))?,
+        })
+    }
+}
+
+/// Merge every node's outcome into the session state the sim driver
+/// would have produced, returning it with the spec rewritten to
+/// `driver: sim` — so `checkpoint::write_checkpoint` emits a file
+/// byte-identical to an in-process run's final checkpoint.
+///
+/// The merge is also the fleet's lock-step audit: it refuses outcomes
+/// that disagree on iteration count, virtual clock, sampler stream,
+/// dataset fingerprint, or eval cadence (bit-compared, not
+/// approximately).
+pub fn merge_outcomes(
+    spec: &ExperimentSpec,
+    outcomes: &[NodeOutcome],
+) -> anyhow::Result<(ExperimentSpec, SessionState)> {
+    anyhow::ensure!(
+        outcomes.len() == spec.k,
+        "merge: {} node outcomes for a spec with k = {}",
+        outcomes.len(),
+        spec.k
+    );
+    let mut by_id: Vec<Option<&NodeOutcome>> = vec![None; spec.k];
+    for o in outcomes {
+        anyhow::ensure!(o.id < spec.k, "merge: outcome for unknown client id {}", o.id);
+        anyhow::ensure!(by_id[o.id].is_none(), "merge: duplicate outcome for client id {}", o.id);
+        by_id[o.id] = Some(o);
+    }
+    let ordered: Vec<&NodeOutcome> =
+        by_id.into_iter().map(|o| o.expect("all ids covered")).collect();
+
+    let first = ordered[0];
+    for o in &ordered[1..] {
+        anyhow::ensure!(
+            o.t == first.t,
+            "merge: node {} ran {} iterations, node {} ran {} — fleet lost lock-step",
+            first.id,
+            first.t,
+            o.id,
+            o.t
+        );
+        anyhow::ensure!(
+            o.time_s.to_bits() == first.time_s.to_bits(),
+            "merge: virtual clocks disagree between nodes {} and {}",
+            first.id,
+            o.id
+        );
+        anyhow::ensure!(
+            o.sampler_rng == first.sampler_rng && o.sampler_t == first.sampler_t,
+            "merge: block-sampler streams disagree between nodes {} and {}",
+            first.id,
+            o.id
+        );
+        anyhow::ensure!(
+            o.data_nnz == first.data_nnz && o.data_fp == first.data_fp,
+            "merge: dataset fingerprints disagree between nodes {} and {} — the nodes \
+             did not train on the same data",
+            first.id,
+            o.id
+        );
+        anyhow::ensure!(
+            o.points.len() == first.points.len(),
+            "merge: node {} recorded {} metric points, node {} recorded {}",
+            first.id,
+            first.points.len(),
+            o.id,
+            o.points.len()
+        );
+    }
+
+    // global metric points: losses sum in client-id order (the same
+    // sequential accumulation `record_point` performs), bytes sum exactly
+    let mut points: Vec<MetricPoint> = Vec::with_capacity(first.points.len());
+    for (i, p0) in first.points.iter().enumerate() {
+        let mut loss = 0.0f64;
+        let mut bytes = 0u64;
+        for o in &ordered {
+            let p = &o.points[i];
+            anyhow::ensure!(
+                p.epoch == p0.epoch
+                    && p.iter == p0.iter
+                    && p.time_s.to_bits() == p0.time_s.to_bits(),
+                "merge: metric point {i} differs between nodes {} and {} (eval cadence \
+                 desync)",
+                first.id,
+                o.id
+            );
+            loss += p.loss;
+            bytes += p.bytes;
+        }
+        points.push(MetricPoint {
+            epoch: p0.epoch,
+            iter: p0.iter,
+            time_s: p0.time_s,
+            loss,
+            bytes,
+            fms: None,
+        });
+    }
+
+    let state = SessionState {
+        t: first.t,
+        time_s: first.time_s,
+        sampler_rng: first.sampler_rng,
+        sampler_t: first.sampler_t,
+        net_model: Json::Null,
+        adversary: Json::Null,
+        data_nnz: Some(first.data_nnz),
+        data_fp: Some(first.data_fp),
+        points,
+        clients: ordered.iter().map(|o| o.client.clone()).collect(),
+    };
+    let mut merged_spec = spec.clone();
+    merged_spec.driver = DriverKind::Sim;
+    Ok((merged_spec, state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::AlgoConfig;
+    use crate::losses::Loss;
+
+    fn node_spec(k: usize) -> ExperimentSpec {
+        ExperimentSpec::builder("tiny", Loss::Logit, AlgoConfig::cidertf(2))
+            .k(k)
+            .rank(4)
+            .fiber_samples(16)
+            .iters_per_epoch(10)
+            .epochs(1)
+            .eval_batch(64)
+            .driver(DriverKind::Node)
+            .build()
+            .unwrap()
+    }
+
+    fn fleet_json(k: usize, transport: &str, nodes: &str) -> String {
+        let mut spec = node_spec(k);
+        spec.transport = transport.to_string();
+        format!(
+            r#"{{"schema":"cidertf-fleet-v1","spec":{},"nodes":[{}]}}"#,
+            spec.to_json(),
+            nodes
+        )
+    }
+
+    #[test]
+    fn fleet_config_round_trips() {
+        let nodes = r#"{"id":0,"addr":"127.0.0.1:4801"},{"id":1,"addr":"127.0.0.1:4802"}"#;
+        let text = fleet_json(2, "tcp", nodes);
+        let cfg = FleetConfig::from_json_str(&text, None).unwrap();
+        assert_eq!(cfg.nodes.len(), 2);
+        assert_eq!(cfg.addr_of(1).unwrap(), "127.0.0.1:4802");
+        assert_eq!(cfg.transport_kind().unwrap(), TransportKind::Tcp);
+        // defaults applied
+        assert_eq!(cfg.read_timeout_ms, DialOpts::default().read_timeout_ms);
+        let back = FleetConfig::from_json_str(&cfg.to_json().to_string(), None).unwrap();
+        assert_eq!(back.spec, cfg.spec);
+        assert_eq!(back.nodes, cfg.nodes);
+    }
+
+    #[test]
+    fn fleet_config_rejects_malformed_files() {
+        // not JSON at all
+        assert!(FleetConfig::from_json_str("not json", None).is_err());
+        // unknown top-level key
+        let text =
+            fleet_json(1, "tcp", r#"{"id":0,"addr":"a"}"#).replacen('{', r#"{"surprise":1,"#, 1);
+        let err = format!("{:#}", FleetConfig::from_json_str(&text, None).unwrap_err());
+        assert!(err.contains("surprise"), "{err}");
+        // duplicate node id, named in the error
+        let text = fleet_json(2, "tcp", r#"{"id":1,"addr":"a"},{"id":1,"addr":"b"}"#);
+        let err = format!("{:#}", FleetConfig::from_json_str(&text, None).unwrap_err());
+        assert!(err.contains("duplicate node id 1"), "{err}");
+        // wrong node count for k
+        let text = fleet_json(2, "tcp", r#"{"id":0,"addr":"a"}"#);
+        let err = format!("{:#}", FleetConfig::from_json_str(&text, None).unwrap_err());
+        assert!(err.contains("1 node entries") && err.contains("k = 2"), "{err}");
+        // shared address
+        let text = fleet_json(2, "tcp", r#"{"id":0,"addr":"a"},{"id":1,"addr":"a"}"#);
+        let err = format!("{:#}", FleetConfig::from_json_str(&text, None).unwrap_err());
+        assert!(err.contains("share address"), "{err}");
+        // typo'd transport gets a did-you-mean from the registry
+        let text = fleet_json(1, "tpc", r#"{"id":0,"addr":"a"}"#);
+        let err = format!("{:#}", FleetConfig::from_json_str(&text, None).unwrap_err());
+        assert!(err.contains("did you mean 'tcp'"), "{err}");
+        // wrong driver
+        let mut spec = node_spec(1);
+        spec.driver = DriverKind::Sim;
+        let text = format!(
+            r#"{{"schema":"cidertf-fleet-v1","spec":{},"nodes":[{{"id":0,"addr":"a"}}]}}"#,
+            spec.to_json()
+        );
+        let err = format!("{:#}", FleetConfig::from_json_str(&text, None).unwrap_err());
+        assert!(err.contains("needs driver 'node'"), "{err}");
+    }
+
+    fn outcome(id: usize, loss: f64) -> NodeOutcome {
+        NodeOutcome {
+            id,
+            t: 10,
+            time_s: 10.0,
+            sampler_rng: ([1, 2, 3, 4], None),
+            sampler_t: 10,
+            data_nnz: 100,
+            data_fp: 7,
+            points: vec![NodePoint { epoch: 1, iter: 10, time_s: 10.0, loss, bytes: 64 }],
+            client: Json::obj(vec![("stub", Json::Num(id as f64))]),
+        }
+    }
+
+    #[test]
+    fn merge_requires_lock_step_agreement() {
+        let spec = node_spec(2);
+        let (merged_spec, state) =
+            merge_outcomes(&spec, &[outcome(1, 2.0), outcome(0, 1.0)]).unwrap();
+        assert_eq!(merged_spec.driver, DriverKind::Sim);
+        assert_eq!(state.t, 10);
+        assert_eq!(state.points.len(), 1);
+        // losses sum in id order, bytes sum exactly
+        assert_eq!(state.points[0].loss, 1.0 + 2.0);
+        assert_eq!(state.points[0].bytes, 128);
+        // client blobs land in id order
+        assert_eq!(state.clients[0].get("stub").and_then(Json::as_usize), Some(0));
+
+        // outcome round-trips through its JSON form
+        let o = outcome(0, 1.0);
+        let back = NodeOutcome::from_json(&o.to_json()).unwrap();
+        assert_eq!(back.id, o.id);
+        assert_eq!(back.sampler_rng, o.sampler_rng);
+        assert_eq!(back.points.len(), 1);
+
+        // disagreement on any lock-step witness is refused
+        let mut bad = outcome(1, 2.0);
+        bad.t = 11;
+        let err = format!("{:#}", merge_outcomes(&spec, &[outcome(0, 1.0), bad]).unwrap_err());
+        assert!(err.contains("lock-step"), "{err}");
+        let mut bad = outcome(1, 2.0);
+        bad.data_fp = 8;
+        assert!(merge_outcomes(&spec, &[outcome(0, 1.0), bad]).is_err());
+        let err = format!(
+            "{:#}",
+            merge_outcomes(&spec, &[outcome(0, 1.0), outcome(0, 1.0)]).unwrap_err()
+        );
+        assert!(err.contains("duplicate outcome"), "{err}");
+    }
+}

@@ -1,0 +1,54 @@
+//! The deployment plane: one OS process per client over real sockets.
+//!
+//! The in-process drivers (`seq`/`par`/`sim`/`async`) all share one
+//! address space; this module runs the same lock-step protocol with each
+//! client as its own **`cidertf node` daemon**, gossiping canonical wire
+//! frames ([`crate::gossip::Message::encode_frame`]) over TCP or
+//! Unix-domain sockets. A static [`fleet::FleetConfig`] JSON file names
+//! every node's listen address; the **`cidertf fleet`** controller
+//! ([`controller`]) spawns a local fleet as child processes, tails each
+//! node's event stream over a control socket, and merges the per-node
+//! results into one checkpoint.
+//!
+//! **Bit-identity contract.** A fleet run of a fault-free, honest spec
+//! (`fault: none`, `adversary: none`, default stop rules — enforced by
+//! [`crate::engine::spec::ExperimentSpec::validate`]) produces a merged
+//! checkpoint **byte-identical** to the `sim` driver's final checkpoint
+//! on the same spec: every node replicates the shared block-sampler
+//! stream, builds the same deterministic initial state, steps only its
+//! own client, and applies neighbor deltas in the same sorted order the
+//! in-process loop uses. Asserted in `tests/node_fleet.rs` and the CI
+//! `fleet-smoke` job.
+//!
+//! Module map:
+//! * [`transport`] — listeners/connections over TCP and UDS, framed
+//!   send/recv, dial with retry-backoff, reconnect on peer restart. The
+//!   only file in `node/` allowed to read the wall clock (lint D004).
+//! * [`fleet`] — fleet-config parsing/validation, per-node outcome
+//!   blobs, and the deterministic merge into a [`crate::engine::checkpoint`]
+//!   session state.
+//! * [`daemon`] — the long-running `cidertf node` loop for one client.
+//! * [`controller`] — `cidertf fleet spawn|status|stop`.
+
+pub mod controller;
+pub mod daemon;
+pub mod fleet;
+pub mod transport;
+
+/// Control-plane frame tag: the sender's event trigger suppressed this
+/// round's delta (an explicit empty frame keeps the mesh lock-step, so a
+/// receiver never blocks on a peer that chose not to publish). Never
+/// valid inside [`crate::gossip::Message::decode_frame`] and never
+/// charged to comm ledgers.
+pub const TAG_SUPPRESSED: u8 = 0xFE;
+
+/// Control-plane frame tag: connection handshake. The dialing node's id
+/// rides in the frame's `from` word so the accepting side can map the
+/// socket to a peer. Never charged to comm ledgers.
+pub const TAG_HELLO: u8 = 0xFF;
+
+/// Assemble a control frame (empty body) for [`TAG_SUPPRESSED`] /
+/// [`TAG_HELLO`], reusing the standard length-prefixed envelope.
+pub(crate) fn control_frame(tag: u8, from: usize, mode: usize, round: usize) -> Vec<u8> {
+    crate::gossip::encode_frame_parts(tag, from as u32, mode as u32, round as u32, 0, &[])
+}

@@ -1,0 +1,288 @@
+//! Socket transport for the node daemon: framed send/recv over TCP or
+//! Unix-domain sockets, dial with retry-backoff, and reconnect on peer
+//! restart.
+//!
+//! This is the **only** file in `node/` that may read the wall clock
+//! (lint rule D004's allowlist): dial deadlines and reconnect backoff
+//! are genuinely about real elapsed time. Everything above this edge —
+//! the daemon loop, the merge, the controller — stays deterministic.
+//!
+//! Frames are the length-prefixed envelope of
+//! [`crate::gossip::Message::encode_frame`]: a u32 LE frame length, then
+//! `magic "CT" | version | tag | from | mode | round | logical_len |
+//! body`. [`Conn::send_frame`] writes a pre-encoded frame verbatim;
+//! [`Conn::recv_frame`] reads the prefix and returns the frame bytes
+//! after it (what [`crate::gossip::Message::decode_frame`] consumes).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::{Duration, Instant};
+
+use crate::gossip::FRAME_HEADER_BYTES;
+
+/// Hard cap on a single frame (sanity bound against corrupt length
+/// prefixes; far above any real factor-delta payload).
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Which socket family carries the gossip mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// TCP over loopback or LAN — node addresses are `host:port`
+    Tcp,
+    /// Unix-domain sockets — node addresses are filesystem paths
+    Uds,
+}
+
+impl TransportKind {
+    /// CLI/registry name of this transport.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Tcp => "tcp",
+            TransportKind::Uds => "uds",
+        }
+    }
+}
+
+/// Socket timing knobs, straight from the fleet config (milliseconds;
+/// `0` disables the corresponding timeout).
+#[derive(Debug, Clone, Copy)]
+pub struct DialOpts {
+    /// per-connection read timeout
+    pub read_timeout_ms: u64,
+    /// per-connection write timeout
+    pub write_timeout_ms: u64,
+    /// total budget for reaching a peer (dial retries included)
+    pub dial_timeout_ms: u64,
+    /// sleep between dial retries
+    pub backoff_ms: u64,
+}
+
+impl Default for DialOpts {
+    fn default() -> Self {
+        DialOpts {
+            read_timeout_ms: 30_000,
+            write_timeout_ms: 10_000,
+            dial_timeout_ms: 15_000,
+            backoff_ms: 50,
+        }
+    }
+}
+
+fn timeout(ms: u64) -> Option<Duration> {
+    if ms > 0 {
+        Some(Duration::from_millis(ms))
+    } else {
+        None
+    }
+}
+
+/// A bound listening socket for one node's inbound mesh connections.
+#[derive(Debug)]
+pub enum Listener {
+    /// TCP listener plus its bound address (resolves `:0` port requests)
+    Tcp(TcpListener),
+    /// UDS listener plus the socket path it is bound to
+    Uds(UnixListener, String),
+}
+
+impl Listener {
+    /// Bind `addr` under `kind`. A stale UDS socket file left by a
+    /// crashed previous run is removed before binding.
+    pub fn bind(kind: TransportKind, addr: &str) -> anyhow::Result<Listener> {
+        match kind {
+            TransportKind::Tcp => {
+                let l = TcpListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("cannot listen on tcp address {addr}: {e}"))?;
+                Ok(Listener::Tcp(l))
+            }
+            TransportKind::Uds => {
+                if std::fs::metadata(addr).is_ok() {
+                    std::fs::remove_file(addr).map_err(|e| {
+                        anyhow::anyhow!("cannot remove stale socket file {addr}: {e}")
+                    })?;
+                }
+                let l = UnixListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("cannot listen on uds path {addr}: {e}"))?;
+                Ok(Listener::Uds(l, addr.to_string()))
+            }
+        }
+    }
+
+    /// The address peers should dial (for TCP this resolves a `:0` bind
+    /// to the actual port, which the in-process tests rely on).
+    pub fn local_addr(&self) -> anyhow::Result<String> {
+        match self {
+            Listener::Tcp(l) => Ok(l.local_addr()?.to_string()),
+            Listener::Uds(_, path) => Ok(path.clone()),
+        }
+    }
+
+    /// Accept one inbound connection and apply `opts` timeouts to it.
+    pub fn accept(&self, opts: &DialOpts) -> anyhow::Result<Conn> {
+        let mut conn = match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept().map_err(|e| anyhow::anyhow!("accept failed: {e}"))?;
+                Conn::Tcp(s)
+            }
+            Listener::Uds(l, path) => {
+                let (s, _) = l
+                    .accept()
+                    .map_err(|e| anyhow::anyhow!("accept on {path} failed: {e}"))?;
+                Conn::Uds(s)
+            }
+        };
+        conn.set_timeouts(opts)?;
+        Ok(conn)
+    }
+}
+
+/// One established mesh or control connection.
+#[derive(Debug)]
+pub enum Conn {
+    /// a TCP stream
+    Tcp(TcpStream),
+    /// a Unix-domain stream
+    Uds(UnixStream),
+}
+
+impl Conn {
+    /// Apply read/write timeouts (0 = blocking forever).
+    pub fn set_timeouts(&mut self, opts: &DialOpts) -> anyhow::Result<()> {
+        match self {
+            Conn::Tcp(s) => {
+                s.set_read_timeout(timeout(opts.read_timeout_ms))?;
+                s.set_write_timeout(timeout(opts.write_timeout_ms))?;
+            }
+            Conn::Uds(s) => {
+                s.set_read_timeout(timeout(opts.read_timeout_ms))?;
+                s.set_write_timeout(timeout(opts.write_timeout_ms))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn stream(&mut self) -> &mut dyn ReadWrite {
+        match self {
+            Conn::Tcp(s) => s,
+            Conn::Uds(s) => s,
+        }
+    }
+
+    /// Write one pre-encoded frame (length prefix included) verbatim.
+    pub fn send_frame(&mut self, frame: &[u8]) -> std::io::Result<()> {
+        let s = self.stream();
+        s.write_all(frame)?;
+        s.flush()
+    }
+
+    /// Write one NDJSON line (the control channel speaks newline-
+    /// delimited JSON, not frames).
+    pub fn write_line(&mut self, line: &str) -> std::io::Result<()> {
+        let s = self.stream();
+        s.write_all(line.as_bytes())?;
+        s.write_all(b"\n")?;
+        s.flush()
+    }
+
+    /// Read one frame: the u32 LE length prefix, then exactly that many
+    /// bytes (returned without the prefix — ready for
+    /// [`crate::gossip::Message::decode_frame`]).
+    pub fn recv_frame(&mut self) -> anyhow::Result<Vec<u8>> {
+        let s = self.stream();
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len)
+            .map_err(|e| anyhow::anyhow!("reading frame length: {e}"))?;
+        let n = u32::from_le_bytes(len) as usize;
+        anyhow::ensure!(
+            (FRAME_HEADER_BYTES..=MAX_FRAME_BYTES).contains(&n),
+            "frame length {n} outside [{FRAME_HEADER_BYTES}, {MAX_FRAME_BYTES}]"
+        );
+        let mut frame = vec![0u8; n];
+        s.read_exact(&mut frame)
+            .map_err(|e| anyhow::anyhow!("reading {n}-byte frame body: {e}"))?;
+        Ok(frame)
+    }
+}
+
+trait ReadWrite: Read + Write {}
+impl<T: Read + Write> ReadWrite for T {}
+
+/// Dial `addr` under `kind`, retrying with backoff until
+/// `opts.dial_timeout_ms` elapses. The error names the unreachable
+/// address so a misconfigured fleet file is diagnosable from the
+/// message alone.
+pub fn dial(kind: TransportKind, addr: &str, opts: &DialOpts) -> anyhow::Result<Conn> {
+    let deadline = Instant::now() + Duration::from_millis(opts.dial_timeout_ms.max(1));
+    let backoff = Duration::from_millis(opts.backoff_ms.max(1));
+    loop {
+        let attempt = match kind {
+            TransportKind::Tcp => {
+                TcpStream::connect(addr).map(Conn::Tcp).map_err(anyhow::Error::from)
+            }
+            TransportKind::Uds => {
+                UnixStream::connect(addr).map(Conn::Uds).map_err(anyhow::Error::from)
+            }
+        };
+        match attempt {
+            Ok(mut conn) => {
+                conn.set_timeouts(opts)?;
+                return Ok(conn);
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    anyhow::bail!(
+                        "cannot reach peer at {} address {addr} within {}ms: {e}",
+                        kind.name(),
+                        opts.dial_timeout_ms
+                    );
+                }
+                std::thread::sleep(backoff);
+            }
+        }
+    }
+}
+
+/// An outbound mesh connection that survives a peer restart: a failed
+/// send redials (with the configured backoff), replays the HELLO
+/// handshake, and retries the frame once.
+#[derive(Debug)]
+pub struct PeerConn {
+    conn: Conn,
+    kind: TransportKind,
+    addr: String,
+    opts: DialOpts,
+    hello: Vec<u8>,
+}
+
+impl PeerConn {
+    /// Dial `addr` and introduce ourselves with a HELLO frame carrying
+    /// `my_id`, so the accepting node can map this socket to a peer.
+    pub fn connect(
+        kind: TransportKind,
+        addr: &str,
+        opts: &DialOpts,
+        my_id: usize,
+    ) -> anyhow::Result<PeerConn> {
+        let hello = crate::node::control_frame(crate::node::TAG_HELLO, my_id, 0, 0);
+        let mut conn = dial(kind, addr, opts)?;
+        conn.send_frame(&hello)
+            .map_err(|e| anyhow::anyhow!("HELLO to {addr} failed: {e}"))?;
+        Ok(PeerConn { conn, kind, addr: addr.to_string(), opts: *opts, hello })
+    }
+
+    /// Send one frame, transparently reconnecting (redial + HELLO +
+    /// single resend) if the peer restarted under us.
+    pub fn send(&mut self, frame: &[u8]) -> anyhow::Result<()> {
+        if self.conn.send_frame(frame).is_ok() {
+            return Ok(());
+        }
+        let mut conn = dial(self.kind, &self.addr, &self.opts)
+            .map_err(|e| anyhow::anyhow!("reconnect to {} failed: {e:#}", self.addr))?;
+        conn.send_frame(&self.hello)
+            .and_then(|_| conn.send_frame(frame))
+            .map_err(|e| anyhow::anyhow!("resend to {} after reconnect failed: {e}", self.addr))?;
+        self.conn = conn;
+        Ok(())
+    }
+}

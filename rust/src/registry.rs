@@ -30,6 +30,7 @@ use crate::gossip::Aggregator;
 use crate::losses::Loss;
 use crate::net::driver::DriverKind;
 use crate::net::sim::FaultConfig;
+use crate::node::transport::TransportKind;
 use crate::tensor::partition::Partitioner;
 use crate::tensor::synth::SynthConfig;
 use crate::topology::Topology;
@@ -645,8 +646,45 @@ pub fn drivers() -> &'static Registry<DriverKind> {
                 Ok(DriverKind::Async)
             },
         },
+        RegEntry {
+            name: "node",
+            aliases: &["fleet"],
+            help: "one OS process per client over real sockets (cidertf node / fleet)",
+            make: |a| {
+                no_arg("node", a)?;
+                Ok(DriverKind::Node)
+            },
+        },
     ];
     static REG: Registry<DriverKind> = Registry::new("driver", ENTRIES);
+    &REG
+}
+
+// ---- node transports ----
+
+/// Socket transports for the `node` driver (`spec.transport`).
+pub fn transports() -> &'static Registry<TransportKind> {
+    static ENTRIES: &[RegEntry<TransportKind>] = &[
+        RegEntry {
+            name: "tcp",
+            aliases: &[],
+            help: "TCP over loopback or LAN — addr is host:port",
+            make: |a| {
+                no_arg("tcp", a)?;
+                Ok(TransportKind::Tcp)
+            },
+        },
+        RegEntry {
+            name: "uds",
+            aliases: &["unix"],
+            help: "Unix-domain sockets — addr is a filesystem path",
+            make: |a| {
+                no_arg("uds", a)?;
+                Ok(TransportKind::Uds)
+            },
+        },
+    ];
+    static REG: Registry<TransportKind> = Registry::new("transport", ENTRIES);
     &REG
 }
 
@@ -736,6 +774,7 @@ pub fn axis_names() -> Vec<(&'static str, Vec<&'static str>)> {
         ("aggregators", aggregators().names()),
         ("partitioners", partitioners().names()),
         ("drivers", drivers().names()),
+        ("transports", transports().names()),
         ("datasets", datasets().names()),
     ]
 }
@@ -754,6 +793,7 @@ pub fn axis_help() -> Vec<(&'static str, Vec<String>)> {
         ("aggregators", aggregators().help_lines()),
         ("partitioners", partitioners().help_lines()),
         ("drivers", drivers().help_lines()),
+        ("transports", transports().help_lines()),
         ("datasets", datasets().help_lines()),
     ]
 }
@@ -848,6 +888,18 @@ mod tests {
         assert!(aggregators().resolve("mean:0.1").is_err(), "mean takes no argument");
         assert!(partitioners().resolve("site_vocab:-0.1").is_err());
         assert!(partitioners().resolve("skewed:nan").is_err());
+    }
+
+    #[test]
+    fn node_axes_resolve_with_did_you_mean() {
+        assert_eq!(drivers().resolve("node").unwrap(), DriverKind::Node);
+        assert_eq!(drivers().resolve("fleet").unwrap(), DriverKind::Node, "alias");
+        assert_eq!(transports().resolve("tcp").unwrap(), TransportKind::Tcp);
+        assert_eq!(transports().resolve("unix").unwrap(), TransportKind::Uds, "alias");
+        let err = format!("{:#}", transports().resolve("tpc").unwrap_err());
+        assert!(err.contains("did you mean 'tcp'"), "{err}");
+        assert!(err.contains("uds"), "known list missing: {err}");
+        assert!(transports().resolve("tcp:9").is_err(), "no-arg entry must reject ':9'");
     }
 
     #[test]

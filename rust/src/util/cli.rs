@@ -11,15 +11,20 @@ use std::collections::BTreeMap;
 pub struct Args {
     /// subcommand (first non-flag argument), if any
     pub command: Option<String>,
+    /// non-flag arguments after the subcommand (e.g. `fleet spawn`'s
+    /// `spawn`), in order
+    positionals: Vec<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
+    used_positionals: std::cell::Cell<usize>,
 }
 
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
         let mut command = None;
+        let mut positionals = Vec::new();
         let mut opts = BTreeMap::new();
         let mut flags = Vec::new();
         let mut it = args.into_iter().peekable();
@@ -34,9 +39,29 @@ impl Args {
                 }
             } else if command.is_none() {
                 command = Some(a);
+            } else {
+                positionals.push(a);
             }
         }
-        Args { command, opts, flags, consumed: Default::default() }
+        Args {
+            command,
+            positionals,
+            opts,
+            flags,
+            consumed: Default::default(),
+            used_positionals: Default::default(),
+        }
+    }
+
+    /// The `idx`-th positional argument after the subcommand (e.g. the
+    /// `spawn` in `fleet spawn --config f.json` is positional 0).
+    /// Consulting index `idx` marks positionals `0..=idx` as expected,
+    /// so [`Args::finish`] only rejects the genuinely unconsumed tail.
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        if idx + 1 > self.used_positionals.get() {
+            self.used_positionals.set(idx + 1);
+        }
+        self.positionals.get(idx).map(String::as_str)
     }
 
     pub fn from_env() -> Self {
@@ -139,6 +164,13 @@ impl Args {
     /// with a did-you-mean hint against the flags this command actually
     /// consulted.
     pub fn finish(&self) -> anyhow::Result<()> {
+        if self.positionals.len() > self.used_positionals.get() {
+            anyhow::bail!(
+                "unexpected argument{}: {}",
+                if self.positionals.len() - self.used_positionals.get() == 1 { "" } else { "s" },
+                self.positionals[self.used_positionals.get()..].join(", ")
+            );
+        }
         let seen = self.consumed.borrow();
         let unknown: Vec<&String> = self
             .opts
@@ -220,6 +252,21 @@ mod tests {
         let err = format!("{:#}", a.finish().unwrap_err());
         assert!(err.contains("--zzqq"), "{err}");
         assert!(err.contains("--k"), "{err}");
+    }
+
+    #[test]
+    fn positionals_after_the_subcommand() {
+        let a = parse("fleet spawn --config fleet.json");
+        assert_eq!(a.command.as_deref(), Some("fleet"));
+        assert_eq!(a.positional(0), Some("spawn"));
+        assert_eq!(a.positional(1), None);
+        a.get_str("config", "").unwrap();
+        assert!(a.finish().is_ok());
+
+        // an unconsumed positional is an error, not silently dropped
+        let a = parse("train extra");
+        let err = format!("{:#}", a.finish().unwrap_err());
+        assert!(err.contains("unexpected argument") && err.contains("extra"), "{err}");
     }
 
     #[test]

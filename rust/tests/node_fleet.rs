@@ -1,0 +1,158 @@
+//! Deployment-plane integration tests: a loopback fleet of `node`
+//! daemons talking over real sockets must reproduce the in-process sim
+//! driver **bit-for-bit** — the merged fleet checkpoint and the sim
+//! driver's final checkpoint are compared as raw bytes.
+
+use std::path::{Path, PathBuf};
+use std::thread;
+
+use cidertf::engine::checkpoint::{write_checkpoint, SessionState};
+use cidertf::engine::session::Session;
+use cidertf::engine::spec::ExperimentSpec;
+use cidertf::engine::AlgoConfig;
+use cidertf::losses::Loss;
+use cidertf::net::driver::DriverKind;
+use cidertf::node::daemon::run_node_with_listener;
+use cidertf::node::fleet::{merge_outcomes, FleetConfig, NodeAddr};
+use cidertf::node::transport::{DialOpts, Listener, TransportKind};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let base = format!("cidertf_node_fleet_{name}_{}", std::process::id());
+    let dir = std::env::temp_dir().join(base);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn node_spec(k: usize, transport: &str) -> ExperimentSpec {
+    ExperimentSpec::builder("tiny", Loss::Logit, AlgoConfig::cidertf(2))
+        .k(k)
+        .rank(4)
+        .fiber_samples(16)
+        .gamma(0.5)
+        .iters_per_epoch(12)
+        .epochs(1)
+        .eval_batch(64)
+        .driver(DriverKind::Node)
+        .transport(transport)
+        .build()
+        .unwrap()
+}
+
+/// Bind one listener per node (OS-assigned TCP ports / per-test UDS
+/// paths), run every node on its own thread, and merge the outcomes.
+fn run_fleet(
+    spec: &ExperimentSpec,
+    kind: TransportKind,
+    dir: &Path,
+) -> (ExperimentSpec, SessionState) {
+    let mut listeners = Vec::new();
+    let mut nodes = Vec::new();
+    for id in 0..spec.k {
+        let addr = match kind {
+            TransportKind::Tcp => "127.0.0.1:0".to_string(),
+            TransportKind::Uds => dir.join(format!("node{id}.sock")).display().to_string(),
+        };
+        let l = Listener::bind(kind, &addr).unwrap();
+        nodes.push(NodeAddr { id, addr: l.local_addr().unwrap() });
+        listeners.push(l);
+    }
+    let d = DialOpts::default();
+    let cfg = FleetConfig {
+        spec: spec.clone(),
+        nodes,
+        read_timeout_ms: d.read_timeout_ms,
+        write_timeout_ms: d.write_timeout_ms,
+        dial_timeout_ms: d.dial_timeout_ms,
+        backoff_ms: d.backoff_ms,
+    };
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(id, l)| {
+            let cfg = cfg.clone();
+            thread::spawn(move || run_node_with_listener(&cfg, id, l, None))
+        })
+        .collect();
+    let mut outcomes = Vec::new();
+    for (id, h) in handles.into_iter().enumerate() {
+        match h.join().expect("node thread panicked") {
+            Ok(o) => outcomes.push(o),
+            Err(e) => panic!("node {id} failed: {e:#}"),
+        }
+    }
+    merge_outcomes(spec, &outcomes).unwrap()
+}
+
+fn sim_checkpoint(spec: &ExperimentSpec, path: &Path) {
+    let mut sim_spec = spec.clone();
+    sim_spec.driver = DriverKind::Sim;
+    Session::new(sim_spec).checkpoint_every(path, 1).run().unwrap();
+}
+
+#[test]
+fn tcp_fleet_checkpoint_matches_sim_driver_bytes() {
+    let dir = tmp_dir("tcp");
+    let spec = node_spec(3, "tcp");
+
+    let (merged_spec, state) = run_fleet(&spec, TransportKind::Tcp, &dir);
+    let fleet_ckpt = dir.join("fleet.ckpt.json");
+    write_checkpoint(&fleet_ckpt, &merged_spec, &state).unwrap();
+
+    let sim_ckpt = dir.join("sim.ckpt.json");
+    sim_checkpoint(&spec, &sim_ckpt);
+
+    let fleet_bytes = std::fs::read(&fleet_ckpt).unwrap();
+    let sim_bytes = std::fs::read(&sim_ckpt).unwrap();
+    assert!(
+        fleet_bytes == sim_bytes,
+        "3-node TCP fleet checkpoint differs from the sim driver's ({} vs {} bytes)",
+        fleet_bytes.len(),
+        sim_bytes.len()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn uds_fleet_checkpoint_matches_sim_driver_bytes() {
+    let dir = tmp_dir("uds");
+    let spec = node_spec(2, "uds");
+
+    let (merged_spec, state) = run_fleet(&spec, TransportKind::Uds, &dir);
+    let fleet_ckpt = dir.join("fleet.ckpt.json");
+    write_checkpoint(&fleet_ckpt, &merged_spec, &state).unwrap();
+
+    let sim_ckpt = dir.join("sim.ckpt.json");
+    sim_checkpoint(&spec, &sim_ckpt);
+
+    assert!(
+        std::fs::read(&fleet_ckpt).unwrap() == std::fs::read(&sim_ckpt).unwrap(),
+        "2-node UDS fleet checkpoint differs from the sim driver's"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn dial_error_names_the_unreachable_address() {
+    // a port that was just released — nothing listens there
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let l0 = Listener::bind(TransportKind::Tcp, "127.0.0.1:0").unwrap();
+    let addr0 = l0.local_addr().unwrap();
+    let cfg = FleetConfig {
+        spec: node_spec(2, "tcp"),
+        nodes: vec![
+            NodeAddr { id: 0, addr: addr0 },
+            NodeAddr { id: 1, addr: dead.clone() },
+        ],
+        read_timeout_ms: 1_000,
+        write_timeout_ms: 1_000,
+        dial_timeout_ms: 200,
+        backoff_ms: 20,
+    };
+    let err = format!("{:#}", run_node_with_listener(&cfg, 0, l0, None).unwrap_err());
+    assert!(err.contains("cannot reach peer"), "{err}");
+    assert!(err.contains(&dead), "error must name the unreachable address: {err}");
+    assert!(err.contains("connecting to node 1"), "{err}");
+}

@@ -107,6 +107,7 @@ fn gen_spec(rng: &mut Rng) -> ExperimentSpec {
         aggregator,
         adversary,
         driver,
+        transport: if rng.bernoulli(0.5) { "tcp" } else { "uds" }.to_string(),
         backend: if rng.bernoulli(0.8) { "native" } else { "pjrt" }.to_string(),
         eval_every: 1 + rng.below(3),
         stop: StopRule {
