@@ -26,6 +26,18 @@
 //! specs replace it with the run seed at materialization (same
 //! inheritance rule as [`crate::net::sim::FaultConfig`]), so two runs
 //! differing only in `seed` get different Byzantine subsets.
+//!
+//! # Allocation discipline
+//!
+//! The per-iteration compute loop is allocation-free in steady state
+//! (gated by `tests/alloc_free.rs`); corruption runs on the per-round
+//! *publish* path, which already materializes wire payloads. Within
+//! that budget: `sign_flip` corrupts strictly in place (it negates a
+//! dense/top-k buffer or the sign payload's scale — zero allocations);
+//! `scaled_noise` and `stale_replay` decode one dense matrix per
+//! corrupted payload, the same order of traffic the publish encoding
+//! itself performs. None of the attacks allocate on iterations where
+//! no gossip round fires.
 
 use std::collections::{BTreeMap, VecDeque};
 

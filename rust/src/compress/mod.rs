@@ -23,6 +23,7 @@
 //! | `Zero`  | nothing — a header-only message | `0` |
 
 use crate::util::mat::Mat;
+use crate::util::simd;
 
 /// A compressed factor-update message payload.
 #[derive(Debug, Clone)]
@@ -90,16 +91,11 @@ impl Payload {
         match self {
             Payload::Dense(v) => {
                 assert_eq!(v.len(), n);
-                for (t, &x) in target.data.iter_mut().zip(v.iter()) {
-                    *t += x;
-                }
+                simd::add_assign(simd::level(), v, &mut target.data);
             }
             Payload::Sign { scale, bits, len } => {
                 assert_eq!(*len, n);
-                for (i, t) in target.data.iter_mut().enumerate() {
-                    let bit = (bits[i >> 3] >> (i & 7)) & 1;
-                    *t += if bit == 1 { *scale } else { -*scale };
-                }
+                simd::sign_decode_add(simd::level(), *scale, bits, &mut target.data);
             }
             Payload::TopK { indices, values, len } => {
                 assert_eq!(*len, n);
@@ -282,11 +278,7 @@ impl Compressor {
                 // empty matrix so the scale stays finite
                 let scale = if n == 0 { 0.0 } else { (m.l1() / n as f64) as f32 };
                 let mut bits = vec![0u8; n.div_ceil(8)];
-                for (i, &v) in m.data.iter().enumerate() {
-                    if v >= 0.0 {
-                        bits[i >> 3] |= 1 << (i & 7);
-                    }
-                }
+                simd::sign_pack(simd::level(), &m.data, &mut bits);
                 Payload::Sign { scale, bits, len: n }
             }
             Compressor::TopK { ratio } => {

@@ -231,10 +231,11 @@ impl ClientState {
         if self.xs_buf.len() < i_dim * s_dim {
             self.xs_buf.resize(i_dim * s_dim, 0.0);
         }
-        self.shard.indices.mode(mode).gather_slice(
+        self.shard.indices.mode(mode).gather_slice_threads(
             &self.fiber_buf,
             i_dim,
             &mut self.xs_buf[..i_dim * s_dim],
+            backend.threads(),
         );
 
         // row gathers of the other modes (L3 hot path #2)

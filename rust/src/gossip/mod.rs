@@ -289,6 +289,7 @@ impl EstimateState {
         weights_row: &[f64],
         rho: f64,
     ) {
+        let lv = crate::util::simd::level();
         let self_hat = self.self_estimate(mode);
         for &j in neighbors {
             let w = (rho * weights_row[j]) as f32;
@@ -297,11 +298,9 @@ impl EstimateState {
             }
             let hat_j = self.estimate(j, mode);
             debug_assert_eq!(hat_j.rows, a.rows);
-            for ((av, &hj), &hk) in
-                a.data.iter_mut().zip(hat_j.data.iter()).zip(self_hat.data.iter())
-            {
-                *av += w * (hj - hk);
-            }
+            // elementwise a += w * (hj - hk); bit-identical at every SIMD
+            // level (see util::simd)
+            crate::util::simd::scaled_diff_acc(lv, w, &hat_j.data, &self_hat.data, &mut a.data);
         }
     }
 }

@@ -104,6 +104,15 @@ impl Aggregator {
     }
 }
 
+std::thread_local! {
+    /// Reused per-thread scratch for [`robust_step`]: the per-coordinate
+    /// value buffer and the neighbor→estimate-slot map. Both keep their
+    /// capacity across calls, so a robust consensus round allocates
+    /// nothing in steady state (gated by `tests/alloc_free.rs`).
+    static ROBUST_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<usize>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
 /// `a += ϱ (Σ_j w_kj) (center(values) − Â^k)` per coordinate, with
 /// `values = [Â^k, Â^j...]` collected in fixed (self, neighbor) order.
 fn robust_step(
@@ -122,18 +131,26 @@ fn robust_step(
     if c == 0.0 || neighbors.is_empty() {
         return;
     }
-    let hats: Vec<&Mat> = neighbors.iter().map(|&j| est.estimate(j, mode)).collect();
-    debug_assert!(hats.iter().all(|h| h.data.len() == a.data.len()));
-    let mut vals = Vec::with_capacity(hats.len() + 1);
-    for (i, av) in a.data.iter_mut().enumerate() {
-        vals.clear();
-        let vk = self_hat.data[i];
-        vals.push(vk);
-        for h in &hats {
-            vals.push(h.data[i]);
+    ROBUST_SCRATCH.with(|cell| {
+        let (vals, slots) = &mut *cell.borrow_mut();
+        // neighbor → estimate slot, resolved once per call (a `Vec<&Mat>`
+        // here would allocate every round — this fold sits on the per-mode
+        // per-round hot path now)
+        slots.clear();
+        slots.extend(neighbors.iter().map(|&j| est.slot_of(j)));
+        debug_assert!(slots.iter().all(|&s| {
+            est.mats[s][mode].as_ref().is_some_and(|h| h.data.len() == a.data.len())
+        }));
+        for (i, av) in a.data.iter_mut().enumerate() {
+            vals.clear();
+            let vk = self_hat.data[i];
+            vals.push(vk);
+            for &s in slots.iter() {
+                vals.push(est.mats[s][mode].as_ref().expect("untracked mode").data[i]);
+            }
+            *av += c * (center(vals) - vk);
         }
-        *av += c * (center(&mut vals) - vk);
-    }
+    });
 }
 
 /// β-trimmed mean: sort (NaN last), drop `⌊β·n⌋` from each end, mean the

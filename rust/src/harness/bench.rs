@@ -2,12 +2,16 @@
 //!
 //! Runs the L3 hot-path micro-benchmarks (slice gather, Khatri-Rao row
 //! gather, sign codec, consensus AXPY), the gradient kernel in **both**
-//! its pre-blocked naive form and the blocked allocation-free form, and
-//! the sparse slice gather in **both** its CSF form and the historical
-//! HashMap-COO form (so each run measures both speedups on the same
-//! machine in the same process), plus one end-to-end training-round
-//! benchmark, then appends the results to `BENCH.json` at the repo root
-//! (schema [`crate::util::benchkit::BENCH_SCHEMA`]).
+//! its pre-blocked naive form and the blocked allocation-free form, the
+//! sparse slice gather in **both** its CSF form and the historical
+//! HashMap-COO form, the SIMD-dispatched kernels against their scalar
+//! pins, and the persistent-pool gradient against the frozen scoped-spawn
+//! baseline (so each run measures every speedup on the same machine in
+//! the same process), plus one end-to-end training-round benchmark, then
+//! appends the results to `BENCH.json` at the repo root (schema
+//! [`crate::util::benchkit::BENCH_SCHEMA`]). Full mode adds paper-scale
+//! patient modes (`i = 1e5, 1e6`) comparing the single-thread and
+//! 4-thread pooled gradient.
 //!
 //! `--smoke` shrinks sizes and durations to CI scale (tiny tensor); the
 //! full mode gathers over the `synthetic` and `mimic_like` tensors.
@@ -34,8 +38,9 @@ use crate::tensor::SparseTensor;
 use crate::util::benchkit::{append_bench_json, bench, BenchRun, BENCH_SCHEMA};
 use crate::util::cli::Args;
 use crate::util::json::Json;
-use crate::util::mat::Mat;
+use crate::util::mat::{gemm_transb_into_l, Mat};
 use crate::util::rng::Rng;
+use crate::util::simd::{self, Level};
 
 /// The pre-CSF fiber lookup (HashMap over COO groups), preserved here as
 /// the gather reference so every bench run records the CSF speedup
@@ -117,7 +122,11 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let (i_dim, s_dim, r_dim, ms) =
         if smoke { (64, 32, 8, 25u64) } else { (512, 128, 32, 400u64) };
     let mode = if smoke { "smoke" } else { "full" };
-    println!("bench mode={mode}  grad shape i={i_dim} s={s_dim} r={r_dim}  threads={threads}\n");
+    println!(
+        "bench mode={mode}  grad shape i={i_dim} s={s_dim} r={r_dim}  threads={threads}  \
+         simd={}\n",
+        simd::level().name()
+    );
 
     let mut rng = Rng::new(0xBE7C);
     let a = Mat::rand_uniform(i_dim, r_dim, 0.3, &mut rng);
@@ -178,9 +187,99 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         target.axpy(0.33, &delta)
     }));
 
-    // --- threading: the standard shapes sit below the row-panel pool's
-    // engagement threshold (i >= 2048), so with --threads > 1 also bench
-    // a tall shape where the scoped pool actually runs ---
+    // --- SIMD vs scalar: the dispatched kernel level against the same
+    // kernel pinned to the scalar lanes, same buffers, same process (the
+    // third perf-gate pair). gemm_transb is the dot-product-bound kernel
+    // where the lanes pay off; the sign pack pair covers the byte-output
+    // compress kernel. ---
+    let lv = simd::level();
+    let gemm_simd = bench(&format!("gemm_transb_simd_{i_dim}x{s_dim}x{r_dim}"), ms / 2, || {
+        gemm_transb_into_l(lv, &a.data, &h.data, &mut m_buf.data, i_dim, s_dim, r_dim)
+    });
+    let gemm_scalar =
+        bench(&format!("gemm_transb_scalar_{i_dim}x{s_dim}x{r_dim}"), ms / 2, || {
+            gemm_transb_into_l(
+                Level::Scalar,
+                &a.data,
+                &h.data,
+                &mut m_buf.data,
+                i_dim,
+                s_dim,
+                r_dim,
+            )
+        });
+    let simd_speedup = gemm_scalar.mean_ns / gemm_simd.mean_ns.max(1.0);
+    benches.push(gemm_simd);
+    benches.push(gemm_scalar);
+    let mut pack_bits = vec![0u8; (s_dim * r_dim).div_ceil(8)];
+    benches.push(bench(&format!("sign_pack_simd_{s_dim}x{r_dim}"), ms / 4, || {
+        pack_bits.fill(0);
+        simd::sign_pack(lv, &delta.data, &mut pack_bits)
+    }));
+    benches.push(bench(&format!("sign_pack_scalar_{s_dim}x{r_dim}"), ms / 4, || {
+        pack_bits.fill(0);
+        simd::sign_pack(Level::Scalar, &delta.data, &mut pack_bits)
+    }));
+
+    // --- persistent pool vs the frozen PR 2 scoped-spawn gradient, both
+    // at 4 threads on a pool-engaging tall shape (the fourth perf-gate
+    // pair: what the persistent workers buy over per-call spawns) ---
+    let pool_speedup = {
+        let (pi, ps, pr) = (4096usize, 64usize, 16usize);
+        let pa = Mat::rand_uniform(pi, pr, 0.3, &mut rng);
+        let pus: Vec<Mat> = (0..2).map(|_| Mat::rand_uniform(ps, pr, 0.3, &mut rng)).collect();
+        let pu_refs: Vec<&Mat> = pus.iter().collect();
+        let pxs: Vec<f32> =
+            (0..pi * ps).map(|_| if rng.bernoulli(0.25) { 1.0 } else { 0.0 }).collect();
+        let pscale = 1.0 / ps as f32;
+        let mut pout = Mat::zeros(pi, pr);
+        let mut pbe = NativeBackend::with_threads(4);
+        let pooled = bench(&format!("grad_pool_4threads_i{pi}_s{ps}_r{pr}"), ms / 2, || {
+            pbe.grad_into(Loss::Ls, &pxs, pi, ps, &pa, &pus, pscale, &mut pout).unwrap()
+        });
+        let spawned = bench(&format!("grad_spawn_4threads_i{pi}_s{ps}_r{pr}"), ms / 2, || {
+            pbe.grad_spawn_reference(Loss::Ls, &pxs, pi, ps, &pa, &pu_refs, pscale, 4)
+        });
+        let s = spawned.mean_ns / pooled.mean_ns.max(1.0);
+        benches.push(pooled);
+        benches.push(spawned);
+        s
+    };
+
+    // --- large patient modes (paper-scale I), smoke-skipped: the
+    // single-thread blocked kernel vs the 4-thread pooled kernel on the
+    // same buffers. These are the shapes where the pool's row panels and
+    // the SIMD lanes both engage. ---
+    let mut derived_large: Vec<(String, f64)> = Vec::new();
+    if !smoke {
+        for (li, ls, lr) in [(100_000usize, 128usize, 32usize), (1_000_000, 16, 8)] {
+            let la = Mat::rand_uniform(li, lr, 0.3, &mut rng);
+            let lus: Vec<Mat> =
+                (0..2).map(|_| Mat::rand_uniform(ls, lr, 0.3, &mut rng)).collect();
+            let lxs: Vec<f32> =
+                (0..li * ls).map(|_| if rng.bernoulli(0.05) { 1.0 } else { 0.0 }).collect();
+            let lscale = 1.0 / ls as f32;
+            let mut lout = Mat::zeros(li, lr);
+            let mut one = NativeBackend::new();
+            let single = bench(&format!("grad_blocked_ls_i{li}_s{ls}_r{lr}"), ms, || {
+                one.grad_into(Loss::Ls, &lxs, li, ls, &la, &lus, lscale, &mut lout).unwrap()
+            });
+            let mut four = NativeBackend::with_threads(4);
+            let pooled = bench(&format!("grad_pool_4threads_i{li}_s{ls}_r{lr}"), ms, || {
+                four.grad_into(Loss::Ls, &lxs, li, ls, &la, &lus, lscale, &mut lout).unwrap()
+            });
+            derived_large.push((
+                format!("grad_speedup_pool4_vs_1thread_i{li}"),
+                single.mean_ns / pooled.mean_ns.max(1.0),
+            ));
+            benches.push(single);
+            benches.push(pooled);
+        }
+    }
+
+    // --- threading: with --threads > 1 also bench a tall shape where
+    // the persistent pool is far past its engagement threshold
+    // (`pool::thresholds::GRAD_PAR_MIN_ROWS` rows) ---
     if threads > 1 {
         let (ti, ts) = (4096usize, 64usize);
         let ta = Mat::rand_uniform(ti, r_dim, 0.3, &mut rng);
@@ -273,7 +372,10 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let mut derived = vec![
         ("grad_speedup_blocked_vs_naive".to_string(), speedup),
         ("gather_speedup_csf_vs_hashmap".to_string(), gather_speedup),
+        ("simd_speedup_vs_scalar".to_string(), simd_speedup),
+        ("pool_speedup_vs_spawn".to_string(), pool_speedup),
     ];
+    derived.append(&mut derived_large);
     if let Some(prev) = prev_e2e {
         derived.push(("e2e_speedup_vs_prev_run".to_string(), prev / e2e.mean_ns.max(1.0)));
     }
@@ -284,6 +386,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         crate::util::benchkit::fmt_ns(naive.mean_ns),
         crate::util::benchkit::fmt_ns(blocked.mean_ns));
     println!("gather CSF vs hashmap: {gather_speedup:.2}x (dense layout: {})", fi.is_dense());
+    println!("gemm SIMD ({}) vs scalar: {simd_speedup:.2}x", lv.name());
+    println!("grad pool vs scoped spawn (4 threads): {pool_speedup:.2}x");
     if let Some(prev) = prev_e2e {
         println!(
             "e2e round vs previous recorded run: {:.2}x ({} -> {})",

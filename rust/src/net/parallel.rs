@@ -81,6 +81,9 @@ where
     #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
 
+    // lint: allow(raw-thread-spawn) — K barrier-synchronized client threads
+    // that must all run concurrently; scheduling them as pool jobs would
+    // deadlock the shared pool at the first barrier wait
     let results: Vec<anyhow::Result<(ClientState, Vec<f64>)>> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(k_clients);
         for (id, mut client) in initial_clients.into_iter().enumerate() {

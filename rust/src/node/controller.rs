@@ -167,6 +167,9 @@ fn drive(
             Ok((stream, _)) => {
                 stream.set_nonblocking(false)?;
                 let tx = tx.clone();
+                // lint: allow(raw-thread-spawn) — long-lived per-node control
+                // reader blocked on socket I/O for the whole fleet run; the
+                // shared compute pool must never host blocking reads
                 std::thread::spawn(move || {
                     for line in BufReader::new(stream).lines() {
                         let sent = match line {

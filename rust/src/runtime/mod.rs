@@ -11,6 +11,7 @@
 //! differential testing and artifact-free unit tests.
 
 pub mod native;
+pub mod pool;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -138,10 +139,19 @@ pub trait ComputeBackend {
 
     /// Hint how many compute threads the backend may use for one gradient
     /// call (`TrainConfig::compute_threads`). Backends without a threaded
-    /// path ignore it; the native backend tiles row panels across a scoped
-    /// pool when `threads > 1` (gradients stay bit-identical — see
-    /// `runtime::native`).
+    /// path ignore it; the native backend tiles row panels across the
+    /// persistent worker pool (`runtime::pool`) when `threads > 1`
+    /// (gradients stay bit-identical — see `runtime::native`).
     fn set_threads(&mut self, _threads: usize) {}
+
+    /// How many compute threads this backend will use (what
+    /// [`ComputeBackend::set_threads`] last established). Consumers that
+    /// parallelize work *around* the backend — e.g. the engine's fiber
+    /// gathers — size their `parallel_for` calls from this so one
+    /// `--threads` knob governs the whole step.
+    fn threads(&self) -> usize {
+        1
+    }
 
     fn name(&self) -> &'static str;
 }

@@ -22,30 +22,50 @@
 //! the blocked kernels, the gradient is **bit-identical regardless of
 //! panel boundaries or thread count** (see
 //! `blocked_transb_cells_are_tiling_invariant` in `util::mat`). The
-//! monitoring loss sum is reduced panel-major; with `threads > 1` the
-//! per-chunk partials are added in chunk order, which can differ from the
-//! single-thread running sum in the last ulp — which is why the
-//! deterministic engine default is `threads = 1`
-//! (`TrainConfig::compute_threads`).
+//! monitoring loss sum is bit-identical too: every path — single-thread
+//! or pooled — produces one `f64` partial per [`PANEL`]-row panel and the
+//! calling thread left-folds the partials in panel order, so the
+//! reduction tree never depends on the thread count. Threaded runs are
+//! therefore byte-for-byte reproductions of the `threads = 1` default
+//! (`TrainConfig::compute_threads`), which is what lets CI run the whole
+//! suite under `CIDERTF_THREADS=4`.
+//!
+//! Threading runs on the persistent worker pool (`runtime::pool`) —
+//! parked threads reused across calls and sessions — and engages at the
+//! measured-crossover thresholds in `pool::thresholds` instead of PR 2's
+//! hard-coded `i >= 2048` scoped-spawn cutoff.
 
+use super::pool;
 use super::ComputeBackend;
 use crate::losses::Loss;
 use crate::util::mat::{self, Mat};
+use std::sync::OnceLock;
 
 /// Rows per gradient panel: `PANEL x s` f32 scratch (32 x 256 = 32 kB)
 /// stays comfortably inside L1/L2 next to the `[s, R]` Hadamard matrix.
 const PANEL: usize = 32;
 
-/// Minimum `i` rows per worker before the scoped pool is engaged.
-///
-/// Workers are `std::thread::scope`-spawned per gradient call (simple and
-/// safe without crates-io thread-pool deps), which costs tens of
-/// microseconds of spawn + per-worker scratch per call. At 1024 rows a
-/// worker's kernel time is hundreds of microseconds, so the overhead is
-/// amortized; below the threshold the call silently runs single-thread,
-/// which is faster anyway. A persistent pool would lower this threshold
-/// and is the natural next step if mid-sized shards need threading.
-const MIN_ROWS_PER_THREAD: usize = 1024;
+/// `CIDERTF_THREADS` floor on the backend's thread count (parsed once).
+/// CI sets it to force the pool path across the whole test suite; that
+/// is safe precisely because threaded outputs are bit-identical to
+/// single-thread (see the module docs).
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("CIDERTF_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(1)
+            .max(1)
+    })
+}
+
+std::thread_local! {
+    /// Per-thread `[PANEL, s]` M/Y panel scratch for pooled gradient
+    /// jobs: workers are persistent, so after warmup the threaded path
+    /// stops allocating scratch too.
+    static PANEL_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
 
 /// Native (no-PJRT) compute backend.
 #[derive(Debug)]
@@ -54,7 +74,10 @@ pub struct NativeBackend {
     h_scratch: Mat,
     /// reused `[PANEL, s]` M/Y panel scratch (single-thread path)
     panel: Vec<f32>,
-    /// row-panel worker threads (1 = deterministic default)
+    /// per-panel loss partials (threaded path), folded in panel order
+    loss_slots: Vec<f64>,
+    /// row-panel worker threads (1 = deterministic default; floored by
+    /// `CIDERTF_THREADS`)
     threads: usize,
 }
 
@@ -66,14 +89,19 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> Self {
-        NativeBackend { h_scratch: Mat::zeros(0, 0), panel: Vec::new(), threads: 1 }
+        NativeBackend {
+            h_scratch: Mat::zeros(0, 0),
+            panel: Vec::new(),
+            loss_slots: Vec::new(),
+            threads: env_threads(),
+        }
     }
 
     /// Backend with `threads` row-panel workers (see
     /// [`ComputeBackend::set_threads`]).
     pub fn with_threads(threads: usize) -> Self {
         let mut b = Self::new();
-        b.threads = threads.max(1);
+        b.threads = threads.max(1).max(env_threads());
         b
     }
 
@@ -121,12 +149,12 @@ impl NativeBackend {
             *out = Mat::zeros(i_dim, r_dim);
         }
         out.fill(0.0);
-        let NativeBackend { h_scratch, panel, threads } = self;
+        let NativeBackend { h_scratch, panel, loss_slots, threads } = self;
         let h = &h_scratch.data;
         let a_data = &a.data;
 
-        let n_threads = if i_dim >= 2 * MIN_ROWS_PER_THREAD {
-            (*threads).min(i_dim / MIN_ROWS_PER_THREAD).max(1)
+        let n_threads = if i_dim >= pool::thresholds::GRAD_PAR_MIN_ROWS {
+            (*threads).min(i_dim / pool::thresholds::GRAD_MIN_ROWS_PER_THREAD).max(1)
         } else {
             1
         };
@@ -154,52 +182,131 @@ impl NativeBackend {
                 i0 += p;
             }
         } else {
-            // contiguous panel-aligned row chunks, one scoped thread each;
-            // each worker owns its panel scratch (threaded mode allocates
-            // one scratch per worker per call — the deterministic
-            // single-thread default stays allocation-free)
+            // contiguous panel-aligned row chunks on the persistent pool:
+            // each job owns a disjoint slice of `out` and writes one f64
+            // loss partial per panel into `loss_slots`, which the calling
+            // thread folds in panel order below — the same left fold the
+            // single-thread loop performs, so both G and the loss sum are
+            // bit-identical at every thread count
             let panels_total = i_dim.div_ceil(PANEL);
-            let rows_per = panels_total.div_ceil(n_threads) * PANEL;
-            std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(n_threads);
-                let mut rest: &mut [f32] = &mut out.data;
-                let mut i0 = 0usize;
-                while i0 < i_dim {
-                    let take = rows_per.min(i_dim - i0);
-                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * r_dim);
-                    rest = tail;
-                    let start = i0;
-                    handles.push(scope.spawn(move || {
-                        let mut scratch = vec![0.0f32; PANEL.min(take) * s_dim];
-                        let mut ls = 0.0f64;
-                        let mut off = 0;
-                        while off < take {
-                            let p = PANEL.min(take - off);
-                            ls += panel_step(
-                                loss,
-                                xs,
-                                start + off,
-                                p,
-                                s_dim,
-                                r_dim,
-                                a_data,
-                                h,
-                                &mut scratch[..p * s_dim],
-                                &mut chunk[off * r_dim..(off + p) * r_dim],
-                            );
-                            off += p;
+            let panels_per_job = panels_total.div_ceil(n_threads);
+            let n_jobs = panels_total.div_ceil(panels_per_job);
+            loss_slots.clear();
+            loss_slots.resize(panels_total, 0.0);
+            let out_ptr = pool::SendPtr::new(out.data.as_mut_ptr());
+            let slot_ptr = pool::SendPtr::new(loss_slots.as_mut_ptr());
+            pool::parallel_for(n_threads, n_jobs, &|job| {
+                let p_start = job * panels_per_job;
+                let p_end = (p_start + panels_per_job).min(panels_total);
+                PANEL_SCRATCH.with(|cell| {
+                    let mut scratch = cell.borrow_mut();
+                    if scratch.len() < PANEL * s_dim {
+                        scratch.resize(PANEL * s_dim, 0.0);
+                    }
+                    for pi in p_start..p_end {
+                        let i0 = pi * PANEL;
+                        let p = PANEL.min(i_dim - i0);
+                        // SAFETY: panel `pi` belongs to exactly one job,
+                        // so the `[i0*r, (i0+p)*r)` output range and loss
+                        // slot `pi` are written by exactly one thread;
+                        // both buffers outlive the parallel_for call
+                        let g = unsafe {
+                            std::slice::from_raw_parts_mut(out_ptr.get().add(i0 * r_dim), p * r_dim)
+                        };
+                        let ls = panel_step(
+                            loss,
+                            xs,
+                            i0,
+                            p,
+                            s_dim,
+                            r_dim,
+                            a_data,
+                            h,
+                            &mut scratch[..p * s_dim],
+                            g,
+                        );
+                        unsafe {
+                            *slot_ptr.get().add(pi) = ls;
                         }
-                        ls
-                    }));
-                    i0 += take;
-                }
-                for handle in handles {
-                    loss_sum += handle.join().expect("panel worker panicked");
-                }
+                    }
+                });
             });
+            for &ls in loss_slots.iter() {
+                loss_sum += ls;
+            }
         }
         out.scale(scale);
         loss_sum
+    }
+
+    /// The PR 2 scoped-spawn threaded gradient, kept as the measurement
+    /// baseline for the `pool_speedup_vs_spawn` bench metric (spawns
+    /// `n_threads` OS threads and allocates per-worker scratch on every
+    /// call — exactly the costs the persistent pool removes).
+    #[doc(hidden)]
+    #[allow(clippy::too_many_arguments)]
+    pub fn grad_spawn_reference(
+        &mut self,
+        loss: Loss,
+        xs: &[f32],
+        i_dim: usize,
+        s_dim: usize,
+        a: &Mat,
+        us: &[&Mat],
+        scale: f32,
+        n_threads: usize,
+    ) -> (Mat, f64) {
+        assert_eq!(xs.len(), i_dim * s_dim, "xs shape mismatch");
+        self.hadamard_into(us[0], us[1..].iter().copied());
+        let h = &self.h_scratch.data;
+        let a_data = &a.data;
+        let r_dim = a.cols;
+        let mut out = Mat::zeros(i_dim, r_dim);
+        let mut loss_sum = 0.0f64;
+        let panels_total = i_dim.div_ceil(PANEL);
+        let rows_per = panels_total.div_ceil(n_threads.max(1)) * PANEL;
+        // lint: allow(raw-thread-spawn) — frozen PR 2 baseline kept only so
+        // the bench can measure the pool's win; production paths use
+        // runtime::pool::parallel_for
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_threads);
+            let mut rest: &mut [f32] = &mut out.data;
+            let mut i0 = 0usize;
+            while i0 < i_dim {
+                let take = rows_per.min(i_dim - i0);
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * r_dim);
+                rest = tail;
+                let start = i0;
+                handles.push(scope.spawn(move || {
+                    let mut scratch = vec![0.0f32; PANEL.min(take) * s_dim];
+                    let mut ls = 0.0f64;
+                    let mut off = 0;
+                    while off < take {
+                        let p = PANEL.min(take - off);
+                        ls += panel_step(
+                            loss,
+                            xs,
+                            start + off,
+                            p,
+                            s_dim,
+                            r_dim,
+                            a_data,
+                            h,
+                            &mut scratch[..p * s_dim],
+                            &mut chunk[off * r_dim..(off + p) * r_dim],
+                        );
+                        off += p;
+                    }
+                    ls
+                }));
+                i0 += take;
+            }
+            for handle in handles {
+                loss_sum += handle.join().expect("panel worker panicked");
+            }
+        });
+        out.scale(scale);
+        (out, loss_sum)
     }
 
     /// The pre-blocked scalar reference kernel (rowwise dots, allocates
@@ -332,7 +439,11 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn set_threads(&mut self, threads: usize) {
-        self.threads = threads.max(1);
+        self.threads = threads.max(1).max(env_threads());
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
     }
 
     fn eval(&mut self, loss: Loss, x: &[f32], us: &[&Mat]) -> anyhow::Result<f64> {
@@ -444,22 +555,45 @@ mod tests {
     }
 
     #[test]
-    fn threads_do_not_change_gradient() {
+    fn threads_do_not_change_gradient_or_loss() {
         // the lane-deterministic kernels make G bit-identical across
-        // thread counts; the loss sum may differ only in rounding
+        // thread counts, and the per-panel loss slots folded in panel
+        // order make the loss sum bit-identical too — at every width
         let mut rng = Rng::new(27);
-        let (i, s, r) = (4 * MIN_ROWS_PER_THREAD, 16, 4);
+        // non-multiple of PANEL so the last panel is ragged
+        let (i, s, r) = (4 * pool::thresholds::GRAD_PAR_MIN_ROWS + 37, 16, 4);
         let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32()).collect();
         let a = randmat(i, r, &mut rng);
         let us: Vec<Mat> = (0..2).map(|_| randmat(s, r, &mut rng)).collect();
         let mut out1 = Mat::zeros(i, r);
-        let mut out4 = Mat::zeros(i, r);
         let mut be1 = NativeBackend::new();
+        be1.threads = 1; // pin below any CIDERTF_THREADS floor: the reference
         let l1 = be1.grad_into(Loss::Ls, &xs, i, s, &a, &us, 1.0, &mut out1).unwrap();
-        let mut be4 = NativeBackend::with_threads(4);
-        let l4 = be4.grad_into(Loss::Ls, &xs, i, s, &a, &us, 1.0, &mut out4).unwrap();
-        assert_eq!(out1.data, out4.data, "thread count changed the gradient");
-        assert!((l1 - l4).abs() / l1.abs().max(1.0) < 1e-12, "{l1} vs {l4}");
+        for threads in [2, 4, 8] {
+            let mut out_t = Mat::zeros(i, r);
+            let mut be_t = NativeBackend::with_threads(threads);
+            let l_t = be_t.grad_into(Loss::Ls, &xs, i, s, &a, &us, 1.0, &mut out_t).unwrap();
+            assert_eq!(out1.data, out_t.data, "{threads} threads changed the gradient");
+            assert_eq!(l1.to_bits(), l_t.to_bits(), "{threads} threads changed the loss sum");
+        }
+    }
+
+    #[test]
+    fn spawn_reference_matches_pooled_gradient() {
+        // the frozen scoped-spawn baseline must stay numerically honest:
+        // identical G bitwise (same panel kernels), loss equal up to the
+        // chunk-fold association
+        let mut rng = Rng::new(28);
+        let (i, s, r) = (2 * pool::thresholds::GRAD_PAR_MIN_ROWS, 16, 4);
+        let xs: Vec<f32> = (0..i * s).map(|_| rng.normal_f32()).collect();
+        let a = randmat(i, r, &mut rng);
+        let us: Vec<Mat> = (0..2).map(|_| randmat(s, r, &mut rng)).collect();
+        let refs: Vec<&Mat> = us.iter().collect();
+        let mut be = NativeBackend::with_threads(4);
+        let (g_pool, l_pool) = be.grad(Loss::Ls, &xs, i, s, &a, &refs, 1.0).unwrap();
+        let (g_spawn, l_spawn) = be.grad_spawn_reference(Loss::Ls, &xs, i, s, &a, &refs, 1.0, 4);
+        assert_eq!(g_pool.data, g_spawn.data);
+        assert!((l_pool - l_spawn).abs() / l_pool.abs().max(1.0) < 1e-12);
     }
 
     #[test]

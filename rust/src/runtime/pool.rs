@@ -1,0 +1,349 @@
+//! The persistent compute worker pool.
+//!
+//! Every threaded hot path in the crate — the native backend's row-panel
+//! gradient, the CSF fiber gather, and the sweep executor — funnels
+//! through [`parallel_for`] here instead of spawning scoped threads per
+//! call. Workers are started lazily on first use, parked on a condvar
+//! between calls, and **never exit**: sequential `Session::run`s reuse
+//! the same OS threads, so repeated runs neither leak threads nor pay
+//! spawn latency (~50µs per thread per call with scoped spawns, versus a
+//! single unpark here — that gap is what lets the engagement thresholds
+//! in [`thresholds`] drop an order of magnitude below PR 2's
+//! `i >= 2048`).
+//!
+//! # Determinism
+//!
+//! The pool itself never reduces anything. [`parallel_for`] hands out job
+//! indices `0..n_jobs`; callers write each job's result into a
+//! caller-owned slot indexed by job id (disjoint writes via [`SendPtr`])
+//! and fold the slots **in job order** on the calling thread afterwards.
+//! Which worker ran which job — and in what interleaving — is therefore
+//! unobservable. `threads <= 1` never touches the pool at all: jobs run
+//! inline on the caller, which is the bitwise-identical default path.
+//!
+//! # Scheduling
+//!
+//! One global FIFO of active tasks guarded by a mutex. The caller posts
+//! its task, wakes the workers, then **participates**: it claims job
+//! indices exactly like a worker until the task is drained, then blocks
+//! only for stragglers. Caller participation makes nested `parallel_for`
+//! calls (a sweep worker stepping a backend whose `compute_threads > 1`)
+//! deadlock-free by construction — the inner call always makes progress
+//! on its own thread even when every pool worker is busy with outer
+//! jobs.
+//!
+//! This module is the only place in the crate allowed to call
+//! `std::thread::spawn` (lint rule D007 — see `xtask/src/lint.rs`).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Per-kernel threading engagement thresholds, derived from measured
+/// crossover on the persistent pool (see the table in ARCHITECTURE.md
+/// §"Compute core" — each constant is the smallest size where the
+/// threaded path beat single-thread on the bench host, rounded down to a
+/// power of two).
+pub mod thresholds {
+    /// Minimum gradient rows handed to one thread: panels are chunked so
+    /// no thread owns fewer rows than this.
+    pub const GRAD_MIN_ROWS_PER_THREAD: usize = 256;
+    /// Row count below which the gradient runs single-threaded (two
+    /// threads need at least a chunk each to win).
+    pub const GRAD_PAR_MIN_ROWS: usize = 2 * GRAD_MIN_ROWS_PER_THREAD;
+    /// Output cells (`i_dim * s`) below which a fiber gather runs
+    /// serially — gathers are pure memory traffic, so the crossover sits
+    /// far above the compute kernels'.
+    pub const GATHER_PAR_MIN_CELLS: usize = 1 << 19;
+    /// Rows per zero-fill job in the gather's clear phase.
+    pub const GATHER_ROWS_PER_JOB: usize = 2048;
+}
+
+/// One posted `parallel_for` call.
+struct Task {
+    /// The job body. Lifetime-erased to `'static`: sound because
+    /// [`parallel_for`] does not return until every claimed job has
+    /// finished, and no job is claimed after `next` passes `n`.
+    func: &'static (dyn Fn(usize) + Sync),
+    /// Next unclaimed job index (may run past `n`; claims `>= n` are
+    /// no-ops).
+    next: AtomicUsize,
+    /// Total jobs.
+    n: usize,
+    /// Jobs not yet finished; the task is complete at zero.
+    remaining: AtomicUsize,
+    /// Set when any job panicked.
+    panicked: AtomicBool,
+    /// First panic payload, re-thrown on the calling thread.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Task {
+    fn drained(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n
+    }
+}
+
+struct Inner {
+    /// Active tasks, oldest first. A task stays queued until drained
+    /// (fully claimed); completion is tracked by `Task::remaining`.
+    queue: VecDeque<Arc<Task>>,
+    /// Worker threads spawned so far (they never exit).
+    workers: usize,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    /// Workers park here between tasks.
+    work_cv: Condvar,
+    /// Callers park here waiting for straggler jobs.
+    done_cv: Condvar,
+}
+
+static POOL: OnceLock<Arc<Shared>> = OnceLock::new();
+
+fn shared() -> &'static Arc<Shared> {
+    POOL.get_or_init(|| {
+        Arc::new(Shared {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), workers: 0 }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        })
+    })
+}
+
+/// Claim-and-run loop shared by workers and the posting caller: claims
+/// job indices until the task is drained, running each body under
+/// `catch_unwind` so a panicking job cannot wedge the pool.
+fn execute(shared: &Shared, task: &Task) {
+    loop {
+        let slot = task.next.fetch_add(1, Ordering::Relaxed);
+        if slot >= task.n {
+            return;
+        }
+        let result = catch_unwind(AssertUnwindSafe(|| (task.func)(slot)));
+        if let Err(p) = result {
+            task.panicked.store(true, Ordering::Release);
+            let mut payload = task.payload.lock().unwrap();
+            if payload.is_none() {
+                *payload = Some(p);
+            }
+        }
+        if task.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last job: wake the caller (lock first so the caller cannot
+            // miss the notification between its check and its wait)
+            let _guard = shared.inner.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut guard = shared.inner.lock().unwrap();
+    loop {
+        while guard.queue.front().is_some_and(|t| t.drained()) {
+            guard.queue.pop_front();
+        }
+        match guard.queue.front().cloned() {
+            Some(task) => {
+                drop(guard);
+                execute(&shared, &task);
+                guard = shared.inner.lock().unwrap();
+            }
+            None => {
+                guard = shared.work_cv.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+/// Run `f(0), f(1), …, f(n_jobs - 1)` across at most `threads` threads
+/// (the caller counts as one) and return when all jobs have finished.
+///
+/// * `threads <= 1` or `n_jobs <= 1`: every job runs inline on the
+///   caller, in index order, without touching the pool — the bitwise
+///   reference path.
+/// * Otherwise the pool is lazily grown to `min(threads, n_jobs) - 1`
+///   parked workers and jobs are claimed dynamically. Job *indices* are
+///   deterministic; job-to-thread assignment is not, so `f` must confine
+///   each job's effect to job-indexed state (see [`SendPtr`]) and the
+///   caller must do any cross-job reduction itself, in index order.
+///
+/// A panic in any job is re-thrown on the calling thread after all jobs
+/// finish.
+pub fn parallel_for(threads: usize, n_jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+    if threads <= 1 || n_jobs <= 1 {
+        for i in 0..n_jobs {
+            f(i);
+        }
+        return;
+    }
+    let shared = shared();
+    // SAFETY: the task never outlives this call — we block below until
+    // `remaining == 0`, and workers only dereference `func` for claimed
+    // slots `< n`, all of which are counted by `remaining`. After the
+    // task drains, every further claim is `>= n` and returns without
+    // touching `func`.
+    let func: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+    let task = Arc::new(Task {
+        func,
+        next: AtomicUsize::new(0),
+        n: n_jobs,
+        remaining: AtomicUsize::new(n_jobs),
+        panicked: AtomicBool::new(false),
+        payload: Mutex::new(None),
+    });
+    {
+        let mut guard = shared.inner.lock().unwrap();
+        let want = threads.min(n_jobs) - 1;
+        while guard.workers < want {
+            let pool = Arc::clone(shared);
+            let id = guard.workers;
+            std::thread::Builder::new()
+                .name(format!("cidertf-pool-{id}"))
+                .spawn(move || worker_loop(pool))
+                .expect("spawn pool worker");
+            guard.workers += 1;
+        }
+        guard.queue.push_back(Arc::clone(&task));
+    }
+    shared.work_cv.notify_all();
+    execute(shared, &task);
+    let mut guard = shared.inner.lock().unwrap();
+    while task.remaining.load(Ordering::Acquire) > 0 {
+        guard = shared.done_cv.wait(guard).unwrap();
+    }
+    guard.queue.retain(|t| !Arc::ptr_eq(t, &task));
+    drop(guard);
+    if task.panicked.load(Ordering::Acquire) {
+        let payload = task.payload.lock().unwrap().take();
+        match payload {
+            Some(p) => std::panic::resume_unwind(p),
+            None => panic!("pool job panicked"),
+        }
+    }
+}
+
+/// Worker threads currently alive in the pool (0 until the first
+/// multi-threaded [`parallel_for`]). Monotone: workers are reused across
+/// calls and sessions, never dropped — the thread-leak test pins this.
+pub fn worker_count() -> usize {
+    match POOL.get() {
+        Some(s) => s.inner.lock().unwrap().workers,
+        None => 0,
+    }
+}
+
+/// Shareable raw pointer for disjoint job-indexed writes from pool jobs.
+///
+/// `parallel_for` job bodies often need `&mut` access into one shared
+/// output buffer (each job owning a disjoint range). Rust's closure
+/// captures can't express that, so jobs capture a `SendPtr` to the
+/// buffer base and offset it by their job index. **Safety contract**
+/// (on the caller): distinct jobs must write disjoint ranges, and the
+/// pointee must outlive the `parallel_for` call.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Wrap a base pointer (typically `slice.as_mut_ptr()`).
+    pub fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+
+    /// The wrapped pointer.
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_path_matches_threaded_results() {
+        let n = 103;
+        for threads in [1, 2, 4, 8] {
+            let out: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for(threads, n, &|i| {
+                out[i].store(i * i + 1, Ordering::Relaxed);
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(v.load(Ordering::Relaxed), i * i + 1, "threads={threads} job {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_sendptr_writes_land() {
+        let n = 64;
+        let mut buf = vec![0u64; n * 4];
+        let base = SendPtr::new(buf.as_mut_ptr());
+        parallel_for(4, n, &|i| {
+            // SAFETY: each job writes only its own 4-element range
+            let p = unsafe { std::slice::from_raw_parts_mut(base.get().add(i * 4), 4) };
+            for (k, v) in p.iter_mut().enumerate() {
+                *v = (i * 10 + k) as u64;
+            }
+        });
+        for i in 0..n {
+            for k in 0..4 {
+                assert_eq!(buf[i * 4 + k], (i * 10 + k) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_calls_complete() {
+        // a job body issuing its own parallel_for (sweep worker stepping
+        // a threaded backend) must not deadlock: callers participate, so
+        // the inner call progresses even with all workers busy
+        let total = AtomicUsize::new(0);
+        parallel_for(4, 8, &|_| {
+            parallel_for(4, 8, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn job_panic_propagates_to_caller() {
+        let hit = std::panic::catch_unwind(|| {
+            parallel_for(2, 16, &|i| {
+                if i == 7 {
+                    panic!("job seven");
+                }
+            });
+        });
+        let err = hit.expect_err("panic must propagate");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "job seven");
+        // the pool must remain usable afterwards
+        let n = AtomicUsize::new(0);
+        parallel_for(2, 16, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn workers_are_reused_not_leaked() {
+        // warm the pool to the widest width any test in this binary uses
+        // (8 threads -> 7 workers); from then on the count must be
+        // stable, no matter how many calls run or what other tests do
+        parallel_for(8, 64, &|_| {});
+        let baseline = worker_count();
+        assert!(baseline >= 7, "pool grows to threads-1 workers, got {baseline}");
+        for _ in 0..20 {
+            parallel_for(8, 64, &|_| {});
+        }
+        assert_eq!(worker_count(), baseline, "repeated calls must not spawn more workers");
+    }
+}

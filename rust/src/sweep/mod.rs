@@ -40,7 +40,7 @@
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::adversary::AdversarySchedule;
@@ -804,8 +804,8 @@ pub fn execute(
 
 /// Execute an explicit run list (what [`execute`] calls after expansion;
 /// harness drivers that post-process their expanded specs call this
-/// directly). Runs execute on a scoped worker pool pulling from an
-/// atomic queue; datasets are loaded once per distinct
+/// directly). Runs execute as jobs on the shared persistent worker pool
+/// ([`crate::runtime::pool`]); datasets are loaded once per distinct
 /// (dataset, value-kind) pair and `Arc`-shared read-only across workers.
 /// The aggregate `sweep.jsonl` and summary table are ordered by
 /// expansion index and carry no wall-clock fields, so their bytes do not
@@ -859,32 +859,25 @@ pub fn run_specs(
         }
     }
 
-    // the pool: workers pull expansion indices off an atomic queue
+    // the pool: one shared-worker-pool job per pending run
+    // (`runtime::pool` — the same persistent threads the compute backend
+    // uses; jobs after a failure bail out fast so the first error
+    // surfaces without burning the rest of the grid)
     let slots: Vec<Mutex<RunSlot>> = runs.iter().map(|_| Mutex::new(None)).collect();
     if !pending.is_empty() {
         let n_workers = opts.workers.clamp(1, pending.len());
-        let next = AtomicUsize::new(0);
         let abort = AtomicBool::new(false);
-        std::thread::scope(|scope| {
-            for _ in 0..n_workers {
-                scope.spawn(|| loop {
-                    if abort.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let slot = next.fetch_add(1, Ordering::Relaxed);
-                    if slot >= pending.len() {
-                        break;
-                    }
-                    let i = pending[slot];
-                    let outcome =
-                        execute_one(&runs[i], i, &stems[i], &datasets, opts, fms_reference)
-                            .map_err(|e| format!("{e:#}"));
-                    if outcome.is_err() {
-                        abort.store(true, Ordering::Relaxed);
-                    }
-                    *slots[i].lock().unwrap() = Some(outcome);
-                });
+        crate::runtime::pool::parallel_for(n_workers, pending.len(), &|slot| {
+            if abort.load(Ordering::Relaxed) {
+                return;
             }
+            let i = pending[slot];
+            let outcome = execute_one(&runs[i], i, &stems[i], &datasets, opts, fms_reference)
+                .map_err(|e| format!("{e:#}"));
+            if outcome.is_err() {
+                abort.store(true, Ordering::Relaxed);
+            }
+            *slots[i].lock().unwrap() = Some(outcome);
         });
     }
 

@@ -147,18 +147,89 @@ impl FiberIndex {
     ///
     /// `out` must hold `i_dim * fibers.len()` f32 and is fully overwritten
     /// (zero fill + scatter) — callers reuse the buffer across iterations.
+    ///
+    /// Serial path of [`FiberIndex::gather_slice_threads`]; always
+    /// bit-identical to it at any thread count.
     pub fn gather_slice(&self, fibers: &[u64], i_dim: usize, out: &mut [f32]) {
+        self.gather_slice_threads(fibers, i_dim, out, 1);
+    }
+
+    /// [`FiberIndex::gather_slice`] on the shared worker pool
+    /// ([`crate::runtime::pool`]).
+    ///
+    /// Engages only when `threads > 1` and the output is at least
+    /// [`crate::runtime::pool::thresholds::GATHER_PAR_MIN_CELLS`] cells
+    /// (below that, pool hand-off costs more than the memory-bound scatter
+    /// saves — see ARCHITECTURE.md for the crossover table). Two phases,
+    /// both with disjoint writes and no reductions, so the result is
+    /// **bit-identical** to the serial path at every thread count:
+    ///
+    /// 1. zero-fill, chunked by row panels
+    ///    ([`crate::runtime::pool::thresholds::GATHER_ROWS_PER_JOB`] rows
+    ///    per job — rows partition the buffer);
+    /// 2. scatter, chunked by *columns* (each column is written only by
+    ///    the job owning its fiber, so every `out` cell has exactly one
+    ///    writer even when `fibers` contains duplicates of one fiber id —
+    ///    duplicate columns are distinct cells).
+    pub fn gather_slice_threads(
+        &self,
+        fibers: &[u64],
+        i_dim: usize,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        use crate::runtime::pool::{self, thresholds};
         let s = fibers.len();
         assert_eq!(out.len(), i_dim * s);
-        out.fill(0.0);
-        for (col, &fid) in fibers.iter().enumerate() {
-            let (a, b) = self.range(fid);
-            for k in a..b {
-                let row = self.rows[k] as usize;
-                debug_assert!(row < i_dim);
-                out[row * s + col] = self.vals[k];
+        if threads <= 1 || s < 2 || i_dim * s < thresholds::GATHER_PAR_MIN_CELLS {
+            out.fill(0.0);
+            for (col, &fid) in fibers.iter().enumerate() {
+                let (a, b) = self.range(fid);
+                for k in a..b {
+                    let row = self.rows[k] as usize;
+                    debug_assert!(row < i_dim);
+                    out[row * s + col] = self.vals[k];
+                }
             }
+            return;
         }
+
+        let out_ptr = pool::SendPtr::new(out.as_mut_ptr());
+
+        // Phase 1: zero fill. Row panels partition `out` exactly.
+        let rows_per_job = thresholds::GATHER_ROWS_PER_JOB;
+        let n_fill_jobs = i_dim.div_ceil(rows_per_job);
+        pool::parallel_for(threads, n_fill_jobs, &|job| {
+            let r0 = job * rows_per_job;
+            let r1 = (r0 + rows_per_job).min(i_dim);
+            // SAFETY: row panels [r0, r1) are disjoint across jobs and
+            // within bounds; parallel_for blocks until every job is done,
+            // so the pointer outlives all uses.
+            let panel =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r0 * s), (r1 - r0) * s) };
+            panel.fill(0.0);
+        });
+
+        // Phase 2: scatter. Column ranges partition the fiber list; a job
+        // only writes cells `row * s + col` with `col` in its own range.
+        let n_scatter_jobs = (4 * threads).min(s);
+        let cols_per_job = s.div_ceil(n_scatter_jobs);
+        let n_jobs = s.div_ceil(cols_per_job);
+        pool::parallel_for(threads, n_jobs, &|job| {
+            let c0 = job * cols_per_job;
+            let c1 = (c0 + cols_per_job).min(s);
+            for (col, &fid) in fibers.iter().enumerate().take(c1).skip(c0) {
+                let (a, b) = self.range(fid);
+                for k in a..b {
+                    let row = self.rows[k] as usize;
+                    debug_assert!(row < i_dim);
+                    // SAFETY: `col` is owned by exactly one job (column
+                    // ranges are disjoint) and `row < i_dim`, so this cell
+                    // has a single writer and stays in bounds.
+                    unsafe { *out_ptr.get().add(row * s + col) = self.vals[k] };
+                }
+            }
+        });
     }
 
     /// Total stored entries (== tensor nnz).
@@ -311,6 +382,30 @@ mod tests {
             let mut out = vec![f32::NAN; t.dims[mode] * nf];
             fi.gather_slice(&fibers, t.dims[mode], &mut out);
             assert_eq!(out, dense, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn threaded_gather_bit_identical_to_serial() {
+        // 600 x (32*32) cells = 614,400 > GATHER_PAR_MIN_CELLS, so the
+        // pooled two-phase path engages; its output must match the serial
+        // scatter bitwise at every thread count (disjoint writes, no
+        // reductions). Duplicate fiber ids exercise the one-writer-per-
+        // *column* argument.
+        let t = random_tensor(&[600, 32, 32], 2000, 21);
+        let fi = FiberIndex::build(&t, 0);
+        let nf = t.n_fibers(0);
+        let mut fibers: Vec<u64> = (0..nf as u64).collect();
+        fibers[7] = fibers[3]; // duplicate column
+        let mut serial = vec![f32::NAN; 600 * fibers.len()];
+        fi.gather_slice(&fibers, 600, &mut serial);
+        for threads in [2usize, 4, 8] {
+            let mut par = vec![f32::NAN; 600 * fibers.len()];
+            fi.gather_slice_threads(&fibers, 600, &mut par, threads);
+            assert!(
+                par.iter().zip(serial.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads = {threads}"
+            );
         }
     }
 

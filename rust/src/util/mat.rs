@@ -12,83 +12,36 @@
 //! properties the engine relies on:
 //!
 //! * **Lane-deterministic reductions** — every dot product accumulates in
-//!   a fixed `LANES`-wide register layout reduced in a fixed tree order,
-//!   so results are bit-identical regardless of how callers tile or
-//!   thread the row dimension.
+//!   a fixed `LANES`-wide register layout reduced in a fixed tree order
+//!   (see `util/simd.rs`, which owns the lane kernels and their runtime
+//!   SSE2/AVX2 dispatch), so results are bit-identical regardless of how
+//!   callers tile or thread the row dimension — and regardless of the
+//!   SIMD level the dispatcher picks.
 //! * **Allocation freedom** — all `*_into` kernels write into
 //!   caller-owned buffers; nothing here touches the heap.
 
 use crate::util::rng::Rng;
-
-/// Accumulator lanes for vectorized reductions (one AVX2 f32 register).
-const LANES: usize = 8;
-
-/// Deterministic horizontal sum of the lane accumulators (fixed tree).
-#[inline(always)]
-fn hsum(acc: [f32; LANES]) -> f32 {
-    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
-}
-
-/// Lane-accumulated dot product. Unlike a scalar `fold`, the `LANES`
-/// independent partial sums let LLVM vectorize the reduction; the fixed
-/// lane structure keeps the result deterministic for a given length.
-#[inline]
-fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let k = a.len();
-    let chunks = k / LANES;
-    let mut acc = [0.0f32; LANES];
-    for c in 0..chunks {
-        let ar = &a[c * LANES..c * LANES + LANES];
-        let br = &b[c * LANES..c * LANES + LANES];
-        for l in 0..LANES {
-            acc[l] += ar[l] * br[l];
-        }
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * LANES..k {
-        tail += a[i] * b[i];
-    }
-    hsum(acc) + tail
-}
-
-/// 2x2 register-tiled micro-kernel: the four dot products
-/// `[a0·b0, a0·b1, a1·b0, a1·b1]` sharing every operand load. Each output
-/// uses the exact lane structure of [`dot_lanes`], so a cell's value does
-/// not depend on whether it was computed by the tile or an edge loop.
-#[inline]
-fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], k: usize) -> [f32; 4] {
-    let chunks = k / LANES;
-    let mut acc00 = [0.0f32; LANES];
-    let mut acc01 = [0.0f32; LANES];
-    let mut acc10 = [0.0f32; LANES];
-    let mut acc11 = [0.0f32; LANES];
-    for c in 0..chunks {
-        let o = c * LANES;
-        let (a0c, a1c) = (&a0[o..o + LANES], &a1[o..o + LANES]);
-        let (b0c, b1c) = (&b0[o..o + LANES], &b1[o..o + LANES]);
-        for l in 0..LANES {
-            let (x0, x1) = (a0c[l], a1c[l]);
-            let (y0, y1) = (b0c[l], b1c[l]);
-            acc00[l] += x0 * y0;
-            acc01[l] += x0 * y1;
-            acc10[l] += x1 * y0;
-            acc11[l] += x1 * y1;
-        }
-    }
-    let mut tail = [0.0f32; 4];
-    for i in chunks * LANES..k {
-        tail[0] += a0[i] * b0[i];
-        tail[1] += a0[i] * b1[i];
-        tail[2] += a1[i] * b0[i];
-        tail[3] += a1[i] * b1[i];
-    }
-    [hsum(acc00) + tail[0], hsum(acc01) + tail[1], hsum(acc10) + tail[2], hsum(acc11) + tail[3]]
-}
+use crate::util::simd::{self, Level};
 
 /// `C[m,n] = A[m,k] · B[n,k]ᵀ` over raw row-major slices, 2x2
 /// register-tiled. This is the `M = A·Hᵀ` panel kernel of the gradient.
+/// Dispatches to the process-wide [`simd::level`]; every level is
+/// bit-identical (see `util/simd.rs`).
 pub fn gemm_transb_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    gemm_transb_into_l(simd::level(), a, b, c, m, n, k);
+}
+
+/// [`gemm_transb_into`] at a forced SIMD level (tests sweep levels; the
+/// backend resolves the level once and reuses it).
+pub fn gemm_transb_into_l(
+    lv: Level,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), n * k, "B shape");
     assert_eq!(c.len(), m * n, "C shape");
@@ -100,7 +53,7 @@ pub fn gemm_transb_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize,
         while j + 2 <= n {
             let b0 = &b[j * k..(j + 1) * k];
             let b1 = &b[(j + 1) * k..(j + 2) * k];
-            let t = dot2x2(a0, a1, b0, b1, k);
+            let t = simd::dot2x2(lv, a0, a1, b0, b1, k);
             c[i * n + j] = t[0];
             c[i * n + j + 1] = t[1];
             c[(i + 1) * n + j] = t[2];
@@ -109,24 +62,37 @@ pub fn gemm_transb_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize,
         }
         if j < n {
             let b0 = &b[j * k..(j + 1) * k];
-            c[i * n + j] = dot_lanes(a0, b0);
-            c[(i + 1) * n + j] = dot_lanes(a1, b0);
+            c[i * n + j] = simd::dot(lv, a0, b0);
+            c[(i + 1) * n + j] = simd::dot(lv, a1, b0);
         }
         i += 2;
     }
     if i < m {
         let a0 = &a[i * k..(i + 1) * k];
         for j in 0..n {
-            c[i * n + j] = dot_lanes(a0, &b[j * k..(j + 1) * k]);
+            c[i * n + j] = simd::dot(lv, a0, &b[j * k..(j + 1) * k]);
         }
     }
 }
 
 /// `C[m,n] += A[m,k] · B[k,n]` over raw row-major slices, ikj order with
-/// an elementwise (vectorizable) inner axpy. This is the `G += Y·H` panel
-/// kernel of the gradient; the zero-skip pays off because `Y = ∂f` is
-/// sparse wherever the loss saturates.
+/// an elementwise axpy inner loop. This is the `G += Y·H` panel kernel of
+/// the gradient; the zero-skip pays off because `Y = ∂f` is sparse
+/// wherever the loss saturates.
 pub fn gemm_acc_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    gemm_acc_into_l(simd::level(), a, b, c, m, n, k);
+}
+
+/// [`gemm_acc_into`] at a forced SIMD level.
+pub fn gemm_acc_into_l(
+    lv: Level,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), k * n, "B shape");
     assert_eq!(c.len(), m * n, "C shape");
@@ -138,9 +104,7 @@ pub fn gemm_acc_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k:
                 continue;
             }
             let brow = &b[p * n..(p + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
+            simd::axpy(lv, av, brow, crow);
         }
     }
 }
@@ -148,11 +112,12 @@ pub fn gemm_acc_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k:
 /// Fused two-operand Hadamard: `out[e] = x[e] * y[e]` in one pass (the
 /// common D=3 case writes `H = U₁ ⊙ U₂` without an intermediate copy).
 pub fn hadamard2_into(x: &[f32], y: &[f32], out: &mut [f32]) {
-    assert_eq!(x.len(), out.len());
-    assert_eq!(y.len(), out.len());
-    for ((o, xv), yv) in out.iter_mut().zip(x.iter()).zip(y.iter()) {
-        *o = xv * yv;
-    }
+    hadamard2_into_l(simd::level(), x, y, out);
+}
+
+/// [`hadamard2_into`] at a forced SIMD level.
+pub fn hadamard2_into_l(lv: Level, x: &[f32], y: &[f32], out: &mut [f32]) {
+    simd::hadamard2(lv, x, y, out);
 }
 
 /// Dense row-major matrix.
@@ -263,9 +228,7 @@ impl Mat {
     /// `self += alpha * other` (the engine's most-executed loop).
     pub fn axpy(&mut self, alpha: f32, other: &Mat) {
         debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += alpha * b;
-        }
+        simd::axpy(simd::level(), alpha, &other.data, &mut self.data);
     }
 
     /// `self = alpha * self`.
@@ -286,9 +249,7 @@ impl Mat {
     /// Elementwise product accumulate: `self *= other`.
     pub fn hadamard_assign(&mut self, other: &Mat) {
         debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a *= b;
-        }
+        simd::hadamard_assign(simd::level(), &other.data, &mut self.data);
     }
 
     /// Squared Frobenius norm.
@@ -520,6 +481,35 @@ mod tests {
         let mut c = Mat::from_vec(2, 2, vec![1.0; 4]);
         a.matmul_acc_into(&b, &mut c);
         assert_eq!(c.data, vec![59., 65., 140., 155.]);
+    }
+
+    #[test]
+    fn gemm_kernels_bit_identical_across_simd_levels() {
+        // the dispatcher may pick SSE2 or AVX2 at runtime; whatever it
+        // picks must match the scalar reference bitwise, for shapes
+        // covering the 2x2 tile edges and every remainder-lane count
+        let mut rng = Rng::new(41);
+        for (m, n, k) in
+            [(1, 1, 1), (2, 2, 8), (3, 5, 7), (8, 9, 16), (13, 6, 33), (5, 1, 12), (4, 4, 65)]
+        {
+            let a = Mat::rand_normal(m, k, 1.0, &mut rng);
+            let b = Mat::rand_normal(n, k, 1.0, &mut rng);
+            let mut want = vec![0.0f32; m * n];
+            gemm_transb_into_l(Level::Scalar, &a.data, &b.data, &mut want, m, n, k);
+            let bk = Mat::rand_normal(k, n, 1.0, &mut rng);
+            let mut want_acc = vec![0.5f32; m * n];
+            gemm_acc_into_l(Level::Scalar, &a.data, &bk.data, &mut want_acc, m, n, k);
+            for lv in simd::available_levels() {
+                let mut got = vec![0.0f32; m * n];
+                gemm_transb_into_l(lv, &a.data, &b.data, &mut got, m, n, k);
+                let same = got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "transb ({m},{n},{k}) level={}", lv.name());
+                let mut got_acc = vec![0.5f32; m * n];
+                gemm_acc_into_l(lv, &a.data, &bk.data, &mut got_acc, m, n, k);
+                let same = got_acc.iter().zip(&want_acc).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "acc ({m},{n},{k}) level={}", lv.name());
+            }
+        }
     }
 
     #[test]

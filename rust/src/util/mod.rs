@@ -12,3 +12,4 @@ pub mod mat;
 pub mod order;
 pub mod propcheck;
 pub mod rng;
+pub mod simd;

@@ -1,0 +1,872 @@
+//! Explicit SIMD lanes for the hot kernels, with runtime dispatch and a
+//! bit-identical scalar fallback.
+//!
+//! Every kernel here exists in up to three bodies — scalar, SSE2, AVX2 —
+//! selected once per process by [`level`] (`is_x86_feature_detected!` at
+//! first use, overridable with the `CIDERTF_SIMD` env var for testing and
+//! pinning). The contract that makes this safe to use everywhere,
+//! including under the determinism firewall, is:
+//!
+//! **Every level computes bit-identical results.** The scalar kernels
+//! already accumulate in a fixed 8-lane register layout reduced by a
+//! fixed tree ([`LANES`], [`hsum`]) — exactly one AVX2 register, or two
+//! SSE2 registers. The vector bodies perform the *same* per-lane IEEE
+//! operations in the *same* order:
+//!
+//! * multiplies and adds stay separate instructions (`mul_ps` + `add_ps`,
+//!   never FMA — rustc does not contract float expressions, and neither
+//!   do we), so each lane sees the identical rounding sequence;
+//! * horizontal reductions spill the accumulator register(s) to a
+//!   `[f32; 8]` and run the *scalar* [`hsum`] tree — no `hadd` shuffles
+//!   with a different association;
+//! * remainder elements (`len % 8`) always take the scalar tail loop;
+//! * elementwise kernels (axpy, Hadamard, consensus fold, sign codec)
+//!   compute each output element from the same single-element expression
+//!   as the scalar loop, so vector width cannot change any bit.
+//!
+//! The `simd_*` property tests at the bottom assert scalar ≡ SSE2 ≡ AVX2
+//! bitwise across generated lengths (including every remainder-lane
+//! count) on whatever hardware runs the suite.
+
+use std::sync::OnceLock;
+
+/// Accumulator lanes for vectorized reductions (one AVX2 f32 register).
+pub const LANES: usize = 8;
+
+/// Which instruction set the kernels run on. Ordering is capability:
+/// `Scalar < Sse2 < Avx2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Portable scalar bodies (the reference semantics).
+    Scalar,
+    /// 4-wide SSE2, two registers emulating the 8-lane layout.
+    Sse2,
+    /// 8-wide AVX2, one register per lane accumulator.
+    Avx2,
+}
+
+impl Level {
+    /// Stable lowercase name (`scalar`/`sse2`/`avx2`) — what
+    /// `CIDERTF_SIMD` accepts and diagnostics print.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse2 => "sse2",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Highest level the hardware supports.
+fn hw_level() -> Level {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Level::Avx2;
+        }
+        // SSE2 is part of the x86_64 baseline.
+        Level::Sse2
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        Level::Scalar
+    }
+}
+
+/// Resolve the process-wide dispatch level: the hardware maximum, capped
+/// by `CIDERTF_SIMD` (`scalar`/`sse2`/`avx2`) when set. A request above
+/// the hardware level falls back to the hardware level (results are
+/// bit-identical at every level, so the cap is a perf/testing knob, not a
+/// correctness one); an unrecognized value is ignored.
+fn detect() -> Level {
+    let hw = hw_level();
+    match std::env::var("CIDERTF_SIMD") {
+        Ok(v) => match v.as_str() {
+            "scalar" => Level::Scalar,
+            "sse2" => Level::Sse2.min(hw),
+            "avx2" => Level::Avx2.min(hw),
+            _ => hw,
+        },
+        Err(_) => hw,
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The cached process-wide dispatch level (detected on first call).
+#[inline]
+pub fn level() -> Level {
+    *LEVEL.get_or_init(detect)
+}
+
+/// Deterministic horizontal sum of the lane accumulators (fixed tree).
+/// Every level funnels its reduction through this exact association.
+#[inline(always)]
+pub fn hsum(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+// ---- scalar reference bodies -------------------------------------------
+
+/// Lane-accumulated dot product (scalar body). The `LANES` independent
+/// partial sums are the reference semantics every vector body replicates.
+#[inline]
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let chunks = k / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let ar = &a[c * LANES..c * LANES + LANES];
+        let br = &b[c * LANES..c * LANES + LANES];
+        for l in 0..LANES {
+            acc[l] += ar[l] * br[l];
+        }
+    }
+    hsum(acc) + dot_tail(a, b, chunks * LANES)
+}
+
+/// Scalar tail shared by every level: elements `start..len` in order.
+#[inline(always)]
+fn dot_tail(a: &[f32], b: &[f32], start: usize) -> f32 {
+    let mut tail = 0.0f32;
+    for i in start..a.len() {
+        tail += a[i] * b[i];
+    }
+    tail
+}
+
+/// 2x2 register-tiled dot micro-kernel (scalar body): the four dot
+/// products `[a0·b0, a0·b1, a1·b0, a1·b1]` sharing every operand load,
+/// each with the exact lane structure of [`dot`].
+#[inline]
+fn dot2x2_scalar(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], k: usize) -> [f32; 4] {
+    let chunks = k / LANES;
+    let mut acc00 = [0.0f32; LANES];
+    let mut acc01 = [0.0f32; LANES];
+    let mut acc10 = [0.0f32; LANES];
+    let mut acc11 = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        let (a0c, a1c) = (&a0[o..o + LANES], &a1[o..o + LANES]);
+        let (b0c, b1c) = (&b0[o..o + LANES], &b1[o..o + LANES]);
+        for l in 0..LANES {
+            let (x0, x1) = (a0c[l], a1c[l]);
+            let (y0, y1) = (b0c[l], b1c[l]);
+            acc00[l] += x0 * y0;
+            acc01[l] += x0 * y1;
+            acc10[l] += x1 * y0;
+            acc11[l] += x1 * y1;
+        }
+    }
+    let t = dot2x2_tail(a0, a1, b0, b1, chunks * LANES, k);
+    [hsum(acc00) + t[0], hsum(acc01) + t[1], hsum(acc10) + t[2], hsum(acc11) + t[3]]
+}
+
+#[inline(always)]
+fn dot2x2_tail(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], start: usize, k: usize) -> [f32; 4] {
+    let mut tail = [0.0f32; 4];
+    for i in start..k {
+        tail[0] += a0[i] * b0[i];
+        tail[1] += a0[i] * b1[i];
+        tail[2] += a1[i] * b0[i];
+        tail[3] += a1[i] * b1[i];
+    }
+    tail
+}
+
+#[inline]
+fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * xv;
+    }
+}
+
+#[inline]
+fn add_assign_scalar(x: &[f32], y: &mut [f32]) {
+    for (yv, xv) in y.iter_mut().zip(x.iter()) {
+        *yv += xv;
+    }
+}
+
+#[inline]
+fn hadamard2_scalar(x: &[f32], y: &[f32], out: &mut [f32]) {
+    for ((o, xv), yv) in out.iter_mut().zip(x.iter()).zip(y.iter()) {
+        *o = xv * yv;
+    }
+}
+
+#[inline]
+fn hadamard_assign_scalar(x: &[f32], y: &mut [f32]) {
+    for (yv, xv) in y.iter_mut().zip(x.iter()) {
+        *yv *= xv;
+    }
+}
+
+#[inline]
+fn scaled_diff_acc_scalar(w: f32, hj: &[f32], hk: &[f32], a: &mut [f32]) {
+    for ((av, &j), &k) in a.iter_mut().zip(hj.iter()).zip(hk.iter()) {
+        *av += w * (j - k);
+    }
+}
+
+#[inline]
+fn sign_pack_scalar(data: &[f32], bits: &mut [u8]) {
+    for (i, &v) in data.iter().enumerate() {
+        if v >= 0.0 {
+            bits[i >> 3] |= 1 << (i & 7);
+        }
+    }
+}
+
+#[inline]
+fn sign_decode_add_scalar(scale: f32, bits: &[u8], t: &mut [f32]) {
+    for (i, tv) in t.iter_mut().enumerate() {
+        let bit = (bits[i >> 3] >> (i & 7)) & 1;
+        *tv += if bit == 1 { scale } else { -scale };
+    }
+}
+
+// ---- x86-64 vector bodies ----------------------------------------------
+//
+// Safety note shared by everything below: the `avx2` module's functions
+// carry `#[target_feature(enable = "avx2")]` and are only ever reached
+// through a `Level::Avx2` produced by `is_x86_feature_detected!("avx2")`;
+// the `sse2` module relies on SSE2 being part of the x86_64 baseline.
+// Every unchecked pointer is derived from a slice whose length the caller
+// (the dispatch functions in this module) has already validated.
+
+#[cfg(target_arch = "x86_64")]
+mod sse2 {
+    use super::{dot2x2_tail, dot_tail, hsum, LANES};
+    use std::arch::x86_64::*;
+
+    /// Spill the two half-registers to the 8-lane layout and reduce with
+    /// the scalar tree.
+    #[inline(always)]
+    unsafe fn hsum2(lo: __m128, hi: __m128) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+        hsum(lanes)
+    }
+
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        let chunks = k / LANES;
+        let mut acc_lo = _mm_setzero_ps();
+        let mut acc_hi = _mm_setzero_ps();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        for c in 0..chunks {
+            let o = c * LANES;
+            acc_lo = _mm_add_ps(acc_lo, _mm_mul_ps(_mm_loadu_ps(ap.add(o)), _mm_loadu_ps(bp.add(o))));
+            acc_hi = _mm_add_ps(
+                acc_hi,
+                _mm_mul_ps(_mm_loadu_ps(ap.add(o + 4)), _mm_loadu_ps(bp.add(o + 4))),
+            );
+        }
+        hsum2(acc_lo, acc_hi) + dot_tail(a, b, chunks * LANES)
+    }
+
+    pub unsafe fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], k: usize) -> [f32; 4] {
+        let chunks = k / LANES;
+        let mut acc = [[_mm_setzero_ps(); 2]; 4];
+        for c in 0..chunks {
+            let o = c * LANES;
+            for half in 0..2 {
+                let oo = o + 4 * half;
+                let x0 = _mm_loadu_ps(a0.as_ptr().add(oo));
+                let x1 = _mm_loadu_ps(a1.as_ptr().add(oo));
+                let y0 = _mm_loadu_ps(b0.as_ptr().add(oo));
+                let y1 = _mm_loadu_ps(b1.as_ptr().add(oo));
+                acc[0][half] = _mm_add_ps(acc[0][half], _mm_mul_ps(x0, y0));
+                acc[1][half] = _mm_add_ps(acc[1][half], _mm_mul_ps(x0, y1));
+                acc[2][half] = _mm_add_ps(acc[2][half], _mm_mul_ps(x1, y0));
+                acc[3][half] = _mm_add_ps(acc[3][half], _mm_mul_ps(x1, y1));
+            }
+        }
+        let t = dot2x2_tail(a0, a1, b0, b1, chunks * LANES, k);
+        [
+            hsum2(acc[0][0], acc[0][1]) + t[0],
+            hsum2(acc[1][0], acc[1][1]) + t[1],
+            hsum2(acc[2][0], acc[2][1]) + t[2],
+            hsum2(acc[3][0], acc[3][1]) + t[3],
+        ]
+    }
+
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let chunks = n / 4;
+        let av = _mm_set1_ps(alpha);
+        let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 4;
+            let v = _mm_add_ps(_mm_loadu_ps(yp.add(o)), _mm_mul_ps(av, _mm_loadu_ps(xp.add(o))));
+            _mm_storeu_ps(yp.add(o), v);
+        }
+        super::axpy_scalar(alpha, &x[chunks * 4..], &mut y[chunks * 4..]);
+    }
+
+    pub unsafe fn add_assign(x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let chunks = n / 4;
+        let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 4;
+            _mm_storeu_ps(yp.add(o), _mm_add_ps(_mm_loadu_ps(yp.add(o)), _mm_loadu_ps(xp.add(o))));
+        }
+        super::add_assign_scalar(&x[chunks * 4..], &mut y[chunks * 4..]);
+    }
+
+    pub unsafe fn hadamard2(x: &[f32], y: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let chunks = n / 4;
+        let (xp, yp, op) = (x.as_ptr(), y.as_ptr(), out.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 4;
+            _mm_storeu_ps(op.add(o), _mm_mul_ps(_mm_loadu_ps(xp.add(o)), _mm_loadu_ps(yp.add(o))));
+        }
+        super::hadamard2_scalar(&x[chunks * 4..], &y[chunks * 4..], &mut out[chunks * 4..]);
+    }
+
+    pub unsafe fn hadamard_assign(x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let chunks = n / 4;
+        let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 4;
+            _mm_storeu_ps(yp.add(o), _mm_mul_ps(_mm_loadu_ps(yp.add(o)), _mm_loadu_ps(xp.add(o))));
+        }
+        super::hadamard_assign_scalar(&x[chunks * 4..], &mut y[chunks * 4..]);
+    }
+
+    pub unsafe fn scaled_diff_acc(w: f32, hj: &[f32], hk: &[f32], a: &mut [f32]) {
+        let n = a.len();
+        let chunks = n / 4;
+        let wv = _mm_set1_ps(w);
+        let (jp, kp, ap) = (hj.as_ptr(), hk.as_ptr(), a.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 4;
+            let d = _mm_sub_ps(_mm_loadu_ps(jp.add(o)), _mm_loadu_ps(kp.add(o)));
+            _mm_storeu_ps(ap.add(o), _mm_add_ps(_mm_loadu_ps(ap.add(o)), _mm_mul_ps(wv, d)));
+        }
+        super::scaled_diff_acc_scalar(w, &hj[chunks * 4..], &hk[chunks * 4..], &mut a[chunks * 4..]);
+    }
+
+    pub unsafe fn sign_pack(data: &[f32], bits: &mut [u8]) {
+        let chunks = data.len() / 8;
+        let zero = _mm_setzero_ps();
+        let dp = data.as_ptr();
+        for (c, byte) in bits.iter_mut().enumerate().take(chunks) {
+            let o = c * 8;
+            // cmpge is the ordered compare: false for NaN, true for -0.0,
+            // exactly like the scalar `v >= 0.0`
+            let lo = _mm_movemask_ps(_mm_cmpge_ps(_mm_loadu_ps(dp.add(o)), zero));
+            let hi = _mm_movemask_ps(_mm_cmpge_ps(_mm_loadu_ps(dp.add(o + 4)), zero));
+            *byte |= (lo | (hi << 4)) as u8;
+        }
+        super::sign_pack_tail(data, bits, chunks * 8);
+    }
+
+    pub unsafe fn sign_decode_add(scale: f32, bits: &[u8], t: &mut [f32]) {
+        let chunks = t.len() / 8;
+        let sv = _mm_castps_si128(_mm_set1_ps(scale));
+        let signbit = _mm_set1_epi32(i32::MIN);
+        let lanes_lo = _mm_setr_epi32(1, 2, 4, 8);
+        let lanes_hi = _mm_setr_epi32(16, 32, 64, 128);
+        let tp = t.as_mut_ptr();
+        for c in 0..chunks {
+            let byte = _mm_set1_epi32(bits[c] as i32);
+            for (half, lanes) in [lanes_lo, lanes_hi].into_iter().enumerate() {
+                let o = c * 8 + 4 * half;
+                // bit set -> +scale; bit clear -> sign-flipped scale
+                // (exactly `-scale`, for every scale including NaN/inf)
+                let sel = _mm_cmpeq_epi32(_mm_and_si128(byte, lanes), lanes);
+                let val = _mm_castsi128_ps(_mm_xor_si128(sv, _mm_andnot_si128(sel, signbit)));
+                _mm_storeu_ps(tp.add(o), _mm_add_ps(_mm_loadu_ps(tp.add(o)), val));
+            }
+        }
+        super::sign_decode_add_tail(scale, bits, t, chunks * 8);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{dot2x2_tail, dot_tail, hsum, LANES};
+    use std::arch::x86_64::*;
+
+    /// Spill the 8-lane register and reduce with the scalar tree (no
+    /// `hadd` — its association differs from the reference).
+    #[inline(always)]
+    unsafe fn hsum8(acc: __m256) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        hsum(lanes)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        let chunks = k / LANES;
+        let mut acc = _mm256_setzero_ps();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        for c in 0..chunks {
+            let o = c * LANES;
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_loadu_ps(ap.add(o)), _mm256_loadu_ps(bp.add(o))));
+        }
+        hsum8(acc) + dot_tail(a, b, chunks * LANES)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], k: usize) -> [f32; 4] {
+        let chunks = k / LANES;
+        let mut acc00 = _mm256_setzero_ps();
+        let mut acc01 = _mm256_setzero_ps();
+        let mut acc10 = _mm256_setzero_ps();
+        let mut acc11 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let o = c * LANES;
+            let x0 = _mm256_loadu_ps(a0.as_ptr().add(o));
+            let x1 = _mm256_loadu_ps(a1.as_ptr().add(o));
+            let y0 = _mm256_loadu_ps(b0.as_ptr().add(o));
+            let y1 = _mm256_loadu_ps(b1.as_ptr().add(o));
+            acc00 = _mm256_add_ps(acc00, _mm256_mul_ps(x0, y0));
+            acc01 = _mm256_add_ps(acc01, _mm256_mul_ps(x0, y1));
+            acc10 = _mm256_add_ps(acc10, _mm256_mul_ps(x1, y0));
+            acc11 = _mm256_add_ps(acc11, _mm256_mul_ps(x1, y1));
+        }
+        let t = dot2x2_tail(a0, a1, b0, b1, chunks * LANES, k);
+        [hsum8(acc00) + t[0], hsum8(acc01) + t[1], hsum8(acc10) + t[2], hsum8(acc11) + t[3]]
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let chunks = n / 8;
+        let av = _mm256_set1_ps(alpha);
+        let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 8;
+            let v = _mm256_add_ps(
+                _mm256_loadu_ps(yp.add(o)),
+                _mm256_mul_ps(av, _mm256_loadu_ps(xp.add(o))),
+            );
+            _mm256_storeu_ps(yp.add(o), v);
+        }
+        super::axpy_scalar(alpha, &x[chunks * 8..], &mut y[chunks * 8..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let chunks = n / 8;
+        let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 8;
+            _mm256_storeu_ps(
+                yp.add(o),
+                _mm256_add_ps(_mm256_loadu_ps(yp.add(o)), _mm256_loadu_ps(xp.add(o))),
+            );
+        }
+        super::add_assign_scalar(&x[chunks * 8..], &mut y[chunks * 8..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn hadamard2(x: &[f32], y: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let chunks = n / 8;
+        let (xp, yp, op) = (x.as_ptr(), y.as_ptr(), out.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 8;
+            _mm256_storeu_ps(
+                op.add(o),
+                _mm256_mul_ps(_mm256_loadu_ps(xp.add(o)), _mm256_loadu_ps(yp.add(o))),
+            );
+        }
+        super::hadamard2_scalar(&x[chunks * 8..], &y[chunks * 8..], &mut out[chunks * 8..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn hadamard_assign(x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let chunks = n / 8;
+        let (xp, yp) = (x.as_ptr(), y.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 8;
+            _mm256_storeu_ps(
+                yp.add(o),
+                _mm256_mul_ps(_mm256_loadu_ps(yp.add(o)), _mm256_loadu_ps(xp.add(o))),
+            );
+        }
+        super::hadamard_assign_scalar(&x[chunks * 8..], &mut y[chunks * 8..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scaled_diff_acc(w: f32, hj: &[f32], hk: &[f32], a: &mut [f32]) {
+        let n = a.len();
+        let chunks = n / 8;
+        let wv = _mm256_set1_ps(w);
+        let (jp, kp, ap) = (hj.as_ptr(), hk.as_ptr(), a.as_mut_ptr());
+        for c in 0..chunks {
+            let o = c * 8;
+            let d = _mm256_sub_ps(_mm256_loadu_ps(jp.add(o)), _mm256_loadu_ps(kp.add(o)));
+            _mm256_storeu_ps(
+                ap.add(o),
+                _mm256_add_ps(_mm256_loadu_ps(ap.add(o)), _mm256_mul_ps(wv, d)),
+            );
+        }
+        super::scaled_diff_acc_scalar(w, &hj[chunks * 8..], &hk[chunks * 8..], &mut a[chunks * 8..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sign_pack(data: &[f32], bits: &mut [u8]) {
+        let chunks = data.len() / 8;
+        let zero = _mm256_setzero_ps();
+        let dp = data.as_ptr();
+        for (c, byte) in bits.iter_mut().enumerate().take(chunks) {
+            // _CMP_GE_OQ: ordered greater-or-equal — false for NaN, true
+            // for -0.0, exactly like the scalar `v >= 0.0`; movemask lane
+            // order matches the scalar bit order `1 << (i & 7)`
+            let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(_mm256_loadu_ps(dp.add(c * 8)), zero);
+            *byte |= _mm256_movemask_ps(ge) as u8;
+        }
+        super::sign_pack_tail(data, bits, chunks * 8);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sign_decode_add(scale: f32, bits: &[u8], t: &mut [f32]) {
+        let chunks = t.len() / 8;
+        let sv = _mm256_castps_si256(_mm256_set1_ps(scale));
+        let signbit = _mm256_set1_epi32(i32::MIN);
+        let lanes = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        let tp = t.as_mut_ptr();
+        for c in 0..chunks {
+            let byte = _mm256_set1_epi32(bits[c] as i32);
+            // bit set -> +scale; bit clear -> sign-flipped scale (exactly
+            // `-scale`, for every scale including NaN/inf)
+            let sel = _mm256_cmpeq_epi32(_mm256_and_si256(byte, lanes), lanes);
+            let val = _mm256_castsi256_ps(_mm256_xor_si256(sv, _mm256_andnot_si256(sel, signbit)));
+            let o = c * 8;
+            _mm256_storeu_ps(tp.add(o), _mm256_add_ps(_mm256_loadu_ps(tp.add(o)), val));
+        }
+        super::sign_decode_add_tail(scale, bits, t, chunks * 8);
+    }
+}
+
+/// Scalar tail for the sign packer: elements `start..`.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn sign_pack_tail(data: &[f32], bits: &mut [u8], start: usize) {
+    for i in start..data.len() {
+        if data[i] >= 0.0 {
+            bits[i >> 3] |= 1 << (i & 7);
+        }
+    }
+}
+
+/// Scalar tail for the sign decoder: elements `start..`.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn sign_decode_add_tail(scale: f32, bits: &[u8], t: &mut [f32], start: usize) {
+    for (i, tv) in t.iter_mut().enumerate().skip(start) {
+        let bit = (bits[i >> 3] >> (i & 7)) & 1;
+        *tv += if bit == 1 { scale } else { -scale };
+    }
+}
+
+// ---- dispatch entry points ---------------------------------------------
+
+/// Lane-accumulated dot product `a · b` at `lv` (bit-identical across
+/// levels).
+#[inline]
+pub fn dot(lv: Level, a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    match lv {
+        Level::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::dot(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// The four dot products `[a0·b0, a0·b1, a1·b0, a1·b1]` over length `k`,
+/// sharing operand loads (the GEMM 2x2 register tile).
+#[inline]
+pub fn dot2x2(lv: Level, a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], k: usize) -> [f32; 4] {
+    assert!(a0.len() >= k && a1.len() >= k && b0.len() >= k && b1.len() >= k);
+    match lv {
+        Level::Scalar => dot2x2_scalar(a0, a1, b0, b1, k),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::dot2x2(a0, a1, b0, b1, k) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::dot2x2(a0, a1, b0, b1, k) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot2x2_scalar(a0, a1, b0, b1, k),
+    }
+}
+
+/// `y += alpha * x` (elementwise — identical at every level by
+/// construction).
+#[inline]
+pub fn axpy(lv: Level, alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    match lv {
+        Level::Scalar => axpy_scalar(alpha, x, y),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::axpy(alpha, x, y) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => axpy_scalar(alpha, x, y),
+    }
+}
+
+/// `y += x` (no multiply — the dense-payload receive path).
+#[inline]
+pub fn add_assign(lv: Level, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    match lv {
+        Level::Scalar => add_assign_scalar(x, y),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::add_assign(x, y) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::add_assign(x, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => add_assign_scalar(x, y),
+    }
+}
+
+/// `out = x ⊙ y` (fused two-operand Hadamard).
+#[inline]
+pub fn hadamard2(lv: Level, x: &[f32], y: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    assert_eq!(y.len(), out.len());
+    match lv {
+        Level::Scalar => hadamard2_scalar(x, y, out),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::hadamard2(x, y, out) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::hadamard2(x, y, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => hadamard2_scalar(x, y, out),
+    }
+}
+
+/// `y *= x` (in-place Hadamard).
+#[inline]
+pub fn hadamard_assign(lv: Level, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    match lv {
+        Level::Scalar => hadamard_assign_scalar(x, y),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::hadamard_assign(x, y) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::hadamard_assign(x, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => hadamard_assign_scalar(x, y),
+    }
+}
+
+/// The consensus fold `a += w * (hj - hk)` (gossip Alg. 1 line 18 inner
+/// loop).
+#[inline]
+pub fn scaled_diff_acc(lv: Level, w: f32, hj: &[f32], hk: &[f32], a: &mut [f32]) {
+    assert_eq!(hj.len(), a.len());
+    assert_eq!(hk.len(), a.len());
+    match lv {
+        Level::Scalar => scaled_diff_acc_scalar(w, hj, hk, a),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::scaled_diff_acc(w, hj, hk, a) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::scaled_diff_acc(w, hj, hk, a) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scaled_diff_acc_scalar(w, hj, hk, a),
+    }
+}
+
+/// Set bit `i` of `bits` for every `data[i] >= 0.0` (the sign-compressor
+/// pack loop). `bits` must be zeroed by the caller and hold
+/// `data.len().div_ceil(8)` bytes; bits are OR-ed in, matching the scalar
+/// loop exactly (NaN packs as negative, -0.0 as positive).
+#[inline]
+pub fn sign_pack(lv: Level, data: &[f32], bits: &mut [u8]) {
+    assert!(bits.len() >= data.len().div_ceil(8));
+    match lv {
+        Level::Scalar => sign_pack_scalar(data, bits),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::sign_pack(data, bits) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::sign_pack(data, bits) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => sign_pack_scalar(data, bits),
+    }
+}
+
+/// `t[i] += bit(i) ? scale : -scale` (the sign-payload receive path).
+#[inline]
+pub fn sign_decode_add(lv: Level, scale: f32, bits: &[u8], t: &mut [f32]) {
+    assert!(bits.len() >= t.len().div_ceil(8));
+    match lv {
+        Level::Scalar => sign_decode_add_scalar(scale, bits, t),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::sign_decode_add(scale, bits, t) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::sign_decode_add(scale, bits, t) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => sign_decode_add_scalar(scale, bits, t),
+    }
+}
+
+/// Every level at or below the hardware's — what the bit-identity
+/// property tests sweep. Always contains at least `Level::Scalar`.
+pub fn available_levels() -> Vec<Level> {
+    let hw = hw_level();
+    [Level::Scalar, Level::Sse2, Level::Avx2].into_iter().filter(|&l| l <= hw).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Random vector with occasional special values — the codec paths
+    /// must keep NaN/inf/-0.0 semantics identical across levels.
+    fn hostile_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.below(16) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => -0.0,
+                4 => 0.0,
+                _ => rng.normal_f32(),
+            })
+            .collect()
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn detection_reports_something_sane() {
+        let lv = level();
+        assert!(available_levels().contains(&lv) || lv == Level::Scalar);
+        assert!(!Level::Scalar.name().is_empty());
+        assert_eq!(Level::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn simd_dot_bit_identical_across_levels_and_lengths() {
+        let mut rng = Rng::new(0x51D0);
+        // every remainder-lane count around the 8-lane boundary, plus
+        // longer mixed shapes
+        for n in [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 12, 15, 16, 17, 23, 31, 32, 33, 64, 100, 257] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let want = dot(Level::Scalar, &a, &b);
+            for lv in available_levels() {
+                let got = dot(lv, &a, &b);
+                assert_eq!(got.to_bits(), want.to_bits(), "dot n={n} level={}", lv.name());
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dot2x2_bit_identical_across_levels() {
+        let mut rng = Rng::new(0x51D1);
+        for k in [1, 4, 7, 8, 9, 16, 24, 29, 33, 65] {
+            let a0: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let a1: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let b0: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let b1: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let want = dot2x2(Level::Scalar, &a0, &a1, &b0, &b1, k);
+            for lv in available_levels() {
+                let got = dot2x2(lv, &a0, &a1, &b0, &b1, k);
+                for c in 0..4 {
+                    assert_eq!(
+                        got[c].to_bits(),
+                        want[c].to_bits(),
+                        "dot2x2 k={k} cell={c} level={}",
+                        lv.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_elementwise_kernels_bit_identical_across_levels() {
+        let mut rng = Rng::new(0x51D2);
+        for n in [0, 1, 3, 5, 8, 11, 16, 27, 40, 129] {
+            let x = hostile_vec(n, &mut rng);
+            let y0 = hostile_vec(n, &mut rng);
+            let z = hostile_vec(n, &mut rng);
+            let alpha = rng.normal_f32();
+            for lv in available_levels() {
+                // axpy
+                let mut want = y0.clone();
+                axpy_scalar(alpha, &x, &mut want);
+                let mut got = y0.clone();
+                axpy(lv, alpha, &x, &mut got);
+                assert!(bits_eq(&got, &want), "axpy n={n} level={}", lv.name());
+                // add_assign
+                let mut want = y0.clone();
+                add_assign_scalar(&x, &mut want);
+                let mut got = y0.clone();
+                add_assign(lv, &x, &mut got);
+                assert!(bits_eq(&got, &want), "add_assign n={n} level={}", lv.name());
+                // hadamard2
+                let mut want = vec![0.0f32; n];
+                hadamard2_scalar(&x, &z, &mut want);
+                let mut got = vec![0.0f32; n];
+                hadamard2(lv, &x, &z, &mut got);
+                assert!(bits_eq(&got, &want), "hadamard2 n={n} level={}", lv.name());
+                // hadamard_assign
+                let mut want = y0.clone();
+                hadamard_assign_scalar(&x, &mut want);
+                let mut got = y0.clone();
+                hadamard_assign(lv, &x, &mut got);
+                assert!(bits_eq(&got, &want), "hadamard_assign n={n} level={}", lv.name());
+                // consensus fold
+                let mut want = y0.clone();
+                scaled_diff_acc_scalar(alpha, &x, &z, &mut want);
+                let mut got = y0.clone();
+                scaled_diff_acc(lv, alpha, &x, &z, &mut got);
+                assert!(bits_eq(&got, &want), "scaled_diff_acc n={n} level={}", lv.name());
+            }
+        }
+    }
+
+    #[test]
+    fn simd_sign_codec_bit_identical_across_levels() {
+        let mut rng = Rng::new(0x51D3);
+        for n in [0, 1, 5, 7, 8, 9, 15, 16, 17, 31, 64, 101] {
+            let data = hostile_vec(n, &mut rng);
+            let mut want_bits = vec![0u8; n.div_ceil(8)];
+            sign_pack_scalar(&data, &mut want_bits);
+            for lv in available_levels() {
+                let mut got_bits = vec![0u8; n.div_ceil(8)];
+                sign_pack(lv, &data, &mut got_bits);
+                assert_eq!(got_bits, want_bits, "sign_pack n={n} level={}", lv.name());
+            }
+            for scale in [0.37f32, -0.0, f32::NAN, f32::INFINITY] {
+                let t0 = hostile_vec(n, &mut rng);
+                let mut want = t0.clone();
+                sign_decode_add_scalar(scale, &want_bits, &mut want);
+                for lv in available_levels() {
+                    let mut got = t0.clone();
+                    sign_decode_add(lv, scale, &want_bits, &mut got);
+                    assert!(
+                        bits_eq(&got, &want),
+                        "sign_decode_add n={n} scale={scale} level={}",
+                        lv.name()
+                    );
+                }
+            }
+        }
+    }
+}

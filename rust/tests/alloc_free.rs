@@ -6,6 +6,9 @@
 //! gather, the Khatri-Rao row gathers, the gradient panels, and the
 //! momentum update all land in buffers owned by the client/backend. This
 //! test wraps the global allocator in a counter and asserts exactly that.
+//! A second phase asserts the same for a robust consensus round
+//! ([`cidertf::gossip::Aggregator`] trimmed-mean and median paths), whose
+//! per-coordinate scratch lives in a warmed thread-local.
 //!
 //! (Own integration-test crate so the counting allocator cannot interfere
 //! with any other test binary.)
@@ -13,11 +16,14 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use cidertf::compress::Compressor;
 use cidertf::engine::client::ClientState;
+use cidertf::gossip::{Aggregator, EstimateState};
 use cidertf::losses::Loss;
 use cidertf::runtime::native::NativeBackend;
 use cidertf::tensor::partition::partition_shared;
 use cidertf::tensor::synth::SynthConfig;
+use cidertf::util::mat::Mat;
 
 struct CountingAlloc;
 
@@ -65,6 +71,40 @@ fn local_step_steady_state_is_allocation_free() {
         after - before,
         0,
         "steady-state local_step allocated {} time(s) over 300 steps",
+        after - before
+    );
+
+    // --- phase 2: a robust consensus round is also allocation-free once
+    // the per-thread scratch (value buffer + slot map) is warm. Same
+    // #[test] as phase 1 on purpose: a second test fn would run on its
+    // own harness thread and pollute the measurement windows with its
+    // setup allocations.
+    let init: Vec<Option<Mat>> =
+        vec![None, Some(Mat::from_vec(32, 4, (0..128).map(|i| i as f32 * 0.01).collect()))];
+    let mut est = EstimateState::new(0, &[1, 2, 3], &init);
+    // perturb one neighbor so the per-coordinate sorts do real work
+    let delta = Compressor::None.compress(&Mat::from_vec(32, 4, vec![0.5; 128]));
+    est.apply_delta(2, 1, &delta);
+    let mut a = Mat::from_vec(32, 4, vec![1.0; 128]);
+    let weights = vec![0.25f64; 4];
+    let trimmed = Aggregator::TrimmedMean(0.25);
+    let median = Aggregator::CoordinateMedian;
+
+    for _ in 0..4 {
+        trimmed.consensus_into(&est, &mut a, 1, &[1, 2, 3], &weights, 0.05);
+        median.consensus_into(&est, &mut a, 1, &[1, 2, 3], &weights, 0.05);
+    }
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..200 {
+        trimmed.consensus_into(&est, &mut a, 1, &[1, 2, 3], &weights, 0.05);
+        median.consensus_into(&est, &mut a, 1, &[1, 2, 3], &weights, 0.05);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "robust consensus allocated {} time(s) over 400 rounds",
         after - before
     );
 }

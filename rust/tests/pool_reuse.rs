@@ -1,0 +1,85 @@
+//! Worker-pool lifecycle gate: sequential sessions reuse the same
+//! persistent workers instead of spawning fresh threads per run.
+//!
+//! Exactly ONE `#[test]` lives in this file on purpose: the assertion
+//! reads the process-wide thread count from `/proc/self/status`, and a
+//! concurrently running harness test would perturb it.
+
+use cidertf::data::Dataset;
+use cidertf::engine::session::Session;
+use cidertf::engine::spec::ExperimentSpec;
+use cidertf::engine::AlgoConfig;
+use cidertf::losses::Loss;
+use cidertf::net::driver::DriverKind;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::runtime::pool;
+use cidertf::tensor::synth::{SynthConfig, ValueKind};
+
+/// Kernel-thread count of this process, from `/proc/self/status`
+/// (`None` off Linux or if the file is unreadable — the test then skips
+/// the OS-level check and keeps the pool-level one).
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("Threads:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn run_once(data: &Dataset) {
+    // all-mode steps so every iteration hits the pooled mode-0 gradient,
+    // independent of the block sampler's draw sequence
+    let mut algo = AlgoConfig::cidertf(2);
+    algo.block_random = false;
+    let mut spec = ExperimentSpec::builder("synthetic", Loss::Ls, algo)
+        .rank(4)
+        .fiber_samples(64)
+        .k(2)
+        .gamma(0.2)
+        .iters_per_epoch(4)
+        .epochs(1)
+        .eval_batch(64)
+        .init_scale(0.3)
+        .driver(DriverKind::Sim)
+        .build()
+        .unwrap();
+    spec.compute_threads = 4;
+    let mut backend = NativeBackend::new();
+    let out = Session::new(spec).run_on(data, &mut backend, None).unwrap();
+    assert!(out.record.final_loss().is_finite());
+}
+
+#[test]
+fn sequential_sessions_reuse_pool_workers_without_leaking_threads() {
+    // 1200 patient rows per client: `1200 / GRAD_MIN_ROWS_PER_THREAD = 4`,
+    // so the 4-thread runs fan the gradient out over four pooled jobs and
+    // the pool grows to its full three workers (the caller is the fourth)
+    let data = SynthConfig {
+        dims: vec![2400, 64, 64],
+        rank: 4,
+        support_frac: 0.25,
+        fire_prob: 0.5,
+        noise_frac: 0.2,
+        value_kind: ValueKind::Binary,
+        seed: 0xBEEF_0002,
+    }
+    .generate();
+
+    // warm run: the pool lazily spawns its workers here
+    run_once(&data);
+    let workers = pool::worker_count();
+    assert!(workers >= 3, "4-thread run left only {workers} pool worker(s)");
+    let os_threads = process_threads();
+
+    // every further session must ride the same workers — same pool
+    // count, same OS thread count, no per-run spawns
+    for run in 0..3 {
+        run_once(&data);
+        assert_eq!(
+            pool::worker_count(),
+            workers,
+            "pool grew or shrank on sequential run {run}"
+        );
+        if let (Some(before), Some(now)) = (os_threads, process_threads()) {
+            assert_eq!(now, before, "process thread count changed on run {run}");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Thread-count invariance gate for the persistent worker pool.
+//!
+//! The pooled gradient (`runtime::native`) and the parallel fiber gather
+//! (`tensor::fiber`) promise **bit-identical** results at every thread
+//! count: panels are summed in a fixed order regardless of which worker
+//! computed them, and gather jobs partition the output so every cell has
+//! exactly one writer. This test runs the same experiment through the
+//! Session API at 1/2/4/8 compute threads — on a dataset large enough to
+//! actually engage both pooled paths — and asserts the factors, the
+//! per-epoch losses, and the communication ledger are byte-for-byte
+//! equal. A second test switches thread counts *across* a
+//! checkpoint/resume boundary.
+
+use cidertf::data::Dataset;
+use cidertf::engine::session::Session;
+use cidertf::engine::spec::ExperimentSpec;
+use cidertf::engine::{AlgoConfig, TrainOutcome};
+use cidertf::losses::Loss;
+use cidertf::net::driver::DriverKind;
+use cidertf::runtime::native::NativeBackend;
+use cidertf::runtime::pool::thresholds;
+use cidertf::tensor::synth::{SynthConfig, ValueKind};
+
+/// 2400 patient rows split over k=2 clients leaves 1200 rows per client
+/// — enough for the mode-0 gradient to fan out to 4 pooled threads
+/// (`1200 / GRAD_MIN_ROWS_PER_THREAD = 4`) — and 1200 x 512 sampled
+/// fibers is above `GATHER_PAR_MIN_CELLS`, so the slice gather
+/// parallelizes too.
+fn pooled_scale_data() -> Dataset {
+    SynthConfig {
+        dims: vec![2400, 64, 64],
+        rank: 4,
+        support_frac: 0.25,
+        fire_prob: 0.5,
+        noise_frac: 0.2,
+        value_kind: ValueKind::Binary,
+        seed: 0xBEEF_0001,
+    }
+    .generate()
+}
+
+fn pooled_scale_spec() -> ExperimentSpec {
+    // all-mode steps: every iteration takes a mode-0 step, so the pooled
+    // gradient and parallel gather are exercised regardless of the block
+    // sampler's draw sequence
+    let mut algo = AlgoConfig::cidertf(2);
+    algo.block_random = false;
+    let spec = ExperimentSpec::builder("synthetic", Loss::Ls, algo)
+        .rank(4)
+        .fiber_samples(512)
+        .k(2)
+        .gamma(0.2)
+        .iters_per_epoch(3)
+        .epochs(2)
+        .eval_batch(64)
+        .init_scale(0.3)
+        .driver(DriverKind::Sim)
+        .build()
+        .unwrap();
+    // sanity: the shape really crosses both engagement thresholds
+    let rows_per_client = 2400 / spec.k;
+    assert!(rows_per_client >= thresholds::GRAD_PAR_MIN_ROWS);
+    assert!(rows_per_client * spec.fiber_samples >= thresholds::GATHER_PAR_MIN_CELLS);
+    spec
+}
+
+fn run_at_threads(threads: usize, data: &Dataset) -> TrainOutcome {
+    let mut spec = pooled_scale_spec();
+    spec.compute_threads = threads;
+    let mut backend = NativeBackend::new();
+    Session::new(spec).run_on(data, &mut backend, None).unwrap()
+}
+
+fn assert_outcomes_bit_identical(a: &TrainOutcome, b: &TrainOutcome, what: &str) {
+    for (m, (x, y)) in a.factors.mats.iter().zip(b.factors.mats.iter()).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: factors diverged (mode {m})");
+    }
+    assert_eq!(a.record.points.len(), b.record.points.len(), "{what}");
+    for (p, q) in a.record.points.iter().zip(b.record.points.iter()) {
+        assert_eq!(p.epoch, q.epoch, "{what}");
+        assert_eq!(p.loss, q.loss, "{what}: loss diverged at epoch {}", p.epoch);
+        assert_eq!(p.bytes, q.bytes, "{what}: comm bytes diverged at epoch {}", p.epoch);
+    }
+    assert_eq!(a.record.total.bytes, b.record.total.bytes, "{what}");
+    assert_eq!(a.record.total.triggered, b.record.total.triggered, "{what}");
+    assert_eq!(a.record.net.delivered, b.record.net.delivered, "{what}");
+}
+
+#[test]
+fn outcomes_bit_identical_at_1_2_4_8_threads() {
+    let data = pooled_scale_data();
+    let single = run_at_threads(1, &data);
+    for threads in [2, 4, 8] {
+        let pooled = run_at_threads(threads, &data);
+        assert_outcomes_bit_identical(&single, &pooled, &format!("threads={threads}"));
+    }
+}
+
+#[test]
+fn resume_across_a_thread_count_change_is_bit_identical() {
+    // a checkpoint written by a 4-thread run and resumed at 8 threads
+    // must land exactly where an uninterrupted single-thread run does:
+    // thread count is a performance knob, never part of the trajectory
+    let data = pooled_scale_data();
+    let reference = run_at_threads(1, &data);
+
+    let dir = std::env::temp_dir().join("cidertf_thread_identity_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("switch_{}.ckpt.json", std::process::id()));
+
+    let mut truncated = pooled_scale_spec();
+    truncated.epochs = 1;
+    truncated.compute_threads = 4;
+    let mut backend = NativeBackend::new();
+    Session::new(truncated)
+        .checkpoint_every(&path, 1)
+        .run_on(&data, &mut backend, None)
+        .unwrap();
+
+    let mut resumed = Session::resume_from(&path).unwrap();
+    resumed.spec_mut().epochs = 2;
+    resumed.spec_mut().compute_threads = 8;
+    let mut backend = NativeBackend::new();
+    let out = resumed.run_on(&data, &mut backend, None).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_outcomes_bit_identical(&reference, &out, "4->8 thread resume");
+}

@@ -21,6 +21,7 @@
 //! | D004 | wall-clock        | outside bench/harness/transport |
 //! | D005 | unseeded-rng      | everywhere                 |
 //! | D006 | float-sum         | determinism-critical dirs  |
+//! | D007 | raw-thread-spawn  | outside `runtime/pool.rs`  |
 //!
 //! Escape hatch: `// lint: allow(<rule-name>) — <justification>` on the
 //! flagged line or up to three lines above it (so a clippy attribute or
@@ -83,6 +84,14 @@ pub const RULES: &[Rule] = &[
         name: "float-sum",
         hint: "free-form float summation in a determinism-critical module; use the \
                fixed-lane reducers in util/mat.rs",
+    },
+    Rule {
+        id: "D007",
+        name: "raw-thread-spawn",
+        hint: "raw std::thread::spawn/scope outside the worker pool; route parallel \
+               work through runtime::pool::parallel_for (persistent workers, \
+               deterministic job order), or justify the long-lived/barrier-structured \
+               exception",
     },
 ];
 
@@ -349,6 +358,7 @@ pub fn lint_source(rel: &str, source: &str) -> Vec<Finding> {
     let critical = CRITICAL_DIRS.iter().any(|d| rel.starts_with(d));
     let order_rs = rel == "util/order.rs";
     let clock_ok = wall_clock_allowed(rel);
+    let pool_rs = rel == "runtime/pool.rs";
 
     let mut raw: Vec<Finding> = Vec::new();
     for (idx, line) in stripped.iter().enumerate().take(last_line) {
@@ -388,6 +398,18 @@ pub fn lint_source(rel: &str, source: &str) -> Vec<Finding> {
         for token in ["thread_rng", "from_entropy", "rand::random", "RandomState", "getrandom"] {
             if line.contains(token) {
                 push_finding(&mut raw, "D005", &format!("`{token}` unseeded randomness"), ln);
+            }
+        }
+        if !pool_rs {
+            for token in ["thread::spawn", "thread::scope"] {
+                if line.contains(token) {
+                    push_finding(
+                        &mut raw,
+                        "D007",
+                        &format!("`{token}` outside the worker pool"),
+                        ln,
+                    );
+                }
             }
         }
     }

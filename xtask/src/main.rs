@@ -78,7 +78,7 @@ fn print_help() {
     println!(
         "cargo xtask verify [--determinism]\n\
          \n\
-         verify          lint rust/src with the determinism rules (D000-D006)\n\
+         verify          lint rust/src with the determinism rules (D000-D007)\n\
          --determinism   also build the release binary and prove byte-identical\n\
                          outputs across worker schedules, compute-thread counts,\n\
                          and the seq/sim driver pair"

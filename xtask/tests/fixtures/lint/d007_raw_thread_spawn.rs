@@ -1,0 +1,14 @@
+//! Fixture: raw thread spawns outside the pool module (D007).
+
+pub fn bad_spawn() -> u64 {
+    let h = std::thread::spawn(|| 1 + 1);
+    h.join().unwrap()
+}
+
+pub fn bad_scope(xs: &mut [u64]) {
+    std::thread::scope(|s| {
+        for x in xs.iter_mut() {
+            s.spawn(move || *x += 1);
+        }
+    });
+}

@@ -48,6 +48,12 @@ const CASES: &[(&str, &str, &str, &str)] = &[
         "D006",
         "float-sum",
     ),
+    (
+        include_str!("fixtures/lint/d007_raw_thread_spawn.rs"),
+        "sweep/fixture.rs",
+        "D007",
+        "raw-thread-spawn",
+    ),
 ];
 
 #[test]
@@ -156,6 +162,11 @@ fn scoping_is_per_module() {
     let src = "pub fn f(a: f64, b: f64) { let _ = a.partial_cmp(&b); }\n";
     assert!(lint_source("util/order.rs", src).is_empty());
     assert!(!lint_source("util/mat.rs", src).is_empty());
+    // raw thread spawns are fine only inside the pool module
+    let src = "pub fn f() { std::thread::spawn(|| {}); }\n";
+    assert!(lint_source("runtime/pool.rs", src).is_empty());
+    assert!(!lint_source("runtime/native.rs", src).is_empty());
+    assert!(!lint_source("sweep/mod.rs", src).is_empty());
 }
 
 #[test]
