@@ -206,10 +206,9 @@ impl NativeBackend {
                     for pi in p_start..p_end {
                         let i0 = pi * PANEL;
                         let p = PANEL.min(i_dim - i0);
-                        // SAFETY: panel `pi` belongs to exactly one job,
-                        // so the `[i0*r, (i0+p)*r)` output range and loss
-                        // slot `pi` are written by exactly one thread;
-                        // both buffers outlive the parallel_for call
+                        // lint: allow(unsafe-containment) — audited SendPtr write
+                        // SAFETY: panel `pi` has one owning job (single
+                        // in-bounds writer); `out` outlives the parallel_for.
                         let g = unsafe {
                             std::slice::from_raw_parts_mut(out_ptr.get().add(i0 * r_dim), p * r_dim)
                         };
@@ -225,6 +224,9 @@ impl NativeBackend {
                             &mut scratch[..p * s_dim],
                             g,
                         );
+                        // lint: allow(unsafe-containment) — audited SendPtr write
+                        // SAFETY: loss slot `pi < panels_total` likewise has
+                        // this job as its only writer; `loss_slots` outlives.
                         unsafe {
                             *slot_ptr.get().add(pi) = ls;
                         }

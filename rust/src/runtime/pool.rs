@@ -32,9 +32,18 @@
 //! on its own thread even when every pool worker is busy with outer
 //! jobs.
 //!
-//! This module is the only place in the crate allowed to call
-//! `std::thread::spawn` (lint rule D007 — see `xtask/src/lint.rs`).
+//! # Auditing
+//!
+//! The lock-free claim/panic-propagation protocol is factored into the
+//! [`claim`] state machine: the production claim loop and the bounded
+//! exhaustive model checker (`rust/tests/pool_model.rs`) drive the same
+//! [`claim::step`] transition function, so the interleavings the checker
+//! enumerates are the interleavings this file can exhibit. This module
+//! is the only place in the crate allowed to call `std::thread::spawn`
+//! (lint rule D007) and one of the two files where `unsafe` may live at
+//! all (rule D008) — see `xtask/src/lint.rs`.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -60,6 +69,109 @@ pub mod thresholds {
     pub const GATHER_ROWS_PER_JOB: usize = 2048;
 }
 
+/// The claim/steal/panic-propagation protocol of [`parallel_for`],
+/// extracted as an explicit state machine over a small trait of
+/// shared-memory operations.
+///
+/// Production code and the bounded model checker
+/// (`rust/tests/pool_model.rs`) execute the *same* [`step`] transition
+/// function: the pool's claim loop drives it with [`ClaimOps`]
+/// implemented by the real atomics on a live task, while the checker
+/// drives it with simulated memory under an exhaustive scheduler. Each trait method
+/// performs exactly one shared-memory action (one atomic instruction,
+/// or one mutex-serialized section), so interleaving model threads at
+/// method-call granularity explores exactly the reorderings real
+/// threads can exhibit at this protocol's abstraction level.
+pub mod claim {
+    /// The shared-memory operations of one claim-loop participant. Every
+    /// method is a single atomic action; [`step`] never touches shared
+    /// state except through these.
+    pub trait ClaimOps {
+        /// Atomically claim the next job index (fetch-add on the claim
+        /// cursor). Claims `>= n()` mean the task is drained.
+        fn claim(&self) -> usize;
+        /// Total number of jobs (immutable after task creation — reading
+        /// it is not a shared-memory step).
+        fn n(&self) -> usize;
+        /// Run job `slot` under a panic guard. Returns `true` if the job
+        /// panicked (the payload is held locally until `offer_payload`).
+        fn run(&self, slot: usize) -> bool;
+        /// Raise the task-wide panicked flag.
+        fn set_panicked(&self);
+        /// Publish this participant's caught payload unless another
+        /// panic won the race (first payload wins, under the payload
+        /// mutex).
+        fn offer_payload(&self, slot: usize);
+        /// Decrement the unfinished-job count; `true` iff this was the
+        /// final job.
+        fn finish(&self) -> bool;
+        /// Wake the caller parked on the done condvar.
+        fn notify_done(&self);
+    }
+
+    /// Program counter of one claim-loop participant. `Exit` is
+    /// terminal: the participant has observed the task drained.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+    pub enum Pc {
+        /// About to claim the next job index.
+        Claim,
+        /// Claimed job `slot`, about to run it.
+        Run(usize),
+        /// Job `slot` panicked; about to raise the panicked flag.
+        SetPanicked(usize),
+        /// About to offer job `slot`'s panic payload (first wins).
+        OfferPayload(usize),
+        /// About to decrement the unfinished-job count.
+        Finish,
+        /// Final job finished; about to wake the caller.
+        NotifyDone,
+        /// Saw a claim `>= n`: this participant is done with the task.
+        Exit,
+    }
+
+    /// Advance one participant by exactly one protocol step. The entire
+    /// claim loop is `step` iterated from [`Pc::Claim`] to [`Pc::Exit`].
+    pub fn step<O: ClaimOps + ?Sized>(pc: Pc, ops: &O) -> Pc {
+        match pc {
+            Pc::Claim => {
+                let slot = ops.claim();
+                if slot >= ops.n() {
+                    Pc::Exit
+                } else {
+                    Pc::Run(slot)
+                }
+            }
+            Pc::Run(slot) => {
+                if ops.run(slot) {
+                    Pc::SetPanicked(slot)
+                } else {
+                    Pc::Finish
+                }
+            }
+            Pc::SetPanicked(slot) => {
+                ops.set_panicked();
+                Pc::OfferPayload(slot)
+            }
+            Pc::OfferPayload(slot) => {
+                ops.offer_payload(slot);
+                Pc::Finish
+            }
+            Pc::Finish => {
+                if ops.finish() {
+                    Pc::NotifyDone
+                } else {
+                    Pc::Claim
+                }
+            }
+            Pc::NotifyDone => {
+                ops.notify_done();
+                Pc::Claim
+            }
+            Pc::Exit => Pc::Exit,
+        }
+    }
+}
+
 /// One posted `parallel_for` call.
 struct Task {
     /// The job body. Lifetime-erased to `'static`: sound because
@@ -81,6 +193,8 @@ struct Task {
 
 impl Task {
     fn drained(&self) -> bool {
+        // ordering: Relaxed — queue-GC heuristic read under the pool
+        // mutex; a stale value only delays popping a drained task
         self.next.load(Ordering::Relaxed) >= self.n
     }
 }
@@ -113,29 +227,77 @@ fn shared() -> &'static Arc<Shared> {
     })
 }
 
-/// Claim-and-run loop shared by workers and the posting caller: claims
-/// job indices until the task is drained, running each body under
-/// `catch_unwind` so a panicking job cannot wedge the pool.
-fn execute(shared: &Shared, task: &Task) {
-    loop {
-        let slot = task.next.fetch_add(1, Ordering::Relaxed);
-        if slot >= task.n {
-            return;
-        }
-        let result = catch_unwind(AssertUnwindSafe(|| (task.func)(slot)));
-        if let Err(p) = result {
-            task.panicked.store(true, Ordering::Release);
-            let mut payload = task.payload.lock().unwrap();
-            if payload.is_none() {
-                *payload = Some(p);
+/// [`claim::ClaimOps`] over a live [`Task`]: each method is one
+/// shared-memory action of the claim protocol, carrying the concrete
+/// atomic orderings the model checker's simulated memory abstracts away.
+struct TaskClaim<'a> {
+    shared: &'a Shared,
+    task: &'a Task,
+    /// Panic payload caught by `run`, handed to `offer_payload`. Local
+    /// to this participant — not shared state.
+    caught: Cell<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl claim::ClaimOps for TaskClaim<'_> {
+    fn claim(&self) -> usize {
+        // ordering: Relaxed — slot uniqueness needs only the RMW's
+        // atomicity; visibility of each job's effects is published by
+        // finish()'s AcqRel on `remaining`, not by this cursor
+        self.task.next.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn n(&self) -> usize {
+        self.task.n
+    }
+
+    fn run(&self, slot: usize) -> bool {
+        match catch_unwind(AssertUnwindSafe(|| (self.task.func)(slot))) {
+            Ok(()) => false,
+            Err(p) => {
+                self.caught.set(Some(p));
+                true
             }
         }
-        if task.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            // last job: wake the caller (lock first so the caller cannot
-            // miss the notification between its check and its wait)
-            let _guard = shared.inner.lock().unwrap();
-            shared.done_cv.notify_all();
+    }
+
+    fn set_panicked(&self) {
+        // ordering: Release — pairs with the caller's Acquire load after
+        // its wait loop, making the flag visible once `remaining` is 0
+        self.task.panicked.store(true, Ordering::Release);
+    }
+
+    fn offer_payload(&self, _slot: usize) {
+        let mine = self.caught.take();
+        let mut payload = self.task.payload.lock().unwrap();
+        if payload.is_none() {
+            *payload = mine;
         }
+    }
+
+    fn finish(&self) -> bool {
+        // ordering: AcqRel — the release half publishes this job's
+        // writes; the acquire half on the final decrement orders every
+        // job's writes before the caller's wakeup
+        self.task.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    fn notify_done(&self) {
+        // last job: wake the caller (lock first so the caller cannot
+        // miss the notification between its check and its wait)
+        let _guard = self.shared.inner.lock().unwrap();
+        self.shared.done_cv.notify_all();
+    }
+}
+
+/// Claim-and-run loop shared by workers and the posting caller: drives
+/// the [`claim`] state machine over the live task until it reports
+/// [`claim::Pc::Exit`] (every job body runs under `catch_unwind`, so a
+/// panicking job cannot wedge the pool).
+fn execute(shared: &Shared, task: &Task) {
+    let ops = TaskClaim { shared, task, caught: Cell::new(None) };
+    let mut pc = claim::Pc::Claim;
+    while pc != claim::Pc::Exit {
+        pc = claim::step(pc, &ops);
     }
 }
 
@@ -180,11 +342,8 @@ pub fn parallel_for(threads: usize, n_jobs: usize, f: &(dyn Fn(usize) + Sync)) {
         return;
     }
     let shared = shared();
-    // SAFETY: the task never outlives this call — we block below until
-    // `remaining == 0`, and workers only dereference `func` for claimed
-    // slots `< n`, all of which are counted by `remaining`. After the
-    // task drains, every further claim is `>= n` and returns without
-    // touching `func`.
+    // SAFETY: `f` cannot escape this call — we block below until
+    // `remaining == 0`, and only claimed jobs (slot < n) dereference it.
     let func: &'static (dyn Fn(usize) + Sync) =
         unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
     let task = Arc::new(Task {
@@ -212,11 +371,14 @@ pub fn parallel_for(threads: usize, n_jobs: usize, f: &(dyn Fn(usize) + Sync)) {
     shared.work_cv.notify_all();
     execute(shared, &task);
     let mut guard = shared.inner.lock().unwrap();
+    // ordering: Acquire — pairs with finish()'s AcqRel decrements, so
+    // every job's writes are visible once this reads zero
     while task.remaining.load(Ordering::Acquire) > 0 {
         guard = shared.done_cv.wait(guard).unwrap();
     }
     guard.queue.retain(|t| !Arc::ptr_eq(t, &task));
     drop(guard);
+    // ordering: Acquire — pairs with set_panicked()'s Release store
     if task.panicked.load(Ordering::Acquire) {
         let payload = task.payload.lock().unwrap().take();
         match payload {
@@ -247,7 +409,12 @@ pub fn worker_count() -> usize {
 #[derive(Clone, Copy)]
 pub struct SendPtr<T>(*mut T);
 
+// SAFETY: SendPtr is a plain pointer wrapper; the disjoint-write and
+// outlives-the-call contract documented above is discharged by every
+// caller at its use site (each carries its own SAFETY comment).
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: sharing &SendPtr across threads only copies the pointer
+// value; all writes through it obey the caller's disjointness contract.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {

@@ -868,14 +868,17 @@ pub fn run_specs(
         let n_workers = opts.workers.clamp(1, pending.len());
         let abort = AtomicBool::new(false);
         crate::runtime::pool::parallel_for(n_workers, pending.len(), &|slot| {
-            if abort.load(Ordering::Relaxed) {
+            // ordering: SeqCst — cold advisory abort flag, read once per
+            // run; Relaxed is confined to runtime/pool.rs (D010).
+            if abort.load(Ordering::SeqCst) {
                 return;
             }
             let i = pending[slot];
             let outcome = execute_one(&runs[i], i, &stems[i], &datasets, opts, fms_reference)
                 .map_err(|e| format!("{e:#}"));
             if outcome.is_err() {
-                abort.store(true, Ordering::Relaxed);
+                // ordering: SeqCst — see the matching load above.
+                abort.store(true, Ordering::SeqCst);
             }
             *slots[i].lock().unwrap() = Some(outcome);
         });

@@ -202,9 +202,8 @@ impl FiberIndex {
         pool::parallel_for(threads, n_fill_jobs, &|job| {
             let r0 = job * rows_per_job;
             let r1 = (r0 + rows_per_job).min(i_dim);
-            // SAFETY: row panels [r0, r1) are disjoint across jobs and
-            // within bounds; parallel_for blocks until every job is done,
-            // so the pointer outlives all uses.
+            // lint: allow(unsafe-containment) — audited SendPtr write
+            // SAFETY: disjoint in-bounds panels [r0, r1); `out` outlives the call.
             let panel =
                 unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r0 * s), (r1 - r0) * s) };
             panel.fill(0.0);
@@ -223,9 +222,9 @@ impl FiberIndex {
                 for k in a..b {
                     let row = self.rows[k] as usize;
                     debug_assert!(row < i_dim);
-                    // SAFETY: `col` is owned by exactly one job (column
-                    // ranges are disjoint) and `row < i_dim`, so this cell
-                    // has a single writer and stays in bounds.
+                    // lint: allow(unsafe-containment) — audited SendPtr write
+                    // SAFETY: `col` has exactly one owning job and
+                    // `row < i_dim`: a single writer, always in bounds.
                     unsafe { *out_ptr.get().add(row * s + col) = self.vals[k] };
                 }
             }

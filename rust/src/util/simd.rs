@@ -57,8 +57,14 @@ impl Level {
     }
 }
 
-/// Highest level the hardware supports.
+/// Highest level the hardware supports. Under Miri this is pinned to
+/// `Scalar`: the vector intrinsics are outside Miri's model, and the
+/// Miri CI lane audits the scalar bodies (which every level's tail
+/// loops and reductions share).
 fn hw_level() -> Level {
+    if cfg!(miri) {
+        return Level::Scalar;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if is_x86_feature_detected!("avx2") {
@@ -243,6 +249,8 @@ mod sse2 {
 
     /// Spill the two half-registers to the 8-lane layout and reduce with
     /// the scalar tree.
+    // SAFETY: SSE2 is baseline x86_64; both stores land in a local
+    // stack array of exactly 8 lanes.
     #[inline(always)]
     unsafe fn hsum2(lo: __m128, hi: __m128) -> f32 {
         let mut lanes = [0.0f32; LANES];
@@ -251,6 +259,8 @@ mod sse2 {
         hsum(lanes)
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts
+    // `a.len() == b.len()`, and every load offset is `< chunks * LANES`.
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let k = a.len();
         let chunks = k / LANES;
@@ -268,6 +278,8 @@ mod sse2 {
         hsum2(acc_lo, acc_hi) + dot_tail(a, b, chunks * LANES)
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts all four
+    // slices hold at least `k` elements, and offsets stay `< k`.
     pub unsafe fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], k: usize) -> [f32; 4] {
         let chunks = k / LANES;
         let mut acc = [[_mm_setzero_ps(); 2]; 4];
@@ -294,6 +306,8 @@ mod sse2 {
         ]
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts
+    // `x.len() == y.len()`, and vector offsets stay `< chunks * 4`.
     pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
         let n = y.len();
         let chunks = n / 4;
@@ -307,6 +321,8 @@ mod sse2 {
         super::axpy_scalar(alpha, &x[chunks * 4..], &mut y[chunks * 4..]);
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts
+    // `x.len() == y.len()`, and vector offsets stay `< chunks * 4`.
     pub unsafe fn add_assign(x: &[f32], y: &mut [f32]) {
         let n = y.len();
         let chunks = n / 4;
@@ -318,6 +334,8 @@ mod sse2 {
         super::add_assign_scalar(&x[chunks * 4..], &mut y[chunks * 4..]);
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts `x`, `y`,
+    // and `out` share a length, and vector offsets stay `< chunks * 4`.
     pub unsafe fn hadamard2(x: &[f32], y: &[f32], out: &mut [f32]) {
         let n = out.len();
         let chunks = n / 4;
@@ -329,6 +347,8 @@ mod sse2 {
         super::hadamard2_scalar(&x[chunks * 4..], &y[chunks * 4..], &mut out[chunks * 4..]);
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts
+    // `x.len() == y.len()`, and vector offsets stay `< chunks * 4`.
     pub unsafe fn hadamard_assign(x: &[f32], y: &mut [f32]) {
         let n = y.len();
         let chunks = n / 4;
@@ -340,6 +360,8 @@ mod sse2 {
         super::hadamard_assign_scalar(&x[chunks * 4..], &mut y[chunks * 4..]);
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts `hj`,
+    // `hk`, and `a` share a length, and vector offsets stay in bounds.
     pub unsafe fn scaled_diff_acc(w: f32, hj: &[f32], hk: &[f32], a: &mut [f32]) {
         let n = a.len();
         let chunks = n / 4;
@@ -353,6 +375,8 @@ mod sse2 {
         super::scaled_diff_acc_scalar(w, &hj[chunks * 4..], &hk[chunks * 4..], &mut a[chunks * 4..]);
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts `bits`
+    // holds a byte per 8 lanes, and `iter_mut` bounds the loads to it.
     pub unsafe fn sign_pack(data: &[f32], bits: &mut [u8]) {
         let chunks = data.len() / 8;
         let zero = _mm_setzero_ps();
@@ -368,6 +392,8 @@ mod sse2 {
         super::sign_pack_tail(data, bits, chunks * 8);
     }
 
+    // SAFETY: SSE2 is baseline x86_64; the dispatcher asserts `bits`
+    // covers `t.len()` lanes, and store offsets stay `< chunks * 8`.
     pub unsafe fn sign_decode_add(scale: f32, bits: &[u8], t: &mut [f32]) {
         let chunks = t.len() / 8;
         let sv = _mm_castps_si128(_mm_set1_ps(scale));
@@ -397,6 +423,8 @@ mod avx2 {
 
     /// Spill the 8-lane register and reduce with the scalar tree (no
     /// `hadd` — its association differs from the reference).
+    // SAFETY: callers hold the AVX2 target-feature contract; the store
+    // lands in a local stack array of exactly 8 lanes.
     #[inline(always)]
     unsafe fn hsum8(acc: __m256) -> f32 {
         let mut lanes = [0.0f32; LANES];
@@ -404,6 +432,8 @@ mod avx2 {
         hsum(lanes)
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2`, i.e. after
+    // feature detection; the dispatcher asserts `a.len() == b.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let k = a.len();
@@ -417,6 +447,8 @@ mod avx2 {
         hsum8(acc) + dot_tail(a, b, chunks * LANES)
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2` (feature
+    // detected); the dispatcher asserts all four slices hold `k` items.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], k: usize) -> [f32; 4] {
         let chunks = k / LANES;
@@ -439,6 +471,8 @@ mod avx2 {
         [hsum8(acc00) + t[0], hsum8(acc01) + t[1], hsum8(acc10) + t[2], hsum8(acc11) + t[3]]
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2` (feature
+    // detected); the dispatcher asserts `x.len() == y.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
         let n = y.len();
@@ -456,6 +490,8 @@ mod avx2 {
         super::axpy_scalar(alpha, &x[chunks * 8..], &mut y[chunks * 8..]);
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2` (feature
+    // detected); the dispatcher asserts `x.len() == y.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn add_assign(x: &[f32], y: &mut [f32]) {
         let n = y.len();
@@ -471,6 +507,8 @@ mod avx2 {
         super::add_assign_scalar(&x[chunks * 8..], &mut y[chunks * 8..]);
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2` (feature
+    // detected); the dispatcher asserts the three lengths match.
     #[target_feature(enable = "avx2")]
     pub unsafe fn hadamard2(x: &[f32], y: &[f32], out: &mut [f32]) {
         let n = out.len();
@@ -486,6 +524,8 @@ mod avx2 {
         super::hadamard2_scalar(&x[chunks * 8..], &y[chunks * 8..], &mut out[chunks * 8..]);
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2` (feature
+    // detected); the dispatcher asserts `x.len() == y.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn hadamard_assign(x: &[f32], y: &mut [f32]) {
         let n = y.len();
@@ -501,6 +541,8 @@ mod avx2 {
         super::hadamard_assign_scalar(&x[chunks * 8..], &mut y[chunks * 8..]);
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2` (feature
+    // detected); the dispatcher asserts the three lengths match.
     #[target_feature(enable = "avx2")]
     pub unsafe fn scaled_diff_acc(w: f32, hj: &[f32], hk: &[f32], a: &mut [f32]) {
         let n = a.len();
@@ -518,6 +560,8 @@ mod avx2 {
         super::scaled_diff_acc_scalar(w, &hj[chunks * 8..], &hk[chunks * 8..], &mut a[chunks * 8..]);
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2` (feature
+    // detected); the dispatcher asserts `bits` holds a byte per 8 lanes.
     #[target_feature(enable = "avx2")]
     pub unsafe fn sign_pack(data: &[f32], bits: &mut [u8]) {
         let chunks = data.len() / 8;
@@ -533,6 +577,8 @@ mod avx2 {
         super::sign_pack_tail(data, bits, chunks * 8);
     }
 
+    // SAFETY: callers reach this only via `Level::Avx2` (feature
+    // detected); the dispatcher asserts `bits` covers `t.len()` lanes.
     #[target_feature(enable = "avx2")]
     pub unsafe fn sign_decode_add(scale: f32, bits: &[u8], t: &mut [f32]) {
         let chunks = t.len() / 8;
@@ -584,8 +630,10 @@ pub fn dot(lv: Level, a: &[f32], b: &[f32]) -> f32 {
     match lv {
         Level::Scalar => dot_scalar(a, b),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; lengths asserted above.
         Level::Sse2 => unsafe { sse2::dot(a, b) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::dot(a, b) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => dot_scalar(a, b),
@@ -600,8 +648,10 @@ pub fn dot2x2(lv: Level, a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32], k: usiz
     match lv {
         Level::Scalar => dot2x2_scalar(a0, a1, b0, b1, k),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; lengths asserted above.
         Level::Sse2 => unsafe { sse2::dot2x2(a0, a1, b0, b1, k) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::dot2x2(a0, a1, b0, b1, k) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => dot2x2_scalar(a0, a1, b0, b1, k),
@@ -616,8 +666,10 @@ pub fn axpy(lv: Level, alpha: f32, x: &[f32], y: &mut [f32]) {
     match lv {
         Level::Scalar => axpy_scalar(alpha, x, y),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; lengths asserted above.
         Level::Sse2 => unsafe { sse2::axpy(alpha, x, y) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => axpy_scalar(alpha, x, y),
@@ -631,8 +683,10 @@ pub fn add_assign(lv: Level, x: &[f32], y: &mut [f32]) {
     match lv {
         Level::Scalar => add_assign_scalar(x, y),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; lengths asserted above.
         Level::Sse2 => unsafe { sse2::add_assign(x, y) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::add_assign(x, y) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => add_assign_scalar(x, y),
@@ -647,8 +701,10 @@ pub fn hadamard2(lv: Level, x: &[f32], y: &[f32], out: &mut [f32]) {
     match lv {
         Level::Scalar => hadamard2_scalar(x, y, out),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; lengths asserted above.
         Level::Sse2 => unsafe { sse2::hadamard2(x, y, out) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::hadamard2(x, y, out) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => hadamard2_scalar(x, y, out),
@@ -662,8 +718,10 @@ pub fn hadamard_assign(lv: Level, x: &[f32], y: &mut [f32]) {
     match lv {
         Level::Scalar => hadamard_assign_scalar(x, y),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; lengths asserted above.
         Level::Sse2 => unsafe { sse2::hadamard_assign(x, y) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::hadamard_assign(x, y) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => hadamard_assign_scalar(x, y),
@@ -679,8 +737,10 @@ pub fn scaled_diff_acc(lv: Level, w: f32, hj: &[f32], hk: &[f32], a: &mut [f32])
     match lv {
         Level::Scalar => scaled_diff_acc_scalar(w, hj, hk, a),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; lengths asserted above.
         Level::Sse2 => unsafe { sse2::scaled_diff_acc(w, hj, hk, a) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::scaled_diff_acc(w, hj, hk, a) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => scaled_diff_acc_scalar(w, hj, hk, a),
@@ -697,8 +757,10 @@ pub fn sign_pack(lv: Level, data: &[f32], bits: &mut [u8]) {
     match lv {
         Level::Scalar => sign_pack_scalar(data, bits),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; bit capacity asserted above.
         Level::Sse2 => unsafe { sse2::sign_pack(data, bits) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::sign_pack(data, bits) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => sign_pack_scalar(data, bits),
@@ -712,8 +774,10 @@ pub fn sign_decode_add(lv: Level, scale: f32, bits: &[u8], t: &mut [f32]) {
     match lv {
         Level::Scalar => sign_decode_add_scalar(scale, bits, t),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline x86_64; bit capacity asserted above.
         Level::Sse2 => unsafe { sse2::sign_decode_add(scale, bits, t) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by feature detection.
         Level::Avx2 => unsafe { avx2::sign_decode_add(scale, bits, t) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => sign_decode_add_scalar(scale, bits, t),

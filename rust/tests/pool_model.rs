@@ -1,0 +1,366 @@
+//! Bounded exhaustive model checker for the worker pool's lock-free
+//! claim protocol (`cidertf::runtime::pool::claim`).
+//!
+//! The production claim loop and this checker share one transition
+//! function — [`step`] — so the protocol verified here is the protocol
+//! that runs in `parallel_for`, not a hand-copied model of it. The
+//! checker swaps the real atomics for a simulated shared memory
+//! ([`Mem`]) and enumerates *every* interleaving of participant steps
+//! (depth-first over the global state graph, deduplicated by a visited
+//! set) for small configurations: 2–3 participants × 2–4 jobs × every
+//! panic mask (a fixed subset of masks at 4 jobs).
+//!
+//! Checked properties, at every reachable terminal state:
+//!
+//! * every job runs exactly once — no lost or duplicated claims;
+//! * `remaining` hits zero exactly — no underflow, nothing left over;
+//! * a panicking job raises the task flag and publishes a payload from
+//!   a genuinely panicking slot; panic-free runs publish nothing;
+//! * the caller is woken exactly once, and only after `remaining == 0`;
+//! * no reachable state deadlocks (some participant can always step
+//!   until everyone is done).
+//!
+//! Honest scope note: participants interleave at `ClaimOps`-method
+//! granularity, which matches the protocol's real atomicity (each
+//! method is one atomic RMW or one mutex-serialized section). The
+//! condvar handshake is modeled conservatively — the caller's wait is
+//! simply not runnable until `remaining == 0` — so lost-wakeup bugs in
+//! the condvar usage itself are out of scope here; the TSan CI lane
+//! exercises that surface on the real threads instead.
+//!
+//! The checker is validated by two seeded mutants (a torn, non-atomic
+//! claim and a dropped decrement on the panic path); both must be
+//! caught or the harness itself is broken.
+
+use std::cell::RefCell;
+use std::collections::BTreeSet;
+
+use cidertf::runtime::pool::claim::{step, ClaimOps, Pc};
+
+/// Simulated shared memory of one posted task. Mirrors the fields of
+/// the pool's `Task` plus sticky violation flags; every field is
+/// bounded so the reachable state space is finite.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Mem {
+    /// Total jobs (immutable).
+    n: usize,
+    /// Claim cursor (`Task::next`). Capped at `n + NEXT_SLACK` so even
+    /// buggy mutants keep the state space finite.
+    next: usize,
+    /// Unfinished-job count (`Task::remaining`).
+    remaining: usize,
+    /// Task-wide panic flag (`Task::panicked`).
+    panicked: bool,
+    /// Slot whose panic payload won the first-wins race, if any.
+    payload: Option<usize>,
+    /// Per-job run count, saturating at 2 (2 means "ran more than once"
+    /// — the exact count past the violation does not matter).
+    runs: Vec<u8>,
+    /// Sticky: some participant ran a slot `>= n`.
+    oob: bool,
+    /// Sticky: `finish()` decremented past zero.
+    underflow: bool,
+    /// Caller wakeups delivered, saturating at 2.
+    notifies: u8,
+}
+
+/// Headroom on the claim-cursor cap: enough for every participant's
+/// drained-claim overshoot, with slack so capping never masks a real
+/// protocol state.
+const NEXT_SLACK: usize = 8;
+
+impl Mem {
+    fn new(jobs: usize) -> Self {
+        Mem {
+            n: jobs,
+            next: 0,
+            remaining: jobs,
+            panicked: false,
+            payload: None,
+            runs: vec![0; jobs],
+            oob: false,
+            underflow: false,
+            notifies: 0,
+        }
+    }
+}
+
+/// [`ClaimOps`] over the simulated memory. Each method is one atomic
+/// action, exactly like its `TaskClaim` counterpart in the pool.
+struct MemRef<'a> {
+    mem: &'a RefCell<Mem>,
+    /// Bit `j` set ⇒ job `j` panics when run.
+    mask: u32,
+}
+
+impl ClaimOps for MemRef<'_> {
+    fn claim(&self) -> usize {
+        let mut m = self.mem.borrow_mut();
+        let v = m.next;
+        m.next = (v + 1).min(m.n + NEXT_SLACK);
+        v
+    }
+
+    fn n(&self) -> usize {
+        self.mem.borrow().n
+    }
+
+    fn run(&self, slot: usize) -> bool {
+        let mut m = self.mem.borrow_mut();
+        if slot >= m.n {
+            m.oob = true;
+            return false;
+        }
+        m.runs[slot] = (m.runs[slot] + 1).min(2);
+        (self.mask >> slot) & 1 == 1
+    }
+
+    fn set_panicked(&self) {
+        self.mem.borrow_mut().panicked = true;
+    }
+
+    fn offer_payload(&self, slot: usize) {
+        let mut m = self.mem.borrow_mut();
+        if m.payload.is_none() {
+            m.payload = Some(slot);
+        }
+    }
+
+    fn finish(&self) -> bool {
+        let mut m = self.mem.borrow_mut();
+        if m.remaining == 0 {
+            m.underflow = true;
+            return false;
+        }
+        m.remaining -= 1;
+        m.remaining == 0
+    }
+
+    fn notify_done(&self) {
+        let mut m = self.mem.borrow_mut();
+        m.notifies = (m.notifies + 1).min(2);
+    }
+}
+
+/// Program counter of one model thread. Thread 0 is the posting caller
+/// (it participates in the claim loop, then waits for stragglers);
+/// every other thread is a pool worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum TPc {
+    /// Inside the shared claim loop at protocol position `pc`.
+    Loop(Pc),
+    /// Torn-claim mutant only: read `next == v`; the `v + 1` store is
+    /// still pending, so another thread can claim the same slot.
+    ClaimStore(usize),
+    /// Caller parked on the done condvar; runnable once
+    /// `remaining == 0`.
+    CallerWait,
+    /// Terminal.
+    Done,
+}
+
+/// Seeded protocol bugs used to validate that the checker actually has
+/// teeth. `None` is the real protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mutation {
+    /// The real protocol, driven through the real [`step`] function.
+    None,
+    /// Splits the claim fetch-add into a racy read + store pair.
+    NonAtomicClaim,
+    /// Panicking jobs skip the `finish()` decrement.
+    SkipPanicFinish,
+}
+
+/// `true` if `pc` may take a step given the current memory.
+fn runnable(pc: &TPc, mem: &Mem) -> bool {
+    match pc {
+        TPc::Done => false,
+        TPc::CallerWait => mem.remaining == 0,
+        TPc::Loop(_) | TPc::ClaimStore(_) => true,
+    }
+}
+
+/// Advance one thread by exactly one shared-memory step, returning its
+/// next program counter and the successor memory.
+fn step_thread(pc: &TPc, mem: &Mem, mask: u32, mutation: Mutation, is_caller: bool) -> (TPc, Mem) {
+    // a participant leaving the claim loop exits; the caller then waits
+    // for stragglers while workers are simply done with this task
+    let exit = |caller: bool| if caller { TPc::CallerWait } else { TPc::Done };
+
+    let cell = RefCell::new(mem.clone());
+    let ops = MemRef { mem: &cell, mask };
+    let npc = match pc {
+        TPc::Loop(p) => match (mutation, *p) {
+            (Mutation::NonAtomicClaim, Pc::Claim) => {
+                // mutant: the read half of a torn claim (no increment)
+                let v = cell.borrow().next;
+                TPc::ClaimStore(v)
+            }
+            (Mutation::SkipPanicFinish, Pc::OfferPayload(slot)) => {
+                // mutant: publish the payload but skip Finish entirely,
+                // losing the `remaining` decrement for this job
+                ops.offer_payload(slot);
+                TPc::Loop(Pc::Claim)
+            }
+            _ => match step(*p, &ops) {
+                Pc::Exit => exit(is_caller),
+                next => TPc::Loop(next),
+            },
+        },
+        TPc::ClaimStore(v) => {
+            // mutant: the store half of the torn claim, then the same
+            // drained-or-run branch the real protocol takes
+            let (v, n) = (*v, cell.borrow().n);
+            cell.borrow_mut().next = (v + 1).min(n + NEXT_SLACK);
+            if v >= n {
+                exit(is_caller)
+            } else {
+                TPc::Loop(Pc::Run(v))
+            }
+        }
+        TPc::CallerWait => TPc::Done,
+        TPc::Done => TPc::Done,
+    };
+    (npc, cell.into_inner())
+}
+
+/// Invariants that must hold when every thread is `Done`.
+fn verify_terminal(mem: &Mem, jobs: usize, mask: u32) -> Result<(), String> {
+    if mem.oob {
+        return Err("a job slot >= n was run".into());
+    }
+    if mem.underflow {
+        return Err("`remaining` underflowed".into());
+    }
+    if mem.remaining != 0 {
+        return Err(format!("remaining = {} at termination", mem.remaining));
+    }
+    for (j, &r) in mem.runs.iter().enumerate() {
+        if r != 1 {
+            return Err(format!("job {j} ran {r} time(s), want exactly 1"));
+        }
+    }
+    let should_panic = (mask & ((1u32 << jobs) - 1)) != 0;
+    if mem.panicked != should_panic {
+        return Err(format!("panicked flag = {} but panic mask = {mask:#b}", mem.panicked));
+    }
+    match mem.payload {
+        Some(slot) if (mask >> slot) & 1 == 1 => {}
+        Some(slot) => return Err(format!("payload from non-panicking job {slot}")),
+        None if should_panic => return Err("panic payload lost".into()),
+        None => {}
+    }
+    if mem.notifies != 1 {
+        return Err(format!("caller woken {} time(s), want exactly 1", mem.notifies));
+    }
+    Ok(())
+}
+
+/// Exhaustively explore every interleaving of `threads` participants
+/// (thread 0 is the caller) over `jobs` jobs where job `j` panics iff
+/// bit `j` of `mask` is set. Returns the number of distinct global
+/// states explored, or a description of the first violation found.
+fn check(threads: usize, jobs: usize, mask: u32, mutation: Mutation) -> Result<u64, String> {
+    let init = ((0..threads).map(|_| TPc::Loop(Pc::Claim)).collect::<Vec<_>>(), Mem::new(jobs));
+    let mut visited: BTreeSet<(Vec<TPc>, Mem)> = BTreeSet::new();
+    visited.insert(init.clone());
+    let mut stack = vec![init];
+
+    while let Some((pcs, mem)) = stack.pop() {
+        if pcs.iter().all(|p| *p == TPc::Done) {
+            verify_terminal(&mem, jobs, mask).map_err(|e| format!("{e} (mem: {mem:?})"))?;
+            continue;
+        }
+        let mut any = false;
+        for (t, pc) in pcs.iter().enumerate() {
+            if !runnable(pc, &mem) {
+                continue;
+            }
+            any = true;
+            let (npc, nmem) = step_thread(pc, &mem, mask, mutation, t == 0);
+            let mut npcs = pcs.clone();
+            npcs[t] = npc;
+            let succ = (npcs, nmem);
+            if visited.insert(succ.clone()) {
+                stack.push(succ);
+            }
+        }
+        if !any {
+            return Err(format!("deadlock: pcs = {pcs:?}, mem = {mem:?}"));
+        }
+    }
+    Ok(visited.len() as u64)
+}
+
+/// The panic masks explored for a given job count: every mask up to
+/// 3 jobs, and a representative subset (none, one, adjacent pair, all)
+/// at 4 jobs to keep the largest configurations tractable.
+fn masks_for(jobs: usize) -> Vec<u32> {
+    if jobs <= 3 {
+        (0..(1u32 << jobs)).collect()
+    } else {
+        vec![0b0000, 0b0001, 0b0110, 0b1111]
+    }
+}
+
+#[test]
+fn real_protocol_bounded_exhaustive() {
+    for threads in [2usize, 3] {
+        for jobs in [2usize, 3, 4] {
+            for mask in masks_for(jobs) {
+                let states = check(threads, jobs, mask, Mutation::None).unwrap_or_else(|e| {
+                    panic!("threads={threads} jobs={jobs} mask={mask:#b}: {e}")
+                });
+                assert!(states > 0, "threads={threads} jobs={jobs}: explored nothing");
+            }
+        }
+    }
+}
+
+#[test]
+fn exploration_is_genuinely_exhaustive() {
+    // loose floors on the distinct-state counts: if a refactor of the
+    // checker accidentally serializes the schedule (e.g. always stepping
+    // thread 0 first and never backtracking), these collapse to the
+    // handful of states on one path and the floors fail
+    let two_by_two = check(2, 2, 0, Mutation::None).unwrap();
+    assert!(two_by_two >= 30, "2 threads x 2 jobs explored only {two_by_two} states");
+    let three_by_three = check(3, 3, 0b111, Mutation::None).unwrap();
+    assert!(three_by_three >= 300, "3 threads x 3 jobs explored only {three_by_three} states");
+    // more threads must strictly widen the reachable interleavings
+    let three_by_two = check(3, 2, 0, Mutation::None).unwrap();
+    assert!(three_by_two > two_by_two, "adding a thread did not widen the state space");
+}
+
+#[test]
+fn torn_claim_mutant_is_caught() {
+    // splitting the claim fetch-add lets two threads claim one slot;
+    // the checker must observe a duplicated/lost run or the resulting
+    // remaining-count corruption in some interleaving
+    let r = check(2, 2, 0, Mutation::NonAtomicClaim);
+    let msg = r.expect_err("torn-claim mutant escaped the checker");
+    assert!(
+        msg.contains("ran") || msg.contains("underflow") || msg.contains("remaining"),
+        "torn claim surfaced as an unexpected violation: {msg}"
+    );
+}
+
+#[test]
+fn lost_panic_decrement_mutant_is_caught() {
+    // a panicking job that skips finish() leaves remaining > 0 forever:
+    // every worker drains and exits, the caller waits on a count that
+    // can never reach zero, and the checker reports the deadlock
+    let r = check(2, 2, 0b01, Mutation::SkipPanicFinish);
+    let msg = r.expect_err("lost-decrement mutant escaped the checker");
+    assert!(msg.contains("deadlock"), "lost decrement surfaced unexpectedly: {msg}");
+}
+
+#[test]
+fn mutants_pass_on_configs_that_cannot_expose_them() {
+    // sanity check on the harness itself: SkipPanicFinish only differs
+    // from the real protocol on the panic path, so a panic-free run
+    // must still verify — the mutant tests above are meaningful only
+    // if detection tracks the seeded bug, not the mutation flag
+    check(2, 2, 0, Mutation::SkipPanicFinish)
+        .expect("panic-free run must not distinguish SkipPanicFinish");
+}

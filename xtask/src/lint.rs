@@ -1,27 +1,39 @@
-//! The determinism lint engine behind `cargo xtask verify`.
+//! The determinism + unsafe/concurrency lint engine behind
+//! `cargo xtask verify`.
 //!
-//! An offline, line/token-based scanner over `rust/src` enforcing the
-//! repo-specific rules clippy cannot express (module-scoped hazards,
-//! comparator-span analysis). Comments, string literals, and char
+//! An offline, line/token-based scanner over `rust/src` and `xtask/src`
+//! (the linter lints itself) enforcing the repo-specific rules clippy
+//! cannot express (module-scoped hazards, comparator-span analysis,
+//! safety-contract presence). Comments, string literals, and char
 //! literals are blanked by a small state machine before matching, so a
-//! doc comment *describing* a hazard never trips a rule. Everything from
-//! the first `#[cfg(test)]` to the end of a file is skipped — test code
-//! cannot leak nondeterminism into run outputs, and the repo convention
-//! keeps test modules last.
+//! doc comment *describing* a hazard never trips a rule. `#[cfg(test)]`
+//! items are skipped by tracking brace depth to the end of the annotated
+//! item — test code cannot leak nondeterminism into run outputs, but
+//! production code *below* a test module stays in scope.
 //!
 //! Rules (also tabulated in ARCHITECTURE.md "Static analysis &
 //! invariants"):
 //!
-//! | id   | name              | scope                      |
-//! |------|-------------------|----------------------------|
-//! | D000 | malformed-allow   | everywhere                 |
-//! | D001 | nan-ordering      | outside `util/order.rs`    |
-//! | D002 | inline-float-sort | outside `util/order.rs`    |
-//! | D003 | hash-structure    | determinism-critical dirs  |
-//! | D004 | wall-clock        | outside bench/harness/transport |
-//! | D005 | unseeded-rng      | everywhere                 |
-//! | D006 | float-sum         | determinism-critical dirs  |
-//! | D007 | raw-thread-spawn  | outside `runtime/pool.rs`  |
+//! | id   | name                    | scope                      |
+//! |------|-------------------------|----------------------------|
+//! | D000 | malformed-allow         | everywhere                 |
+//! | D001 | nan-ordering            | outside `util/order.rs`    |
+//! | D002 | inline-float-sort       | outside `util/order.rs`    |
+//! | D003 | hash-structure          | determinism-critical dirs  |
+//! | D004 | wall-clock              | outside bench/harness/transport |
+//! | D005 | unseeded-rng            | everywhere                 |
+//! | D006 | float-sum               | determinism-critical dirs  |
+//! | D007 | raw-thread-spawn        | outside `runtime/pool.rs`  |
+//! | D008 | unsafe-containment      | outside `util/simd.rs` + `runtime/pool.rs` |
+//! | D009 | missing-safety-contract | every `unsafe` token       |
+//! | D010 | atomic-ordering         | every atomic `Ordering::` token |
+//!
+//! D009 wants a `// SAFETY: <why the invariants hold>` comment on the
+//! line or up to three lines above each `unsafe` token; empty or
+//! boilerplate justifications count as missing. D010 wants an
+//! `// ordering: <why this memory order>` note at every atomic ordering
+//! token, and additionally confines `Relaxed` to the annotated counters
+//! in `runtime/pool.rs`.
 //!
 //! Escape hatch: `// lint: allow(<rule-name>) — <justification>` on the
 //! flagged line or up to three lines above it (so a clippy attribute or
@@ -93,7 +105,37 @@ pub const RULES: &[Rule] = &[
                deterministic job order), or justify the long-lived/barrier-structured \
                exception",
     },
+    Rule {
+        id: "D008",
+        name: "unsafe-containment",
+        hint: "unsafe code is audited (Miri/TSan lanes, the pool model checker) only \
+               in util/simd.rs and runtime/pool.rs; move it behind those modules' \
+               safe APIs, or justify an audited exception",
+    },
+    Rule {
+        id: "D009",
+        name: "missing-safety-contract",
+        hint: "every unsafe site needs a `// SAFETY:` contract on the line or up to \
+               3 lines above stating why the invariants hold; empty or boilerplate \
+               justifications count as missing",
+    },
+    Rule {
+        id: "D010",
+        name: "atomic-ordering",
+        hint: "every atomic Ordering:: token needs an `// ordering:` note justifying \
+               the memory-order choice; Relaxed is allowed only at annotated \
+               counters in runtime/pool.rs",
+    },
 ];
+
+/// Files where `unsafe` is allowed to live (D008): the audited SIMD
+/// kernels and the worker pool — the two surfaces covered by the Miri
+/// and TSan CI lanes plus the pool model checker.
+const UNSAFE_ALLOWED: &[&str] = &["util/simd.rs", "runtime/pool.rs"];
+
+/// The atomic memory-ordering variants D010 tracks. `std::cmp::Ordering`
+/// variants (Less/Equal/Greater) are deliberately absent.
+const ATOMIC_ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
 
 /// Directories under `rust/src` where hash-order and float-sum hazards
 /// feed run outputs (aggregates, checkpoints, NetStats).
@@ -296,10 +338,145 @@ fn parse_allows(source: &str) -> Vec<Allow> {
     allows
 }
 
+/// Per-line scan mask: `true` = the line is production code in scope
+/// for the rules. Each `#[cfg(test)]` attribute masks its annotated item
+/// by tracking brace depth from the attribute to the item's closing
+/// brace (or to a `;` before any brace opens — `#[cfg(test)] mod t;` /
+/// `#[cfg(test)] use …;`). Unbalanced braces mask to end of file, which
+/// matches the old skip-to-EOF behavior for the trailing-test-module
+/// convention — but production code *below* a balanced test item stays
+/// scanned.
+fn scan_mask(stripped: &[String]) -> Vec<bool> {
+    let mut mask = vec![true; stripped.len()];
+    let mut i = 0usize;
+    while i < stripped.len() {
+        let Some(pos) = stripped[i].find("#[cfg(test)]") else {
+            i += 1;
+            continue;
+        };
+        let start_col = pos + "#[cfg(test)]".len();
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut end = stripped.len() - 1;
+        'span: for (j, line) in stripped.iter().enumerate().skip(i) {
+            let tail = if j == i { &line[start_col..] } else { line.as_str() };
+            for c in tail.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth <= 0 {
+                            end = j;
+                            break 'span;
+                        }
+                    }
+                    ';' if !opened => {
+                        end = j;
+                        break 'span;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for m in mask.iter_mut().take(end + 1).skip(i) {
+            *m = false;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Whole-word occurrence of `word` (identifier-boundary on both sides)
+/// in an already-stripped line.
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let left_ok =
+            at == 0 || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        let after = at + word.len();
+        let right_ok = after >= bytes.len()
+            || !(bytes[after].is_ascii_alphanumeric() || bytes[after] == b'_');
+        if left_ok && right_ok {
+            return true;
+        }
+        from = after;
+    }
+    false
+}
+
+/// D009 verdict for one `unsafe` token line.
+enum Contract {
+    /// No `// SAFETY:` marker on the line or within 3 lines above.
+    Missing,
+    /// A marker exists but its justification is empty or boilerplate.
+    Weak,
+    Ok,
+}
+
+/// Look for a `// SAFETY: <justification>` comment covering 1-based
+/// `line` (same line or up to 3 lines above, mirroring the allow
+/// window), reading the *raw* lines so comment text is visible. The
+/// justification is the marker's tail plus any directly following
+/// comment-only continuation lines; a normalized justification shorter
+/// than 10 characters, or matching a known brush-off, is `Weak`.
+fn safety_contract(raw: &[&str], line: usize) -> Contract {
+    let lo = line.saturating_sub(4);
+    let mut marker: Option<(usize, usize)> = None;
+    for (idx, l) in raw.iter().enumerate().take(line).skip(lo) {
+        if let Some(p) = l.find("SAFETY:") {
+            if l[..p].contains("//") {
+                marker = Some((idx, p + "SAFETY:".len()));
+            }
+        }
+    }
+    let Some((mi, mp)) = marker else { return Contract::Missing };
+    let mut text = raw[mi][mp..].trim().to_string();
+    for l in raw.iter().take(line.saturating_sub(1)).skip(mi + 1) {
+        let t = l.trim_start();
+        if t.starts_with("//") {
+            text.push(' ');
+            text.push_str(t.trim_start_matches('/').trim_start_matches('!').trim());
+        } else {
+            break;
+        }
+    }
+    let norm: String =
+        text.chars().filter(char::is_ascii_alphanumeric).collect::<String>().to_lowercase();
+    const BOILERPLATE: &[&str] =
+        &["safe", "ok", "fine", "thisissafe", "itissafe", "triviallysafe", "knownsafe"];
+    if norm.len() < 10 || BOILERPLATE.contains(&norm.as_str()) {
+        Contract::Weak
+    } else {
+        Contract::Ok
+    }
+}
+
+/// D010: is there an `// ordering: <why>` note (non-empty tail) on
+/// 1-based `line` or within 3 lines above it, in the raw lines?
+fn has_ordering_note(raw: &[&str], line: usize) -> bool {
+    let lo = line.saturating_sub(4);
+    for l in raw.iter().take(line).skip(lo) {
+        if let Some(p) = l.find("ordering:") {
+            let left_word = p > 0
+                && (l.as_bytes()[p - 1].is_ascii_alphanumeric() || l.as_bytes()[p - 1] == b'_');
+            if !left_word && l[..p].contains("//") && !l[p + "ordering:".len()..].trim().is_empty()
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
 /// D002: scan `*_by(` comparator callbacks (sort_by, sort_unstable_by,
 /// select_nth_unstable_by, max_by, ...) for hand-rolled `is_nan` handling
 /// anywhere in the balanced-paren span.
-fn comparator_findings(stripped: &[String], last_line: usize, out: &mut Vec<Finding>) {
+fn comparator_findings(stripped: &[String], mask: &[bool], out: &mut Vec<Finding>) {
     let joined = stripped.join("\n");
     let bytes = joined.as_bytes();
     let mut search = 0usize;
@@ -308,7 +485,7 @@ fn comparator_findings(stripped: &[String], last_line: usize, out: &mut Vec<Find
         let open = at + 3; // the '('
         search = open + 1;
         let line = joined[..at].bytes().filter(|&b| b == b'\n').count() + 1;
-        if line > last_line {
+        if !mask[line - 1] {
             continue;
         }
         let mut depth = 0usize;
@@ -347,21 +524,24 @@ fn push_finding(out: &mut Vec<Finding>, id: &str, what: &str, line: usize) {
 pub fn lint_source(rel: &str, source: &str) -> Vec<Finding> {
     let stripped = strip(source);
     let allows = parse_allows(source);
+    let raw_lines: Vec<&str> = source.lines().collect();
 
-    // skip everything from the first `#[cfg(test)]` on (repo convention:
-    // test modules are last; test code cannot reach run outputs)
-    let last_line = stripped
-        .iter()
-        .position(|l| l.contains("#[cfg(test)]"))
-        .unwrap_or(stripped.len());
+    // mask out `#[cfg(test)]` items (brace-depth tracked — production
+    // code below a test module stays in scope; test code cannot reach
+    // run outputs)
+    let mask = scan_mask(&stripped);
 
     let critical = CRITICAL_DIRS.iter().any(|d| rel.starts_with(d));
     let order_rs = rel == "util/order.rs";
     let clock_ok = wall_clock_allowed(rel);
     let pool_rs = rel == "runtime/pool.rs";
+    let unsafe_ok = UNSAFE_ALLOWED.contains(&rel);
 
     let mut raw: Vec<Finding> = Vec::new();
-    for (idx, line) in stripped.iter().enumerate().take(last_line) {
+    for (idx, line) in stripped.iter().enumerate() {
+        if !mask[idx] {
+            continue;
+        }
         let ln = idx + 1;
         if !order_rs && line.contains(".partial_cmp(") {
             push_finding(&mut raw, "D001", "raw `.partial_cmp(` call", ln);
@@ -412,9 +592,50 @@ pub fn lint_source(rel: &str, source: &str) -> Vec<Finding> {
                 }
             }
         }
+        if has_word(line, "unsafe") {
+            if !unsafe_ok {
+                push_finding(&mut raw, "D008", "`unsafe` outside the audited allowlist", ln);
+            }
+            match safety_contract(&raw_lines, ln) {
+                Contract::Missing => {
+                    push_finding(&mut raw, "D009", "`unsafe` without a `// SAFETY:` contract", ln);
+                }
+                Contract::Weak => {
+                    push_finding(
+                        &mut raw,
+                        "D009",
+                        "`unsafe` with an empty or boilerplate `// SAFETY:` justification",
+                        ln,
+                    );
+                }
+                Contract::Ok => {}
+            }
+        }
+        for ord in ATOMIC_ORDERINGS {
+            let token = format!("Ordering::{ord}");
+            if !has_word(line, &token) {
+                continue;
+            }
+            if !has_ordering_note(&raw_lines, ln) {
+                push_finding(
+                    &mut raw,
+                    "D010",
+                    &format!("atomic `{token}` without an `// ordering:` note"),
+                    ln,
+                );
+            }
+            if *ord == "Relaxed" && !pool_rs {
+                push_finding(
+                    &mut raw,
+                    "D010",
+                    "`Ordering::Relaxed` outside runtime/pool.rs",
+                    ln,
+                );
+            }
+        }
     }
     if !order_rs {
-        comparator_findings(&stripped, last_line, &mut raw);
+        comparator_findings(&stripped, &mask, &mut raw);
     }
 
     // apply allows: an annotation suppresses its rule on the same line or
@@ -470,24 +691,45 @@ fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), Strin
     Ok(())
 }
 
-/// Lint every `.rs` file under `<repo_root>/rust/src`, in sorted path
-/// order. Returns the findings (empty = clean tree).
+/// The source roots [`run`] scans: the crate, and the linter itself
+/// (self-lint — D000/D005-class rules apply to xtask too).
+const ROOTS: &[(&[&str], &str)] = &[(&["rust", "src"], "rust/src"), (&["xtask", "src"], "xtask/src")];
+
+/// Every file [`run`] scans, as `(absolute path, repo-relative display
+/// path)`, in root order then sorted path order.
+pub fn scanned_files(repo_root: &Path) -> Result<Vec<(std::path::PathBuf, String)>, String> {
+    let mut out = Vec::new();
+    for (segments, prefix) in ROOTS {
+        let root = segments.iter().fold(repo_root.to_path_buf(), |p, s| p.join(s));
+        let mut files = Vec::new();
+        collect_rs(&root, &mut files)?;
+        files.sort();
+        for path in files {
+            let rel = path
+                .strip_prefix(&root)
+                .expect("file under scan root")
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((path, format!("{prefix}/{rel}")));
+        }
+    }
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `<repo_root>/rust/src` and
+/// `<repo_root>/xtask/src`, in sorted path order per root. Returns the
+/// findings (empty = clean tree).
 pub fn run(repo_root: &Path) -> Result<Vec<Finding>, String> {
-    let src = repo_root.join("rust").join("src");
-    let mut files = Vec::new();
-    collect_rs(&src, &mut files)?;
-    files.sort();
     let mut all = Vec::new();
-    for path in &files {
-        let rel = path
-            .strip_prefix(&src)
-            .expect("file under rust/src")
-            .to_string_lossy()
-            .replace('\\', "/");
-        let text = std::fs::read_to_string(path)
+    for (path, display) in scanned_files(repo_root)? {
+        // the scoping key: rust/src files keep their old module-relative
+        // form (`runtime/pool.rs`); xtask files keep the full prefix, so
+        // no allowlist (pool/simd/order/benchkit) can match them
+        let rel = display.strip_prefix("rust/src/").unwrap_or(&display).to_string();
+        let text = std::fs::read_to_string(&path)
             .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
         for mut f in lint_source(&rel, &text) {
-            f.file = format!("rust/src/{rel}");
+            f.file = display.clone();
             all.push(f);
         }
     }

@@ -1,7 +1,8 @@
-//! `cargo xtask verify [--determinism]` — the determinism firewall.
+//! `cargo xtask verify [--determinism]` — the determinism firewall and
+//! unsafe/concurrency auditor.
 //!
 //! * `verify` runs the in-repo lint engine (see `lint.rs`) over
-//!   `rust/src` and exits nonzero on any finding.
+//!   `rust/src` and `xtask/src` and exits nonzero on any finding.
 //! * `verify --determinism` additionally builds the release binary and
 //!   runs the schedule-fuzzing harness (see `determinism.rs`).
 //!
@@ -46,7 +47,7 @@ fn main() {
     let root = repo_root();
     match xtask::lint::run(&root) {
         Ok(findings) if findings.is_empty() => {
-            println!("lint: rust/src clean ({} rules)", xtask::lint::RULES.len());
+            println!("lint: rust/src + xtask/src clean ({} rules)", xtask::lint::RULES.len());
         }
         Ok(findings) => {
             for f in &findings {
@@ -78,7 +79,8 @@ fn print_help() {
     println!(
         "cargo xtask verify [--determinism]\n\
          \n\
-         verify          lint rust/src with the determinism rules (D000-D007)\n\
+         verify          lint rust/src + xtask/src with the determinism and\n\
+                         unsafe/concurrency rules (D000-D010)\n\
          --determinism   also build the release binary and prove byte-identical\n\
                          outputs across worker schedules, compute-thread counts,\n\
                          and the seq/sim driver pair"

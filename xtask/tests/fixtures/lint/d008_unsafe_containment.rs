@@ -1,0 +1,10 @@
+// Known-bad fixture for D008 (unsafe-containment). Not compiled — fed
+// to the lint engine as text by tests/lint_fixtures.rs under a path
+// outside the audited allowlist (util/simd.rs, runtime/pool.rs). The
+// contract is real so D009 stays quiet and only D008 trips.
+
+pub fn worst(p: *mut f32) -> f32 {
+    // SAFETY: the caller guarantees `p` points at a live, aligned f32
+    // for the duration of this call.
+    unsafe { *p }
+}

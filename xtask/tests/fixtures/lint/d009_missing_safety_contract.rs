@@ -1,0 +1,13 @@
+// Known-bad fixture for D009 (missing-safety-contract). Not compiled —
+// fed to the lint engine as text by tests/lint_fixtures.rs under an
+// allowlisted path so D008 stays quiet and only D009 trips: one
+// contract-less site, one brushed-off contract.
+
+pub fn no_contract(p: *mut f32) -> f32 {
+    unsafe { *p }
+}
+
+// SAFETY: safe
+pub fn boilerplate_contract(p: *mut f32) -> f32 {
+    unsafe { *p }
+}

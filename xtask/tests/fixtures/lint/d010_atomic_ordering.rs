@@ -1,0 +1,14 @@
+// Known-bad fixture for D010 (atomic-ordering). Not compiled — fed to
+// the lint engine as text by tests/lint_fixtures.rs: one access with
+// no memory-model note, plus an annotated Relaxed outside the pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn no_note(c: &AtomicUsize) -> usize {
+    c.load(Ordering::SeqCst)
+}
+
+pub fn relaxed_outside_pool(c: &AtomicUsize) {
+    // ordering: Relaxed — a stat counter, but this is not pool.rs
+    c.store(1, Ordering::Relaxed);
+}

@@ -1,0 +1,23 @@
+// Regression fixture for the scan mask: a *balanced* #[cfg(test)]
+// item mid-file must not hide the production code after it (the old
+// scanner skipped from the first #[cfg(test)] to end of file). Fed to
+// the lint engine as text by tests/lint_fixtures.rs.
+
+pub fn fine() -> u32 {
+    7
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn hazards_in_tests_are_invisible() {
+        let _ = std::time::Instant::now();
+    }
+}
+
+#[cfg(test)]
+use std::time::SystemTime as TestOnlyAlias;
+
+pub fn worst() -> u128 {
+    std::time::Instant::now().elapsed().as_nanos()
+}

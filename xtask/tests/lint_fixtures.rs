@@ -54,6 +54,24 @@ const CASES: &[(&str, &str, &str, &str)] = &[
         "D007",
         "raw-thread-spawn",
     ),
+    (
+        include_str!("fixtures/lint/d008_unsafe_containment.rs"),
+        "engine/fixture.rs",
+        "D008",
+        "unsafe-containment",
+    ),
+    (
+        include_str!("fixtures/lint/d009_missing_safety_contract.rs"),
+        "util/simd.rs",
+        "D009",
+        "missing-safety-contract",
+    ),
+    (
+        include_str!("fixtures/lint/d010_atomic_ordering.rs"),
+        "engine/fixture.rs",
+        "D010",
+        "atomic-ordering",
+    ),
 ];
 
 #[test]
@@ -134,11 +152,28 @@ fn comments_strings_and_test_code_are_invisible() {
     // string literals are blanked before matching
     let src = "pub fn f() -> &'static str {\n    \"thread_rng and SystemTime\"\n}\n";
     assert!(lint_source("engine/strs.rs", src).is_empty());
-    // everything from the first #[cfg(test)] on is skipped
+    // #[cfg(test)] items are masked (here: a trailing test module)
     let src = "pub fn f() {}\n\n#[cfg(test)]\nmod tests {\n    \
                use std::collections::HashMap;\n    \
                fn g() { let _ = std::time::Instant::now(); }\n}\n";
     assert!(lint_source("engine/tested.rs", src).is_empty());
+}
+
+#[test]
+fn balanced_test_module_does_not_hide_later_code() {
+    // regression: the old scanner skipped from the first #[cfg(test)] to
+    // end of file, hiding any production code below a test item
+    let src = include_str!("fixtures/lint/nontrailing_test_mod.rs");
+    let findings = lint_source("util/fixture.rs", src);
+    assert_eq!(
+        findings.len(),
+        1,
+        "want exactly the production wall-clock read: {:?}",
+        findings.iter().map(|f| f.render()).collect::<Vec<_>>()
+    );
+    assert_eq!(findings[0].rule_id, "D004");
+    let worst = src.lines().position(|l| l.contains("elapsed")).unwrap() + 1;
+    assert_eq!(findings[0].line, worst, "finding must sit below the balanced test items");
 }
 
 #[test]
@@ -167,6 +202,69 @@ fn scoping_is_per_module() {
     assert!(lint_source("runtime/pool.rs", src).is_empty());
     assert!(!lint_source("runtime/native.rs", src).is_empty());
     assert!(!lint_source("sweep/mod.rs", src).is_empty());
+}
+
+#[test]
+fn unsafe_allowlist_scoping() {
+    // a well-contracted unsafe block is fine only in the two audited
+    // files; anywhere else it is a containment breach (D008)
+    let src = "pub fn f(p: *mut f32) -> f32 {\n    \
+               // SAFETY: caller guarantees `p` is live and aligned here.\n    \
+               unsafe { *p }\n}\n";
+    assert!(lint_source("util/simd.rs", src).is_empty());
+    assert!(lint_source("runtime/pool.rs", src).is_empty());
+    let breach = lint_source("engine/hot.rs", src);
+    assert!(breach.iter().any(|f| f.rule_id == "D008"), "containment breach not flagged");
+    assert!(breach.iter().all(|f| f.rule_id == "D008"), "contracted unsafe tripped more");
+    // the xtask sources are scanned under their full prefix, so the
+    // allowlist can never match them
+    assert!(lint_source("xtask/src/lint.rs", src).iter().any(|f| f.rule_id == "D008"));
+}
+
+#[test]
+fn relaxed_is_confined_to_the_pool() {
+    let src = "use std::sync::atomic::{AtomicUsize, Ordering};\n\
+               pub fn f(c: &AtomicUsize) -> usize {\n    \
+               // ordering: Relaxed — monotonic counter, no ordering needed\n    \
+               c.load(Ordering::Relaxed)\n}\n";
+    // annotated Relaxed is legal inside the pool, and nowhere else
+    assert!(lint_source("runtime/pool.rs", src).is_empty());
+    let outside = lint_source("engine/hot.rs", src);
+    assert_eq!(outside.len(), 1, "{:?}", outside.iter().map(|f| f.render()).collect::<Vec<_>>());
+    assert_eq!(outside[0].rule_id, "D010");
+}
+
+#[test]
+fn safety_contract_window_is_three_lines() {
+    // marker exactly 3 lines above the `unsafe` token: in the window
+    let near = "pub fn f(p: *mut f32) -> f32 {\n    \
+                // SAFETY: caller guarantees `p` is live and aligned here.\n    \
+                //\n    \
+                //\n    \
+                unsafe { *p }\n}\n";
+    assert!(lint_source("util/simd.rs", near).is_empty());
+    // marker 4 lines above: out of the window, the contract is missing
+    let far = "pub fn f(p: *mut f32) -> f32 {\n    \
+               // SAFETY: caller guarantees `p` is live and aligned here.\n    \
+               //\n    \
+               //\n    \
+               //\n    \
+               unsafe { *p }\n}\n";
+    let findings = lint_source("util/simd.rs", far);
+    assert_eq!(findings.len(), 1, "{:?}", findings.iter().map(|f| f.render()).collect::<Vec<_>>());
+    assert_eq!(findings[0].rule_id, "D009");
+}
+
+#[test]
+fn xtask_sources_are_scanned_too() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .to_path_buf();
+    let files = xtask::lint::scanned_files(&root).expect("walk scan roots");
+    let displays: Vec<&str> = files.iter().map(|(_, d)| d.as_str()).collect();
+    assert!(displays.contains(&"xtask/src/lint.rs"), "self-lint root missing: {displays:?}");
+    assert!(displays.contains(&"rust/src/runtime/pool.rs"), "crate root missing: {displays:?}");
 }
 
 #[test]
